@@ -1,0 +1,52 @@
+//! CIFAR-10 scenario (Fig. 2 right): DEFL vs Rand. on the harder task.
+//!
+//! ```sh
+//! cargo run --release --example cifar_defl
+//! DEFL_FAST=1 cargo run --release --example cifar_defl   # smoke
+//! ```
+
+use defl::config::{presets, Policy};
+use defl::coordinator::FlSystem;
+use defl::experiments::reduction_pct;
+use defl::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DEFL_FAST").as_deref() == Ok("1");
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("DEFL", Policy::Defl),
+        ("Rand.", presets::rand_cifar()),
+    ] {
+        let mut cfg = presets::fig2_cifar(policy);
+        cfg.name = format!("example-cifar-{label}");
+        cfg.out = Some(format!("results/example_cifar_{label}.json"));
+        if fast {
+            cfg.max_rounds = 2;
+            cfg.train_per_device = 64;
+            cfg.test_size = 256;
+            cfg.eval_every = 2;
+        }
+        let mut sys = FlSystem::build(cfg)?;
+        let outcome = sys.run()?;
+        results.push((label, outcome));
+    }
+
+    let defl_time = results[0].1.overall_time;
+    let mut table = Table::new(&["method", "rounds", "overall 𝒯 (s)", "accuracy", "reduction"]);
+    for (label, outcome) in &results {
+        table.row(&[
+            label.to_string(),
+            outcome.rounds.to_string(),
+            format!("{:.1}", outcome.overall_time),
+            format!("{:.4}", outcome.final_test_accuracy),
+            if *label == "DEFL" {
+                "-".into()
+            } else {
+                format!("{:.0}%", reduction_pct(defl_time, outcome.overall_time))
+            },
+        ]);
+    }
+    println!("\nCIFAR-10 (paper Fig. 2 right; paper reports ≈75% reduction vs Rand.):");
+    println!("{}", table.render());
+    Ok(())
+}

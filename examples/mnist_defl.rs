@@ -1,0 +1,56 @@
+//! MNIST scenario: the paper's headline workload (Fig. 2 left).
+//!
+//! Runs DEFL and the FedAvg baseline on the MNIST-like task with the
+//! paper's setting (M=10 devices, lr=0.01, B=20 MHz, f_m=2 GHz) and
+//! prints the time-to-accuracy comparison.
+//!
+//! ```sh
+//! cargo run --release --example mnist_defl            # full
+//! DEFL_FAST=1 cargo run --release --example mnist_defl # smoke
+//! ```
+
+use defl::config::{presets, Policy};
+use defl::coordinator::FlSystem;
+use defl::experiments::reduction_pct;
+use defl::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::var("DEFL_FAST").as_deref() == Ok("1");
+    let mut results = Vec::new();
+    for (label, policy) in [
+        ("DEFL", Policy::Defl),
+        ("FedAvg", presets::fedavg()),
+    ] {
+        let mut cfg = presets::fig2_mnist(policy);
+        cfg.name = format!("example-mnist-{label}");
+        cfg.out = Some(format!("results/example_mnist_{label}.json"));
+        if fast {
+            cfg.max_rounds = 3;
+            cfg.train_per_device = 64;
+            cfg.test_size = 256;
+            cfg.eval_every = 3;
+        }
+        let mut sys = FlSystem::build(cfg)?;
+        let outcome = sys.run()?;
+        results.push((label, outcome, sys.log.clone()));
+    }
+
+    let defl_time = results[0].1.overall_time;
+    let mut table = Table::new(&["method", "rounds", "overall 𝒯 (s)", "accuracy", "reduction"]);
+    for (label, outcome, _) in &results {
+        table.row(&[
+            label.to_string(),
+            outcome.rounds.to_string(),
+            format!("{:.1}", outcome.overall_time),
+            format!("{:.4}", outcome.final_test_accuracy),
+            if *label == "DEFL" {
+                "-".into()
+            } else {
+                format!("{:.0}%", reduction_pct(defl_time, outcome.overall_time))
+            },
+        ]);
+    }
+    println!("\nMNIST (paper Fig. 2 left; paper reports ≈70% reduction vs FedAvg):");
+    println!("{}", table.render());
+    Ok(())
+}

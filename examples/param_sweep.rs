@@ -1,0 +1,80 @@
+//! Parameter-sweep scenario: regenerates the analytic parts of Fig. 1
+//! (ε sweep, θ sweep, H/compute-share split) without any training —
+//! useful for exploring the delay model interactively.
+//!
+//! ```sh
+//! cargo run --release --example param_sweep -- [--devices 10] [--epsilon 0.01]
+//! ```
+
+use defl::convergence;
+use defl::defl_opt::{self, PlanInputs};
+use defl::metrics::Table;
+use defl::util::cli::Cli;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("param_sweep", "analytic DEFL parameter exploration")
+        .opt("devices", "10", "number of devices M")
+        .opt("epsilon", "0.01", "global convergence error ε")
+        .opt("t-cm", "0.094", "expected uplink time T_cm (s)")
+        .opt("t-cps", "3.763e-4", "bottleneck compute seconds/sample");
+    let args = cli
+        .parse(&std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let base = PlanInputs {
+        t_cm: args.f64("t-cm").map_err(|e| anyhow::anyhow!("{e}"))?,
+        t_cp_per_sample: args.f64("t-cps").map_err(|e| anyhow::anyhow!("{e}"))?,
+        m: args.usize("devices").map_err(|e| anyhow::anyhow!("{e}"))?,
+        epsilon: args.f64("epsilon").map_err(|e| anyhow::anyhow!("{e}"))?,
+        ..Default::default()
+    };
+
+    // ε sweep (Fig. 1a analytic)
+    let mut t = Table::new(&["epsilon", "b*", "theta*", "V", "H", "pred 𝒯 (s)"]);
+    for eps in [0.005, 0.01, 0.02, 0.05, 0.1] {
+        let plan = defl_opt::closed_form(&PlanInputs { epsilon: eps, ..base });
+        t.row(&[
+            format!("{eps}"),
+            plan.batch.to_string(),
+            format!("{:.3}", plan.theta),
+            plan.local_rounds.to_string(),
+            format!("{:.1}", plan.rounds),
+            format!("{:.1}", plan.overall_time),
+        ]);
+    }
+    println!("ε sweep (M={}, T_cm={}s):\n{}", base.m, base.t_cm, t.render());
+
+    // device-count sweep — how the plan shifts with M
+    let mut t = Table::new(&["M", "b*", "theta*", "V", "H", "pred 𝒯 (s)"]);
+    for m in [2usize, 5, 10, 20, 50] {
+        let plan = defl_opt::closed_form(&PlanInputs { m, ..base });
+        t.row(&[
+            m.to_string(),
+            plan.batch.to_string(),
+            format!("{:.3}", plan.theta),
+            plan.local_rounds.to_string(),
+            format!("{:.1}", plan.rounds),
+            format!("{:.1}", plan.overall_time),
+        ]);
+    }
+    println!("device sweep (ε={}):\n{}", base.epsilon, t.render());
+
+    // θ sweep: H + compute share (Fig. 1d analytic)
+    let mut t = Table::new(&["theta", "V", "H", "T_round (s)", "compute share"]);
+    for theta in [0.05, 0.15, 0.3, 0.5, 0.9] {
+        let alpha = (1.0f64 / theta).ln();
+        let v = convergence::local_rounds(base.nu, theta);
+        let h = convergence::rounds_to_epsilon(base.c, 32.0, base.epsilon, base.m, base.nu, alpha);
+        let t_cp = 32.0 * base.t_cp_per_sample;
+        let t_round = convergence::round_wall_time(base.t_cm, v, t_cp);
+        let share = v as f64 * t_cp / t_round;
+        t.row(&[
+            format!("{theta}"),
+            v.to_string(),
+            format!("{h:.1}"),
+            format!("{t_round:.3}"),
+            format!("{:.0}%", share * 100.0),
+        ]);
+    }
+    println!("θ sweep at b=32 (Fig. 1d):\n{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! Wireless-heterogeneity scenario: what the paper's Section II-C channel
+//! model implies for DEFL's plan under different network conditions —
+//! bandwidth, cell size, OFDMA contention, fading. Shows "to talk or to
+//! work" shifting: as the channel degrades, eq. (29) pushes more work
+//! (higher α, larger b) onto the devices.
+//!
+//! ```sh
+//! cargo run --release --example wireless_heterogeneity
+//! ```
+
+use defl::compute::gpu::{FleetConfig, GpuFleet};
+use defl::defl_opt::{self, PlanInputs};
+use defl::metrics::Table;
+use defl::wireless::channel::{BandwidthPolicy, ChannelConfig};
+use defl::wireless::Channel;
+
+fn plan_for(cfg: ChannelConfig, label: &str, table: &mut Table) {
+    const UPDATE_BITS: f64 = 103_018.0 * 32.0; // mnist_cnn update size
+    const BITS_PER_SAMPLE: f64 = 28.0 * 28.0 * 32.0;
+    let channel = Channel::new(cfg, 10, 42);
+    let fleet = GpuFleet::new(&FleetConfig::default(), 42);
+    let t_cm = channel.expected_round_time(UPDATE_BITS);
+    let t_cps = fleet.bottleneck_seconds_per_sample(BITS_PER_SAMPLE);
+    let plan = defl_opt::closed_form(&PlanInputs {
+        t_cm,
+        t_cp_per_sample: t_cps,
+        ..Default::default()
+    });
+    table.row(&[
+        label.to_string(),
+        format!("{t_cm:.3}"),
+        plan.batch.to_string(),
+        format!("{:.3}", plan.theta),
+        plan.local_rounds.to_string(),
+        format!("{:.1}", plan.rounds),
+        format!("{:.1}", plan.overall_time),
+    ]);
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut table = Table::new(&[
+        "scenario", "T_cm (s)", "b*", "theta*", "V", "H", "pred 𝒯 (s)",
+    ]);
+
+    plan_for(ChannelConfig::default(), "paper default (20 MHz)", &mut table);
+
+    let mut c = ChannelConfig::default();
+    c.bandwidth_hz = 5e6;
+    plan_for(c, "narrow band (5 MHz)", &mut table);
+
+    let mut c = ChannelConfig::default();
+    c.policy = BandwidthPolicy::Ofdma;
+    plan_for(c, "OFDMA contention (B/M)", &mut table);
+
+    let mut c = ChannelConfig::default();
+    c.max_radius_m = 2000.0;
+    plan_for(c, "large cell (2 km)", &mut table);
+
+    let mut c = ChannelConfig::default();
+    c.tx_power_dbm = 10.0;
+    plan_for(c, "low tx power (10 dBm)", &mut table);
+
+    println!("\nDEFL plan vs channel conditions (worse channel ⇒ work more, talk less):");
+    println!("{}", table.render());
+
+    // Straggler study: compute heterogeneity inflates T_cp (eq. 5 max).
+    let mut t = Table::new(&["fleet", "t_cp/sample (s)", "b*", "V", "pred 𝒯 (s)"]);
+    for (label, het) in [("homogeneous (paper)", 0.0), ("mild jitter", 0.2), ("severe stragglers", 0.5)] {
+        let mut fc = FleetConfig::default();
+        fc.heterogeneity = het;
+        fc.max_freq_hz = 4e9; // let jitter act (paper cap binds otherwise)
+        let fleet = GpuFleet::new(&fc, 7);
+        let t_cps = fleet.bottleneck_seconds_per_sample(28.0 * 28.0 * 32.0);
+        let channel = Channel::new(ChannelConfig::default(), 10, 42);
+        let t_cm = channel.expected_round_time(103_018.0 * 32.0);
+        let plan = defl_opt::closed_form(&PlanInputs {
+            t_cm,
+            t_cp_per_sample: t_cps,
+            ..Default::default()
+        });
+        t.row(&[
+            label.to_string(),
+            format!("{t_cps:.2e}"),
+            plan.batch.to_string(),
+            plan.local_rounds.to_string(),
+            format!("{:.1}", plan.overall_time),
+        ]);
+    }
+    println!("straggler study (slower bottleneck ⇒ smaller b*, fewer local rounds):");
+    println!("{}", t.render());
+    Ok(())
+}

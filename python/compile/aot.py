@@ -1,0 +1,162 @@
+"""AOT compiler: lower every (model × batch-size) entry point to HLO text.
+
+This is the ONLY place Python touches the pipeline. ``make artifacts`` runs
+it once; afterwards the rust coordinator is self-contained:
+
+  artifacts/
+    <model>_train_b<B>.hlo.txt   one mini-batch SGD step (fwd+bwd+update)
+    <model>_eval_b<B>.hlo.txt    summed loss + correct count over a batch
+    <model>_init.npz             seeded initial parameters (leaf order!)
+    <model>_golden.npz           example batch + expected outputs for the
+                                 rust integration tests (exact JAX numbers)
+    manifest.json                the contract consumed by rust/src/runtime
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# batch sizes needed by the experiments:
+#  - fig1b sweeps b ∈ {16, 32, 64} on MNIST
+#  - FedAvg baseline uses b=10 (paper Section VI), Rand uses b=16 / b=64
+#  - DEFL's optimizer rounds b* to a power of two (8..64 covers the range)
+TRAIN_BATCHES = {
+    "mlp": [16, 32],
+    "mnist_cnn": [8, 10, 16, 32, 64],
+    "cifar_cnn": [16, 32, 64],
+}
+EVAL_BATCH = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(name, batch):
+    cfg = M.MODELS[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for _, s in M.param_specs(name)]
+    x = jax.ShapeDtypeStruct(
+        (batch, cfg["height"], cfg["width"], cfg["channels"]), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+    return jax.jit(M.train_step(name)).lower(*specs, x, y, lr)
+
+
+def lower_eval(name, batch):
+    cfg = M.MODELS[name]
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+             for _, s in M.param_specs(name)]
+    x = jax.ShapeDtypeStruct(
+        (batch, cfg["height"], cfg["width"], cfg["channels"]), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return jax.jit(M.eval_step(name)).lower(*specs, x, y)
+
+
+def write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def golden_vectors(name, batch, params, lr=0.01):
+    """Run one train step + one eval step in JAX; capture exact outputs."""
+    order = M.param_order(name)
+    x, y = M.example_batch(name, batch)
+    leaves = [params[k] for k in order]
+    out = jax.jit(M.train_step(name))(*leaves, x, y, jnp.float32(lr))
+    new_leaves, loss = out[:-1], out[-1]
+    # Eval golden uses the eval artifact's batch size so the rust
+    # integration test can feed it straight into <model>_eval_b256.
+    ex, ey = M.example_batch(name, EVAL_BATCH, seed=7)
+    eval_out = jax.jit(M.eval_step(name))(*leaves, ex, ey)
+    g = {"x": np.asarray(x), "y": np.asarray(y),
+         "lr": np.asarray(lr, np.float32),
+         "loss": np.asarray(loss),
+         "eval_x": np.asarray(ex), "eval_y": np.asarray(ey),
+         "eval_loss_sum": np.asarray(eval_out[0]),
+         "eval_correct": np.asarray(eval_out[1])}
+    for k, v in zip(order, new_leaves):
+        g[f"new_{k}"] = np.asarray(v)
+    return g
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    p.add_argument("--models", nargs="*", default=list(TRAIN_BATCHES))
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--skip-golden", action="store_true",
+                   help="skip executing golden vectors (faster CI)")
+    args = p.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "version": 1, "models": {}}
+    for name in args.models:
+        cfg = M.MODELS[name]
+        specs = M.param_specs(name)
+        entry = {
+            "input": {k: cfg[k] for k in
+                      ("height", "width", "channels", "classes")},
+            "params": [{"name": n, "shape": list(s)} for n, s in specs],
+            "param_count": int(sum(int(np.prod(s)) for _, s in specs)),
+            "train": {}, "eval": {},
+        }
+        entry["update_bytes"] = 4 * entry["param_count"]
+
+        params = M.init_params(name, seed=args.seed)
+        init_path = os.path.join(out, f"{name}_init.npz")
+        np.savez(init_path, **{k: np.asarray(v) for k, v in params.items()})
+        entry["init"] = os.path.basename(init_path)
+
+        for b in TRAIN_BATCHES[name]:
+            fn = f"{name}_train_b{b}.hlo.txt"
+            sha = write(os.path.join(out, fn), to_hlo_text(lower_train(name, b)))
+            entry["train"][str(b)] = {"file": fn, "sha256_16": sha}
+            print(f"  lowered {fn} ({sha})")
+
+        fn = f"{name}_eval_b{EVAL_BATCH}.hlo.txt"
+        sha = write(os.path.join(out, fn), to_hlo_text(lower_eval(name, EVAL_BATCH)))
+        entry["eval"][str(EVAL_BATCH)] = {"file": fn, "sha256_16": sha}
+        print(f"  lowered {fn} ({sha})")
+
+        if not args.skip_golden:
+            gb = min(TRAIN_BATCHES[name])
+            g = golden_vectors(name, gb, params)
+            gpath = os.path.join(out, f"{name}_golden.npz")
+            np.savez(gpath, **g)
+            entry["golden"] = {"file": os.path.basename(gpath),
+                               "batch": gb, "lr": 0.01}
+            print(f"  golden  {os.path.basename(gpath)} "
+                  f"(loss={float(g['loss']):.6f})")
+
+        manifest["models"][name] = entry
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Pallas 3×3 SAME convolution as nine shifted GEMMs — the TPU mapping.
+
+Hardware adaptation (DESIGN.md §7): a GPU implements conv with im2col +
+warp-level tiles or implicit-GEMM threadblocks. On a TPU the idiomatic
+mapping feeds the MXU systolic array directly: a K_h×K_w convolution is
+Σ_{ky,kx} shift(x, ky, kx) @ W[ky, kx] — nine (NHW, C)×(C, K) GEMMs whose
+FLOPs all land in the Pallas tiled-matmul kernel
+(:mod:`compile.kernels.fused_linear`). Shifts/padding are pure data
+movement and stay in XLA.
+
+The backward pass uses the same trick:
+  dW[ky,kx] = shift(x, ky, kx)ᵀ @ dy          (nine GEMMs)
+  dx        = Σ_{ky,kx} shift⁻¹(dy @ W[ky,kx]ᵀ)  (nine GEMMs)
+
+``conv3x3_same`` carries a ``jax.custom_vjp`` so ``jax.grad`` of the L2
+model lands on Pallas GEMMs end to end.
+
+Enabled in the L2 model with ``DEFL_PALLAS_CONV=1`` at AOT time. The
+shipped artifacts default to XLA's native conv purely for CPU-interpret
+wall-clock (the nine interpret-mode pallas_call dispatches per conv per
+step are slow on the CPU testbed); both paths are gated by the same
+oracle (:func:`ref` / pytest) so they are interchangeable.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import fused_linear
+
+
+def _shift_slices(h, w, ky, kx):
+    """Slice bounds implementing SAME padding for offset (ky−1, kx−1)."""
+    # output (y, x) reads input (y + ky - 1, x + kx - 1)
+    dy0 = max(0, ky - 1)
+    dy1 = min(h, h + ky - 1)
+    sy0 = max(0, 1 - ky)
+    dx0 = max(0, kx - 1)
+    dx1 = min(w, w + kx - 1)
+    sx0 = max(0, 1 - kx)
+    return dy0, dy1, sy0, dx0, dx1, sx0
+
+
+def _shifted(x, ky, kx):
+    """``shift(x, ky, kx)`` with zero fill: out[y,x] = x[y+ky−1, x+kx−1]."""
+    n, h, w, c = x.shape
+    dy0, dy1, sy0, dx0, dx1, sx0 = _shift_slices(h, w, ky, kx)
+    out = jnp.zeros_like(x)
+    span_y = dy1 - dy0
+    span_x = dx1 - dx0
+    return out.at[:, sy0:sy0 + span_y, sx0:sx0 + span_x, :].set(
+        x[:, dy0:dy1, dx0:dx1, :]
+    )
+
+
+def _unshifted(x, ky, kx):
+    """Inverse shift (used by dx): out[y+ky−1, x+kx−1] += x[y,x]."""
+    return _shifted(x, 2 - ky, 2 - kx)
+
+
+def _fwd_impl(x, w):
+    n, h, wd, c = x.shape
+    kh, kw, c2, k = w.shape
+    assert (kh, kw) == (3, 3) and c2 == c, f"want 3x3 conv, got {w.shape}"
+    acc = jnp.zeros((n * h * wd, k), jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            xs = _shifted(x, ky, kx).reshape(n * h * wd, c)
+            acc = acc + fused_linear.matmul(xs, w[ky, kx])
+    return acc.reshape(n, h, wd, k)
+
+
+@jax.custom_vjp
+def conv3x3_same(x, w):
+    """3×3 SAME NHWC convolution; all FLOPs in Pallas GEMMs."""
+    return _fwd_impl(x, w)
+
+
+def _conv_fwd(x, w):
+    return _fwd_impl(x, w), (x, w)
+
+
+def _conv_bwd(res, dy):
+    x, w = res
+    n, h, wd, c = x.shape
+    k = w.shape[-1]
+    dyf = dy.reshape(n * h * wd, k).astype(jnp.float32)
+    # dW: nine (C, K) blocks
+    dw_blocks = []
+    for ky in range(3):
+        row = []
+        for kx in range(3):
+            xs = _shifted(x, ky, kx).reshape(n * h * wd, c)
+            row.append(fused_linear.matmul(xs.T, dyf))
+        dw_blocks.append(jnp.stack(row, axis=0))
+    dw = jnp.stack(dw_blocks, axis=0)
+    # dx: scatter each dy @ Wᵀ back through the inverse shift
+    dx = jnp.zeros_like(x, dtype=jnp.float32)
+    for ky in range(3):
+        for kx in range(3):
+            g = fused_linear.matmul(dyf, w[ky, kx].T).reshape(n, h, wd, c)
+            dx = dx + _unshifted(g, ky, kx)
+    return dx, dw
+
+
+conv3x3_same.defvjp(_conv_fwd, _conv_bwd)

@@ -1,0 +1,192 @@
+"""Pallas fused dense layer: ``act(x @ w + b)`` — the L1 compute hot spot.
+
+Hardware adaptation (paper GPU → TPU-style Pallas)
+--------------------------------------------------
+The paper's computation model (eq. 3) is GPU-centric: core/memory frequency,
+warps, HBM. Rather than port CUDA threadblocks mechanically, the dense hot
+spot is expressed the way a TPU wants it:
+
+* The grid tiles the output ``(m, n)`` plane; each grid step owns one
+  ``(bm, bn)`` output tile — the analogue of a threadblock, but scheduled
+  by the Pallas grid over the MXU instead of SM warps.
+* The contraction dimension ``k`` is the innermost grid axis; the output
+  tile acts as an f32 accumulator that stays resident in VMEM across the
+  ``k`` steps (its index map is k-invariant), so partial products never
+  round-trip to HBM — the TPU analogue of shared-memory staging.
+* Tile ``(bm, bk) @ (bk, bn)`` matches the 128×128 systolic array shape;
+  accumulation is f32 via ``preferred_element_type``.
+
+VMEM budget per grid step = ``bm*bk + bk*bn + bm*bn`` f32 words; with the
+default 128/128/128 tiles that is 192 KiB — far under the ~16 MiB VMEM of a
+TPU core, leaving headroom for double buffering (see DESIGN.md §9).
+
+The kernel runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); correctness is gated against :mod:`ref` by pytest, and the
+same HLO is what ``make artifacts`` ships to the rust runtime.
+
+The backward pass is wired through ``jax.custom_vjp`` so that the L2 model's
+``jax.grad`` also lands on Pallas matmuls (dx = dy @ wᵀ, dw = xᵀ @ dy).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tiles. Shapes that do not divide evenly fall back to
+# the largest divisor tile (interpret mode has no padding cost; on a real
+# TPU the divisor guard keeps every DMA aligned).
+#
+# Perf pass (EXPERIMENTS.md §Perf): bk=256 measured ~7% faster end-to-end
+# train_step than bk=128 (fewer k-axis grid steps ⇒ less per-step dispatch)
+# while keeping the largest tile residency at 176 KiB — ~1% of a TPU
+# core's VMEM, leaving ample double-buffering headroom. bk∈{512,1024} and
+# bm=bn=256 measured within noise (<5%), so tuning stopped per the
+# three-flat-changes rule.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 256
+
+
+def _largest_divisor_tile(dim: int, preferred: int) -> int:
+    """Largest tile ≤ preferred that divides dim (always ≥ 1)."""
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; innermost grid axis walks the k blocks.
+
+    ``o_ref``'s index map ignores the k axis, so the tile stays in VMEM and
+    doubles as the f32 accumulator.
+    """
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    del nk
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, nk: int, activation: str):
+    """Matmul tile with fused bias + activation epilogue on the last k step."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k_idx == nk - 1)
+    def _epilogue():
+        out = o_ref[...] + b_ref[...].astype(jnp.float32)[None, :]
+        if activation == "relu":
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out
+
+
+def _tiles(m, n, k, bm, bn, bk):
+    bm = _largest_divisor_tile(m, bm)
+    bn = _largest_divisor_tile(n, bn)
+    bk = _largest_divisor_tile(k, bk)
+    return bm, bn, bk
+
+
+def vmem_bytes(m, n, k, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Estimated VMEM residency (bytes/grid step) for the chosen tiling.
+
+    Used by DESIGN.md §9 / EXPERIMENTS.md §Perf to justify tile choices
+    against the ~16 MiB per-core budget.
+    """
+    bm, bn, bk = _tiles(m, n, k, bm, bn, bk)
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def matmul(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """Tiled Pallas matmul ``x @ w`` (f32 accumulation), interpret mode."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm, bn, bk = _tiles(m, n, k, bm, bn, bk)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def linear(x, w, b, activation="none", *, bm=DEFAULT_BM, bn=DEFAULT_BN,
+           bk=DEFAULT_BK):
+    """Fused dense layer ``act(x @ w + b)`` as a single Pallas kernel.
+
+    Args / returns match :func:`ref.linear`.
+    """
+    if activation not in ("none", "relu"):
+        raise ValueError(f"unknown activation {activation!r}")
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm, bn, bk = _tiles(m, n, k, bm, bn, bk)
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, nk=nk, activation=activation),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+# --- custom_vjp wiring so jax.grad stays on Pallas matmuls -----------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def linear_vjp(x, w, b, activation="none"):
+    """Differentiable fused dense layer; bwd uses Pallas matmuls too."""
+    return linear(x, w, b, activation)
+
+
+def _linear_fwd(x, w, b, activation):
+    out = linear(x, w, b, activation)
+    return out, (x, w, out)
+
+
+def _linear_bwd(activation, res, dy):
+    x, w, out = res
+    if activation == "relu":
+        dy = dy * (out > 0).astype(dy.dtype)
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+linear_vjp.defvjp(_linear_fwd, _linear_bwd)

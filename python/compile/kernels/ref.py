@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness gate).
+
+Every Pallas kernel in this package has an exact pure-`jax.numpy`
+counterpart here. `python/tests/test_kernels.py` sweeps shapes and dtypes
+with hypothesis and asserts `assert_allclose(kernel(...), ref(...))`.
+The references are also what the L2 model uses when
+``DEFL_USE_PALLAS=0`` (debug escape hatch).
+"""
+
+import jax.numpy as jnp
+
+
+def linear(x, w, b, activation="none"):
+    """Dense layer reference: ``act(x @ w + b)``.
+
+    Args:
+      x: ``(m, k)`` activations.
+      w: ``(k, n)`` weights.
+      b: ``(n,)`` bias.
+      activation: ``"none"`` or ``"relu"``.
+
+    Returns:
+      ``(m, n)`` output in the accumulation dtype (f32).
+    """
+    out = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + b.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def sgd_update(w, g, lr):
+    """SGD parameter update reference: ``w - lr * g`` (elementwise)."""
+    return w - lr * g
+
+
+def matmul(x, w):
+    """Plain matmul reference (no bias / activation)."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def conv3x3_same(x, w):
+    """3×3 SAME NHWC conv reference via lax.conv_general_dilated."""
+    import jax
+
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,72 @@
+"""Pallas fused SGD parameter update: ``w ← w − lr·g`` — the L1 update hot spot.
+
+Each parameter leaf is updated by a single elementwise Pallas kernel. Leaves
+are flattened to 1-D and tiled in VMEM-sized blocks (default 64 Ki elements,
+i.e. 256 KiB f32 per operand per grid step — well inside VMEM), so the same
+kernel serves every leaf shape. On TPU this is a pure VPU (vector unit)
+kernel: one load of ``w``, one of ``g``, one FMA, one store — memory-bound
+by construction, so the tiling is chosen for DMA alignment rather than
+compute shape.
+
+``lr`` enters as a scalar operand (not baked into the HLO) so the rust
+coordinator can sweep learning rates without recompiling artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 64 * 1024  # f32 elements per grid step (256 KiB per ref)
+
+
+def _largest_divisor_tile(dim: int, preferred: int) -> int:
+    t = min(dim, preferred)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _sgd_kernel(lr_ref, w_ref, g_ref, o_ref):
+    o_ref[...] = w_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(w, g, lr, *, block=DEFAULT_BLOCK):
+    """Fused elementwise SGD step on one parameter leaf.
+
+    Args:
+      w: parameter leaf (any shape, f32).
+      g: gradient of identical shape.
+      lr: scalar learning rate (python float or 0-d/1-element array).
+
+    Returns:
+      Updated leaf with the same shape as ``w``.
+    """
+    assert w.shape == g.shape, f"shape mismatch {w.shape} vs {g.shape}"
+    shape = w.shape
+    n = w.size
+    wf = w.reshape((n,))
+    gf = g.reshape((n,))
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape((1,))
+    bs = _largest_divisor_tile(n, block)
+
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            # lr broadcast to every grid step.
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(lr_arr, wf, gf)
+    return out.reshape(shape)
+
+
+def sgd_update_tree(params, grads, lr, *, block=DEFAULT_BLOCK):
+    """Apply :func:`sgd_update` across a pytree of parameter leaves."""
+    return jax.tree_util.tree_map(
+        lambda w, g: sgd_update(w, g, lr, block=block), params, grads
+    )

@@ -1,0 +1,214 @@
+"""L2 — the paper's learning workload in JAX, calling the L1 Pallas kernels.
+
+The paper evaluates DEFL with a small CNN on MNIST and CIFAR-10 (Section
+VI-A: 1 server, 10 devices, lr = 0.01, mini-batch SGD). This module defines:
+
+* ``mnist_cnn`` / ``cifar_cnn`` — conv→relu→pool ×2, then two dense layers.
+  The dense layers are the Pallas fused-linear kernel
+  (:mod:`compile.kernels.fused_linear`), wired with a custom VJP so the
+  backward pass lands on Pallas matmuls too.
+* ``mlp`` — a tiny model for the quickstart example and fast tests.
+* ``train_step`` — one mini-batch SGD iteration: fwd, bwd, and the Pallas
+  fused update (:mod:`compile.kernels.sgd`). This is the computation DEFL's
+  eq. (4) prices at ``G_m·b / f_m``; the rust coordinator executes its
+  AOT-lowered HLO ``V`` times per round per device.
+* ``eval_step`` — summed loss + correct-prediction count over a batch.
+
+Everything here runs at build time only (``make artifacts``); the lowered
+HLO text is the interchange with the rust runtime.
+
+Parameters are a flat ``dict[str, Array]`` with a deterministic leaf order
+(``PARAM_ORDER`` per model) — the same order the manifest records and the
+rust side uses for execute() argument marshalling.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv as conv_kernel
+from compile.kernels import fused_linear, ref, sgd
+
+# Escape hatch: DEFL_USE_PALLAS=0 swaps the Pallas kernels for the pure-jnp
+# references (used by tests to isolate kernel bugs from model bugs).
+USE_PALLAS = os.environ.get("DEFL_USE_PALLAS", "1") != "0"
+# DEFL_PALLAS_CONV=1 routes convolutions through the Pallas nine-GEMM
+# mapping (compile.kernels.conv). Default off for the shipped artifacts:
+# interpret-mode dispatch cost on CPU-PJRT; see conv.py docstring.
+PALLAS_CONV = os.environ.get("DEFL_PALLAS_CONV", "0") == "1"
+
+
+def _dense(x, w, b, activation):
+    if USE_PALLAS:
+        return fused_linear.linear_vjp(x, w, b, activation)
+    return ref.linear(x, w, b, activation)
+
+
+def _sgd_tree(params, grads, lr):
+    if USE_PALLAS:
+        return sgd.sgd_update_tree(params, grads, lr)
+    return jax.tree_util.tree_map(lambda w, g: ref.sgd_update(w, g, lr),
+                                  params, grads)
+
+
+# --------------------------------------------------------------------------
+# Model zoo
+# --------------------------------------------------------------------------
+
+MODELS = {
+    # name: (height, width, channels, classes)
+    "mnist_cnn": dict(height=28, width=28, channels=1, classes=10,
+                      conv1=8, conv2=16, hidden=128),
+    "cifar_cnn": dict(height=32, width=32, channels=3, classes=10,
+                      conv1=16, conv2=32, hidden=128),
+    "mlp": dict(height=8, width=8, channels=1, classes=10, hidden=32),
+}
+
+
+def param_specs(name):
+    """Ordered ``[(leaf_name, shape)]`` for a model — the manifest contract."""
+    cfg = MODELS[name]
+    h, w, c, k = cfg["height"], cfg["width"], cfg["channels"], cfg["classes"]
+    if name == "mlp":
+        d = h * w * c
+        hid = cfg["hidden"]
+        return [
+            ("fc1_w", (d, hid)), ("fc1_b", (hid,)),
+            ("fc2_w", (hid, k)), ("fc2_b", (k,)),
+        ]
+    c1, c2, hid = cfg["conv1"], cfg["conv2"], cfg["hidden"]
+    # Two 3x3 SAME convs, each followed by 2x2 maxpool.
+    fh, fw = h // 4, w // 4
+    flat = fh * fw * c2
+    return [
+        ("conv1_w", (3, 3, c, c1)), ("conv1_b", (c1,)),
+        ("conv2_w", (3, 3, c1, c2)), ("conv2_b", (c2,)),
+        ("fc1_w", (flat, hid)), ("fc1_b", (hid,)),
+        ("fc2_w", (hid, k)), ("fc2_b", (k,)),
+    ]
+
+
+def param_order(name):
+    return [n for n, _ in param_specs(name)]
+
+
+def param_count(name):
+    return sum(int(jnp.prod(jnp.array(s))) for _, s in param_specs(name))
+
+
+def init_params(name, seed=0):
+    """He-initialised parameters as an ordered dict of f32 leaves."""
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for leaf, shape in param_specs(name):
+        key, sub = jax.random.split(key)
+        if leaf.endswith("_b"):
+            params[leaf] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            scale = jnp.sqrt(2.0 / fan_in)
+            params[leaf] = scale * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _conv_relu_pool(x, w, b):
+    """3x3 SAME conv (NHWC) + bias + relu + 2x2 maxpool."""
+    if USE_PALLAS and PALLAS_CONV:
+        out = conv_kernel.conv3x3_same(x, w)
+    else:
+        out = jax.lax.conv_general_dilated(
+            x, w, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+    out = jax.nn.relu(out + b[None, None, None, :])
+    return jax.lax.reduce_window(
+        out, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 2, 2, 1), window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def forward(name, params, x):
+    """Logits for a batch ``x`` of shape (b, h, w, c), values in [0, 1]."""
+    if name == "mlp":
+        bsz = x.shape[0]
+        h = x.reshape((bsz, -1))
+        h = _dense(h, params["fc1_w"], params["fc1_b"], "relu")
+        return _dense(h, params["fc2_w"], params["fc2_b"], "none")
+    h = _conv_relu_pool(x, params["conv1_w"], params["conv1_b"])
+    h = _conv_relu_pool(h, params["conv2_w"], params["conv2_b"])
+    bsz = h.shape[0]
+    h = h.reshape((bsz, -1))
+    h = _dense(h, params["fc1_w"], params["fc1_b"], "relu")
+    return _dense(h, params["fc2_w"], params["fc2_b"], "none")
+
+
+def loss_fn(name, params, x, y):
+    """Mean softmax cross-entropy over the batch; y is int32 labels."""
+    logits = forward(name, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# AOT entry points (lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def train_step(name):
+    """Returns fn(params_leaves..., x, y, lr) → (new_leaves..., loss).
+
+    A flat positional signature (leaf order = ``param_order(name)``) keeps
+    the HLO parameter list explicit for the rust runtime.
+    """
+    order = param_order(name)
+
+    def step(*args):
+        leaves = args[: len(order)]
+        x, y, lr = args[len(order):]
+        params = dict(zip(order, leaves))
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(name, p, x, y))(params)
+        new = _sgd_tree(params, grads, lr)
+        return tuple(new[k] for k in order) + (loss,)
+
+    return step
+
+
+def eval_step(name):
+    """Returns fn(params_leaves..., x, y) → (summed_loss, correct_count)."""
+    order = param_order(name)
+
+    def step(*args):
+        leaves = args[: len(order)]
+        x, y = args[len(order):]
+        params = dict(zip(order, leaves))
+        logits = forward(name, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        y32 = y.astype(jnp.int32)
+        nll = -jnp.take_along_axis(logp, y32[:, None], axis=-1)[:, 0]
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y32).astype(jnp.float32))
+        return jnp.sum(nll), correct
+
+    return step
+
+
+def example_batch(name, batch, seed=0):
+    """Deterministic example inputs used for lowering and golden vectors."""
+    cfg = MODELS[name]
+    key = jax.random.PRNGKey(1000 + seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.uniform(
+        kx, (batch, cfg["height"], cfg["width"], cfg["channels"]),
+        jnp.float32)
+    y = jax.random.randint(ky, (batch,), 0, cfg["classes"], jnp.int32)
+    return x, y

@@ -1,0 +1,95 @@
+"""AOT pipeline gate: manifest contract, HLO text sanity, npz round-trips."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..",
+                                   "artifacts"))
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+needs_artifacts = pytest.mark.skipif(
+    not HAVE_ARTIFACTS, reason="run `make artifacts` first")
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = aot.lower_train("mlp", 16)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # flat positional signature: 4 param leaves + x + y + lr
+    assert _entry_param_count(text) == 7
+
+
+def _entry_param_count(text):
+    """Number of parameters of the ENTRY computation."""
+    entry = text[text.index("ENTRY "):]
+    seen = set()
+    for line in entry.splitlines():
+        if "= parameter(" in line.replace(" ", "= parameter(") or "parameter(" in line:
+            if "parameter(" in line and "=" in line:
+                n = line.split("parameter(")[1].split(")")[0]
+                seen.add(n)
+    return len(seen)
+
+
+def test_lower_eval_signature():
+    text = aot.to_hlo_text(aot.lower_eval("mlp", aot.EVAL_BATCH))
+    assert text.startswith("HloModule")
+    assert _entry_param_count(text) == 6  # 4 leaves + x + y
+
+
+@needs_artifacts
+def test_manifest_contract():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] == "hlo-text"
+    for name, batches in aot.TRAIN_BATCHES.items():
+        entry = man["models"][name]
+        assert [p["name"] for p in entry["params"]] == M.param_order(name)
+        assert entry["param_count"] == M.param_count(name)
+        assert entry["update_bytes"] == 4 * M.param_count(name)
+        for b in batches:
+            f_ = entry["train"][str(b)]["file"]
+            assert os.path.exists(os.path.join(ART, f_)), f_
+        for b, info in entry["eval"].items():
+            assert os.path.exists(os.path.join(ART, info["file"]))
+        assert os.path.exists(os.path.join(ART, entry["init"]))
+        assert os.path.exists(os.path.join(ART, entry["golden"]["file"]))
+
+
+@needs_artifacts
+@pytest.mark.parametrize("name", list(aot.TRAIN_BATCHES))
+def test_init_npz_matches_specs(name):
+    data = np.load(os.path.join(ART, f"{name}_init.npz"))
+    for leaf, shape in M.param_specs(name):
+        assert data[leaf].shape == tuple(shape)
+        assert data[leaf].dtype == np.float32
+
+
+@needs_artifacts
+def test_golden_reproducible():
+    """Golden vectors must be exactly reproducible from seeds."""
+    params = M.init_params("mlp", seed=0)
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    gb = man["models"]["mlp"]["golden"]["batch"]
+    g = aot.golden_vectors("mlp", gb, params)
+    stored = np.load(os.path.join(ART, "mlp_golden.npz"))
+    np.testing.assert_array_equal(g["x"], stored["x"])
+    np.testing.assert_allclose(g["loss"], stored["loss"], rtol=1e-6)
+    np.testing.assert_allclose(g["new_fc1_w"], stored["new_fc1_w"],
+                               rtol=1e-6, atol=1e-7)
+
+
+@needs_artifacts
+def test_hlo_files_start_with_module_header():
+    for fn in os.listdir(ART):
+        if fn.endswith(".hlo.txt"):
+            with open(os.path.join(ART, fn)) as f:
+                head = f.read(16)
+            assert head.startswith("HloModule"), fn

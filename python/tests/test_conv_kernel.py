@@ -1,0 +1,96 @@
+"""L1 gate: Pallas conv-as-nine-GEMMs vs lax conv oracle."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+
+FAST = settings(max_examples=10, deadline=None)
+
+
+def _rand(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@FAST
+@given(
+    n=st.integers(1, 3),
+    h=st.integers(3, 14),
+    w=st.integers(3, 14),
+    c=st.integers(1, 4),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv_matches_lax(n, h, w, c, k, seed):
+    x = _rand((n, h, w, c), seed)
+    wt = _rand((3, 3, c, k), seed + 1)
+    got = conv.conv3x3_same(x, wt)
+    want = ref.conv3x3_same(x, wt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 3, 3, 1, 1), (2, 28, 28, 1, 8),
+                                   (1, 8, 8, 3, 16)])
+def test_conv_known_shapes(shape):
+    n, h, w, c, k = shape
+    x = _rand((n, h, w, c), 0)
+    wt = _rand((3, 3, c, k), 1)
+    np.testing.assert_allclose(
+        np.asarray(conv.conv3x3_same(x, wt)),
+        np.asarray(ref.conv3x3_same(x, wt)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_conv_identity_kernel():
+    # delta kernel at center ⇒ identity
+    x = _rand((1, 6, 6, 2), 3)
+    wt = np.zeros((3, 3, 2, 2), np.float32)
+    wt[1, 1, 0, 0] = 1.0
+    wt[1, 1, 1, 1] = 1.0
+    out = conv.conv3x3_same(x, jnp.asarray(wt))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_conv_grads_match_lax_grads():
+    x = _rand((2, 10, 10, 3), 5)
+    wt = _rand((3, 3, 3, 4), 6)
+
+    def lk(x, w):
+        return jnp.sum(conv.conv3x3_same(x, w) ** 2)
+
+    def lr(x, w):
+        return jnp.sum(ref.conv3x3_same(x, w) ** 2)
+
+    gk = jax.grad(lk, argnums=(0, 1))(x, wt)
+    gr = jax.grad(lr, argnums=(0, 1))(x, wt)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_shift_roundtrip():
+    x = _rand((1, 5, 5, 1), 7)
+    for ky in range(3):
+        for kx in range(3):
+            s = conv._shifted(x, ky, kx)
+            u = conv._unshifted(s, ky, kx)
+            # unshift(shift(x)) equals x on the interior that survived
+            interior = np.asarray(u)[0, 1:-1, 1:-1, 0]
+            expect = np.asarray(x)[0, 1:-1, 1:-1, 0]
+            if ky == 1 and kx == 1:
+                np.testing.assert_allclose(np.asarray(u), np.asarray(x))
+            else:
+                assert interior.shape == expect.shape
+
+
+def test_conv_rejects_non_3x3():
+    x = _rand((1, 5, 5, 2), 0)
+    w5 = _rand((5, 5, 2, 2), 1)
+    with pytest.raises(AssertionError):
+        conv.conv3x3_same(x, w5)

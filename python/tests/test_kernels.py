@@ -1,0 +1,166 @@
+"""L1 gate: Pallas kernels vs pure-jnp oracles (hypothesis shape sweeps)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear as fl
+from compile.kernels import ref, sgd
+
+# interpret-mode Pallas is slow; keep case counts tight but the shape space
+# broad (primes, 1-sized dims, > tile sizes).
+FAST = settings(max_examples=25, deadline=None)
+
+
+def _rand(shape, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+def _tol(k):
+    # k-blocked accumulation reassociates; tolerance scales with sqrt(k).
+    return dict(rtol=5e-4, atol=5e-4 * np.sqrt(k))
+
+
+# --------------------------------------------------------------------- linear
+
+@FAST
+@given(
+    m=st.integers(1, 160),
+    k=st.integers(1, 300),
+    n=st.integers(1, 160),
+    act=st.sampled_from(["none", "relu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linear_matches_ref(m, k, n, act, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1)
+    b = _rand((n,), seed + 2)
+    got = fl.linear(x, w, b, act)
+    want = ref.linear(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(k))
+
+
+@FAST
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 256),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    x = _rand((m, k), seed)
+    w = _rand((k, n), seed + 1)
+    got = fl.matmul(x, w)
+    want = ref.matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(k))
+
+
+@pytest.mark.parametrize("mkn", [(1, 1, 1), (128, 128, 128), (32, 784, 128),
+                                 (64, 2048, 128), (17, 131, 13)])
+@pytest.mark.parametrize("act", ["none", "relu"])
+def test_linear_known_shapes(mkn, act):
+    m, k, n = mkn
+    x, w, b = _rand((m, k), 3), _rand((k, n), 4), _rand((n,), 5)
+    got = fl.linear(x, w, b, act)
+    want = ref.linear(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(k))
+
+
+def test_linear_bf16_inputs_accumulate_f32():
+    x = _rand((16, 64), 0).astype(jnp.bfloat16)
+    w = _rand((64, 32), 1).astype(jnp.bfloat16)
+    b = _rand((32,), 2)
+    got = fl.linear(x, w, b, "none")
+    want = ref.linear(x, w, b, "none")
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_linear_rejects_bad_activation():
+    x, w, b = _rand((4, 4), 0), _rand((4, 4), 1), _rand((4,), 2)
+    with pytest.raises(ValueError):
+        fl.linear(x, w, b, "gelu")
+
+
+def test_linear_grad_matches_ref_grad():
+    x, w, b = _rand((32, 112), 0), _rand((112, 48), 1), _rand((48,), 2)
+
+    def lk(x, w, b):
+        return jnp.sum(fl.linear_vjp(x, w, b, "relu") ** 2)
+
+    def lr(x, w, b):
+        return jnp.sum(ref.linear(x, w, b, "relu") ** 2)
+
+    gk = jax.grad(lk, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(lr, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-3, atol=5e-3)
+
+
+def test_tile_helper_divides():
+    for dim in [1, 2, 7, 128, 784, 2048, 999]:
+        for pref in [1, 32, 128, 4096]:
+            t = fl._largest_divisor_tile(dim, pref)
+            assert 1 <= t <= min(dim, pref)
+            assert dim % t == 0
+
+
+def test_vmem_budget_under_16mib():
+    # The tiling the artifacts actually use must fit VMEM with headroom.
+    for (m, n, k) in [(64, 128, 2048), (256, 128, 784), (128, 10, 128)]:
+        assert fl.vmem_bytes(m, n, k) < 4 * 1024 * 1024  # 4 MiB << 16 MiB
+
+
+# ------------------------------------------------------------------------ sgd
+
+@FAST
+@given(
+    n=st.integers(1, 70000),
+    lr=st.floats(1e-4, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_flat_matches_ref(n, lr, seed):
+    w = _rand((n,), seed)
+    g = _rand((n,), seed + 1)
+    got = sgd.sgd_update(w, g, lr)
+    want = ref.sgd_update(w, g, lr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(3, 3, 1, 8), (784, 128), (10,), (1,),
+                                   (2, 2, 2, 2)])
+def test_sgd_shapes(shape):
+    w, g = _rand(shape, 0), _rand(shape, 1)
+    got = sgd.sgd_update(w, g, 0.01)
+    want = ref.sgd_update(w, g, 0.01)
+    assert got.shape == w.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_tree():
+    params = {"a": _rand((8, 8), 0), "b": _rand((8,), 1)}
+    grads = {"a": _rand((8, 8), 2), "b": _rand((8,), 3)}
+    new = sgd.sgd_update_tree(params, grads, 0.5)
+    for k in params:
+        np.testing.assert_allclose(
+            np.asarray(new[k]),
+            np.asarray(ref.sgd_update(params[k], grads[k], 0.5)),
+            rtol=1e-6, atol=1e-6)
+
+
+def test_sgd_zero_lr_is_identity():
+    w, g = _rand((100,), 0), _rand((100,), 1)
+    np.testing.assert_array_equal(np.asarray(sgd.sgd_update(w, g, 0.0)),
+                                  np.asarray(w))
+
+
+def test_sgd_shape_mismatch_raises():
+    with pytest.raises(AssertionError):
+        sgd.sgd_update(_rand((4,), 0), _rand((5,), 1), 0.1)

@@ -1,0 +1,131 @@
+"""L2 gate: model shapes, loss semantics, gradient correctness, trainability."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_param_specs_order_and_count(name):
+    specs = M.param_specs(name)
+    order = M.param_order(name)
+    assert order == [n for n, _ in specs]
+    assert len(set(order)) == len(order)
+    count = sum(int(np.prod(s)) for _, s in specs)
+    assert count == M.param_count(name)
+    assert count > 0
+
+
+@pytest.mark.parametrize("name", list(M.MODELS))
+def test_init_params_match_specs(name):
+    params = M.init_params(name, seed=0)
+    for leaf, shape in M.param_specs(name):
+        assert params[leaf].shape == shape
+        assert params[leaf].dtype == jnp.float32
+    # biases start at zero, weights don't
+    assert float(jnp.abs(params[M.param_order(name)[1]]).sum()) == 0.0
+    assert float(jnp.abs(params[M.param_order(name)[0]]).sum()) > 0.0
+
+
+def test_init_params_deterministic():
+    a = M.init_params("mlp", seed=3)
+    b = M.init_params("mlp", seed=3)
+    c = M.init_params("mlp", seed=4)
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert any(
+        not np.array_equal(np.asarray(a[k]), np.asarray(c[k])) for k in a)
+
+
+@pytest.mark.parametrize("name,batch", [("mlp", 4), ("mnist_cnn", 2),
+                                        ("cifar_cnn", 2)])
+def test_forward_shapes(name, batch):
+    params = M.init_params(name)
+    x, _ = M.example_batch(name, batch)
+    logits = M.forward(name, params, x)
+    assert logits.shape == (batch, M.MODELS[name]["classes"])
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_loss_uniform_logits_is_log_classes():
+    # Zeroed params ⇒ logits 0 ⇒ loss = log(10)
+    params = {k: jnp.zeros_like(v) for k, v in M.init_params("mlp").items()}
+    x, y = M.example_batch("mlp", 8)
+    loss = M.loss_fn("mlp", params, x, y)
+    np.testing.assert_allclose(float(loss), np.log(10.0), rtol=1e-5)
+
+
+def test_grad_matches_numeric_mlp():
+    params = M.init_params("mlp", seed=1)
+    x, y = M.example_batch("mlp", 4)
+    g = jax.grad(lambda p: M.loss_fn("mlp", p, x, y))(params)
+    # central differences on a few coordinates of each leaf
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    for leaf in ["fc1_w", "fc2_b"]:
+        arr = np.asarray(params[leaf])
+        flat_idx = rng.choice(arr.size, size=3, replace=False)
+        for fi in flat_idx:
+            idx = np.unravel_index(fi, arr.shape)
+            pp = {k: np.asarray(v).copy() for k, v in params.items()}
+            pp[leaf][idx] += eps
+            lp = float(M.loss_fn("mlp", {k: jnp.asarray(v) for k, v in pp.items()}, x, y))
+            pp[leaf][idx] -= 2 * eps
+            lm = float(M.loss_fn("mlp", {k: jnp.asarray(v) for k, v in pp.items()}, x, y))
+            num = (lp - lm) / (2 * eps)
+            ana = float(np.asarray(g[leaf])[idx])
+            assert abs(num - ana) < 5e-3, (leaf, idx, num, ana)
+
+
+@pytest.mark.parametrize("name,batch", [("mlp", 16), ("mnist_cnn", 8)])
+def test_train_step_decreases_loss_on_fixed_batch(name, batch):
+    order = M.param_order(name)
+    params = M.init_params(name, seed=0)
+    x, y = M.example_batch(name, batch)
+    step = jax.jit(M.train_step(name))
+    leaves = [params[k] for k in order]
+    first = None
+    for _ in range(8):
+        out = step(*leaves, x, y, jnp.float32(0.05))
+        leaves, loss = list(out[:-1]), float(out[-1])
+        if first is None:
+            first = loss
+    assert loss < first, f"loss did not decrease: {first} -> {loss}"
+
+
+def test_train_step_signature_roundtrip():
+    """Output leaf order must equal input leaf order (manifest contract)."""
+    order = M.param_order("mlp")
+    params = M.init_params("mlp", seed=0)
+    x, y = M.example_batch("mlp", 16)
+    out = jax.jit(M.train_step("mlp"))(
+        *[params[k] for k in order], x, y, jnp.float32(0.0))
+    # lr=0 ⇒ new leaves identical to inputs, in the same order
+    for k, new in zip(order, out[:-1]):
+        np.testing.assert_array_equal(np.asarray(new), np.asarray(params[k]))
+
+
+def test_eval_step_counts():
+    order = M.param_order("mlp")
+    params = M.init_params("mlp", seed=0)
+    x, y = M.example_batch("mlp", 32)
+    loss_sum, correct = jax.jit(M.eval_step("mlp"))(
+        *[params[k] for k in order], x, y)
+    assert 0.0 <= float(correct) <= 32.0
+    assert float(loss_sum) > 0.0
+    # cross-check vs loss_fn (mean * batch)
+    mean_loss = M.loss_fn("mlp", params, x, y)
+    np.testing.assert_allclose(float(loss_sum), float(mean_loss) * 32,
+                               rtol=1e-4)
+
+
+def test_example_batch_deterministic_and_bounded():
+    x1, y1 = M.example_batch("mnist_cnn", 4, seed=0)
+    x2, y2 = M.example_batch("mnist_cnn", 4, seed=0)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(x1.min()) >= 0.0 and float(x1.max()) <= 1.0
+    assert int(y1.min()) >= 0 and int(y1.max()) < 10

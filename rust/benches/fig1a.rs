@@ -1,0 +1,25 @@
+//! Bench/regeneration target for Fig. 1(a): the ε sweep.
+//!
+//! Prints the paper-style table (analytic closed-form plans; training runs
+//! are exercised by `defl exp fig1a`) and benches the optimizer itself.
+
+use defl::bench::Suite;
+use defl::defl_opt::{self, PlanInputs};
+use defl::experiments::{fig1a, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    // regenerate the figure's series (analytic mode: no training)
+    let mut opts = ExpOpts::from_env();
+    opts.fast = true;
+    opts.out_dir = "results/bench".into();
+    fig1a::run(&opts, true)?;
+
+    // bench the solvers the figure is built from
+    let mut suite = Suite::new("fig1a: eq.(29) + exact search");
+    let inputs = PlanInputs::default();
+    suite.bench("closed_form", || defl_opt::closed_form(&inputs));
+    suite.bench("numeric_cap64", || defl_opt::numeric(&inputs, 64));
+    suite.bench("numeric_cap256", || defl_opt::numeric(&inputs, 256));
+    println!("{}", suite.render());
+    Ok(())
+}

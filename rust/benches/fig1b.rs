@@ -1,0 +1,14 @@
+//! Bench/regeneration target for Fig. 1(b): batch-size sweep (scaled-down
+//! training runs; the full figure comes from `defl exp fig1b`).
+
+use defl::experiments::{fig1b, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = ExpOpts::from_env();
+    opts.fast = true; // bench context: smoke scale
+    opts.out_dir = "results/bench".into();
+    let t0 = std::time::Instant::now();
+    fig1b::run(&opts)?;
+    println!("fig1b (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

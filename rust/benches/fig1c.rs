@@ -1,0 +1,14 @@
+//! Bench/regeneration target for Fig. 1(c): θ sweep (scaled-down training
+//! runs; the full figure comes from `defl exp fig1c`).
+
+use defl::experiments::{fig1c, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = ExpOpts::from_env();
+    opts.fast = true;
+    opts.out_dir = "results/bench".into();
+    let t0 = std::time::Instant::now();
+    fig1c::run(&opts)?;
+    println!("fig1c (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Bench/regeneration target for Fig. 1(d): rounds H and the
+//! compute/communication split vs θ (fully analytic — fast).
+
+use defl::experiments::{fig1d, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = ExpOpts::from_env();
+    opts.fast = true;
+    opts.out_dir = "results/bench".into();
+    fig1d::run(&opts)?;
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Bench/regeneration target for Fig. 2 (CIFAR-10): DEFL vs FedAvg vs
+//! Rand. Scaled-down; full run: `defl exp fig2 --dataset cifar`.
+
+use defl::experiments::{fig2, ExpOpts};
+
+fn main() -> anyhow::Result<()> {
+    let mut opts = ExpOpts::from_env();
+    opts.fast = true;
+    opts.out_dir = "results/bench".into();
+    let t0 = std::time::Instant::now();
+    fig2::run(&opts, fig2::Which::Cifar)?;
+    println!("fig2-cifar (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

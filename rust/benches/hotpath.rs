@@ -1,0 +1,86 @@
+//! Hot-path microbenchmarks: the L3 pieces the round loop spends time in
+//! (EXPERIMENTS.md §Perf records these before/after optimization), plus
+//! the PJRT execute path itself per batch size.
+
+use defl::bench::Suite;
+use defl::data::synth::{generate, SynthSpec};
+use defl::model::{federated_average, ParamSet};
+use defl::runtime::Runtime;
+use defl::util::rng::Pcg32;
+use defl::wireless::{Channel, ChannelConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("hotpath");
+
+    // --- aggregation (the L3 CPU hot spot) ---------------------------
+    let leaves: Vec<usize> = vec![100_352, 128, 1_280, 10]; // mnist_cnn-ish
+    let mut rng = Pcg32::seeded(1);
+    let sets: Vec<ParamSet> = (0..10)
+        .map(|_| ParamSet {
+            leaves: leaves
+                .iter()
+                .map(|&n| (0..n).map(|_| rng.uniform() as f32).collect())
+                .collect(),
+        })
+        .collect();
+    let weights = vec![600.0; 10];
+    let total_params: usize = leaves.iter().sum();
+    suite.bench_units("fedavg_10dev_103k", (10 * total_params) as f64, || {
+        let refs: Vec<&ParamSet> = sets.iter().collect();
+        federated_average(&refs, &weights)
+    });
+
+    // --- channel sampling --------------------------------------------
+    let mut channel = Channel::new(ChannelConfig::default(), 10, 3);
+    suite.bench("channel_round_10dev", || channel.round(3.3e6));
+
+    // --- data synthesis + gather --------------------------------------
+    suite.bench("synth_mnist_1k", || generate(&SynthSpec::mnist_like(1000), 7));
+    let ds = generate(&SynthSpec::mnist_like(4096), 7);
+    let idx: Vec<usize> = (0..64).collect();
+    suite.bench_units("gather_b64", 64.0, || ds.gather(&idx));
+
+    // --- PJRT execute path (needs artifacts) ---------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rt = Runtime::new("artifacts")?;
+        for model in ["mlp", "mnist_cnn"] {
+            let params = rt.initial_params(model)?;
+            let spec = rt.spec(model)?.clone();
+            let elems = spec.height * spec.width * spec.channels;
+            for &b in rt.train_batches(model)?.iter() {
+                let tds = generate(
+                    &SynthSpec {
+                        n: b.max(1),
+                        height: spec.height,
+                        width: spec.width,
+                        channels: spec.channels,
+                        classes: spec.classes,
+                        noise: 0.1,
+                        label_noise: 0.0,
+                        modes: 3,
+                    },
+                    5,
+                );
+                let idx: Vec<usize> = (0..b).collect();
+                let (x, y) = tds.gather(&idx);
+                assert_eq!(x.len(), b * elems);
+                rt.preload(model, &[b])?;
+                suite.bench_units(&format!("train_step_{model}_b{b}"), b as f64, || {
+                    rt.train_step(model, b, &params, &x, &y, 0.01).unwrap()
+                });
+                // marshalling-only share: literal construction for the
+                // same call, no execute (perf-pass diagnostics)
+                if b == 32 || model == "mlp" {
+                    suite.bench(&format!("marshal_only_{model}_b{b}"), || {
+                        defl::runtime::marshal_probe(&rt, model, b, &params, &x, &y).unwrap()
+                    });
+                }
+            }
+        }
+    } else {
+        eprintln!("artifacts missing — PJRT benches skipped (run `make artifacts`)");
+    }
+
+    println!("{}", suite.render());
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! Policy resolution: turn a configured [`Policy`] into a concrete
+//! per-round operating point (batch b, local rounds V) plus the plan
+//! diagnostics DEFL computed. This is where the paper's eq. (29) meets the
+//! baselines it is compared against (FedAvg, Rand.).
+
+use crate::config::{ExperimentConfig, Policy};
+use crate::defl_opt::{self, Plan, PlanInputs};
+
+/// The resolved operating point used by the coordinator.
+#[derive(Clone, Debug)]
+pub struct Resolved {
+    /// Batch size requested by the policy (before artifact clamping).
+    pub batch: usize,
+    /// Local iterations per communication round.
+    pub local_rounds: usize,
+    /// DEFL's plan, when the policy computed one (diagnostics/figures).
+    pub plan: Option<Plan>,
+}
+
+/// Resolve a policy against the delay models.
+///
+/// * `t_cm` — expected synchronous uplink time of one update (eq. 7).
+/// * `t_cp_per_sample` — fleet bottleneck seconds/sample (constraint 17).
+pub fn resolve(cfg: &ExperimentConfig, t_cm: f64, t_cp_per_sample: f64) -> Resolved {
+    let inputs = PlanInputs {
+        t_cm,
+        t_cp_per_sample,
+        m: cfg.devices,
+        epsilon: cfg.epsilon,
+        nu: cfg.nu,
+        c: cfg.c,
+    };
+    match &cfg.policy {
+        Policy::Defl => {
+            let plan = defl_opt::closed_form(&inputs);
+            Resolved { batch: plan.batch, local_rounds: plan.local_rounds, plan: Some(plan) }
+        }
+        Policy::DeflNumeric => {
+            // Cap at 64: the largest batch the paper's constraint set
+            // (and our artifact ladder) considers practical on-device.
+            let plan = defl_opt::numeric(&inputs, 64);
+            Resolved { batch: plan.batch, local_rounds: plan.local_rounds, plan: Some(plan) }
+        }
+        Policy::FedAvg => Resolved { batch: 10, local_rounds: 20, plan: None },
+        Policy::Rand => {
+            // Paper Section VI: Rand. is dataset-specific.
+            let (batch, local_rounds) = match cfg.dataset {
+                crate::config::DatasetKind::CifarLike => (64, 30),
+                _ => (16, 15),
+            };
+            Resolved { batch, local_rounds, plan: None }
+        }
+        Policy::Fixed { batch, local_rounds } => {
+            Resolved { batch: *batch, local_rounds: *local_rounds, plan: None }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+
+    fn cfg(policy: Policy) -> ExperimentConfig {
+        ExperimentConfig { policy, ..Default::default() }
+    }
+
+    #[test]
+    fn fedavg_matches_paper() {
+        let r = resolve(&cfg(Policy::FedAvg), 0.1, 1e-4);
+        assert_eq!((r.batch, r.local_rounds), (10, 20));
+        assert!(r.plan.is_none());
+    }
+
+    #[test]
+    fn rand_is_dataset_specific() {
+        let mut c = cfg(Policy::Rand);
+        assert_eq!(resolve(&c, 0.1, 1e-4).batch, 16);
+        c.dataset = DatasetKind::CifarLike;
+        let r = resolve(&c, 0.1, 1e-4);
+        assert_eq!((r.batch, r.local_rounds), (64, 30));
+    }
+
+    #[test]
+    fn defl_computes_plan_at_paper_point() {
+        // Paper operating point ⇒ b*=32 (Section VI).
+        let r = resolve(&cfg(Policy::Defl), 0.094, 3.763e-4);
+        assert_eq!(r.batch, 32);
+        let plan = r.plan.unwrap();
+        assert!((0.05..0.5).contains(&plan.theta), "θ={}", plan.theta);
+        assert!(r.local_rounds >= 1);
+    }
+
+    #[test]
+    fn defl_numeric_never_slower_in_plan() {
+        let c = cfg(Policy::Defl);
+        let cf = resolve(&c, 0.094, 3.763e-4).plan.unwrap();
+        let nm = resolve(&cfg(Policy::DeflNumeric), 0.094, 3.763e-4).plan.unwrap();
+        assert!(nm.overall_time <= cf.overall_time + 1e-9);
+    }
+
+    #[test]
+    fn fixed_passthrough() {
+        let r = resolve(&cfg(Policy::Fixed { batch: 7, local_rounds: 3 }), 0.1, 1e-4);
+        assert_eq!((r.batch, r.local_rounds), (7, 3));
+    }
+}

@@ -1,0 +1,184 @@
+//! Micro/end-to-end benchmark harness (substrate; no `criterion` offline).
+//!
+//! Provides warmup, timed iterations, and a [`crate::util::stats::Summary`]
+//! per benchmark, printed in a fixed-width table. Used by every target in
+//! `rust/benches/` (wired with `harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One benchmark's result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional work units per iteration (for throughput lines).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / self.summary.mean)
+    }
+}
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { warmup_iters: 3, iters: 20 }
+    }
+}
+
+impl BenchOpts {
+    /// Honour `DEFL_BENCH_FAST=1` (CI) by shrinking the iteration counts.
+    pub fn from_env() -> Self {
+        if std::env::var("DEFL_BENCH_FAST").as_deref() == Ok("1") {
+            BenchOpts { warmup_iters: 1, iters: 3 }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// A suite accumulates results and renders the report.
+pub struct Suite {
+    pub name: String,
+    pub opts: BenchOpts,
+    results: Vec<BenchResult>,
+}
+
+impl Suite {
+    pub fn new(name: &str) -> Self {
+        Suite { name: name.into(), opts: BenchOpts::from_env(), results: Vec::new() }
+    }
+
+    /// Time `f` (seconds per iteration); `f` returns a sink value to keep
+    /// the optimizer honest (it is black-boxed).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        for _ in 0..self.opts.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.opts.iters);
+        for _ in 0..self.opts.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push(BenchResult {
+            name: name.into(),
+            summary: Summary::of(&samples),
+            units_per_iter: None,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Like [`Suite::bench`] with a throughput unit (e.g. samples/iter).
+    pub fn bench_units<R>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        f: impl FnMut() -> R,
+    ) -> &BenchResult {
+        self.bench(name, f);
+        let last = self.results.last_mut().unwrap();
+        last.units_per_iter = Some(units_per_iter);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally-measured sample set (for end-to-end runs that
+    /// can't be repeated many times).
+    pub fn record(&mut self, name: &str, samples: &[f64]) {
+        self.results.push(BenchResult {
+            name: name.into(),
+            summary: Summary::of(samples),
+            units_per_iter: None,
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = crate::metrics::Table::new(&[
+            "benchmark", "n", "mean", "p50", "p95", "max", "throughput",
+        ]);
+        for r in &self.results {
+            t.row(&[
+                r.name.clone(),
+                r.summary.n.to_string(),
+                fmt_secs(r.summary.mean),
+                fmt_secs(r.summary.p50),
+                fmt_secs(r.summary.p95),
+                fmt_secs(r.summary.max),
+                r.throughput().map_or("-".into(), |t| format!("{t:.1}/s")),
+            ]);
+        }
+        format!("== bench suite: {} ==\n{}", self.name, t.render())
+    }
+}
+
+/// Human-scale seconds formatter.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_expected_iterations() {
+        let mut suite = Suite::new("t");
+        suite.opts = BenchOpts { warmup_iters: 2, iters: 5 };
+        let mut count = 0;
+        suite.bench("counter", || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7); // 2 warmup + 5 timed
+        assert_eq!(suite.results()[0].summary.n, 5);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut suite = Suite::new("t");
+        suite.opts = BenchOpts { warmup_iters: 0, iters: 3 };
+        suite.bench_units("w", 100.0, || std::thread::sleep(std::time::Duration::from_micros(50)));
+        let r = &suite.results()[0];
+        let tp = r.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 100.0 / 40e-6);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let mut suite = Suite::new("demo");
+        suite.opts = BenchOpts { warmup_iters: 0, iters: 2 };
+        suite.bench("a", || 1 + 1);
+        suite.record("external", &[0.5, 0.6]);
+        let s = suite.render();
+        assert!(s.contains("demo") && s.contains("a") && s.contains("external"));
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-5).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,37 @@
+// Throwaway smoke: load mlp train artifact, run one step, compare vs golden.
+use anyhow::Result;
+use xla::FromRawBytes;
+
+fn main() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("artifacts/mlp_train_b16.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+
+    let init: Vec<(String, xla::Literal)> = xla::Literal::read_npz("artifacts/mlp_init.npz", &())?;
+    let golden: Vec<(String, xla::Literal)> = xla::Literal::read_npz("artifacts/mlp_golden.npz", &())?;
+    let get = |name: &str| -> xla::Literal {
+        golden.iter().find(|(n, _)| n == name).map(|(_, l)| l.clone()).unwrap()
+    };
+    let order = ["fc1_w", "fc1_b", "fc2_w", "fc2_b"];
+    let mut args: Vec<xla::Literal> = order.iter()
+        .map(|n| init.iter().find(|(m, _)| m == n).unwrap().1.clone())
+        .collect();
+    args.push(get("x"));
+    args.push(get("y"));
+    args.push(get("lr"));
+    let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+    let outs = result.to_tuple()?;
+    println!("outputs: {}", outs.len());
+    let loss = outs.last().unwrap().to_vec::<f32>()?[0];
+    let want = get("loss").to_vec::<f32>()?[0];
+    println!("loss rust={loss} jax={want}");
+    assert!((loss - want).abs() < 1e-5);
+    // compare first new param leaf
+    let new_w = outs[0].to_vec::<f32>()?;
+    let want_w = get("new_fc1_w").to_vec::<f32>()?;
+    let maxdiff = new_w.iter().zip(&want_w).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+    println!("max |Δfc1_w| = {maxdiff}");
+    assert!(maxdiff < 1e-5);
+    println!("smoke_hlo OK");
+    Ok(())
+}

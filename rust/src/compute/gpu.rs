@@ -1,0 +1,244 @@
+//! Per-device GPU specs and the eq. (3) frequency model.
+//!
+//! `effective_frequency` implements f_m = 1/(a_s + a_c/f_c + a_M/f_M).
+//! The constants split a workload into a static part (`a_s`, seconds of
+//! fixed overhead per cycle-unit), a core-frequency-bound part (`a_c`
+//! cycles) and a memory-frequency-bound part (`a_M` memory cycles) —
+//! the linear performance model of Abe et al. (2014), which the paper
+//! cites for eq. (3).
+//!
+//! [`GpuFleet`] builds an `M`-device fleet: homogeneous (paper evaluation:
+//! every device capped at `f_m = 2 GHz`) or heterogeneous (DVFS-style
+//! core/memory frequency jitter per device) for the straggler ablation.
+
+use crate::util::rng::Pcg32;
+
+/// Eq. (3). Frequencies in Hz; returns effective frequency in Hz.
+///
+/// `a_s` is in seconds-per-cycle (static time share), `a_c`/`a_M` are
+/// dimensionless multipliers of the core/memory cycle times.
+pub fn effective_frequency(a_s: f64, a_c: f64, f_core_hz: f64, a_m: f64, f_mem_hz: f64) -> f64 {
+    assert!(f_core_hz > 0.0 && f_mem_hz > 0.0);
+    let denom = a_s + a_c / f_core_hz + a_m / f_mem_hz;
+    assert!(denom > 0.0, "degenerate frequency model");
+    1.0 / denom
+}
+
+/// One device's compute capability.
+#[derive(Clone, Debug)]
+pub struct GpuSpec {
+    /// Effective frequency f_m (Hz) after eq. (3) and the paper's cap.
+    pub freq_hz: f64,
+    /// G_m: cycles per input bit (paper: 30).
+    pub cycles_per_bit: f64,
+    /// Samples processed per wave (1 = the paper's eq. 4; see
+    /// `compute::minibatch_time_parallel`).
+    pub parallel_width: usize,
+}
+
+impl GpuSpec {
+    /// Eq. (4) for this device (batch-parallel generalisation).
+    pub fn minibatch_time(&self, bits_per_sample: f64, batch: usize) -> f64 {
+        super::minibatch_time_parallel(
+            self.cycles_per_bit,
+            bits_per_sample,
+            batch,
+            self.freq_hz,
+            self.parallel_width,
+        )
+    }
+}
+
+/// Fleet construction parameters.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub devices: usize,
+    /// Paper's cap: every f_m ≤ this (Section VI-A: 2 GHz).
+    pub max_freq_hz: f64,
+    pub cycles_per_bit: f64,
+    /// Eq. (3) constants (defaults model an RTX8000-class part where the
+    /// cap binds for every device — reproducing the paper's equal 2 GHz).
+    pub a_static: f64,
+    pub a_core: f64,
+    pub a_mem: f64,
+    /// Nominal core/memory frequencies (Hz).
+    pub f_core_hz: f64,
+    pub f_mem_hz: f64,
+    /// Per-device multiplicative jitter on f_core/f_mem (0 = homogeneous).
+    pub heterogeneity: f64,
+    /// Samples per GPU wave (1 = paper's eq. 4).
+    pub parallel_width: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        // RTX8000-ish: 1.77 GHz core, 7 GHz effective memory. With
+        // a_c = a_M = 0.5 and a_s ≈ 0, eq. (3) gives ≈ 2.8 GHz effective,
+        // so the paper's 2 GHz cap binds — matching "equal maximum
+        // computation capacity of f_m = 2 GHz for all devices".
+        FleetConfig {
+            devices: 10,
+            max_freq_hz: 2e9,
+            cycles_per_bit: 30.0,
+            a_static: 0.0,
+            a_core: 0.5,
+            a_mem: 0.5,
+            f_core_hz: 1.77e9,
+            f_mem_hz: 7.0e9,
+            heterogeneity: 0.0,
+            parallel_width: 1,
+        }
+    }
+}
+
+/// The device fleet's compute side.
+#[derive(Clone, Debug)]
+pub struct GpuFleet {
+    pub specs: Vec<GpuSpec>,
+}
+
+impl GpuFleet {
+    pub fn new(cfg: &FleetConfig, seed: u64) -> Self {
+        assert!(cfg.devices > 0);
+        let mut rng = Pcg32::new(seed, 0x6B0);
+        let specs = (0..cfg.devices)
+            .map(|_| {
+                let jit = |rng: &mut Pcg32| {
+                    if cfg.heterogeneity > 0.0 {
+                        (1.0 + rng.normal_ms(0.0, cfg.heterogeneity)).clamp(0.2, 2.0)
+                    } else {
+                        1.0
+                    }
+                };
+                let fc = cfg.f_core_hz * jit(&mut rng);
+                let fm = cfg.f_mem_hz * jit(&mut rng);
+                let f = effective_frequency(cfg.a_static, cfg.a_core, fc, cfg.a_mem, fm)
+                    .min(cfg.max_freq_hz);
+                GpuSpec {
+                    freq_hz: f,
+                    cycles_per_bit: cfg.cycles_per_bit,
+                    parallel_width: cfg.parallel_width,
+                }
+            })
+            .collect();
+        GpuFleet { specs }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.specs.len()
+    }
+
+    /// Eq. (4) per device then eq. (5) max.
+    pub fn round_time(&self, bits_per_sample: f64, batch: usize) -> f64 {
+        super::round_time(
+            &self
+                .specs
+                .iter()
+                .map(|s| s.minibatch_time(bits_per_sample, batch))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Eq. (5) restricted to a cohort (partial participation).
+    pub fn round_time_of(&self, cohort: &[usize], bits_per_sample: f64, batch: usize) -> f64 {
+        cohort
+            .iter()
+            .map(|&i| self.specs[i].minibatch_time(bits_per_sample, batch))
+            .fold(0.0, f64::max)
+    }
+
+    /// The bottleneck device's `G_m·bits / f_m` ratio in seconds-per-
+    /// batch-element — the quantity the DEFL closed form needs (eq. 29
+    /// uses `G_m/f_m` of the slowest device under constraint (17)).
+    pub fn bottleneck_seconds_per_sample(&self, bits_per_sample: f64) -> f64 {
+        self.specs
+            .iter()
+            .map(|s| s.cycles_per_bit * bits_per_sample / s.freq_hz)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn effective_frequency_hand_calc() {
+        // a_s=0, a_c=1, f_c=1GHz, a_M=0 ⇒ f = 1 GHz
+        let f = effective_frequency(0.0, 1.0, 1e9, 0.0, 7e9);
+        assert!((f - 1e9).abs() < 1.0);
+        // equal split halves it
+        let f = effective_frequency(0.0, 1.0, 1e9, 1.0, 1e9);
+        assert!((f - 0.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn frequency_monotone_in_core_clock() {
+        let lo = effective_frequency(0.0, 0.5, 1.0e9, 0.5, 7e9);
+        let hi = effective_frequency(0.0, 0.5, 1.8e9, 0.5, 7e9);
+        assert!(hi > lo);
+    }
+
+    #[test]
+    fn default_fleet_is_homogeneous_at_cap() {
+        let fleet = GpuFleet::new(&FleetConfig::default(), 1);
+        assert_eq!(fleet.num_devices(), 10);
+        for s in &fleet.specs {
+            assert!((s.freq_hz - 2e9).abs() < 1.0, "{}", s.freq_hz);
+        }
+    }
+
+    #[test]
+    fn heterogeneous_fleet_varies_and_respects_cap() {
+        let mut cfg = FleetConfig::default();
+        cfg.heterogeneity = 0.3;
+        // Lift the cap so jitter is visible (the default 2 GHz cap binds
+        // for most draws, which is exactly the paper's homogeneous case).
+        cfg.max_freq_hz = 1e12;
+        let fleet = GpuFleet::new(&cfg, 2);
+        let fs: Vec<f64> = fleet.specs.iter().map(|s| s.freq_hz).collect();
+        assert!(fs.iter().any(|&f| (f - fs[0]).abs() > 1.0));
+        assert!(fs.iter().all(|&f| f <= cfg.max_freq_hz + 1.0));
+    }
+
+    #[test]
+    fn fleet_round_time_matches_paper_shape() {
+        let fleet = GpuFleet::new(&FleetConfig::default(), 3);
+        let bits = 28.0 * 28.0 * 32.0;
+        let t16 = fleet.round_time(bits, 16);
+        let t32 = fleet.round_time(bits, 32);
+        assert!((t32 / t16 - 2.0).abs() < 1e-9); // linear in b (eq. 4)
+    }
+
+    #[test]
+    fn bottleneck_ratio_is_max() {
+        let mut cfg = FleetConfig::default();
+        cfg.heterogeneity = 0.4;
+        let fleet = GpuFleet::new(&cfg, 9);
+        let bits = 1000.0;
+        let slow = fleet.bottleneck_seconds_per_sample(bits);
+        for s in &fleet.specs {
+            assert!(s.cycles_per_bit * bits / s.freq_hz <= slow + 1e-15);
+        }
+    }
+
+    #[test]
+    fn prop_round_time_equals_slowest_device() {
+        prop::check(0x61, 40, |g| {
+            let mut cfg = FleetConfig::default();
+            cfg.devices = g.usize_in(1, 24);
+            cfg.heterogeneity = g.f64_in(0.0, 0.5);
+            let fleet = GpuFleet::new(&cfg, g.rng.next_u64());
+            let bits = g.f64_in(100.0, 1e5);
+            let b = g.usize_in(1, 128);
+            let t = fleet.round_time(bits, b);
+            let max = fleet
+                .specs
+                .iter()
+                .map(|s| s.minibatch_time(bits, b))
+                .fold(0.0, f64::max);
+            prop::close(t, max, 1e-12, "round_time == max")
+        });
+    }
+}

@@ -1,0 +1,140 @@
+//! GPU computation model — the "work" half of the paper.
+//!
+//! Eq. (3): effective GPU frequency of device `m`
+//!
+//! ```text
+//! f_m = 1 / ( a_s + a_c/f_c + a_M/f_M )             (3)
+//! ```
+//!
+//! where `a_s, a_c, a_M` are workload constants (static / core-bound /
+//! memory-bound shares, after Abe et al. 2014) and `f_c, f_M` are the GPU
+//! core and memory frequencies. Eq. (4)/(5): local minibatch time
+//!
+//! ```text
+//! T_cp^m = G_m · b / f_m ,    T_cp = max_m T_cp^m    (4),(5)
+//! ```
+//!
+//! The paper's evaluation uses `G_m = 30 cycles/bit` and caps `f_m` at
+//! 2 GHz for every device. We express `G_m·b` as
+//! `cycles_per_bit × bits_per_sample × b` so that different datasets
+//! (MNIST 28×28×1 vs CIFAR 32×32×3) price differently, exactly as a
+//! cycles/bit model implies.
+
+pub mod gpu;
+
+pub use gpu::{GpuSpec, GpuFleet, effective_frequency};
+
+/// Eq. (4): seconds for one minibatch of size `b`.
+///
+/// * `cycles_per_bit` — `G_m` (paper: 30).
+/// * `bits_per_sample` — input sample size in bits (e.g. MNIST f32 NHWC:
+///   28·28·1·32).
+/// * `freq_hz` — effective frequency `f_m` from eq. (3) (paper caps 2 GHz).
+pub fn minibatch_time(cycles_per_bit: f64, bits_per_sample: f64, batch: usize, freq_hz: f64) -> f64 {
+    minibatch_time_parallel(cycles_per_bit, bits_per_sample, batch, freq_hz, 1)
+}
+
+/// Batch-parallel extension of eq. (4).
+///
+/// The paper's Section II-B notes that "GPUs ... process the whole-batch
+/// samples simultaneously", yet eq. (4) prices `T_cp` linearly in `b`.
+/// That tension matters for Fig. 1(b): under strictly-linear pricing,
+/// larger batches can never win on time (EXPERIMENTS.md fig1b). This
+/// model closes the gap: the GPU executes up to `parallel_width` samples
+/// per wave, so
+///
+/// ```text
+/// T_cp = G_m · bits · ceil(b / width) / f_m
+/// ```
+///
+/// `width = 1` recovers the paper's eq. (4) exactly (the default
+/// everywhere); `width ≥ 64` reproduces the paper's *empirical* Fig. 1(b)
+/// ranking where b=64 is fastest per update.
+pub fn minibatch_time_parallel(
+    cycles_per_bit: f64,
+    bits_per_sample: f64,
+    batch: usize,
+    freq_hz: f64,
+    parallel_width: usize,
+) -> f64 {
+    assert!(freq_hz > 0.0, "non-positive frequency");
+    assert!(cycles_per_bit >= 0.0 && bits_per_sample >= 0.0);
+    assert!(parallel_width >= 1, "parallel width ≥ 1");
+    // one wave = `parallel_width` samples in the cycles of one sample
+    let waves = (batch + parallel_width - 1) / parallel_width;
+    cycles_per_bit * bits_per_sample * waves as f64 / freq_hz
+}
+
+/// Eq. (5): synchronous-round computation time = slowest device.
+pub fn round_time(per_device: &[f64]) -> f64 {
+    per_device.iter().copied().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_numbers() {
+        // G=30 cycles/bit, MNIST f32 sample = 28·28·32 bits, b=32, f=2GHz
+        let bits = 28.0 * 28.0 * 1.0 * 32.0;
+        let t = minibatch_time(30.0, bits, 32, 2e9);
+        // 30·25088·32/2e9 ≈ 12.04 ms
+        assert!((t - 30.0 * bits * 32.0 / 2e9).abs() < 1e-12);
+        assert!(t > 0.005 && t < 0.05, "{t}");
+    }
+
+    #[test]
+    fn linear_in_batch() {
+        let bits = 1000.0;
+        let t1 = minibatch_time(30.0, bits, 16, 2e9);
+        let t2 = minibatch_time(30.0, bits, 32, 2e9);
+        assert!((t2 - 2.0 * t1).abs() < 1e-15);
+    }
+
+    #[test]
+    fn inverse_in_frequency() {
+        let t1 = minibatch_time(30.0, 1000.0, 8, 1e9);
+        let t2 = minibatch_time(30.0, 1000.0, 8, 2e9);
+        assert!((t1 - 2.0 * t2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_is_max() {
+        assert_eq!(round_time(&[1.0, 3.0, 2.0]), 3.0);
+        assert_eq!(round_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn parallel_width_one_is_eq4() {
+        for b in [1usize, 7, 32, 100] {
+            assert_eq!(
+                minibatch_time(30.0, 1000.0, b, 2e9),
+                minibatch_time_parallel(30.0, 1000.0, b, 2e9, 1)
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_width_amortizes_batches() {
+        // width 64: b=1 and b=64 cost the same wave; b=65 costs two.
+        let w = 64;
+        let t1 = minibatch_time_parallel(30.0, 1000.0, 1, 2e9, w);
+        let t64 = minibatch_time_parallel(30.0, 1000.0, 64, 2e9, w);
+        let t65 = minibatch_time_parallel(30.0, 1000.0, 65, 2e9, w);
+        assert_eq!(t1, t64);
+        assert!((t65 / t64 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parallel_width_reproduces_paper_fig1b_ranking() {
+        // Per-sample efficiency: with width=64, b=64 does 4× the work of
+        // b=16 per wave at equal cost ⇒ fastest per update — the paper's
+        // empirical Fig. 1(b) ranking.
+        let w = 64;
+        let per_sample =
+            |b: usize| minibatch_time_parallel(30.0, 1000.0, b, 2e9, w) / b as f64;
+        assert!(per_sample(64) < per_sample(32));
+        assert!(per_sample(32) < per_sample(16));
+    }
+}

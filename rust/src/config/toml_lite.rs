@@ -1,0 +1,203 @@
+//! TOML-subset parser (substrate; no `serde`/`toml` offline).
+//!
+//! Supports the subset the config system needs: `[section]` /
+//! `[nested.section]` headers, `key = value` with string, integer, float,
+//! boolean and flat-array values, `#` comments, and blank lines. Values
+//! land in the same [`Json`] value model the rest of the system uses, as
+//! one nested object.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, msg: msg.into() }
+}
+
+/// Parse TOML-lite text into a nested JSON object.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+    for (lno, raw) in text.lines().enumerate() {
+        let lno = lno + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let inner = inner
+                .strip_suffix(']')
+                .ok_or_else(|| err(lno, "unterminated section header"))?;
+            if inner.is_empty() {
+                return Err(err(lno, "empty section name"));
+            }
+            section = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if section.iter().any(|s| s.is_empty()) {
+                return Err(err(lno, "empty section path component"));
+            }
+            // materialize the section (so empty sections still exist)
+            ensure_path(&mut root, &section).map_err(|m| err(lno, m))?;
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| err(lno, "expected key = value"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lno, "empty key"));
+        }
+        let value = parse_value(val.trim()).map_err(|m| err(lno, m))?;
+        let obj = ensure_path(&mut root, &section).map_err(|m| err(lno, m))?;
+        if obj.insert(key.to_string(), value).is_some() {
+            return Err(err(lno, format!("duplicate key {key:?}")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+pub fn parse_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Json> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_path<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(o) => o,
+            _ => return Err(format!("section {seg:?} collides with a value")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(Vec::new()));
+        }
+        return inner
+            .split(',')
+            .map(|e| parse_value(e.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Json::Arr);
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let j = parse(
+            r#"
+            # experiment config
+            name = "fig2"
+            [system]
+            devices = 10
+            seed = 42
+            verbose = true
+            [wireless]
+            bandwidth_hz = 2.0e7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("fig2"));
+        assert_eq!(j.get("system").unwrap().get("devices").unwrap().as_u64(), Some(10));
+        assert_eq!(j.get("system").unwrap().get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("wireless").unwrap().get("bandwidth_hz").unwrap().as_f64(), Some(2.0e7));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let j = parse("[a.b.c]\nx = 1\n").unwrap();
+        assert_eq!(
+            j.get("a").unwrap().get("b").unwrap().get("c").unwrap().get("x").unwrap().as_u64(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn arrays() {
+        let j = parse("batches = [16, 32, 64]\nnames = [\"a\", \"b\"]\n").unwrap();
+        let b = j.get("batches").unwrap().as_arr().unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2].as_u64(), Some(64));
+        assert_eq!(j.get("names").unwrap().idx(1).unwrap().as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_hash_in_string() {
+        let j = parse("x = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(j.get("x").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("x = 1\nbroken line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("x = \n").is_err());
+        assert!(parse("x = 1\nx = 2\n").is_err()); // duplicate
+    }
+
+    #[test]
+    fn section_value_collision_rejected() {
+        assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+}

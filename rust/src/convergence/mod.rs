@@ -1,0 +1,215 @@
+//! Convergence theory of DEFL — Theorem 1, Corollaries 1–2, Remark 3.
+//!
+//! These closed forms are what turns the delay models into an end-to-end
+//! *overall time* objective:
+//!
+//! ```text
+//! (10)  E[F(w̄_K) − F*] ≤ 8‖w₀−w*‖²/√(MK) + σ²/(2bL√(MK)) + σ²M(V−1)/(bLK)
+//! (12)  H = c/(b²ε²·M·ν·log(1/θ)) + c·M/(b·ε)
+//! (R3)  V = ν·log(1/θ)
+//! (8)   T = T_cm + V·T_cp
+//! (13)  𝒯 = H·T
+//! ```
+
+/// Problem constants for the bound (10).
+#[derive(Clone, Copy, Debug)]
+pub struct BoundParams {
+    /// ‖w₀ − w*‖² — squared distance of the initialization from optimum.
+    pub w0_dist_sq: f64,
+    /// σ² — per-device stochastic gradient variance bound (Assumption 2).
+    pub sigma_sq: f64,
+    /// L — smoothness constant (Assumption 1).
+    pub smoothness: f64,
+}
+
+impl Default for BoundParams {
+    fn default() -> Self {
+        // Unit-scale constants; the experiments only use ratios/shapes.
+        BoundParams { w0_dist_sq: 1.0, sigma_sq: 1.0, smoothness: 1.0 }
+    }
+}
+
+/// Corollary 1 (eq. 10): optimality-gap bound after `k` gradient steps with
+/// `m` devices, batch `b` and `v` local rounds.
+pub fn gap_bound(p: &BoundParams, m: usize, k: usize, b: usize, v: usize) -> f64 {
+    assert!(m > 0 && k > 0 && b > 0 && v > 0);
+    let (mf, kf, bf, vf) = (m as f64, k as f64, b as f64, v as f64);
+    let term1 = 8.0 * p.w0_dist_sq / (mf * kf).sqrt();
+    let term2 = p.sigma_sq / (2.0 * bf * p.smoothness * (mf * kf).sqrt());
+    let term3 = p.sigma_sq * mf * (vf - 1.0) / (bf * p.smoothness * kf);
+    term1 + term2 + term3
+}
+
+/// Remark 3: local rounds to reach local accuracy θ: `V = ν·log(1/θ)`.
+/// Clamped to ≥ 1 (a device always takes at least one step).
+pub fn local_rounds(nu: f64, theta: f64) -> usize {
+    assert!(nu > 0.0, "nu must be positive");
+    assert!((0.0..=1.0).contains(&theta), "theta in [0,1], got {theta}");
+    if theta <= f64::MIN_POSITIVE {
+        return usize::MAX / 2; // θ → 0 needs unboundedly many rounds
+    }
+    let v = nu * (1.0 / theta).ln();
+    // epsilon guard: ν·log(1/θ) that is integral up to float error should
+    // not ceil to the next integer (e.g. 2·1.5 = 3.0000000000000004).
+    (v - 1e-9).ceil().max(1.0) as usize
+}
+
+/// Inverse of `local_rounds` on the continuous relaxation: θ for a given V.
+pub fn theta_for_rounds(nu: f64, v: f64) -> f64 {
+    assert!(nu > 0.0 && v >= 0.0);
+    (-v / nu).exp()
+}
+
+/// Eq. (12): communication rounds to reach ε-global accuracy.
+///
+/// `c` approximates the big-O constant; the paper's evaluation treats it as
+/// a fixed scale. `alpha = log(1/θ)` is the auxiliary variable of Section V.
+pub fn rounds_to_epsilon(c: f64, b: f64, eps: f64, m: usize, nu: f64, alpha: f64) -> f64 {
+    assert!(c > 0.0 && b >= 1.0 && eps > 0.0 && m > 0 && nu > 0.0 && alpha > 0.0);
+    let mf = m as f64;
+    c / (b * b * eps * eps * mf * nu * alpha) + c * mf / (b * eps)
+}
+
+/// Eq. (8): wall time of one synchronous round.
+pub fn round_wall_time(t_cm: f64, v: usize, t_cp: f64) -> f64 {
+    assert!(t_cm >= 0.0 && t_cp >= 0.0);
+    t_cm + v as f64 * t_cp
+}
+
+/// Eq. (13): overall time 𝒯 = H·T (continuous H allowed — the optimizer
+/// works on the relaxation; the driver rounds H up to an integer).
+pub fn overall_time(h: f64, t_round: f64) -> f64 {
+    assert!(h >= 0.0 && t_round >= 0.0);
+    h * t_round
+}
+
+/// The complete objective (14): 𝒯(b, α) for given delay inputs.
+/// `t_cp_per_sample` is the bottleneck `G·bits/f` so that `T_cp = b·that`.
+pub fn objective(
+    c: f64,
+    eps: f64,
+    m: usize,
+    nu: f64,
+    t_cm: f64,
+    t_cp_per_sample: f64,
+    b: f64,
+    alpha: f64,
+) -> f64 {
+    let h = rounds_to_epsilon(c, b, eps, m, nu, alpha);
+    let t_cp = b * t_cp_per_sample;
+    let t = t_cm + nu * alpha * t_cp; // V = ν·α on the continuous relaxation
+    h * t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn gap_bound_decreases_in_k() {
+        let p = BoundParams::default();
+        let g1 = gap_bound(&p, 10, 100, 32, 5);
+        let g2 = gap_bound(&p, 10, 1000, 32, 5);
+        assert!(g2 < g1);
+    }
+
+    #[test]
+    fn gap_bound_decreases_in_b() {
+        // Remark 2: batch size b reduces the variance terms by 1/b.
+        let p = BoundParams::default();
+        let g1 = gap_bound(&p, 10, 500, 8, 5);
+        let g2 = gap_bound(&p, 10, 500, 64, 5);
+        assert!(g2 < g1);
+    }
+
+    #[test]
+    fn gap_bound_increases_in_v() {
+        // More local drift (V−1 term) hurts the bound.
+        let p = BoundParams::default();
+        assert!(gap_bound(&p, 10, 500, 32, 20) > gap_bound(&p, 10, 500, 32, 1));
+    }
+
+    #[test]
+    fn v_equals_one_recovers_theorem1_shape() {
+        // V=1 kills term3 entirely.
+        let p = BoundParams { sigma_sq: 2.0, ..Default::default() };
+        let g = gap_bound(&p, 4, 100, 1, 1);
+        let expected = 8.0 / (400f64).sqrt() + 2.0 / (2.0 * (400f64).sqrt());
+        assert!((g - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_rounds_basic() {
+        // ν=3, θ=e⁻² ⇒ V = 6
+        let v = local_rounds(3.0, (-2.0f64).exp());
+        assert_eq!(v, 6);
+        assert_eq!(local_rounds(3.0, 1.0), 1); // θ=1: no improvement, ≥1 step
+    }
+
+    #[test]
+    fn local_rounds_monotone_decreasing_in_theta() {
+        let v_loose = local_rounds(4.0, 0.5);
+        let v_tight = local_rounds(4.0, 0.05);
+        assert!(v_tight > v_loose);
+    }
+
+    #[test]
+    fn theta_rounds_roundtrip() {
+        let nu = 2.5;
+        for &v in &[1.0, 3.0, 10.0] {
+            let theta = theta_for_rounds(nu, v);
+            assert!((nu * (1.0 / theta).ln() - v).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn rounds_decrease_with_work() {
+        // More local work (larger α ⇒ smaller θ) reduces H (paper Fig 1d).
+        let h_lazy = rounds_to_epsilon(1.0, 32.0, 0.01, 10, 2.0, 0.5);
+        let h_hard = rounds_to_epsilon(1.0, 32.0, 0.01, 10, 2.0, 3.0);
+        assert!(h_hard < h_lazy);
+    }
+
+    #[test]
+    fn rounds_decrease_with_batch() {
+        let h_small = rounds_to_epsilon(1.0, 8.0, 0.01, 10, 2.0, 1.0);
+        let h_large = rounds_to_epsilon(1.0, 64.0, 0.01, 10, 2.0, 1.0);
+        assert!(h_large < h_small);
+    }
+
+    #[test]
+    fn overall_time_composition() {
+        let t = round_wall_time(0.5, 4, 0.1);
+        assert!((t - 0.9).abs() < 1e-12);
+        assert!((overall_time(10.0, t) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn objective_tradeoff_exists() {
+        // 𝒯 should not be monotone in α: talking less (bigger α) helps
+        // until computation dominates — the paper's whole premise.
+        let f = |alpha: f64| objective(1.0, 0.01, 10, 2.0, 0.2, 1e-3, 4.0, alpha);
+        let small = f(0.05);
+        let mid = f(1.0);
+        let huge = f(500.0);
+        assert!(mid < small, "more work should beat almost-no-work");
+        assert!(mid < huge, "unbounded work must eventually lose");
+    }
+
+    #[test]
+    fn prop_objective_positive_finite() {
+        prop::check(0x0B1, 200, |g| {
+            let b = g.f64_in(1.0, 256.0);
+            let alpha = g.log_uniform(1e-3, 1e2);
+            let eps = g.log_uniform(1e-4, 0.5);
+            let m = g.usize_in(1, 100);
+            let t = objective(1.0, eps, m, 2.0, g.f64_in(0.01, 5.0), g.log_uniform(1e-6, 1e-2), b, alpha);
+            if t.is_finite() && t > 0.0 {
+                Ok(())
+            } else {
+                Err(format!("objective {t}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,129 @@
+//! A simulated mobile edge device: its data shard, its batching RNG, and
+//! the V-round local SGD loop (Algorithm 1, step 3).
+
+use crate::data::Dataset;
+use crate::model::ParamSet;
+use crate::runtime::Runtime;
+use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// One mobile device participating in FL.
+pub struct Device {
+    pub id: usize,
+    /// Indices into the shared training corpus (this device's 𝒟_m).
+    pub shard: Vec<usize>,
+    data: Arc<Dataset>,
+    rng: Pcg32,
+    /// Epoch-style sampling cursor (reshuffled when exhausted).
+    cursor: usize,
+    order: Vec<usize>,
+}
+
+impl Device {
+    pub fn new(id: usize, shard: Vec<usize>, data: Arc<Dataset>, seed: u64) -> Self {
+        assert!(!shard.is_empty(), "device {id} got an empty shard");
+        let order = shard.clone();
+        Device { id, shard, data, rng: Pcg32::new(seed, id as u64 + 1), cursor: 0, order }
+    }
+
+    /// Local data size D_m (the FedAvg aggregation weight, eq. 2).
+    pub fn data_size(&self) -> usize {
+        self.shard.len()
+    }
+
+    /// Next mini-batch of `b` sample indices: epoch sampling without
+    /// replacement, reshuffling between epochs (standard mini-batch SGD).
+    fn next_batch(&mut self, b: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(b);
+        while out.len() < b {
+            if self.cursor == 0 {
+                self.rng.shuffle(&mut self.order);
+            }
+            let take = (b - out.len()).min(self.order.len() - self.cursor);
+            out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
+            self.cursor = (self.cursor + take) % self.order.len();
+        }
+        out
+    }
+
+    /// Algorithm 1 step 3: run `v` local mini-batch SGD iterations from the
+    /// received global model; returns the local model and the mean local
+    /// training loss.
+    pub fn local_train(
+        &mut self,
+        rt: &mut Runtime,
+        model: &str,
+        global: &ParamSet,
+        batch: usize,
+        v: usize,
+        lr: f32,
+    ) -> anyhow::Result<(ParamSet, f64)> {
+        assert!(v >= 1, "V must be ≥ 1");
+        let mut params = global.clone();
+        let mut loss_acc = 0f64;
+        for _ in 0..v {
+            let idx = self.next_batch(batch);
+            let (x, y) = self.data.gather(&idx);
+            let out = rt.train_step(model, batch, &params, &x, &y, lr)?;
+            params = out.params;
+            loss_acc += out.loss as f64;
+        }
+        Ok((params, loss_acc / v as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn device() -> Device {
+        let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
+        Device::new(0, (0..50).collect(), ds, 7)
+    }
+
+    #[test]
+    fn batches_have_requested_size_and_valid_indices() {
+        let mut d = device();
+        for _ in 0..20 {
+            let b = d.next_batch(16);
+            assert_eq!(b.len(), 16);
+            assert!(b.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_sample() {
+        let mut d = device();
+        let mut seen = std::collections::HashSet::new();
+        // 50 samples, batches of 10 ⇒ 5 batches = 1 epoch
+        for _ in 0..5 {
+            seen.extend(d.next_batch(10));
+        }
+        assert_eq!(seen.len(), 50);
+    }
+
+    #[test]
+    fn batch_larger_than_shard_wraps() {
+        let ds = Arc::new(generate(&SynthSpec::tiny(8), 3));
+        let mut d = Device::new(1, (0..8).collect(), ds, 7);
+        let b = d.next_batch(20);
+        assert_eq!(b.len(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty shard")]
+    fn empty_shard_panics() {
+        let ds = Arc::new(generate(&SynthSpec::tiny(8), 3));
+        Device::new(0, vec![], ds, 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
+        let mut a = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let mut b = Device::new(0, (0..50).collect(), ds, 9);
+        assert_eq!(a.next_batch(10), b.next_batch(10));
+        assert_eq!(a.next_batch(10), b.next_batch(10));
+    }
+}

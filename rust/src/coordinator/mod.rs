@@ -1,0 +1,363 @@
+//! The FL coordinator — Algorithm 1 (DEFL) end to end.
+//!
+//! Owns the parameter server, the device fleet, the wireless and compute
+//! delay models, the virtual clock, and the metrics log. Each synchronous
+//! round performs:
+//!
+//! 1. **Local computation** — every device runs `V` mini-batch SGD
+//!    iterations from the global model (real PJRT execution of the L2/L1
+//!    artifact).
+//! 2. **Wireless communication** — the channel draws this round's gains;
+//!    the round's `T_cm` is the slowest uplink (eq. 7).
+//! 3. **Aggregation & broadcast** — FedAvg weighted by `D_m` (eq. 2);
+//!    the virtual clock advances by `T_cm + V·T_cp` (eq. 8).
+//!
+//! The operating point (b, V) comes from [`crate::baselines::resolve`] —
+//! DEFL's closed form or one of the paper's baselines.
+
+pub mod device;
+pub mod selection;
+
+pub use device::Device;
+pub use selection::{Selection, Selector};
+
+use crate::baselines::{resolve, Resolved};
+use crate::compute::gpu::GpuFleet;
+use crate::config::ExperimentConfig;
+use crate::data::{self, synth, Dataset};
+use crate::metrics::{EnergyLedger, EnergyModel, EnergyRecord, RoundRecord, RunLog};
+use crate::model::{federated_average, ParamSet};
+use crate::runtime::Runtime;
+use crate::simclock::{RoundDelay, SimClock};
+use crate::util::json::Json;
+use crate::wireless::{dbm_to_watt, Channel};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A fully wired FL system ready to run rounds.
+pub struct FlSystem {
+    pub cfg: ExperimentConfig,
+    pub model: String,
+    pub runtime: Runtime,
+    pub channel: Channel,
+    pub fleet: GpuFleet,
+    pub devices: Vec<Device>,
+    pub test_set: Arc<Dataset>,
+    pub global: ParamSet,
+    pub clock: SimClock,
+    pub log: RunLog,
+    pub selector: Selector,
+    pub energy: EnergyLedger,
+    pub energy_model: EnergyModel,
+    /// The resolved operating point (after artifact clamping).
+    pub batch: usize,
+    pub local_rounds: usize,
+    pub resolved: Resolved,
+}
+
+/// Outcome snapshot of a completed run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub overall_time: f64,
+    pub rounds: usize,
+    pub final_train_loss: f64,
+    pub final_test_loss: f64,
+    pub final_test_accuracy: f64,
+    pub wall_seconds: f64,
+}
+
+impl FlSystem {
+    /// Build everything from a config: datasets, partition, channel,
+    /// fleet, runtime (artifacts compiled), policy resolution.
+    pub fn build(cfg: ExperimentConfig) -> anyhow::Result<FlSystem> {
+        cfg.validate()?;
+        let model = cfg.dataset.model_name().to_string();
+        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
+        let spec = runtime.spec(&model)?.clone();
+
+        // --- data ---------------------------------------------------
+        let n_train = cfg.train_per_device * cfg.devices;
+        #[allow(unused_mut)]
+        let (mut train_spec, mut test_spec) = match cfg.dataset {
+            crate::config::DatasetKind::MnistLike => {
+                (synth::SynthSpec::mnist_like(n_train), synth::SynthSpec::mnist_like(cfg.test_size))
+            }
+            crate::config::DatasetKind::CifarLike => {
+                (synth::SynthSpec::cifar_like(n_train), synth::SynthSpec::cifar_like(cfg.test_size))
+            }
+            crate::config::DatasetKind::Tiny => {
+                (synth::SynthSpec::tiny(n_train), synth::SynthSpec::tiny(cfg.test_size))
+            }
+        };
+        if let Some(noise) = cfg.noise {
+            train_spec.noise = noise;
+            test_spec.noise = noise;
+        }
+        if let Some(ln) = cfg.label_noise {
+            train_spec.label_noise = ln;
+            test_spec.label_noise = ln;
+        }
+        // train/test share the task (class prototypes) and differ only in
+        // the sample stream — see synth::generate_split.
+        let train = Arc::new(synth::generate_split(&train_spec, cfg.seed, cfg.seed));
+        let test_set = Arc::new(synth::generate_split(&test_spec, cfg.seed, cfg.seed ^ 0x7E57));
+        anyhow::ensure!(
+            train.height == spec.height && train.width == spec.width && train.channels == spec.channels,
+            "dataset dims {:?} do not match model {model} dims {:?}",
+            (train.height, train.width, train.channels),
+            (spec.height, spec.width, spec.channels)
+        );
+
+        let partition = match cfg.partition {
+            crate::config::PartitionKind::Iid => data::partition_iid(&train, cfg.devices, cfg.seed),
+            crate::config::PartitionKind::Dirichlet => {
+                data::partition_dirichlet(&train, cfg.devices, cfg.dirichlet_alpha, cfg.seed)
+            }
+            crate::config::PartitionKind::Shards => {
+                data::partition_shards(&train, cfg.devices, cfg.shards_per_device, cfg.seed)
+            }
+        };
+        let devices: Vec<Device> = partition
+            .device_indices
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| Device::new(i, shard.clone(), Arc::clone(&train), cfg.seed ^ (0xD0 + i as u64)))
+            .collect();
+
+        // --- delay models --------------------------------------------
+        let channel = Channel::new(cfg.wireless.clone(), cfg.devices, cfg.seed ^ 0xC4A);
+        let mut fleet_cfg = cfg.fleet.clone();
+        fleet_cfg.devices = cfg.devices;
+        let fleet = GpuFleet::new(&fleet_cfg, cfg.seed ^ 0x6B0);
+
+        // --- policy --------------------------------------------------
+        let t_cm = channel.expected_round_time(spec.update_bits());
+        let t_cps = fleet.bottleneck_seconds_per_sample(train.bits_per_sample());
+        let resolved = resolve(&cfg, t_cm, t_cps);
+        let artifacts = runtime.registry.model(&model)?;
+        let batch = artifacts.nearest_train_batch(resolved.batch);
+        if batch != resolved.batch {
+            crate::log_warn!(
+                "policy requested b={} but nearest artifact batch is b={batch}",
+                resolved.batch
+            );
+        }
+        let local_rounds = resolved.local_rounds.max(1);
+
+        // --- runtime warmup -------------------------------------------
+        runtime.preload(&model, &[batch])?;
+        let global = runtime.initial_params(&model)?;
+
+        let mut log = RunLog::new(&cfg.name);
+        log.set_meta("policy", Json::str(cfg.policy.label()));
+        log.set_meta("batch", Json::Num(batch as f64));
+        log.set_meta("local_rounds", Json::Num(local_rounds as f64));
+        log.set_meta("devices", Json::Num(cfg.devices as f64));
+        log.set_meta("t_cm_expected", Json::Num(t_cm));
+        log.set_meta("t_cp_per_sample", Json::Num(t_cps));
+        if let Some(plan) = &resolved.plan {
+            log.set_meta("plan_theta", Json::Num(plan.theta));
+            log.set_meta("plan_alpha", Json::Num(plan.alpha));
+            log.set_meta("plan_rounds_H", Json::Num(plan.rounds));
+            log.set_meta("plan_overall_time", Json::Num(plan.overall_time));
+        }
+
+        crate::log_info!(
+            "{}: policy={} b={batch} V={local_rounds} M={} T_cm≈{t_cm:.4}s t_cp/sample≈{t_cps:.2e}s",
+            cfg.name,
+            cfg.policy.label(),
+            cfg.devices
+        );
+
+        let selector = Selector::new(cfg.selection.clone(), cfg.seed ^ 0x5E1);
+        Ok(FlSystem {
+            cfg,
+            model,
+            runtime,
+            channel,
+            fleet,
+            devices,
+            test_set,
+            global,
+            clock: SimClock::new(),
+            log,
+            selector,
+            energy: EnergyLedger::default(),
+            energy_model: EnergyModel::default(),
+            batch,
+            local_rounds,
+            resolved,
+        })
+    }
+
+    /// Execute one synchronous communication round. Returns the record.
+    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        let wall_start = Instant::now();
+        let round_no = self.clock.rounds_elapsed() + 1;
+
+        // 0. client selection (paper: full participation = Selection::All).
+        let mean_gains: Vec<f64> = self.channel.links.iter().map(|l| l.mean_gain()).collect();
+        let mean_rates = self.channel.rates(&mean_gains);
+        let cohort = self.selector.pick(self.devices.len(), &mean_rates);
+
+        // 1. local computation on the cohort (paper: parallel; the
+        //    synchronous max is what the virtual clock prices).
+        let mut locals: Vec<ParamSet> = Vec::with_capacity(cohort.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(cohort.len());
+        let mut loss_acc = 0f64;
+        for &di in &cohort {
+            let dev = &mut self.devices[di];
+            let (params, loss) = dev.local_train(
+                &mut self.runtime,
+                &self.model,
+                &self.global,
+                self.batch,
+                self.local_rounds,
+                self.cfg.lr,
+            )?;
+            loss_acc += loss * dev.data_size() as f64;
+            weights.push(dev.data_size() as f64);
+            locals.push(params);
+        }
+        let total_weight: f64 = weights.iter().sum();
+        let train_loss = loss_acc / total_weight;
+
+        // 2. wireless uplink of each local update (eq. 6/7), optionally
+        //    over an unreliable channel with retransmissions. Times are
+        //    drawn for the whole fleet; the synchronous max runs over the
+        //    cohort only.
+        let spec_bits = self.runtime.spec(&self.model)?.update_bits() * self.cfg.compression;
+        let (times, delivered_all) = if self.cfg.outage_prob > 0.0 {
+            let (times, _, d) =
+                self.channel
+                    .round_with_outage(spec_bits, self.cfg.outage_prob, self.cfg.max_retries);
+            (times, d)
+        } else {
+            let (times, _) = self.channel.round(spec_bits);
+            let n = times.len();
+            (times, vec![true; n])
+        };
+        let t_cm = cohort.iter().map(|&i| times[i]).fold(0.0, f64::max);
+
+        // 3. aggregation (eq. 2) over cohort updates that actually arrived.
+        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(locals.len());
+        let mut agg_weights: Vec<f64> = Vec::with_capacity(locals.len());
+        for (pos, &di) in cohort.iter().enumerate() {
+            if delivered_all[di] {
+                agg_refs.push(&locals[pos]);
+                agg_weights.push(weights[pos]);
+            }
+        }
+        if agg_refs.is_empty() {
+            crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
+        } else {
+            self.global = federated_average(&agg_refs, &agg_weights);
+        }
+
+        // 4. virtual time (eq. 8), cohort-restricted eq. (5). Train/test
+        //    sets share dims, so the test set's bits/sample prices eq. (4).
+        let bits_per_sample = self.test_set.bits_per_sample();
+        let t_cp = self.fleet.round_time_of(&cohort, bits_per_sample, self.batch);
+        let vt = self.clock.advance(RoundDelay { t_cm, t_cp, local_rounds: self.local_rounds });
+
+        // 5. energy ledger (extension; pure accounting).
+        let tx_w = dbm_to_watt(self.cfg.wireless.tx_power_dbm);
+        let energy_round: Vec<EnergyRecord> = cohort
+            .iter()
+            .map(|&i| {
+                self.energy_model.round(
+                    tx_w,
+                    times[i],
+                    self.fleet.specs[i].freq_hz,
+                    self.fleet.specs[i].cycles_per_bit,
+                    bits_per_sample,
+                    self.batch,
+                    self.local_rounds,
+                )
+            })
+            .collect();
+        self.energy.push_round(energy_round);
+
+        let record = RoundRecord {
+            round: round_no,
+            virtual_time: vt,
+            t_cm,
+            t_cp,
+            local_rounds: self.local_rounds,
+            train_loss,
+            test_loss: f64::NAN,
+            test_accuracy: f64::NAN,
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+        };
+        Ok(record)
+    }
+
+    /// Evaluate the global model on the held-out set.
+    pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
+        let (loss, acc, _) = self.runtime.evaluate(&self.model, &self.global, &self.test_set)?;
+        Ok((loss, acc))
+    }
+
+    /// Run until `max_rounds` or `target_accuracy` (if set). Evaluates
+    /// every `eval_every` rounds and always on the final round.
+    pub fn run(&mut self) -> anyhow::Result<RunOutcome> {
+        let wall_start = Instant::now();
+        let mut outcome = RunOutcome {
+            overall_time: 0.0,
+            rounds: 0,
+            final_train_loss: f64::NAN,
+            final_test_loss: f64::NAN,
+            final_test_accuracy: f64::NAN,
+            wall_seconds: 0.0,
+        };
+        for r in 1..=self.cfg.max_rounds {
+            let mut rec = self.round()?;
+            let is_last = r == self.cfg.max_rounds;
+            if r % self.cfg.eval_every == 0 || is_last {
+                let (tl, ta) = self.evaluate()?;
+                rec.test_loss = tl;
+                rec.test_accuracy = ta;
+                crate::log_info!(
+                    "round {r:4}: 𝒯={:9.2}s loss={:.4} test_acc={:.4}",
+                    rec.virtual_time,
+                    rec.train_loss,
+                    ta
+                );
+            } else {
+                crate::log_debug!(
+                    "round {r:4}: 𝒯={:9.2}s loss={:.4}",
+                    rec.virtual_time,
+                    rec.train_loss
+                );
+            }
+            outcome.final_train_loss = rec.train_loss;
+            if rec.test_loss.is_finite() {
+                outcome.final_test_loss = rec.test_loss;
+                outcome.final_test_accuracy = rec.test_accuracy;
+            }
+            let hit_target = self.cfg.target_accuracy > 0.0
+                && rec.test_accuracy.is_finite()
+                && rec.test_accuracy >= self.cfg.target_accuracy;
+            self.log.push(rec);
+            outcome.rounds = r;
+            if hit_target {
+                crate::log_info!("target accuracy reached at round {r}");
+                break;
+            }
+        }
+        outcome.overall_time = self.clock.now();
+        outcome.wall_seconds = wall_start.elapsed().as_secs_f64();
+        if let Some(out) = &self.cfg.out {
+            self.log.write_json(out)?;
+            crate::log_info!("wrote {}", out);
+        }
+        Ok(outcome)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // End-to-end coordinator tests (needing artifacts) live in
+    // rust/tests/integration.rs. The pure pieces (device batching,
+    // aggregation, clock) are unit-tested in their own modules.
+}

@@ -1,0 +1,184 @@
+//! Client-selection policies — partial participation per round.
+//!
+//! The paper's evaluation uses full participation (all M devices each
+//! round), but its motivation (constrained uplinks, unreliable links,
+//! stragglers) is exactly what partial participation addresses, and every
+//! production FL stack has it. Policies:
+//!
+//! * [`Selection::All`] — the paper's setting.
+//! * [`Selection::RandomK`] — uniform K-of-M (McMahan et al.).
+//! * [`Selection::FastestK`] — greedy K by expected uplink rate
+//!   (channel-aware; biased but delay-optimal per round).
+//! * [`Selection::RoundRobin`] — deterministic fairness.
+//!
+//! Selection interacts with the delay models: eq. (7)/(5) maxima run over
+//! the *selected* cohort only, and FedAvg weights renormalize over it.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Selection {
+    All,
+    RandomK(usize),
+    FastestK(usize),
+    RoundRobin(usize),
+}
+
+impl Selection {
+    pub fn parse(s: &str, k: usize) -> anyhow::Result<Selection> {
+        match s {
+            "all" => Ok(Selection::All),
+            "random" => Ok(Selection::RandomK(k)),
+            "fastest" => Ok(Selection::FastestK(k)),
+            "round_robin" => Ok(Selection::RoundRobin(k)),
+            other => anyhow::bail!("unknown selection {other:?} (all|random|fastest|round_robin)"),
+        }
+    }
+
+    /// Cohort size for a fleet of `m` devices.
+    pub fn cohort_size(&self, m: usize) -> usize {
+        match self {
+            Selection::All => m,
+            Selection::RandomK(k) | Selection::FastestK(k) | Selection::RoundRobin(k) => {
+                (*k).clamp(1, m)
+            }
+        }
+    }
+}
+
+/// Stateful selector driving a [`Selection`] policy across rounds.
+#[derive(Clone, Debug)]
+pub struct Selector {
+    policy: Selection,
+    rng: Pcg32,
+    cursor: usize,
+}
+
+impl Selector {
+    pub fn new(policy: Selection, seed: u64) -> Self {
+        Selector { policy, rng: Pcg32::new(seed, 0x5E1), cursor: 0 }
+    }
+
+    /// Pick this round's cohort (sorted device indices).
+    ///
+    /// `mean_rates` are the devices' expected uplink rates (used by
+    /// FastestK; ignored otherwise). Length = M.
+    pub fn pick(&mut self, m: usize, mean_rates: &[f64]) -> Vec<usize> {
+        assert!(m > 0);
+        let k = self.policy.cohort_size(m);
+        let mut cohort = match &self.policy {
+            Selection::All => (0..m).collect::<Vec<_>>(),
+            Selection::RandomK(_) => self.rng.sample_indices(m, k),
+            Selection::FastestK(_) => {
+                assert_eq!(mean_rates.len(), m, "rates required for FastestK");
+                let mut idx: Vec<usize> = (0..m).collect();
+                idx.sort_by(|&a, &b| mean_rates[b].partial_cmp(&mean_rates[a]).unwrap());
+                idx.truncate(k);
+                idx
+            }
+            Selection::RoundRobin(_) => {
+                let start = self.cursor;
+                self.cursor = (self.cursor + k) % m;
+                (0..k).map(|i| (start + i) % m).collect()
+            }
+        };
+        cohort.sort_unstable();
+        cohort.dedup();
+        cohort
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn all_selects_everyone() {
+        let mut s = Selector::new(Selection::All, 1);
+        assert_eq!(s.pick(5, &[]), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn random_k_has_k_distinct_members() {
+        let mut s = Selector::new(Selection::RandomK(3), 2);
+        for _ in 0..50 {
+            let c = s.pick(10, &[]);
+            assert_eq!(c.len(), 3);
+            assert!(c.windows(2).all(|w| w[0] < w[1]));
+            assert!(c.iter().all(|&i| i < 10));
+        }
+    }
+
+    #[test]
+    fn random_k_varies_across_rounds() {
+        let mut s = Selector::new(Selection::RandomK(3), 2);
+        let picks: Vec<Vec<usize>> = (0..10).map(|_| s.pick(10, &[])).collect();
+        assert!(picks.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn fastest_k_picks_by_rate() {
+        let mut s = Selector::new(Selection::FastestK(2), 3);
+        let rates = [1.0, 9.0, 3.0, 7.0];
+        assert_eq!(s.pick(4, &rates), vec![1, 3]);
+    }
+
+    #[test]
+    fn round_robin_cycles_fairly() {
+        let mut s = Selector::new(Selection::RoundRobin(2), 4);
+        let mut seen = vec![0usize; 4];
+        for _ in 0..4 {
+            for i in s.pick(4, &[]) {
+                seen[i] += 1;
+            }
+        }
+        assert_eq!(seen, vec![2, 2, 2, 2], "{seen:?}");
+    }
+
+    #[test]
+    fn k_clamped_to_m() {
+        let mut s = Selector::new(Selection::RandomK(99), 5);
+        assert_eq!(s.pick(4, &[]).len(), 4);
+        let mut s = Selector::new(Selection::RandomK(0), 5);
+        assert_eq!(s.pick(4, &[]).len(), 1);
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(Selection::parse("all", 0).unwrap(), Selection::All);
+        assert_eq!(Selection::parse("random", 3).unwrap(), Selection::RandomK(3));
+        assert!(Selection::parse("psychic", 3).is_err());
+    }
+
+    #[test]
+    fn prop_cohort_always_valid() {
+        prop::check(0x5E1EC7, 100, |g| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 50);
+            let policy = match g.usize_in(0, 3) {
+                0 => Selection::All,
+                1 => Selection::RandomK(k),
+                2 => Selection::FastestK(k),
+                _ => Selection::RoundRobin(k),
+            };
+            let rates: Vec<f64> = (0..m).map(|_| g.f64_in(1.0, 100.0)).collect();
+            let mut s = Selector::new(policy, g.rng.next_u64());
+            for _ in 0..5 {
+                let c = s.pick(m, &rates);
+                if c.is_empty() || c.len() > m {
+                    return Err(format!("cohort size {}", c.len()));
+                }
+                if c.iter().any(|&i| i >= m) {
+                    return Err("index out of range".into());
+                }
+                let mut d = c.clone();
+                d.dedup();
+                if d.len() != c.len() {
+                    return Err("duplicate members".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,158 @@
+//! Datasets and federated partitioning (substrate).
+//!
+//! **Substitution note (DESIGN.md §4):** the build environment has no
+//! network, so MNIST / CIFAR-10 are replaced by deterministic synthetic
+//! generators of identical tensor shape: class-prototype images plus
+//! structured noise ([`synth`]). The DEFL experiments measure delay /
+//! convergence trade-offs, which require a learnable classification task
+//! of the right dimensions, not those exact corpora. If a real
+//! `mnist.npz` / `cifar.npz` (keys `x`, `y`) is dropped into `data/`,
+//! [`load_npz_dataset`] picks it up instead.
+//!
+//! Partitioners implement the paper's distributed-data setting: IID
+//! shuffle-split (paper's evaluation), Dirichlet(α) label skew and
+//! McMahan-style shard splits for the non-IID extension.
+
+pub mod synth;
+pub mod partition;
+
+pub use partition::{partition_iid, partition_dirichlet, partition_shards, Partition};
+pub use synth::{SynthSpec, generate};
+
+/// A dense image-classification dataset in NHWC f32, labels i32.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn sample_elems(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    /// Bits per input sample (f32 elements × 32) — the `G_m·b` pricing in
+    /// eq. (4) consumes this.
+    pub fn bits_per_sample(&self) -> f64 {
+        (self.sample_elems() * 32) as f64
+    }
+
+    /// Borrow sample `i` as an image slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.sample_elems();
+        &self.images[i * d..(i + 1) * d]
+    }
+
+    /// Gather `idx` into a contiguous batch buffer (x, y).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let d = self.sample_elems();
+        let mut x = Vec::with_capacity(idx.len() * d);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.image(i));
+            y.push(self.labels[i]);
+        }
+        (x, y)
+    }
+
+    /// Class histogram (used by partition tests and non-IID diagnostics).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let d = self.sample_elems();
+        anyhow::ensure!(self.images.len() == self.n * d, "image buffer size");
+        anyhow::ensure!(self.labels.len() == self.n, "label count");
+        anyhow::ensure!(
+            self.labels.iter().all(|&l| (0..self.classes as i32).contains(&l)),
+            "label out of range"
+        );
+        anyhow::ensure!(
+            self.images.iter().all(|v| v.is_finite()),
+            "non-finite pixel"
+        );
+        Ok(())
+    }
+}
+
+/// Load a dataset from an npz with `x: f32 [n,h,w,c]`, `y: i32/i64 [n]`.
+pub fn load_npz_dataset(path: &std::path::Path, classes: usize) -> anyhow::Result<Dataset> {
+    use xla::FromRawBytes;
+    let entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())?;
+    let find = |name: &str| {
+        entries
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, l)| l)
+            .ok_or_else(|| anyhow::anyhow!("{} missing key {name}", path.display()))
+    };
+    let x = find("x")?;
+    let y = find("y")?;
+    let xs = x.array_shape()?;
+    let dims = xs.dims();
+    anyhow::ensure!(dims.len() == 4, "x must be [n,h,w,c], got {dims:?}");
+    let images = x.to_vec::<f32>()?;
+    let labels: Vec<i32> = match y.ty()? {
+        xla::ElementType::S32 => y.to_vec::<i32>()?,
+        xla::ElementType::S64 => y.to_vec::<i64>()?.into_iter().map(|v| v as i32).collect(),
+        other => anyhow::bail!("y dtype {other:?} unsupported"),
+    };
+    let ds = Dataset {
+        n: dims[0] as usize,
+        height: dims[1] as usize,
+        width: dims[2] as usize,
+        channels: dims[3] as usize,
+        classes,
+        images,
+        labels,
+    };
+    ds.validate()?;
+    Ok(ds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        generate(&SynthSpec::mnist_like(64), 1)
+    }
+
+    #[test]
+    fn gather_shapes() {
+        let ds = tiny();
+        let (x, y) = ds.gather(&[0, 5, 9]);
+        assert_eq!(x.len(), 3 * ds.sample_elems());
+        assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn bits_per_sample_mnist() {
+        let ds = tiny();
+        assert_eq!(ds.bits_per_sample(), (28 * 28 * 32) as f64);
+    }
+
+    #[test]
+    fn validate_catches_bad_labels() {
+        let mut ds = tiny();
+        ds.labels[0] = 99;
+        assert!(ds.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_nan() {
+        let mut ds = tiny();
+        ds.images[3] = f32::NAN;
+        assert!(ds.validate().is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Federated data partitioners: IID (paper's evaluation), Dirichlet label
+//! skew and McMahan shard splits (non-IID extension experiments).
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+/// Per-device index sets into a parent [`Dataset`].
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub device_indices: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn num_devices(&self) -> usize {
+        self.device_indices.len()
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.device_indices.iter().map(|v| v.len()).collect()
+    }
+
+    pub fn total(&self) -> usize {
+        self.device_indices.iter().map(|v| v.len()).sum()
+    }
+
+    /// Every index used at most once across devices?
+    pub fn is_disjoint(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for dev in &self.device_indices {
+            for &i in dev {
+                if !seen.insert(i) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Per-device class histograms (skew diagnostics).
+    pub fn class_histograms(&self, ds: &Dataset) -> Vec<Vec<usize>> {
+        self.device_indices
+            .iter()
+            .map(|idx| {
+                let mut h = vec![0usize; ds.classes];
+                for &i in idx {
+                    h[ds.labels[i] as usize] += 1;
+                }
+                h
+            })
+            .collect()
+    }
+}
+
+/// IID: global shuffle, equal contiguous slices (remainder spread over the
+/// first devices). This is the paper's "distributed data" setting.
+pub fn partition_iid(ds: &Dataset, devices: usize, seed: u64) -> Partition {
+    assert!(devices > 0 && devices <= ds.n, "devices {devices} vs n {}", ds.n);
+    let mut idx: Vec<usize> = (0..ds.n).collect();
+    let mut rng = Pcg32::new(seed, 0x11D);
+    rng.shuffle(&mut idx);
+    let base = ds.n / devices;
+    let extra = ds.n % devices;
+    let mut out = Vec::with_capacity(devices);
+    let mut pos = 0;
+    for d in 0..devices {
+        let take = base + usize::from(d < extra);
+        out.push(idx[pos..pos + take].to_vec());
+        pos += take;
+    }
+    Partition { device_indices: out }
+}
+
+/// Dirichlet(α) label-skew: for each class, split its samples across
+/// devices with Dirichlet proportions. Small α ⇒ severe skew.
+pub fn partition_dirichlet(ds: &Dataset, devices: usize, alpha: f64, seed: u64) -> Partition {
+    assert!(devices > 0 && alpha > 0.0);
+    let mut rng = Pcg32::new(seed, 0xD112);
+    let mut per_class: Vec<Vec<usize>> = vec![Vec::new(); ds.classes];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        per_class[l as usize].push(i);
+    }
+    let mut out = vec![Vec::new(); devices];
+    for idxs in per_class.iter_mut() {
+        rng.shuffle(idxs);
+        let props = rng.dirichlet(&vec![alpha; devices]);
+        // proportional integer allocation, remainder to largest shares
+        let n = idxs.len();
+        let mut counts: Vec<usize> = props.iter().map(|p| (p * n as f64).floor() as usize).collect();
+        let mut assigned: usize = counts.iter().sum();
+        let mut order: Vec<usize> = (0..devices).collect();
+        order.sort_by(|&a, &b| props[b].partial_cmp(&props[a]).unwrap());
+        let mut oi = 0;
+        while assigned < n {
+            counts[order[oi % devices]] += 1;
+            assigned += 1;
+            oi += 1;
+        }
+        let mut pos = 0;
+        for (d, &c) in counts.iter().enumerate() {
+            out[d].extend_from_slice(&idxs[pos..pos + c]);
+            pos += c;
+        }
+    }
+    Partition { device_indices: out }
+}
+
+/// McMahan shards: sort by label, cut into `shards_per_device·devices`
+/// shards, deal each device `shards_per_device` random shards — every
+/// device sees only a few classes.
+pub fn partition_shards(ds: &Dataset, devices: usize, shards_per_device: usize, seed: u64) -> Partition {
+    assert!(devices > 0 && shards_per_device > 0);
+    let total_shards = devices * shards_per_device;
+    assert!(total_shards <= ds.n, "more shards than samples");
+    let mut idx: Vec<usize> = (0..ds.n).collect();
+    idx.sort_by_key(|&i| ds.labels[i]);
+    let mut shard_ids: Vec<usize> = (0..total_shards).collect();
+    let mut rng = Pcg32::new(seed, 0x54A2);
+    rng.shuffle(&mut shard_ids);
+    let shard_len = ds.n / total_shards;
+    let mut out = vec![Vec::new(); devices];
+    for (pos, &sid) in shard_ids.iter().enumerate() {
+        let dev = pos / shards_per_device;
+        let lo = sid * shard_len;
+        let hi = if sid == total_shards - 1 { ds.n } else { lo + shard_len };
+        out[dev].extend_from_slice(&idx[lo..hi]);
+    }
+    Partition { device_indices: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+    use crate::util::prop;
+
+    fn ds() -> Dataset {
+        generate(&SynthSpec::mnist_like(1000), 9)
+    }
+
+    #[test]
+    fn iid_covers_everything_disjointly() {
+        let ds = ds();
+        let p = partition_iid(&ds, 10, 1);
+        assert_eq!(p.num_devices(), 10);
+        assert_eq!(p.total(), 1000);
+        assert!(p.is_disjoint());
+        assert!(p.sizes().iter().all(|&s| s == 100));
+    }
+
+    #[test]
+    fn iid_remainder_spread() {
+        let ds = ds();
+        let p = partition_iid(&ds, 7, 1);
+        let sizes = p.sizes();
+        assert_eq!(p.total(), 1000);
+        assert!(sizes.iter().all(|&s| s == 142 || s == 143), "{sizes:?}");
+    }
+
+    #[test]
+    fn iid_balanced_classes() {
+        let ds = ds();
+        let p = partition_iid(&ds, 10, 2);
+        for h in p.class_histograms(&ds) {
+            // each device should see most classes
+            let nonzero = h.iter().filter(|&&c| c > 0).count();
+            assert!(nonzero >= 8, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_small_alpha_skews() {
+        let ds = ds();
+        let p = partition_dirichlet(&ds, 10, 0.1, 3);
+        assert_eq!(p.total(), 1000);
+        assert!(p.is_disjoint());
+        // severe skew: some device has a dominant class > 60% of its data
+        let skewed = p.class_histograms(&ds).iter().any(|h| {
+            let tot: usize = h.iter().sum();
+            tot > 0 && *h.iter().max().unwrap() as f64 / tot as f64 > 0.6
+        });
+        assert!(skewed);
+    }
+
+    #[test]
+    fn dirichlet_large_alpha_close_to_uniform() {
+        let ds = ds();
+        let p = partition_dirichlet(&ds, 5, 1000.0, 3);
+        for h in p.class_histograms(&ds) {
+            let tot: usize = h.iter().sum();
+            let maxfrac = *h.iter().max().unwrap() as f64 / tot as f64;
+            assert!(maxfrac < 0.3, "{h:?}");
+        }
+    }
+
+    #[test]
+    fn shards_limit_class_diversity() {
+        let ds = ds();
+        let p = partition_shards(&ds, 10, 2, 4);
+        assert!(p.is_disjoint());
+        assert_eq!(p.total(), 1000);
+        for h in p.class_histograms(&ds) {
+            let nonzero = h.iter().filter(|&&c| c > 0).count();
+            assert!(nonzero <= 4, "shard device saw {nonzero} classes: {h:?}");
+        }
+    }
+
+    #[test]
+    fn prop_partitions_disjoint_and_complete() {
+        let ds = ds();
+        prop::check(0x9A27, 30, |g| {
+            let devices = g.usize_in(1, 20);
+            let seed = g.rng.next_u64();
+            let p = match g.usize_in(0, 2) {
+                0 => partition_iid(&ds, devices, seed),
+                1 => partition_dirichlet(&ds, devices, g.f64_in(0.05, 10.0), seed),
+                _ => partition_shards(&ds, devices, g.usize_in(1, 3), seed),
+            };
+            if !p.is_disjoint() {
+                return Err("overlapping partition".into());
+            }
+            if p.total() > ds.n {
+                return Err("partition larger than dataset".into());
+            }
+            if p.total() < ds.n - devices * 3 {
+                return Err(format!("dropped too many samples: {}", p.total()));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,298 @@
+//! Synthetic MNIST/CIFAR-shaped datasets (substitution for the real
+//! downloads — DESIGN.md §4).
+//!
+//! Construction: each class `k` gets a deterministic prototype image built
+//! from a few low-frequency 2-D cosine modes whose phases/frequencies are
+//! seeded by `k`. A sample is `clip(prototype + per-sample Gaussian pixel
+//! noise + global intensity jitter, 0, 1)`, with optional label noise.
+//! Low-frequency structure makes classes separable by a small CNN (like
+//! MNIST digits) while pixel noise keeps single samples uninformative
+//! enough that batch size and local rounds matter — which is what the
+//! DEFL experiments need.
+
+use super::Dataset;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+    /// Pixel noise std (in [0,1] intensity units).
+    pub noise: f64,
+    /// Fraction of labels flipped to a random class.
+    pub label_noise: f64,
+    /// Number of cosine modes per class prototype.
+    pub modes: usize,
+}
+
+impl SynthSpec {
+    /// 28×28×1, 10 classes — the MNIST stand-in. Noise is tuned so a
+    /// small CNN needs tens of communication rounds to exceed 95%
+    /// (mirroring MNIST-from-scratch dynamics), not a handful.
+    pub fn mnist_like(n: usize) -> Self {
+        SynthSpec {
+            n,
+            height: 28,
+            width: 28,
+            channels: 1,
+            classes: 10,
+            noise: 0.95,
+            label_noise: 0.03,
+            modes: 4,
+        }
+    }
+
+    /// 32×32×3, 10 classes — the CIFAR-10 stand-in (noisier / harder,
+    /// mirroring the real datasets' difficulty gap).
+    pub fn cifar_like(n: usize) -> Self {
+        SynthSpec {
+            n,
+            height: 32,
+            width: 32,
+            channels: 3,
+            classes: 10,
+            noise: 1.1,
+            label_noise: 0.08,
+            modes: 6,
+        }
+    }
+
+    /// 8×8×1 — for the quickstart MLP and fast tests.
+    pub fn tiny(n: usize) -> Self {
+        SynthSpec {
+            n,
+            height: 8,
+            width: 8,
+            channels: 1,
+            classes: 10,
+            noise: 0.10,
+            label_noise: 0.0,
+            modes: 3,
+        }
+    }
+}
+
+/// One class's prototype generator parameters.
+struct Proto {
+    /// (amp, fy, fx, phase_y, phase_x) per mode per channel.
+    modes: Vec<(f64, f64, f64, f64, f64)>,
+}
+
+fn class_prototype(spec: &SynthSpec, class: usize, seed: u64) -> Vec<Proto> {
+    // Seeded per (dataset seed, class) — prototypes are stable across runs.
+    (0..spec.channels)
+        .map(|ch| {
+            let mut rng = Pcg32::new(seed ^ 0x9E37_79B9, (class * 64 + ch) as u64 + 1);
+            let modes = (0..spec.modes)
+                .map(|_| {
+                    (
+                        rng.uniform_in(0.25, 0.6),
+                        rng.uniform_in(0.5, 3.0),
+                        rng.uniform_in(0.5, 3.0),
+                        rng.uniform_in(0.0, std::f64::consts::TAU),
+                        rng.uniform_in(0.0, std::f64::consts::TAU),
+                    )
+                })
+                .collect();
+            Proto { modes }
+        })
+        .collect()
+}
+
+fn render_proto(protos: &[Proto], spec: &SynthSpec, out: &mut [f32]) {
+    let (h, w, c) = (spec.height, spec.width, spec.channels);
+    for y in 0..h {
+        for x in 0..w {
+            for ch in 0..c {
+                let fy = y as f64 / h as f64;
+                let fx = x as f64 / w as f64;
+                let mut v = 0.5;
+                for &(amp, my, mx, py, px) in &protos[ch].modes {
+                    v += amp
+                        * (std::f64::consts::TAU * my * fy + py).cos()
+                        * (std::f64::consts::TAU * mx * fx + px).cos();
+                }
+                out[(y * w + x) * c + ch] = v as f32;
+            }
+        }
+    }
+}
+
+/// Generate a dataset. Deterministic in `(spec, seed)`; the class
+/// prototypes AND the sample noise both derive from `seed`, so train/test
+/// splits of the same task must use [`generate_split`] instead.
+pub fn generate(spec: &SynthSpec, seed: u64) -> Dataset {
+    generate_split(spec, seed, seed)
+}
+
+/// Generate a dataset whose *task* (class prototypes) comes from
+/// `task_seed` while the samples (noise, label draws) come from
+/// `sample_seed`. Train and test sets of one experiment share `task_seed`
+/// and differ in `sample_seed` — same classification problem, disjoint
+/// noise draws.
+pub fn generate_split(spec: &SynthSpec, task_seed: u64, sample_seed: u64) -> Dataset {
+    assert!(spec.n > 0 && spec.classes > 1);
+    let d = spec.height * spec.width * spec.channels;
+    // Pre-render one prototype image per class (task identity).
+    let mut proto_imgs = vec![0f32; spec.classes * d];
+    for k in 0..spec.classes {
+        let protos = class_prototype(spec, k, task_seed);
+        render_proto(&protos, spec, &mut proto_imgs[k * d..(k + 1) * d]);
+    }
+
+    let mut rng = Pcg32::new(sample_seed, 0xDA7A);
+    let mut images = vec![0f32; spec.n * d];
+    let mut labels = Vec::with_capacity(spec.n);
+    for i in 0..spec.n {
+        let k = rng.below(spec.classes as u32) as usize;
+        let jitter = rng.normal_ms(0.0, 0.05);
+        let dst = &mut images[i * d..(i + 1) * d];
+        let src = &proto_imgs[k * d..(k + 1) * d];
+        for (o, &p) in dst.iter_mut().zip(src) {
+            let noisy = p as f64 + rng.normal_ms(0.0, spec.noise) + jitter;
+            *o = noisy.clamp(0.0, 1.0) as f32;
+        }
+        let label = if spec.label_noise > 0.0 && rng.uniform() < spec.label_noise {
+            rng.below(spec.classes as u32) as i32
+        } else {
+            k as i32
+        };
+        labels.push(label);
+    }
+    let ds = Dataset {
+        images,
+        labels,
+        n: spec.n,
+        height: spec.height,
+        width: spec.width,
+        channels: spec.channels,
+        classes: spec.classes,
+    };
+    debug_assert!(ds.validate().is_ok());
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&SynthSpec::mnist_like(32), 5);
+        let b = generate(&SynthSpec::mnist_like(32), 5);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        let c = generate(&SynthSpec::mnist_like(32), 6);
+        assert_ne!(a.images, c.images);
+    }
+
+    #[test]
+    fn split_shares_task_but_not_samples() {
+        let spec = SynthSpec::mnist_like(300);
+        let train = generate_split(&spec, 5, 5);
+        let test = generate_split(&spec, 5, 99);
+        // different samples...
+        assert_ne!(train.images, test.images);
+        // ...but same task: train prototypes classify test samples well.
+        let d = spec.height * spec.width * spec.channels;
+        let mut protos = vec![0f32; spec.classes * d];
+        for k in 0..spec.classes {
+            let p = class_prototype(&spec, k, 5);
+            render_proto(&p, &spec, &mut protos[k * d..(k + 1) * d]);
+        }
+        let mut correct = 0usize;
+        for i in 0..test.n {
+            let img = test.image(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for k in 0..spec.classes {
+                let pr = &protos[k * d..(k + 1) * d];
+                let dist: f64 = img
+                    .iter()
+                    .zip(pr)
+                    .map(|(&a, &b)| (a as f64 - (b as f64).clamp(0.0, 1.0)).powi(2))
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 as i32 == test.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct as f64 / test.n as f64 > 0.6);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let ds = generate(&SynthSpec::cifar_like(16), 1);
+        assert_eq!(ds.n, 16);
+        assert_eq!(ds.sample_elems(), 32 * 32 * 3);
+        assert!(ds.validate().is_ok());
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn covers_all_classes() {
+        let ds = generate(&SynthSpec::mnist_like(2000), 2);
+        let counts = ds.class_counts();
+        assert!(counts.iter().all(|&c| c > 100), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_are_separable_by_prototype_distance() {
+        // nearest-prototype classification on clean prototypes must beat
+        // chance by a wide margin, else the task is unlearnable.
+        let spec = SynthSpec::mnist_like(500);
+        let ds = generate(&spec, 7);
+        let d = ds.sample_elems();
+        let mut protos = vec![0f32; spec.classes * d];
+        for k in 0..spec.classes {
+            let p = class_prototype(&spec, k, 7);
+            render_proto(&p, &spec, &mut protos[k * d..(k + 1) * d]);
+        }
+        let mut correct = 0usize;
+        for i in 0..ds.n {
+            let img = ds.image(i);
+            let mut best = (f64::INFINITY, 0usize);
+            for k in 0..spec.classes {
+                let pr = &protos[k * d..(k + 1) * d];
+                let dist: f64 = img
+                    .iter()
+                    .zip(pr)
+                    .map(|(&a, &b)| {
+                        let bb = (b as f64).clamp(0.0, 1.0);
+                        (a as f64 - bb).powi(2)
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 as i32 == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / ds.n as f64;
+        assert!(acc > 0.6, "nearest-prototype accuracy {acc}");
+    }
+
+    #[test]
+    fn label_noise_flips_some() {
+        let mut spec = SynthSpec::mnist_like(4000);
+        spec.label_noise = 0.5;
+        let noisy = generate(&spec, 3);
+        spec.label_noise = 0.0;
+        let clean = generate(&spec, 3);
+        let diffs = noisy
+            .labels
+            .iter()
+            .zip(&clean.labels)
+            .filter(|(a, b)| a != b)
+            .count();
+        // 50% flip to random class ⇒ ≈45% actually differ
+        assert!(diffs > 1000, "{diffs}");
+    }
+}

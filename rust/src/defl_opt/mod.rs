@@ -1,0 +1,332 @@
+//! The DEFL optimizer — the paper's core contribution (Sections IV–V).
+//!
+//! Solves
+//!
+//! ```text
+//! minimize_{b, θ, T_cp}  H(b, θ) · ( T_cm + V(θ)·T_cp )          (14)
+//!    s.t.  b ∈ {2ⁿ},  θ ∈ [0, 1],  T_cp = max_m G_m·b/f_m
+//! ```
+//!
+//! two ways:
+//!
+//! 1. [`closed_form`] — the paper's KKT solution (eq. 29):
+//!    `α* = √(T_cm·f_m/(M²·ε·ν²·G_m))`, `b* = 2cM·√(T_cm·f_m·ε/G_m)`,
+//!    `T_cp* = max_m G_m·b*/f_m`, with `θ* = e^{−α*}` and `b*` rounded to
+//!    the nearest power of two ≥ 1 (constraint 15).
+//! 2. [`numeric`] — an independent relaxation solver (nested golden-section
+//!    over α for each b on a power-of-two ladder) used to cross-validate
+//!    the closed form. The ablation bench (`defl exp ablation`) reports
+//!    how close eq. (29) lands to the numeric optimum.
+//!
+//! `G_m/f_m` enters as the *bottleneck seconds-per-sample* of the fleet
+//! (constraint 17 makes the slowest device define T_cp).
+
+use crate::convergence;
+
+/// Inputs the optimizer plans on (all expectations; fading is averaged).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanInputs {
+    /// Expected synchronous uplink time of one update, T_cm (eq. 7).
+    pub t_cm: f64,
+    /// Bottleneck `G_m·bits_per_sample / f_m` (seconds per batch element).
+    pub t_cp_per_sample: f64,
+    /// Number of participating devices M.
+    pub m: usize,
+    /// Target global convergence error ε (paper picks 0.01).
+    pub epsilon: f64,
+    /// ν — local-convergence constant of Remark 3.
+    pub nu: f64,
+    /// c — big-O constant of eq. (12).
+    pub c: f64,
+}
+
+impl Default for PlanInputs {
+    fn default() -> Self {
+        // ν is calibrated so that the paper's own evaluation numbers come
+        // out of eq. (29): with the Section VI setting (T_cm ≈ 0.094 s,
+        // MNIST samples at 30 cycles/bit on 2 GHz ⇒ 3.76e-4 s/sample,
+        // M=10, ε=0.01, c=1), ν=8 yields α*≈1.98 ⇒ θ*≈0.14 (paper: ≈0.15)
+        // and b*≈31.6 ⇒ 32 (paper: 32). See EXPERIMENTS.md fig1a.
+        PlanInputs {
+            t_cm: 0.094,
+            t_cp_per_sample: 3.763e-4,
+            m: 10,
+            epsilon: 0.01,
+            nu: 8.0,
+            c: 1.0,
+        }
+    }
+}
+
+/// An operating point produced by either solver.
+#[derive(Clone, Copy, Debug)]
+pub struct Plan {
+    /// Mini-batch size (power of two ≥ 1 after projection).
+    pub batch: usize,
+    /// Relative local accuracy θ* ∈ (0, 1].
+    pub theta: f64,
+    /// α* = log(1/θ*).
+    pub alpha: f64,
+    /// Local rounds V = ⌈ν·α⌉ (≥ 1).
+    pub local_rounds: usize,
+    /// Synchronous computation time for the chosen batch (eq. 17).
+    pub t_cp: f64,
+    /// Predicted communication rounds H (eq. 12, continuous).
+    pub rounds: f64,
+    /// Predicted overall time 𝒯 = H·(T_cm + V·T_cp) (eq. 13).
+    pub overall_time: f64,
+}
+
+/// Round a positive real to the nearest power of two, at least 1.
+pub fn nearest_pow2(x: f64) -> usize {
+    if !(x.is_finite()) || x <= 1.0 {
+        return 1;
+    }
+    let lg = x.log2();
+    let lo = 2f64.powf(lg.floor());
+    let hi = 2f64.powf(lg.ceil());
+    // pick geometrically closer (ties → larger, matching paper's rounding
+    // of 30.7 → 32)
+    let pick = if x / lo < hi / x { lo } else { hi };
+    pick as usize
+}
+
+/// Evaluate a (b, α) point into a full [`Plan`] (shared by both solvers).
+///
+/// α is clamped to `[1e-9, 700]`: above ~745, `θ = e^{−α}` underflows to
+/// exactly 0, which leaves the feasible set (θ ∈ (0, 1]) and makes V
+/// meaningless.
+pub fn evaluate(inp: &PlanInputs, batch: usize, alpha: f64) -> Plan {
+    let alpha = alpha.clamp(1e-9, 700.0);
+    let theta = (-alpha).exp();
+    let v = convergence::local_rounds(inp.nu, theta);
+    let t_cp = batch as f64 * inp.t_cp_per_sample;
+    let rounds = convergence::rounds_to_epsilon(
+        inp.c, batch as f64, inp.epsilon, inp.m, inp.nu, alpha);
+    let t_round = convergence::round_wall_time(inp.t_cm, v, t_cp);
+    Plan {
+        batch,
+        theta,
+        alpha,
+        local_rounds: v,
+        t_cp,
+        rounds,
+        overall_time: rounds * t_round,
+    }
+}
+
+/// Eq. (29): the paper's closed-form KKT point, projected onto the
+/// feasible set (b power of two ≥ 1, θ ∈ (0, 1]).
+pub fn closed_form(inp: &PlanInputs) -> Plan {
+    assert!(inp.t_cm > 0.0 && inp.t_cp_per_sample > 0.0);
+    assert!(inp.m > 0 && inp.epsilon > 0.0 && inp.nu > 0.0 && inp.c > 0.0);
+    let mf = inp.m as f64;
+    // The paper's G_m/f_m appears here as t_cp_per_sample: the time one
+    // extra batch element costs on the bottleneck device.
+    let ratio = inp.t_cm / inp.t_cp_per_sample; // T_cm·f_m/G_m in the paper's units
+    let alpha = (ratio / (mf * mf * inp.epsilon * inp.nu * inp.nu)).sqrt();
+    let b_star = 2.0 * inp.c * mf * (ratio * inp.epsilon).sqrt();
+    let batch = nearest_pow2(b_star);
+    evaluate(inp, batch, alpha)
+}
+
+/// Maximum local-round count the numeric solver explores. Far above any
+/// regime the paper touches (FedAvg uses V=20).
+pub const MAX_LOCAL_ROUNDS: usize = 2048;
+
+/// Independent numeric solver — **exact** on the discrete feasible set.
+///
+/// Key structure: for a fixed integer V, the round time `T = T_cm + V·T_cp`
+/// is constant while H (eq. 12) strictly decreases in α; the cheapest α
+/// achieving `⌈ν·α⌉ = V` is therefore `α = V/ν` exactly. So the discrete
+/// problem reduces to a finite scan over (b ∈ ladder, V ∈ 1..=MAX), which
+/// this function performs exhaustively.
+pub fn numeric(inp: &PlanInputs, max_batch: usize) -> Plan {
+    assert!(max_batch >= 1);
+    let mut best: Option<Plan> = None;
+    let mut b = 1usize;
+    while b <= max_batch {
+        for v in 1..=MAX_LOCAL_ROUNDS {
+            let alpha = v as f64 / inp.nu;
+            if alpha > 700.0 {
+                break; // θ would underflow (see `evaluate`)
+            }
+            let plan = evaluate(inp, b, alpha);
+            debug_assert_eq!(plan.local_rounds, v);
+            if best.as_ref().map_or(true, |p| plan.overall_time < p.overall_time) {
+                best = Some(plan);
+            }
+        }
+        b *= 2;
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn nearest_pow2_basic() {
+        assert_eq!(nearest_pow2(0.3), 1);
+        assert_eq!(nearest_pow2(1.0), 1);
+        assert_eq!(nearest_pow2(2.7), 2); // below geometric midpoint 2.83
+        assert_eq!(nearest_pow2(3.0), 4); // above geometric midpoint 2.83
+        assert_eq!(nearest_pow2(30.7), 32); // the paper's own rounding
+        assert_eq!(nearest_pow2(48.0), 64); // geometric: 48/32=1.5 > 64/48≈1.33
+        assert_eq!(nearest_pow2(44.0), 32); // 44/32=1.375 < 64/44≈1.45
+    }
+
+    #[test]
+    fn closed_form_feasible() {
+        let plan = closed_form(&PlanInputs::default());
+        assert!(plan.batch >= 1 && plan.batch.is_power_of_two());
+        assert!(plan.theta > 0.0 && plan.theta <= 1.0);
+        assert!(plan.local_rounds >= 1);
+        assert!(plan.overall_time.is_finite() && plan.overall_time > 0.0);
+        assert!((plan.t_cp - plan.batch as f64 * PlanInputs::default().t_cp_per_sample).abs() < 1e-12);
+    }
+
+    #[test]
+    fn evaluate_consistency() {
+        let inp = PlanInputs::default();
+        let p = evaluate(&inp, 32, 1.5);
+        assert!((p.theta - (-1.5f64).exp()).abs() < 1e-12);
+        assert_eq!(p.local_rounds, 12); // ceil(8.0 * 1.5)
+        let t_round = inp.t_cm + p.local_rounds as f64 * p.t_cp;
+        assert!((p.overall_time - p.rounds * t_round).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expensive_comm_pushes_more_work() {
+        // Paper intuition: worse channel (higher T_cm) ⇒ talk less ⇒
+        // higher α (lower θ) and larger b.
+        let cheap = closed_form(&PlanInputs { t_cm: 0.01, ..Default::default() });
+        let dear = closed_form(&PlanInputs { t_cm: 1.0, ..Default::default() });
+        assert!(dear.alpha > cheap.alpha);
+        assert!(dear.batch >= cheap.batch);
+        assert!(dear.theta < cheap.theta);
+    }
+
+    #[test]
+    fn fast_gpu_pushes_more_work() {
+        // Faster compute (smaller per-sample time) ⇒ work is cheap ⇒
+        // higher α.
+        let slow = closed_form(&PlanInputs { t_cp_per_sample: 1e-3, ..Default::default() });
+        let fast = closed_form(&PlanInputs { t_cp_per_sample: 1e-5, ..Default::default() });
+        assert!(fast.alpha > slow.alpha);
+    }
+
+    #[test]
+    fn numeric_never_worse_than_fixed_suboptimal_points() {
+        let inp = PlanInputs::default();
+        let opt = numeric(&inp, 256);
+        for &(b, a) in &[(1usize, 0.1), (8, 0.5), (256, 10.0), (2, 5.0)] {
+            let p = evaluate(&inp, b, a);
+            assert!(
+                opt.overall_time <= p.overall_time + 1e-9,
+                "numeric {} > manual {} at b={b} α={a}",
+                opt.overall_time,
+                p.overall_time
+            );
+        }
+    }
+
+    #[test]
+    fn ablation_numeric_vs_closed_form() {
+        // HONEST FINDING (DESIGN.md §ablation; consistent with the paper's
+        // informal KKT derivation): eq. (29) is *not* a stationary point
+        // of the relaxed objective (18) — a numeric search over the same
+        // feasible ladder improves 𝒯, and the relaxation is near-monotone
+        // in b so the numeric optimum rides the batch cap. We assert the
+        // qualitative relationship (numeric ≤ closed form, both finite,
+        // same order of magnitude at the paper's operating point) and
+        // report the exact gap in the fig1a/ablation benches.
+        let inp = PlanInputs::default();
+        let cf = closed_form(&inp);
+        let nm = numeric(&inp, 64);
+        assert!(nm.overall_time <= cf.overall_time + 1e-9);
+        assert!(
+            cf.overall_time <= 25.0 * nm.overall_time,
+            "closed form {} vs numeric {} — gap blew past even the ablation band",
+            cf.overall_time,
+            nm.overall_time
+        );
+    }
+
+    #[test]
+    fn paper_regime_lands_near_b32_theta015() {
+        // Section VI: with ε=0.01, M=10 the paper computes b*≈32 and
+        // θ*≈0.15. Calibrate T_cm / per-sample compute to the paper's
+        // stated setting (updates ≈ 3.3 Mb over ≈ 35 Mbps ⇒ T_cm ≈ 0.094 s;
+        // MNIST 28·28·32-bit samples at 30 cycles/bit on 2 GHz ⇒
+        // 3.76e-4 s/sample) and check we land in the same cell.
+        let inp = PlanInputs::default(); // the default IS the paper setting
+        let plan = closed_form(&inp);
+        assert!(
+            plan.batch == 32,
+            "b* = {} (want 32; raw {})",
+            plan.batch,
+            2.0 * inp.c * 10.0 * (inp.t_cm / inp.t_cp_per_sample * inp.epsilon).sqrt()
+        );
+        assert!(
+            (0.05..0.5).contains(&plan.theta),
+            "θ* = {} (paper ≈ 0.15)",
+            plan.theta
+        );
+    }
+
+    #[test]
+    fn prop_closed_form_feasibility() {
+        prop::check(0xDEF1, 300, |g| {
+            let inp = PlanInputs {
+                t_cm: g.log_uniform(1e-3, 10.0),
+                t_cp_per_sample: g.log_uniform(1e-7, 1e-2),
+                m: g.usize_in(1, 200),
+                epsilon: g.log_uniform(1e-4, 0.5),
+                nu: g.f64_in(0.5, 10.0),
+                c: g.log_uniform(0.1, 10.0),
+            };
+            let p = closed_form(&inp);
+            if !p.batch.is_power_of_two() {
+                return Err(format!("b={} not pow2", p.batch));
+            }
+            if !(p.theta > 0.0 && p.theta <= 1.0) {
+                return Err(format!("theta={}", p.theta));
+            }
+            if !(p.overall_time.is_finite() && p.overall_time > 0.0) {
+                return Err(format!("T={}", p.overall_time));
+            }
+            if p.local_rounds < 1 {
+                return Err("V < 1".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_numeric_beats_closed_form_on_relaxation() {
+        // numeric() explores the same ladder the closed form projects onto,
+        // so it should never be (meaningfully) worse.
+        prop::check(0xAB1E, 60, |g| {
+            let inp = PlanInputs {
+                t_cm: g.log_uniform(1e-3, 5.0),
+                t_cp_per_sample: g.log_uniform(1e-6, 1e-3),
+                m: g.usize_in(2, 64),
+                epsilon: g.log_uniform(1e-3, 0.1),
+                nu: g.f64_in(1.0, 4.0),
+                c: 1.0,
+            };
+            let cf = closed_form(&inp);
+            // ladder must reach the closed form's own batch, else the
+            // comparison is vacuous
+            let nm = numeric(&inp, cf.batch.max(1 << 14));
+            if nm.overall_time <= cf.overall_time + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("numeric {} > closed {}", nm.overall_time, cf.overall_time))
+            }
+        });
+    }
+}

@@ -1,0 +1,97 @@
+//! Ablation: the paper's closed-form KKT point (eq. 29) vs an exact
+//! discrete search over the same feasible set (DESIGN.md §6).
+//!
+//! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
+//! point of the relaxed objective (18); the exact search improves the
+//! *predicted* overall time, generally by riding the batch cap. The
+//! closed form's value is that it lands in the right neighbourhood
+//! (b*≈32, θ*≈0.15 at the paper's operating point) with O(1) cost.
+
+use super::{write_result, ExpOpts};
+use crate::config::ExperimentConfig;
+use crate::coordinator::FlSystem;
+use crate::defl_opt::{self, PlanInputs};
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+/// Batch caps to study (the practical on-device memory/generalization
+/// bound the relaxation is missing).
+pub const CAPS: [usize; 3] = [32, 64, 256];
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+    let mut probe_cfg = ExperimentConfig::default();
+    opts.apply(&mut probe_cfg);
+    probe_cfg.name = "ablation-probe".into();
+    let probe = FlSystem::build(probe_cfg.clone())?;
+    let t_cm = probe.log.meta.get("t_cm_expected").and_then(|v| v.as_f64()).unwrap();
+    let t_cps = probe.log.meta.get("t_cp_per_sample").and_then(|v| v.as_f64()).unwrap();
+    drop(probe);
+
+    let inputs = PlanInputs {
+        t_cm,
+        t_cp_per_sample: t_cps,
+        m: probe_cfg.devices,
+        epsilon: probe_cfg.epsilon,
+        nu: probe_cfg.nu,
+        c: probe_cfg.c,
+    };
+    let cf = defl_opt::closed_form(&inputs);
+
+    let mut table = Table::new(&[
+        "solver", "cap", "b", "theta", "V", "H", "pred 𝒯 (s)", "vs closed form",
+    ]);
+    table.row(&[
+        "closed form (eq.29)".into(),
+        "-".into(),
+        cf.batch.to_string(),
+        format!("{:.4}", cf.theta),
+        cf.local_rounds.to_string(),
+        format!("{:.1}", cf.rounds),
+        format!("{:.1}", cf.overall_time),
+        "1.00×".into(),
+    ]);
+    let mut rows = vec![Json::obj(vec![
+        ("solver", Json::str("closed_form")),
+        ("cap", Json::Null),
+        ("batch", Json::Num(cf.batch as f64)),
+        ("theta", Json::Num(cf.theta)),
+        ("local_rounds", Json::Num(cf.local_rounds as f64)),
+        ("rounds_H", Json::Num(cf.rounds)),
+        ("predicted_overall_time", Json::Num(cf.overall_time)),
+    ])];
+    for &cap in &CAPS {
+        let nm = defl_opt::numeric(&inputs, cap);
+        let speedup = cf.overall_time / nm.overall_time;
+        table.row(&[
+            "numeric (exact)".into(),
+            cap.to_string(),
+            nm.batch.to_string(),
+            format!("{:.4}", nm.theta),
+            nm.local_rounds.to_string(),
+            format!("{:.1}", nm.rounds),
+            format!("{:.1}", nm.overall_time),
+            format!("{speedup:.2}×"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("solver", Json::str("numeric")),
+            ("cap", Json::Num(cap as f64)),
+            ("batch", Json::Num(nm.batch as f64)),
+            ("theta", Json::Num(nm.theta)),
+            ("local_rounds", Json::Num(nm.local_rounds as f64)),
+            ("rounds_H", Json::Num(nm.rounds)),
+            ("predicted_overall_time", Json::Num(nm.overall_time)),
+            ("speedup_vs_closed_form", Json::Num(speedup)),
+        ]));
+    }
+    println!("Ablation — eq. (29) closed form vs exact discrete search");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str("ablation")),
+        ("t_cm", Json::Num(t_cm)),
+        ("t_cp_per_sample", Json::Num(t_cps)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, "ablation", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}

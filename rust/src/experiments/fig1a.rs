@@ -1,0 +1,105 @@
+//! Fig. 1(a): impact of the preset global error ε on the optimized
+//! operating point — the sweep the paper uses to pick ε = 0.01.
+//!
+//! For each ε we report the closed-form plan (b*, θ*, V, H, predicted 𝒯)
+//! and, unless `--analytic-only`, also run a short training job at that
+//! operating point to get measured accuracy vs overall time.
+
+use super::{run_system, write_result, ExpOpts};
+use crate::config::{ExperimentConfig, Policy};
+use crate::coordinator::FlSystem;
+use crate::defl_opt::{self, PlanInputs};
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+pub const EPSILONS: [f64; 4] = [0.005, 0.01, 0.05, 0.1];
+
+pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
+    // Build one system just to extract the calibrated delay inputs.
+    let mut probe_cfg = ExperimentConfig::default();
+    opts.apply(&mut probe_cfg);
+    probe_cfg.name = "fig1a-probe".into();
+    let probe = FlSystem::build(probe_cfg.clone())?;
+    let t_cm = probe
+        .log
+        .meta
+        .get("t_cm_expected")
+        .and_then(|v| v.as_f64())
+        .expect("meta");
+    let t_cps = probe
+        .log
+        .meta
+        .get("t_cp_per_sample")
+        .and_then(|v| v.as_f64())
+        .expect("meta");
+    drop(probe);
+
+    let mut table = Table::new(&[
+        "epsilon", "b*", "theta*", "V", "H (eq.12)", "pred 𝒯 (s)", "meas acc", "meas 𝒯 (s)",
+    ]);
+    let mut rows = Vec::new();
+    for &eps in &EPSILONS {
+        let inputs = PlanInputs {
+            t_cm,
+            t_cp_per_sample: t_cps,
+            m: probe_cfg.devices,
+            epsilon: eps,
+            nu: probe_cfg.nu,
+            c: probe_cfg.c,
+        };
+        let plan = defl_opt::closed_form(&inputs);
+        let (meas_acc, meas_t) = if analytic_only {
+            (f64::NAN, f64::NAN)
+        } else {
+            let mut cfg = ExperimentConfig::default();
+            cfg.max_rounds = 24;
+            cfg.eval_every = 2;
+            cfg.target_accuracy = 0.97;
+            opts.apply(&mut cfg);
+            cfg.name = format!("fig1a-eps{eps}");
+            cfg.epsilon = eps;
+            cfg.policy = Policy::Defl;
+            let log = run_system(cfg)?;
+            (log.best_accuracy(), log.overall_time())
+        };
+        table.row(&[
+            format!("{eps}"),
+            plan.batch.to_string(),
+            format!("{:.4}", plan.theta),
+            plan.local_rounds.to_string(),
+            format!("{:.1}", plan.rounds),
+            format!("{:.1}", plan.overall_time),
+            if meas_acc.is_nan() { "-".into() } else { format!("{meas_acc:.4}") },
+            if meas_t.is_nan() { "-".into() } else { format!("{meas_t:.1}") },
+        ]);
+        rows.push(Json::obj(vec![
+            ("epsilon", Json::Num(eps)),
+            ("batch", Json::Num(plan.batch as f64)),
+            ("theta", Json::Num(plan.theta)),
+            ("local_rounds", Json::Num(plan.local_rounds as f64)),
+            ("rounds_H", Json::Num(plan.rounds)),
+            ("predicted_overall_time", Json::Num(plan.overall_time)),
+            ("measured_accuracy", Json::Num(meas_acc)),
+            ("measured_overall_time", Json::Num(meas_t)),
+        ]));
+    }
+    println!("Fig 1(a) — ε sweep (T_cm={t_cm:.4}s, t_cp/sample={t_cps:.3e}s)");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str("fig1a")),
+        ("t_cm", Json::Num(t_cm)),
+        ("t_cp_per_sample", Json::Num(t_cps)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, "fig1a", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn epsilon_grid_includes_paper_choice() {
+        assert!(super::EPSILONS.contains(&0.01));
+    }
+}

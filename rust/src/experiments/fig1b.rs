@@ -1,0 +1,74 @@
+//! Fig. 1(b): batch-size sweep on MNIST — accuracy vs overall time for
+//! b ∈ {16, 32, 64} at fixed V, reproducing the paper's finding that the
+//! computed b = 32 balances prediction performance and overall time
+//! (b=64 fastest but less accurate; b=16 most accurate but slowest).
+
+use super::{run_system, write_result, ExpOpts};
+use crate::config::{ExperimentConfig, Policy};
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+pub const BATCHES: [usize; 3] = [16, 32, 64];
+/// V matching DEFL's computed θ* ≈ 0.15 at the paper point (V = ν·α ≈ 16).
+pub const LOCAL_ROUNDS: usize = 16;
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+    let mut table = Table::new(&[
+        "batch", "final acc", "best acc", "𝒯→97% (s)", "overall 𝒯 (s)", "rounds",
+    ]);
+    let mut rows = Vec::new();
+    for &b in &BATCHES {
+        let mut cfg = ExperimentConfig::default();
+        cfg.max_rounds = 30;
+        cfg.eval_every = 3;
+        opts.apply(&mut cfg);
+        cfg.name = format!("fig1b-b{b}");
+        cfg.policy = Policy::Fixed { batch: b, local_rounds: LOCAL_ROUNDS };
+        let log = run_system(cfg)?;
+        let final_acc = log
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| r.test_accuracy.is_finite())
+            .map_or(f64::NAN, |r| r.test_accuracy);
+        let tta = log.time_to_accuracy(0.97);
+        table.row(&[
+            b.to_string(),
+            format!("{final_acc:.4}"),
+            format!("{:.4}", log.best_accuracy()),
+            tta.map_or("-".into(), |t| format!("{t:.1}")),
+            format!("{:.1}", log.overall_time()),
+            log.rounds.len().to_string(),
+        ]);
+        let curve: Vec<Json> = log
+            .rounds
+            .iter()
+            .filter(|r| r.test_accuracy.is_finite())
+            .map(|r| {
+                Json::obj(vec![
+                    ("virtual_time", Json::Num(r.virtual_time)),
+                    ("accuracy", Json::Num(r.test_accuracy)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                ])
+            })
+            .collect();
+        rows.push(Json::obj(vec![
+            ("batch", Json::Num(b as f64)),
+            ("time_to_97", tta.map_or(Json::Null, Json::Num)),
+            ("final_accuracy", Json::Num(final_acc)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("curve", Json::Arr(curve)),
+        ]));
+    }
+    println!("Fig 1(b) — batch-size sweep (V={LOCAL_ROUNDS}, MNIST-like)");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str("fig1b")),
+        ("local_rounds", Json::Num(LOCAL_ROUNDS as f64)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, "fig1b", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}

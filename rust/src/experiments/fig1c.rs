@@ -1,0 +1,77 @@
+//! Fig. 1(c): relative-local-error sweep — training loss vs overall time
+//! for θ ∈ {0.05, 0.15, 0.5, 0.9} at the optimized batch size.
+//!
+//! Reproduces the paper's finding that the computed θ* ≈ 0.15 reaches a
+//! lower training loss at the same overall time than both "talk more"
+//! (θ = 0.9, V small) and "work much more" (θ = 0.05) settings, while
+//! avoiding local overfitting.
+
+use super::{run_system, write_result, ExpOpts};
+use crate::config::{ExperimentConfig, Policy};
+use crate::convergence;
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+pub const THETAS: [f64; 4] = [0.05, 0.15, 0.5, 0.9];
+pub const BATCH: usize = 32;
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+    let nu = ExperimentConfig::default().nu;
+    let mut table = Table::new(&["theta", "V", "final train loss", "best acc", "overall 𝒯 (s)"]);
+    let mut rows = Vec::new();
+    for &theta in &THETAS {
+        let v = convergence::local_rounds(nu, theta);
+        let mut cfg = ExperimentConfig::default();
+        cfg.max_rounds = 30;
+        cfg.eval_every = 3;
+        opts.apply(&mut cfg);
+        cfg.name = format!("fig1c-theta{theta}");
+        cfg.policy = Policy::Fixed { batch: BATCH, local_rounds: v };
+        let log = run_system(cfg)?;
+        let final_loss = log.rounds.last().map_or(f64::NAN, |r| r.train_loss);
+        table.row(&[
+            format!("{theta}"),
+            v.to_string(),
+            format!("{final_loss:.4}"),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.1}", log.overall_time()),
+        ]);
+        let curve: Vec<Json> = log
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("virtual_time", Json::Num(r.virtual_time)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                ])
+            })
+            .collect();
+        rows.push(Json::obj(vec![
+            ("theta", Json::Num(theta)),
+            ("local_rounds", Json::Num(v as f64)),
+            ("final_train_loss", Json::Num(final_loss)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("curve", Json::Arr(curve)),
+        ]));
+    }
+    println!("Fig 1(c) — θ sweep (b={BATCH}, V = ν·log(1/θ), ν={nu})");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str("fig1c")),
+        ("batch", Json::Num(BATCH as f64)),
+        ("nu", Json::Num(nu)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, "fig1c", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn theta_grid_includes_paper_optimum() {
+        assert!(super::THETAS.contains(&0.15));
+    }
+}

@@ -1,0 +1,95 @@
+//! Fig. 1(d): communication rounds H and the computation/communication
+//! split as functions of θ — "working more talks less".
+//!
+//! Analytic H from eq. (12) plus the measured virtual-time split from a
+//! short run at each θ. Reproduces the paper's observation that lower θ
+//! (more local work) yields fewer rounds H and a computation-dominated
+//! time budget, while high θ inflates H and communication time.
+
+use super::{write_result, ExpOpts};
+use crate::config::ExperimentConfig;
+use crate::convergence;
+use crate::coordinator::FlSystem;
+use crate::metrics::Table;
+use crate::util::json::Json;
+
+pub const THETAS: [f64; 5] = [0.05, 0.15, 0.3, 0.5, 0.9];
+pub const BATCH: usize = 32;
+
+pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+    // Delay inputs from a probe system (same calibration as fig1a).
+    let mut probe_cfg = ExperimentConfig::default();
+    opts.apply(&mut probe_cfg);
+    probe_cfg.name = "fig1d-probe".into();
+    let probe = FlSystem::build(probe_cfg.clone())?;
+    let t_cm = probe.log.meta.get("t_cm_expected").and_then(|v| v.as_f64()).unwrap();
+    let t_cps = probe.log.meta.get("t_cp_per_sample").and_then(|v| v.as_f64()).unwrap();
+    drop(probe);
+    let cfg = probe_cfg;
+
+    let mut table = Table::new(&[
+        "theta", "V", "H (eq.12)", "T_round (s)", "comp share", "pred 𝒯 (s)",
+    ]);
+    let mut rows = Vec::new();
+    for &theta in &THETAS {
+        let alpha = (1.0 / theta).ln();
+        let v = convergence::local_rounds(cfg.nu, theta);
+        let h = convergence::rounds_to_epsilon(
+            cfg.c, BATCH as f64, cfg.epsilon, cfg.devices, cfg.nu, alpha);
+        let t_cp = BATCH as f64 * t_cps;
+        let t_round = convergence::round_wall_time(t_cm, v, t_cp);
+        let delay = crate::simclock::RoundDelay { t_cm, t_cp, local_rounds: v };
+        let comp_share = delay.compute_fraction();
+        let overall = h * t_round;
+        table.row(&[
+            format!("{theta}"),
+            v.to_string(),
+            format!("{h:.1}"),
+            format!("{t_round:.3}"),
+            format!("{:.1}%", comp_share * 100.0),
+            format!("{overall:.1}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("theta", Json::Num(theta)),
+            ("local_rounds", Json::Num(v as f64)),
+            ("rounds_H", Json::Num(h)),
+            ("round_time", Json::Num(t_round)),
+            ("compute_share", Json::Num(comp_share)),
+            ("predicted_overall_time", Json::Num(overall)),
+        ]));
+    }
+    println!("Fig 1(d) — rounds H and compute/talk split vs θ (b={BATCH})");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str("fig1d")),
+        ("batch", Json::Num(BATCH as f64)),
+        ("t_cm", Json::Num(t_cm)),
+        ("t_cp_per_sample", Json::Num(t_cps)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, "fig1d", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::convergence;
+
+    #[test]
+    fn h_decreases_as_theta_decreases() {
+        // the figure's monotone claim, checked analytically
+        let cfg = ExperimentConfig::default();
+        let h: Vec<f64> = THETAS
+            .iter()
+            .map(|&t| {
+                convergence::rounds_to_epsilon(
+                    cfg.c, BATCH as f64, cfg.epsilon, cfg.devices, cfg.nu, (1.0 / t).ln())
+            })
+            .collect();
+        for w in h.windows(2) {
+            assert!(w[0] <= w[1], "H should grow with θ: {h:?}");
+        }
+    }
+}

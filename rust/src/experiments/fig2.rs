@@ -1,0 +1,152 @@
+//! Fig. 2: the headline comparison — DEFL vs FedAvg vs Rand. on MNIST and
+//! CIFAR-10: test accuracy and overall time.
+//!
+//! Paper claims to reproduce in *shape* (Section VI): DEFL reaches ~the
+//! same accuracy while cutting overall time ≈70% vs FedAvg and ≈38% vs
+//! Rand. on MNIST; ≈18% vs FedAvg and ≈75% vs Rand. on CIFAR.
+
+use super::{reduction_pct, run_system, write_result, ExpOpts};
+use crate::config::{presets, DatasetKind, ExperimentConfig, Policy};
+use crate::metrics::{RunLog, Table};
+use crate::util::json::Json;
+
+/// Which dataset of the figure to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Which {
+    Mnist,
+    Cifar,
+}
+
+impl Which {
+    pub fn parse(s: &str) -> anyhow::Result<Which> {
+        match s {
+            "mnist" => Ok(Which::Mnist),
+            "cifar" => Ok(Which::Cifar),
+            other => anyhow::bail!("fig2 dataset must be mnist|cifar, got {other:?}"),
+        }
+    }
+}
+
+fn policies(which: Which) -> Vec<(String, Policy)> {
+    vec![
+        ("DEFL".into(), Policy::Defl),
+        ("FedAvg".into(), presets::fedavg()),
+        (
+            "Rand.".into(),
+            match which {
+                Which::Mnist => presets::rand_mnist(),
+                Which::Cifar => presets::rand_cifar(),
+            },
+        ),
+    ]
+}
+
+fn base_config(which: Which, opts: &ExpOpts) -> ExperimentConfig {
+    let mut cfg = match which {
+        Which::Mnist => presets::fig2_mnist(Policy::Defl),
+        Which::Cifar => presets::fig2_cifar(Policy::Defl),
+    };
+    opts.apply(&mut cfg);
+    cfg
+}
+
+pub fn run(opts: &ExpOpts, which: Which) -> anyhow::Result<Json> {
+    let mut logs: Vec<(String, RunLog)> = Vec::new();
+    for (label, policy) in policies(which) {
+        let mut cfg = base_config(which, opts);
+        cfg.policy = policy;
+        cfg.name = format!(
+            "fig2-{}-{label}",
+            if which == Which::Mnist { "mnist" } else { "cifar" }
+        );
+        crate::log_info!("--- {} ---", cfg.name);
+        let log = run_system(cfg)?;
+        logs.push((label, log));
+    }
+
+    let defl_time = logs[0].1.overall_time();
+    let mut table = Table::new(&[
+        "method", "b", "V", "final acc", "best acc", "overall 𝒯 (s)", "DEFL reduction",
+    ]);
+    let mut rows = Vec::new();
+    for (label, log) in &logs {
+        let b = log.meta.get("batch").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let v = log.meta.get("local_rounds").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let final_acc = log
+            .rounds
+            .iter()
+            .rev()
+            .find(|r| r.test_accuracy.is_finite())
+            .map_or(f64::NAN, |r| r.test_accuracy);
+        let red = reduction_pct(defl_time, log.overall_time());
+        table.row(&[
+            label.clone(),
+            format!("{b:.0}"),
+            format!("{v:.0}"),
+            format!("{final_acc:.4}"),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.1}", log.overall_time()),
+            if label == "DEFL" { "-".into() } else { format!("{red:.0}%") },
+        ]);
+        let curve: Vec<Json> = log
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("virtual_time", Json::Num(r.virtual_time)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                    ("test_accuracy", Json::Num(r.test_accuracy)),
+                ])
+            })
+            .collect();
+        rows.push(Json::obj(vec![
+            ("method", Json::str(label.clone())),
+            ("batch", Json::Num(b)),
+            ("local_rounds", Json::Num(v)),
+            ("final_accuracy", Json::Num(final_acc)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("defl_reduction_pct", Json::Num(red)),
+            ("curve", Json::Arr(curve)),
+        ]));
+    }
+    let id = if which == Which::Mnist { "fig2_mnist" } else { "fig2_cifar" };
+    println!("Fig 2 — {id}: DEFL vs baselines");
+    println!("{}", table.render());
+    let doc = Json::obj(vec![
+        ("figure", Json::str(id)),
+        ("series", Json::Arr(rows)),
+    ]);
+    let path = write_result(opts, id, &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+/// Dataset kind actually used (for tests).
+pub fn dataset_of(which: Which) -> DatasetKind {
+    match which {
+        Which::Mnist => DatasetKind::MnistLike,
+        Which::Cifar => DatasetKind::CifarLike,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_grid_matches_paper() {
+        let p = policies(Which::Mnist);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p[1].1, Policy::Fixed { batch: 10, local_rounds: 20 });
+        assert_eq!(p[2].1, Policy::Fixed { batch: 16, local_rounds: 15 });
+        let p = policies(Which::Cifar);
+        assert_eq!(p[2].1, Policy::Fixed { batch: 64, local_rounds: 30 });
+    }
+
+    #[test]
+    fn parse_which() {
+        assert_eq!(Which::parse("mnist").unwrap(), Which::Mnist);
+        assert!(Which::parse("imagenet").is_err());
+    }
+}

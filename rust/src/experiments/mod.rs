@@ -1,0 +1,118 @@
+//! Experiment harnesses — one per paper figure (DESIGN.md §6).
+//!
+//! Each harness regenerates the corresponding figure's series: it prints a
+//! paper-style table and writes `results/<id>.json` for plotting. Absolute
+//! numbers differ from the paper (synthetic data, CPU-PJRT substrate —
+//! DESIGN.md §4); the *shape* — who wins, by what factor, where the knees
+//! are — is the reproduction target, recorded in EXPERIMENTS.md.
+//!
+//! `fast` mode (used by `cargo bench` wrappers and CI) shrinks rounds and
+//! dataset sizes by ~an order of magnitude.
+
+pub mod fig1a;
+pub mod fig1b;
+pub mod fig1c;
+pub mod fig1d;
+pub mod fig2;
+pub mod ablation;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::FlSystem;
+use crate::metrics::RunLog;
+use crate::util::json::Json;
+
+/// Shared knobs for every experiment harness.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Scale down for smoke/bench runs.
+    pub fast: bool,
+    /// Where JSON series land.
+    pub out_dir: String,
+    /// Override rounds (None = per-figure default).
+    pub rounds: Option<usize>,
+    /// Base seed.
+    pub seed: u64,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            fast: false,
+            out_dir: "results".into(),
+            rounds: None,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn from_env() -> Self {
+        let mut o = ExpOpts::default();
+        if std::env::var("DEFL_FAST").as_deref() == Ok("1") {
+            o.fast = true;
+        }
+        o
+    }
+
+    /// Apply the common knobs to a config.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+        cfg.seed = self.seed;
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        if let Some(r) = self.rounds {
+            cfg.max_rounds = r;
+        }
+        if self.fast {
+            cfg.max_rounds = cfg.max_rounds.min(4);
+            cfg.train_per_device = cfg.train_per_device.min(64);
+            cfg.test_size = 256;
+            cfg.eval_every = 2;
+        }
+    }
+}
+
+/// Run one configured system to completion, returning its log.
+pub fn run_system(cfg: ExperimentConfig) -> anyhow::Result<RunLog> {
+    let mut sys = FlSystem::build(cfg)?;
+    sys.run()?;
+    Ok(sys.log.clone())
+}
+
+/// Write an experiment's JSON document under `out_dir`.
+pub fn write_result(opts: &ExpOpts, id: &str, doc: &Json) -> anyhow::Result<String> {
+    let path = format!("{}/{id}.json", opts.out_dir);
+    doc.write_file(&path)?;
+    Ok(path)
+}
+
+/// Percentage reduction of `ours` vs `theirs` (positive = we are faster).
+pub fn reduction_pct(ours: f64, theirs: f64) -> f64 {
+    if theirs <= 0.0 {
+        return 0.0;
+    }
+    (1.0 - ours / theirs) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reduction_pct_basic() {
+        assert!((reduction_pct(30.0, 100.0) - 70.0).abs() < 1e-9);
+        assert!((reduction_pct(100.0, 100.0)).abs() < 1e-9);
+        assert_eq!(reduction_pct(1.0, 0.0), 0.0);
+        assert!(reduction_pct(150.0, 100.0) < 0.0);
+    }
+
+    #[test]
+    fn fast_mode_shrinks() {
+        let opts = ExpOpts { fast: true, ..Default::default() };
+        let mut cfg = ExperimentConfig::default();
+        opts.apply(&mut cfg);
+        assert!(cfg.max_rounds <= 4);
+        assert!(cfg.train_per_device <= 64);
+    }
+}

@@ -1,0 +1,36 @@
+//! # DEFL — Delay-Efficient Federated Learning over Mobile Edge Devices
+//!
+//! Reproduction of Prakash et al., *"To Talk or to Work: Delay Efficient
+//! Federated Learning over Mobile Edge Devices"* (2021) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: a federated-learning parameter
+//!   server, a fleet of simulated mobile edge devices, the paper's wireless
+//!   (eq. 6–7) and GPU computation (eq. 3–5) delay models, the DEFL
+//!   closed-form optimizer (eq. 29), a virtual-time ledger, and the
+//!   experiment harnesses that regenerate every figure of the paper.
+//! * **L2/L1 (python/, build-time only)** — the CNN forward/backward +
+//!   SGD step written in JAX, with the dense-layer and parameter-update
+//!   hot spots as Pallas kernels, AOT-lowered to HLO text once by
+//!   `make artifacts`. Python never runs on the training path.
+//! * **Runtime** — [`runtime`] loads the HLO artifacts through the PJRT C
+//!   API (`xla` crate) and executes them from the round loop.
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod util;
+pub mod config;
+pub mod wireless;
+pub mod compute;
+pub mod convergence;
+pub mod defl_opt;
+pub mod data;
+pub mod model;
+pub mod simclock;
+pub mod metrics;
+pub mod runtime;
+pub mod coordinator;
+pub mod baselines;
+pub mod experiments;
+pub mod bench;

@@ -1,0 +1,205 @@
+//! `defl` — the L3 leader binary.
+//!
+//! ```text
+//! defl train   [--config cfg.toml] [--set k=v ...]   run one FL job
+//! defl plan    [--set k=v ...]                       print eq.(29) plan
+//! defl exp <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset d]
+//! defl doctor                                        check artifacts + PJRT
+//! ```
+
+use defl::config::{ExperimentConfig, Policy};
+use defl::coordinator::FlSystem;
+use defl::experiments::{self, ExpOpts};
+use defl::util::cli::Cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{}", usage());
+        std::process::exit(2);
+    }
+    let (cmd, rest) = argv.split_first().unwrap();
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "plan" => cmd_plan(rest),
+        "exp" => cmd_exp(rest),
+        "doctor" => cmd_doctor(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "defl — delay-efficient federated learning (paper reproduction)\n\n\
+     USAGE:\n\
+     \x20 defl train  [--config <toml>] [--set section.key=value ...]\n\
+     \x20 defl plan   [--set section.key=value ...]\n\
+     \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
+     \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\
+     \x20 defl doctor [--artifacts <dir>]\n"
+        .into()
+}
+
+/// Shared `--config` / `--set` handling (bare `k=v` positionals are also
+/// treated as overrides so `--set` can be repeated naturally).
+fn load_config(args: &defl::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) if !path.is_empty() => ExperimentConfig::from_file(path)?,
+        _ => ExperimentConfig::default(),
+    };
+    for ov in args.positional.iter().filter(|p| p.contains('=')) {
+        cfg.set_override(ov)?;
+    }
+    if let Some(sets) = args.get("set") {
+        if !sets.is_empty() {
+            cfg.set_override(sets)?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("defl train", "run one federated-learning job")
+        .opt("config", "", "TOML-lite config file")
+        .opt("set", "", "override: section.key=value (repeatable as bare k=v args)")
+        .opt("out", "", "write the run log JSON here")
+        .flag("quiet", "suppress info logs");
+    let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.flag("quiet") {
+        defl::util::logging::set_level(defl::util::logging::Level::Warn);
+    }
+    let mut cfg = load_config(&args)?;
+    if let Some(out) = args.get("out") {
+        if !out.is_empty() {
+            cfg.out = Some(out.to_string());
+        }
+    }
+    let mut sys = FlSystem::build(cfg)?;
+    let outcome = sys.run()?;
+    println!(
+        "done: rounds={} T={:.1}s acc={:.4} loss={:.4} (wall {:.1}s)",
+        outcome.rounds,
+        outcome.overall_time,
+        outcome.final_test_accuracy,
+        outcome.final_train_loss,
+        outcome.wall_seconds
+    );
+    Ok(())
+}
+
+fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("defl plan", "print the DEFL operating point (eq. 29)")
+        .opt("config", "", "TOML-lite config file")
+        .opt("set", "", "override: section.key=value");
+    let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut cfg = load_config(&args)?;
+    cfg.policy = Policy::Defl;
+    cfg.name = "plan".into();
+    let sys = FlSystem::build(cfg)?;
+    let plan = sys.resolved.plan.as_ref().expect("DEFL policy produces a plan");
+    println!("DEFL plan (eq. 29) for M={} eps={}:", sys.cfg.devices, sys.cfg.epsilon);
+    println!("  b*        = {} (artifact batch {})", plan.batch, sys.batch);
+    println!("  theta*    = {:.4}  (alpha* = {:.4})", plan.theta, plan.alpha);
+    println!("  V         = {}", plan.local_rounds);
+    println!("  T_cp      = {:.4} s/iter", plan.t_cp);
+    println!("  H (eq.12) = {:.1} rounds", plan.rounds);
+    println!("  pred T    = {:.1} s", plan.overall_time);
+    Ok(())
+}
+
+fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("defl exp", "regenerate a paper figure")
+        .pos("figure", "fig1a|fig1b|fig1c|fig1d|fig2|ablation|all")
+        .opt("dataset", "mnist", "fig2 dataset: mnist|cifar")
+        .opt("rounds", "0", "override max rounds (0 = figure default)")
+        .opt("out-dir", "results", "output directory for JSON series")
+        .opt("seed", "42", "base seed")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .flag("fast", "smoke-scale run (few rounds, tiny data)")
+        .flag("analytic-only", "fig1a: skip training runs");
+    let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let figure = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("which figure? (fig1a|fig1b|fig1c|fig1d|fig2|ablation|all)"))?
+        .clone();
+    let mut opts = ExpOpts::from_env();
+    opts.fast = opts.fast || args.flag("fast");
+    opts.out_dir = args.str("out-dir");
+    opts.seed = args.u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    opts.artifacts_dir = args.str("artifacts");
+    let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+    if rounds > 0 {
+        opts.rounds = Some(rounds);
+    }
+    let analytic = args.flag("analytic-only");
+    match figure.as_str() {
+        "fig1a" => experiments::fig1a::run(&opts, analytic).map(|_| ()),
+        "fig1b" => experiments::fig1b::run(&opts).map(|_| ()),
+        "fig1c" => experiments::fig1c::run(&opts).map(|_| ()),
+        "fig1d" => experiments::fig1d::run(&opts).map(|_| ()),
+        "ablation" => experiments::ablation::run(&opts).map(|_| ()),
+        "fig2" => {
+            let which = experiments::fig2::Which::parse(&args.str("dataset"))?;
+            experiments::fig2::run(&opts, which).map(|_| ())
+        }
+        "all" => {
+            experiments::fig1a::run(&opts, analytic)?;
+            experiments::fig1b::run(&opts)?;
+            experiments::fig1c::run(&opts)?;
+            experiments::fig1d::run(&opts)?;
+            experiments::ablation::run(&opts)?;
+            experiments::fig2::run(&opts, experiments::fig2::Which::Mnist)?;
+            experiments::fig2::run(&opts, experiments::fig2::Which::Cifar)?;
+            Ok(())
+        }
+        other => anyhow::bail!("unknown figure {other:?}"),
+    }
+}
+
+fn cmd_doctor(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("defl doctor", "verify artifacts + PJRT round-trip")
+        .opt("artifacts", "artifacts", "artifacts directory");
+    let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let dir = args.str("artifacts");
+    println!("artifacts dir: {dir}");
+    let mut rt = defl::runtime::Runtime::new(&dir)?;
+    let names: Vec<String> = rt.registry.model_names().iter().map(|s| s.to_string()).collect();
+    println!("models: {names:?}");
+    for name in &names {
+        let spec = rt.spec(name)?.clone();
+        let arts = rt.registry.model(name)?;
+        println!(
+            "  {name}: {} params ({:.1} KiB update), train batches {:?}, eval {:?}",
+            spec.param_count(),
+            spec.update_bits() / 8192.0,
+            arts.train_batches(),
+            arts.eval_batches(),
+        );
+        // golden round-trip: rust execution must match JAX numerics
+        if let Some(g) = arts.golden.clone() {
+            let report = defl::runtime::golden::check(&mut rt, name, &g)?;
+            println!(
+                "  {name}: golden |dloss|={:.2e} max|dw|={:.2e} eval dcorrect={} — {}",
+                report.loss_diff,
+                report.max_param_diff,
+                report.eval_correct_diff,
+                if report.pass { "OK" } else { "FAIL" }
+            );
+            anyhow::ensure!(report.pass, "{name}: golden check failed");
+        }
+    }
+    println!("doctor OK");
+    Ok(())
+}

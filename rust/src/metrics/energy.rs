@@ -1,0 +1,165 @@
+//! Energy ledger — the natural companion metric to the paper's delay
+//! objective (its sibling works [8][9][13] optimize energy with the same
+//! models). Per round and per device:
+//!
+//! ```text
+//! E_cm^m = p_m · T_cm^m               (radio: tx power × airtime)
+//! E_cp^m = κ · f_m² · G_m·bits·b·V    (compute: DVFS energy κf², after
+//!                                      Tran et al. INFOCOM'19 [8])
+//! ```
+//!
+//! κ is the effective switched capacitance. The ledger is pure accounting:
+//! it never feeds back into DEFL's delay optimization (matching the
+//! paper), but the fig-style harnesses can report it alongside 𝒯.
+
+/// Energy model constants.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Effective switched capacitance κ (J/(cycle·Hz²) scale; typical
+    /// 1e-28 for mobile SoCs in the FL-over-wireless literature).
+    pub kappa: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel { kappa: 1e-28 }
+    }
+}
+
+/// One device's per-round energy split (joules).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyRecord {
+    pub comm_j: f64,
+    pub comp_j: f64,
+}
+
+impl EnergyRecord {
+    pub fn total(&self) -> f64 {
+        self.comm_j + self.comp_j
+    }
+}
+
+impl EnergyModel {
+    /// Radio energy of one uplink: `tx_power_w × airtime_s`.
+    pub fn comm_energy(&self, tx_power_w: f64, airtime_s: f64) -> f64 {
+        assert!(tx_power_w >= 0.0 && airtime_s >= 0.0);
+        tx_power_w * airtime_s
+    }
+
+    /// Compute energy of `V` local iterations: `κ·f²·cycles_total`.
+    pub fn comp_energy(
+        &self,
+        freq_hz: f64,
+        cycles_per_bit: f64,
+        bits_per_sample: f64,
+        batch: usize,
+        local_rounds: usize,
+    ) -> f64 {
+        assert!(freq_hz > 0.0);
+        let cycles = cycles_per_bit * bits_per_sample * batch as f64 * local_rounds as f64;
+        self.kappa * freq_hz * freq_hz * cycles
+    }
+
+    /// Full per-device round record.
+    pub fn round(
+        &self,
+        tx_power_w: f64,
+        airtime_s: f64,
+        freq_hz: f64,
+        cycles_per_bit: f64,
+        bits_per_sample: f64,
+        batch: usize,
+        local_rounds: usize,
+    ) -> EnergyRecord {
+        EnergyRecord {
+            comm_j: self.comm_energy(tx_power_w, airtime_s),
+            comp_j: self.comp_energy(freq_hz, cycles_per_bit, bits_per_sample, batch, local_rounds),
+        }
+    }
+}
+
+/// Cumulative fleet ledger.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyLedger {
+    pub per_round: Vec<Vec<EnergyRecord>>,
+}
+
+impl EnergyLedger {
+    pub fn push_round(&mut self, records: Vec<EnergyRecord>) {
+        self.per_round.push(records);
+    }
+
+    /// Total fleet energy so far.
+    pub fn total(&self) -> f64 {
+        self.per_round.iter().flatten().map(|r| r.total()).sum()
+    }
+
+    /// (total comm J, total comp J).
+    pub fn split(&self) -> (f64, f64) {
+        let comm = self.per_round.iter().flatten().map(|r| r.comm_j).sum();
+        let comp = self.per_round.iter().flatten().map(|r| r.comp_j).sum();
+        (comm, comp)
+    }
+
+    /// Per-device totals (device index = position within rounds).
+    pub fn per_device_totals(&self) -> Vec<f64> {
+        let m = self.per_round.first().map_or(0, |r| r.len());
+        let mut out = vec![0.0; m];
+        for round in &self.per_round {
+            for (i, r) in round.iter().enumerate() {
+                out[i] += r.total();
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_energy_linear() {
+        let m = EnergyModel::default();
+        assert_eq!(m.comm_energy(0.2, 0.5), 0.1);
+        assert_eq!(m.comm_energy(0.2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn comp_energy_paper_scale() {
+        // κ=1e-28, f=2GHz, 30 cycles/bit, MNIST sample, b=32, V=13:
+        // cycles = 30·25088·32·13 ≈ 3.13e8 ⇒ E = 1e-28·4e18·3.13e8 ≈ 125 J?
+        // That is 9.6e-10 per cycle·f² scale… check the arithmetic holds.
+        let m = EnergyModel::default();
+        let e = m.comp_energy(2e9, 30.0, 28.0 * 28.0 * 32.0, 32, 13);
+        let cycles = 30.0 * 28.0 * 28.0 * 32.0 * 32.0 * 13.0;
+        assert!((e - 1e-28 * 4e18 * cycles).abs() / e < 1e-12);
+        assert!(e > 0.0);
+    }
+
+    #[test]
+    fn comp_energy_quadratic_in_frequency() {
+        let m = EnergyModel::default();
+        let e1 = m.comp_energy(1e9, 30.0, 1000.0, 8, 2);
+        let e2 = m.comp_energy(2e9, 30.0, 1000.0, 8, 2);
+        assert!((e2 / e1 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_splits() {
+        let mut l = EnergyLedger::default();
+        l.push_round(vec![
+            EnergyRecord { comm_j: 1.0, comp_j: 2.0 },
+            EnergyRecord { comm_j: 0.5, comp_j: 1.5 },
+        ]);
+        l.push_round(vec![
+            EnergyRecord { comm_j: 1.0, comp_j: 0.0 },
+            EnergyRecord { comm_j: 0.0, comp_j: 1.0 },
+        ]);
+        assert!((l.total() - 7.0).abs() < 1e-12);
+        let (comm, comp) = l.split();
+        assert!((comm - 2.5).abs() < 1e-12);
+        assert!((comp - 4.5).abs() < 1e-12);
+        assert_eq!(l.per_device_totals(), vec![4.0, 3.0]);
+    }
+}

@@ -1,0 +1,279 @@
+//! Metrics pipeline: per-round records, loss/accuracy curves, JSON/CSV
+//! output, the energy ledger, and the paper-style table printer used by
+//! every experiment.
+
+pub mod energy;
+
+pub use energy::{EnergyLedger, EnergyModel, EnergyRecord};
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One communication round's record (what every figure is drawn from).
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Virtual time at the END of this round (eq. 13 cumulative).
+    pub virtual_time: f64,
+    pub t_cm: f64,
+    pub t_cp: f64,
+    pub local_rounds: usize,
+    /// Mean training loss across devices this round.
+    pub train_loss: f64,
+    /// Test metrics (only on eval rounds; NaN ⇒ not evaluated).
+    pub test_loss: f64,
+    pub test_accuracy: f64,
+    /// Wall-clock seconds spent on this round (measured, not modeled).
+    pub wall_seconds: f64,
+}
+
+/// A named experiment run: config echo + round records.
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub name: String,
+    pub meta: BTreeMap<String, Json>,
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl RunLog {
+    pub fn new(name: &str) -> Self {
+        RunLog { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn set_meta(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    /// Final virtual time 𝒯 (0 if no rounds).
+    pub fn overall_time(&self) -> f64 {
+        self.rounds.last().map_or(0.0, |r| r.virtual_time)
+    }
+
+    /// Best test accuracy seen (evals only).
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.test_accuracy)
+            .filter(|a| a.is_finite())
+            .fold(0.0, f64::max)
+    }
+
+    /// First virtual time at which test accuracy reached `target`
+    /// (time-to-accuracy, the Fig. 2 statistic). None if never reached.
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.test_accuracy.is_finite() && r.test_accuracy >= target)
+            .map(|r| r.virtual_time)
+    }
+
+    /// First virtual time at which train loss dropped to `target`.
+    pub fn time_to_loss(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.train_loss.is_finite() && r.train_loss <= target)
+            .map(|r| r.virtual_time)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rounds: Vec<Json> = self
+            .rounds
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("round", Json::Num(r.round as f64)),
+                    ("virtual_time", Json::Num(r.virtual_time)),
+                    ("t_cm", Json::Num(r.t_cm)),
+                    ("t_cp", Json::Num(r.t_cp)),
+                    ("local_rounds", Json::Num(r.local_rounds as f64)),
+                    ("train_loss", Json::Num(r.train_loss)),
+                    ("test_loss", Json::Num(r.test_loss)),
+                    ("test_accuracy", Json::Num(r.test_accuracy)),
+                    ("wall_seconds", Json::Num(r.wall_seconds)),
+                ])
+            })
+            .collect();
+        let mut obj: Vec<(&str, Json)> = vec![
+            ("name", Json::str(self.name.clone())),
+            ("rounds", Json::Arr(rounds)),
+        ];
+        if !self.meta.is_empty() {
+            obj.push(("meta", Json::Obj(self.meta.clone())));
+        }
+        Json::obj(obj)
+    }
+
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds\n",
+        );
+        for r in &self.rounds {
+            s.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{}\n",
+                r.round,
+                r.virtual_time,
+                r.t_cm,
+                r.t_cp,
+                r.local_rounds,
+                r.train_loss,
+                r.test_loss,
+                r.test_accuracy,
+                r.wall_seconds
+            ));
+        }
+        s
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for i in 0..cols {
+                s.push_str(&format!(" {:<width$} |", cells[i], width = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, vt: f64, loss: f64, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            virtual_time: vt,
+            t_cm: 0.1,
+            t_cp: 0.01,
+            local_rounds: 5,
+            train_loss: loss,
+            test_loss: loss,
+            test_accuracy: acc,
+            wall_seconds: 0.01,
+        }
+    }
+
+    #[test]
+    fn overall_and_best() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 1.0, 2.0, 0.3));
+        log.push(rec(2, 2.5, 1.0, 0.7));
+        log.push(rec(3, 4.0, 0.8, 0.6));
+        assert_eq!(log.overall_time(), 4.0);
+        assert_eq!(log.best_accuracy(), 0.7);
+    }
+
+    #[test]
+    fn time_to_accuracy_first_crossing() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 1.0, 2.0, 0.3));
+        log.push(rec(2, 2.0, 1.5, 0.55));
+        log.push(rec(3, 3.0, 1.0, 0.80));
+        assert_eq!(log.time_to_accuracy(0.5), Some(2.0));
+        assert_eq!(log.time_to_accuracy(0.9), None);
+        assert_eq!(log.time_to_loss(1.5), Some(2.0));
+    }
+
+    #[test]
+    fn nan_evals_ignored() {
+        let mut log = RunLog::new("t");
+        let mut r = rec(1, 1.0, 2.0, f64::NAN);
+        r.test_loss = f64::NAN;
+        log.push(r);
+        log.push(rec(2, 2.0, 1.0, 0.4));
+        assert_eq!(log.best_accuracy(), 0.4);
+        assert_eq!(log.time_to_accuracy(0.3), Some(2.0));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut log = RunLog::new("fig2");
+        log.set_meta("dataset", Json::str("mnist"));
+        log.push(rec(1, 1.0, 2.0, 0.5));
+        let j = log.to_json();
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("fig2"));
+        assert_eq!(
+            parsed.get("rounds").unwrap().idx(0).unwrap().get("train_loss").unwrap().as_f64(),
+            Some(2.0)
+        );
+        assert_eq!(parsed.get("meta").unwrap().get("dataset").unwrap().as_str(), Some("mnist"));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = RunLog::new("t");
+        log.push(rec(1, 1.0, 2.0, 0.5));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("round,"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "time (s)", "acc"]);
+        t.row(&["DEFL".into(), "123.4".into(), "0.91".into()]);
+        t.row(&["FedAvg".into(), "410.0".into(), "0.90".into()]);
+        let s = t.render();
+        assert!(s.contains("DEFL"));
+        assert!(s.contains("FedAvg"));
+        assert_eq!(s.lines().count(), 4);
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]), "ragged table:\n{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

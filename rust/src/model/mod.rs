@@ -1,0 +1,327 @@
+//! Model parameter store — flat f32 leaves bound to the artifact manifest.
+//!
+//! The rust side never interprets parameter semantics; it holds the leaves
+//! in the exact order `python/compile/aot.py` recorded in
+//! `artifacts/manifest.json`, aggregates them (FedAvg), and marshals them
+//! in/out of PJRT literals (conversion lives in [`crate::runtime`]).
+
+use crate::util::json::Json;
+
+/// Static description of one parameter leaf.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Ordered leaf specs for a model (the manifest contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub leaves: Vec<LeafSpec>,
+    pub classes: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+}
+
+impl ModelSpec {
+    pub fn param_count(&self) -> usize {
+        self.leaves.iter().map(|l| l.elems()).sum()
+    }
+
+    /// Update size `s` in bits (f32 leaves) — what eq. (6) transmits.
+    pub fn update_bits(&self) -> f64 {
+        (self.param_count() * 32) as f64
+    }
+
+    /// Parse from a manifest `models.<name>` entry.
+    pub fn from_manifest(name: &str, entry: &Json) -> anyhow::Result<ModelSpec> {
+        let params = entry
+            .get("params")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest: {name}.params missing"))?;
+        let leaves = params
+            .iter()
+            .map(|p| {
+                let lname = p
+                    .get("name")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow::anyhow!("param name missing"))?;
+                let shape = p
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("param shape missing"))?
+                    .iter()
+                    .map(|d| d.as_u64().map(|v| v as usize))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape"))?;
+                Ok(LeafSpec { name: lname.to_string(), shape })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let input = entry
+            .get("input")
+            .ok_or_else(|| anyhow::anyhow!("manifest: {name}.input missing"))?;
+        let dim = |k: &str| -> anyhow::Result<usize> {
+            input
+                .get(k)
+                .and_then(|v| v.as_u64())
+                .map(|v| v as usize)
+                .ok_or_else(|| anyhow::anyhow!("input.{k} missing"))
+        };
+        let spec = ModelSpec {
+            name: name.to_string(),
+            leaves,
+            classes: dim("classes")?,
+            height: dim("height")?,
+            width: dim("width")?,
+            channels: dim("channels")?,
+        };
+        // cross-check against the python-side count if present
+        if let Some(count) = entry.get("param_count").and_then(|v| v.as_u64()) {
+            anyhow::ensure!(
+                spec.param_count() == count as usize,
+                "param_count mismatch: manifest {count} vs specs {}",
+                spec.param_count()
+            );
+        }
+        Ok(spec)
+    }
+}
+
+/// A concrete set of parameter values (one leaf buffer per spec leaf).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub leaves: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    pub fn zeros_like(spec: &ModelSpec) -> ParamSet {
+        ParamSet { leaves: spec.leaves.iter().map(|l| vec![0.0; l.elems()]).collect() }
+    }
+
+    pub fn validate(&self, spec: &ModelSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(self.leaves.len() == spec.leaves.len(), "leaf count");
+        for (buf, l) in self.leaves.iter().zip(&spec.leaves) {
+            anyhow::ensure!(buf.len() == l.elems(), "leaf {} size", l.name);
+            anyhow::ensure!(buf.iter().all(|v| v.is_finite()), "non-finite in {}", l.name);
+        }
+        Ok(())
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.leaves.iter().map(|l| l.len()).sum()
+    }
+
+    /// Squared L2 distance to another set (convergence diagnostics).
+    pub fn dist_sq(&self, other: &ParamSet) -> f64 {
+        self.leaves
+            .iter()
+            .zip(&other.leaves)
+            .map(|(a, b)| {
+                a.iter()
+                    .zip(b)
+                    .map(|(&x, &y)| ((x - y) as f64).powi(2))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// In-place weighted accumulate: `self += w · other`.
+    /// The aggregation hot path — kept allocation-free.
+    pub fn axpy(&mut self, w: f32, other: &ParamSet) {
+        debug_assert_eq!(self.leaves.len(), other.leaves.len());
+        for (dst, src) in self.leaves.iter_mut().zip(&other.leaves) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d += w * s;
+            }
+        }
+    }
+
+    pub fn scale(&mut self, w: f32) {
+        for leaf in &mut self.leaves {
+            for v in leaf.iter_mut() {
+                *v *= w;
+            }
+        }
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        for leaf in &mut self.leaves {
+            leaf.iter_mut().for_each(|x| *x = v);
+        }
+    }
+}
+
+/// FedAvg: `Σ_m (D_m/D)·w_m` (eq. 2's weighting). `weights` are the
+/// device data sizes `D_m` (need not be normalised).
+pub fn federated_average(sets: &[&ParamSet], weights: &[f64]) -> ParamSet {
+    assert!(!sets.is_empty(), "no updates to aggregate");
+    assert_eq!(sets.len(), weights.len());
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "zero total weight");
+    let mut out = ParamSet {
+        leaves: sets[0].leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
+    };
+    for (set, &w) in sets.iter().zip(weights) {
+        out.axpy((w / total) as f32, set);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            name: "t".into(),
+            leaves: vec![
+                LeafSpec { name: "w".into(), shape: vec![2, 3] },
+                LeafSpec { name: "b".into(), shape: vec![3] },
+            ],
+            classes: 10,
+            height: 8,
+            width: 8,
+            channels: 1,
+        }
+    }
+
+    #[test]
+    fn spec_counts() {
+        let s = spec();
+        assert_eq!(s.param_count(), 9);
+        assert_eq!(s.update_bits(), 288.0);
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let j = Json::parse(
+            r#"{"params": [{"name":"w","shape":[2,3]},{"name":"b","shape":[3]}],
+                "param_count": 9,
+                "input": {"classes":10,"height":8,"width":8,"channels":1}}"#,
+        )
+        .unwrap();
+        let s = ModelSpec::from_manifest("t", &j).unwrap();
+        assert_eq!(s, spec());
+    }
+
+    #[test]
+    fn from_manifest_rejects_count_mismatch() {
+        let j = Json::parse(
+            r#"{"params": [{"name":"w","shape":[2,3]}], "param_count": 99,
+                "input": {"classes":10,"height":8,"width":8,"channels":1}}"#,
+        )
+        .unwrap();
+        assert!(ModelSpec::from_manifest("t", &j).is_err());
+    }
+
+    #[test]
+    fn validate_checks_sizes_and_finiteness() {
+        let s = spec();
+        let mut p = ParamSet::zeros_like(&s);
+        assert!(p.validate(&s).is_ok());
+        p.leaves[0][0] = f32::INFINITY;
+        assert!(p.validate(&s).is_err());
+        let bad = ParamSet { leaves: vec![vec![0.0; 5]] };
+        assert!(bad.validate(&s).is_err());
+    }
+
+    #[test]
+    fn fedavg_equal_weights_is_mean() {
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.fill(1.0);
+        let mut b = ParamSet::zeros_like(&s);
+        b.fill(3.0);
+        let avg = federated_average(&[&a, &b], &[1.0, 1.0]);
+        assert!(avg.leaves.iter().flatten().all(|&v| (v - 2.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn fedavg_respects_data_weights() {
+        // eq. (2): D_m/D weighting — 3:1 split
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.fill(0.0);
+        let mut b = ParamSet::zeros_like(&s);
+        b.fill(4.0);
+        let avg = federated_average(&[&a, &b], &[300.0, 100.0]);
+        assert!(avg.leaves.iter().flatten().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn fedavg_single_is_identity() {
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.leaves[0][2] = 7.5;
+        let avg = federated_average(&[&a], &[10.0]);
+        assert_eq!(avg.leaves, a.leaves);
+    }
+
+    #[test]
+    fn dist_sq_basic() {
+        let s = spec();
+        let a = ParamSet::zeros_like(&s);
+        let mut b = ParamSet::zeros_like(&s);
+        b.fill(1.0);
+        assert!((a.dist_sq(&b) - 9.0).abs() < 1e-9);
+        assert_eq!(a.dist_sq(&a), 0.0);
+    }
+
+    #[test]
+    fn prop_fedavg_permutation_invariant() {
+        prop::check(0xFEDA, 40, |g| {
+            let s = spec();
+            let n = g.usize_in(2, 6);
+            let sets: Vec<ParamSet> = (0..n)
+                .map(|_| ParamSet {
+                    leaves: vec![g.vec_f32(6, -2.0, 2.0), g.vec_f32(3, -2.0, 2.0)],
+                })
+                .collect();
+            let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 100.0)).collect();
+            let refs: Vec<&ParamSet> = sets.iter().collect();
+            let fwd = federated_average(&refs, &ws);
+            // reversed order must give the same answer
+            let rrefs: Vec<&ParamSet> = sets.iter().rev().collect();
+            let rws: Vec<f64> = ws.iter().rev().copied().collect();
+            let bwd = federated_average(&rrefs, &rws);
+            for (x, y) in fwd.leaves.iter().flatten().zip(bwd.leaves.iter().flatten()) {
+                if (x - y).abs() > 1e-5 {
+                    return Err(format!("{x} vs {y}"));
+                }
+            }
+            let _ = s;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fedavg_scaling_weights_invariant() {
+        prop::check(0xFEDB, 40, |g| {
+            let sets: Vec<ParamSet> = (0..3)
+                .map(|_| ParamSet { leaves: vec![g.vec_f32(8, -1.0, 1.0)] })
+                .collect();
+            let ws: Vec<f64> = (0..3).map(|_| g.f64_in(1.0, 10.0)).collect();
+            let k = g.f64_in(0.1, 50.0);
+            let refs: Vec<&ParamSet> = sets.iter().collect();
+            let a = federated_average(&refs, &ws);
+            let scaled: Vec<f64> = ws.iter().map(|w| w * k).collect();
+            let b = federated_average(&refs, &scaled);
+            for (x, y) in a.leaves[0].iter().zip(&b.leaves[0]) {
+                if (x - y).abs() > 1e-5 {
+                    return Err(format!("{x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

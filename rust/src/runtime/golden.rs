@@ -1,0 +1,77 @@
+//! Golden-vector verification: the rust PJRT execution must reproduce the
+//! exact numbers JAX computed at artifact-build time (aot.py §golden).
+//! Used by `defl doctor` and the integration tests.
+
+use super::registry::GoldenInfo;
+use super::Runtime;
+use crate::model::ParamSet;
+use std::collections::HashMap;
+
+/// Comparison outcome of one model's golden round-trip.
+#[derive(Clone, Copy, Debug)]
+pub struct GoldenReport {
+    pub loss_diff: f64,
+    pub max_param_diff: f64,
+    pub eval_loss_diff: f64,
+    pub eval_correct_diff: f64,
+    pub pass: bool,
+}
+
+/// Tolerances: PJRT CPU vs jax CPU may reassociate; identical compilers
+/// usually agree to ~1e-6 relative on these magnitudes.
+const LOSS_TOL: f64 = 1e-4;
+const PARAM_TOL: f64 = 1e-4;
+
+pub fn check(rt: &mut Runtime, model: &str, golden: &GoldenInfo) -> anyhow::Result<GoldenReport> {
+    use xla::FromRawBytes;
+    let arts = rt.registry.model(model)?;
+    let spec = arts.spec.clone();
+    let path = arts
+        .golden_path()
+        .ok_or_else(|| anyhow::anyhow!("{model}: no golden file"))?;
+    let entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(&path, &())?;
+    let map: HashMap<String, xla::Literal> = entries.into_iter().collect();
+    let get = |name: &str| -> anyhow::Result<&xla::Literal> {
+        map.get(name).ok_or_else(|| anyhow::anyhow!("golden missing {name}"))
+    };
+
+    let x = get("x")?.to_vec::<f32>()?;
+    let y = get("y")?.to_vec::<i32>()?;
+    let lr = golden.lr as f32;
+    let init = arts.load_init()?;
+
+    // --- train step -------------------------------------------------
+    let out = rt.train_step(model, golden.batch, &init, &x, &y, lr)?;
+    let want_loss = get("loss")?.to_vec::<f32>()?[0] as f64;
+    let loss_diff = (out.loss as f64 - want_loss).abs();
+
+    let mut max_param_diff = 0f64;
+    let want_params = ParamSet {
+        leaves: spec
+            .leaves
+            .iter()
+            .map(|l| Ok(get(&format!("new_{}", l.name))?.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
+    for (got, want) in out.params.leaves.iter().zip(&want_params.leaves) {
+        for (&a, &b) in got.iter().zip(want) {
+            max_param_diff = max_param_diff.max((a as f64 - b as f64).abs());
+        }
+    }
+
+    // --- eval step ---------------------------------------------------
+    let ex = get("eval_x")?.to_vec::<f32>()?;
+    let ey = get("eval_y")?.to_vec::<i32>()?;
+    let eb = rt.eval_batch(model)?;
+    let eval = rt.eval_step(model, eb, &init, &ex, &ey)?;
+    let eval_loss_diff =
+        (eval.loss_sum as f64 - get("eval_loss_sum")?.to_vec::<f32>()?[0] as f64).abs();
+    let eval_correct_diff =
+        (eval.correct as f64 - get("eval_correct")?.to_vec::<f32>()?[0] as f64).abs();
+
+    let pass = loss_diff < LOSS_TOL
+        && max_param_diff < PARAM_TOL
+        && eval_loss_diff < LOSS_TOL * 256.0 // summed over the eval batch
+        && eval_correct_diff < 0.5;
+    Ok(GoldenReport { loss_diff, max_param_diff, eval_loss_diff, eval_correct_diff, pass })
+}

@@ -1,0 +1,259 @@
+//! Artifact registry: the rust-side reader of `artifacts/manifest.json`.
+//!
+//! The manifest is the L2↔L3 contract: parameter leaf order, input dims,
+//! artifact file names per (entry-point, batch), init/golden npz names.
+
+use crate::model::{ModelSpec, ParamSet};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Everything known about one model's artifacts.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub spec: ModelSpec,
+    dir: PathBuf,
+    train: BTreeMap<usize, String>,
+    eval: BTreeMap<usize, String>,
+    init: String,
+    pub golden: Option<GoldenInfo>,
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenInfo {
+    pub file: String,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+impl ModelArtifacts {
+    pub fn train_batches(&self) -> Vec<usize> {
+        self.train.keys().copied().collect()
+    }
+
+    pub fn eval_batches(&self) -> Vec<usize> {
+        self.eval.keys().copied().collect()
+    }
+
+    pub fn train_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
+        self.train
+            .get(&batch)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "{}: no train artifact for batch {batch} (have {:?})",
+                    self.spec.name,
+                    self.train_batches()
+                )
+            })
+    }
+
+    pub fn eval_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
+        self.eval
+            .get(&batch)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| anyhow::anyhow!("{}: no eval artifact for batch {batch}", self.spec.name))
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join(&self.init)
+    }
+
+    pub fn golden_path(&self) -> Option<PathBuf> {
+        self.golden.as_ref().map(|g| self.dir.join(&g.file))
+    }
+
+    /// Closest available train batch to a requested one (DEFL's b* may not
+    /// have been AOT-compiled; we clamp to the nearest artifact —
+    /// geometrically, matching the power-of-two ladder).
+    pub fn nearest_train_batch(&self, want: usize) -> usize {
+        let want = want.max(1) as f64;
+        *self
+            .train
+            .keys()
+            .min_by(|&&a, &&b| {
+                let da = (a as f64 / want).max(want / a as f64);
+                let db = (b as f64 / want).max(want / b as f64);
+                da.partial_cmp(&db).unwrap()
+            })
+            .expect("registry guarantees ≥1 train batch")
+    }
+
+    /// Load the seeded initial parameters (npz leaf names = spec names).
+    pub fn load_init(&self) -> anyhow::Result<ParamSet> {
+        load_params_npz(&self.init_path(), &self.spec)
+    }
+}
+
+/// Read a ParamSet out of an npz keyed by leaf names.
+pub fn load_params_npz(path: &Path, spec: &ModelSpec) -> anyhow::Result<ParamSet> {
+    use xla::FromRawBytes;
+    let entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())?;
+    let leaves = spec
+        .leaves
+        .iter()
+        .map(|leaf| {
+            let lit = entries
+                .iter()
+                .find(|(n, _)| n == &leaf.name)
+                .map(|(_, l)| l)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing leaf {}", path.display(), leaf.name))?;
+            let buf = lit.to_vec::<f32>()?;
+            anyhow::ensure!(
+                buf.len() == leaf.elems(),
+                "{}: leaf {} has {} elems, want {}",
+                path.display(),
+                leaf.name,
+                buf.len(),
+                leaf.elems()
+            );
+            Ok(buf)
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let set = ParamSet { leaves };
+    set.validate(spec)?;
+    Ok(set)
+}
+
+/// The manifest reader.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    models: BTreeMap<String, ModelArtifacts>,
+}
+
+impl ArtifactRegistry {
+    pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        anyhow::ensure!(
+            manifest_path.exists(),
+            "{} not found — run `make artifacts` first",
+            manifest_path.display()
+        );
+        let j = Json::parse_file(&manifest_path)?;
+        anyhow::ensure!(
+            j.get("format").and_then(|v| v.as_str()) == Some("hlo-text"),
+            "manifest format mismatch (want hlo-text)"
+        );
+        let models_json = j
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing models"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in models_json {
+            let spec = ModelSpec::from_manifest(name, entry)?;
+            let parse_map = |key: &str| -> anyhow::Result<BTreeMap<usize, String>> {
+                let mut out = BTreeMap::new();
+                if let Some(obj) = entry.get(key).and_then(|v| v.as_obj()) {
+                    for (bs, info) in obj {
+                        let b: usize = bs
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad batch key {bs:?}"))?;
+                        let file = info
+                            .get("file")
+                            .and_then(|v| v.as_str())
+                            .ok_or_else(|| anyhow::anyhow!("{name}.{key}.{bs}: file missing"))?;
+                        anyhow::ensure!(
+                            dir.join(file).exists(),
+                            "artifact file {file} missing — rerun `make artifacts`"
+                        );
+                        out.insert(b, file.to_string());
+                    }
+                }
+                Ok(out)
+            };
+            let train = parse_map("train")?;
+            let eval = parse_map("eval")?;
+            anyhow::ensure!(!train.is_empty(), "{name}: no train artifacts");
+            anyhow::ensure!(!eval.is_empty(), "{name}: no eval artifacts");
+            let init = entry
+                .get("init")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("{name}: init missing"))?
+                .to_string();
+            anyhow::ensure!(dir.join(&init).exists(), "{init} missing");
+            let golden = entry.get("golden").map(|g| -> anyhow::Result<GoldenInfo> {
+                Ok(GoldenInfo {
+                    file: g
+                        .get("file")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("golden.file"))?
+                        .to_string(),
+                    batch: g
+                        .get("batch")
+                        .and_then(|v| v.as_u64())
+                        .ok_or_else(|| anyhow::anyhow!("golden.batch"))? as usize,
+                    lr: g
+                        .get("lr")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow::anyhow!("golden.lr"))?,
+                })
+            });
+            let golden = match golden {
+                Some(Ok(g)) => Some(g),
+                Some(Err(e)) => return Err(e),
+                None => None,
+            };
+            models.insert(
+                name.clone(),
+                ModelArtifacts { spec, dir: dir.clone(), train, eval, init, golden },
+            );
+        }
+        anyhow::ensure!(!models.is_empty(), "manifest lists no models");
+        Ok(ArtifactRegistry { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelArtifacts> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "model {name:?} not in manifest (have {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_train_batch_geometric() {
+        let spec = ModelSpec {
+            name: "t".into(),
+            leaves: vec![],
+            classes: 10,
+            height: 8,
+            width: 8,
+            channels: 1,
+        };
+        let mut train = BTreeMap::new();
+        for b in [8usize, 16, 32, 64] {
+            train.insert(b, format!("t_b{b}.hlo.txt"));
+        }
+        let ma = ModelArtifacts {
+            spec,
+            dir: PathBuf::from("."),
+            train,
+            eval: BTreeMap::new(),
+            init: "x.npz".into(),
+            golden: None,
+        };
+        assert_eq!(ma.nearest_train_batch(32), 32);
+        assert_eq!(ma.nearest_train_batch(1), 8);
+        assert_eq!(ma.nearest_train_batch(1000), 64);
+        assert_eq!(ma.nearest_train_batch(24), 32); // 24/16=1.5 > 32/24≈1.33
+        assert_eq!(ma.nearest_train_batch(20), 16); // 20/16=1.25 < 32/20=1.6
+    }
+
+    #[test]
+    fn open_missing_dir_errors_helpfully() {
+        let err = ArtifactRegistry::open("/nonexistent-path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Virtual-time ledger — the paper's delay accounting (eq. 8/13).
+//!
+//! The coordinator executes real training steps (PJRT) but *prices* each
+//! synchronous round with the analytic models: `T = T_cm + V·T_cp`.
+//! [`SimClock`] accumulates that virtual time; wall-clock time is tracked
+//! separately so EXPERIMENTS.md can report both. This mirrors the paper's
+//! methodology, where "overall time" is computed from the communication
+//! and computation models rather than measured on a real cell network.
+
+/// One round's delay decomposition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundDelay {
+    /// Synchronous uplink time (eq. 7).
+    pub t_cm: f64,
+    /// Per-iteration synchronous compute time (eq. 5).
+    pub t_cp: f64,
+    /// Local iterations V this round.
+    pub local_rounds: usize,
+}
+
+impl RoundDelay {
+    /// Eq. (8): T = T_cm + V·T_cp.
+    pub fn total(&self) -> f64 {
+        self.t_cm + self.local_rounds as f64 * self.t_cp
+    }
+
+    /// Computation share of the round (for the fig. 1(d) split).
+    pub fn compute_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            (self.local_rounds as f64 * self.t_cp) / t
+        }
+    }
+}
+
+/// Monotone virtual clock over rounds.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    now: f64,
+    rounds: Vec<RoundDelay>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Advance by one synchronous round; returns the new virtual now.
+    pub fn advance(&mut self, delay: RoundDelay) -> f64 {
+        assert!(delay.t_cm >= 0.0 && delay.t_cp >= 0.0, "negative delay");
+        self.now += delay.total();
+        self.rounds.push(delay);
+        crate::util::logging::set_virtual_time(self.now);
+        self.now
+    }
+
+    /// Current virtual time 𝒯 so far.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn rounds_elapsed(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn history(&self) -> &[RoundDelay] {
+        &self.rounds
+    }
+
+    /// Cumulative communication / computation split.
+    pub fn split(&self) -> (f64, f64) {
+        let cm: f64 = self.rounds.iter().map(|r| r.t_cm).sum();
+        let cp: f64 = self.rounds.iter().map(|r| r.local_rounds as f64 * r.t_cp).sum();
+        (cm, cp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn eq8_total() {
+        let d = RoundDelay { t_cm: 0.5, t_cp: 0.1, local_rounds: 4 };
+        assert!((d.total() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clock_accumulates() {
+        let mut c = SimClock::new();
+        let d = RoundDelay { t_cm: 1.0, t_cp: 0.5, local_rounds: 2 };
+        assert_eq!(c.advance(d), 2.0);
+        assert_eq!(c.advance(d), 4.0);
+        assert_eq!(c.rounds_elapsed(), 2);
+        assert_eq!(c.now(), 4.0);
+    }
+
+    #[test]
+    fn split_sums_to_now() {
+        let mut c = SimClock::new();
+        c.advance(RoundDelay { t_cm: 0.3, t_cp: 0.05, local_rounds: 10 });
+        c.advance(RoundDelay { t_cm: 0.7, t_cp: 0.02, local_rounds: 5 });
+        let (cm, cp) = c.split();
+        assert!((cm - 1.0).abs() < 1e-12);
+        assert!((cm + cp - c.now()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compute_fraction_bounds() {
+        let d = RoundDelay { t_cm: 0.0, t_cp: 0.0, local_rounds: 1 };
+        assert_eq!(d.compute_fraction(), 0.0);
+        let d = RoundDelay { t_cm: 0.0, t_cp: 1.0, local_rounds: 3 };
+        assert_eq!(d.compute_fraction(), 1.0);
+    }
+
+    #[test]
+    fn prop_clock_monotone() {
+        prop::check(0x51, 50, |g| {
+            let mut c = SimClock::new();
+            let mut prev = 0.0;
+            for _ in 0..g.usize_in(1, 40) {
+                let d = RoundDelay {
+                    t_cm: g.f64_in(0.0, 2.0),
+                    t_cp: g.f64_in(0.0, 0.1),
+                    local_rounds: g.usize_in(1, 50),
+                };
+                let now = c.advance(d);
+                if now < prev {
+                    return Err(format!("clock went backwards {prev} -> {now}"));
+                }
+                prev = now;
+            }
+            Ok(())
+        });
+    }
+}

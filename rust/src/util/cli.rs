@@ -1,0 +1,278 @@
+//! Declarative command-line parsing (substrate; no `clap` offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, subcommands, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+enum Kind {
+    Flag,          // boolean, present/absent
+    Value(String), // takes a value; payload = default ("" = required)
+}
+
+#[derive(Clone, Debug)]
+struct Opt {
+    name: String,
+    kind: Kind,
+    help: String,
+    required: bool,
+}
+
+/// Builder for one (sub)command's options.
+#[derive(Clone, Debug, Default)]
+pub struct Cli {
+    pub bin: String,
+    pub about: String,
+    opts: Vec<Opt>,
+    positional: Vec<(String, String)>, // (name, help)
+}
+
+/// Parse result: option values + positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(bin: &str, about: &str) -> Self {
+        Cli { bin: bin.into(), about: about.into(), ..Default::default() }
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt { name: name.into(), kind: Kind::Flag, help: help.into(), required: false });
+        self
+    }
+
+    /// Option with a default value.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            kind: Kind::Value(default.into()),
+            help: help.into(),
+            required: false,
+        });
+        self
+    }
+
+    /// Required option.
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(Opt {
+            name: name.into(),
+            kind: Kind::Value(String::new()),
+            help: help.into(),
+            required: true,
+        });
+        self
+    }
+
+    /// Declare a positional argument (for help text; not enforced).
+    pub fn pos(mut self, name: &str, help: &str) -> Self {
+        self.positional.push((name.into(), help.into()));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.bin, self.about, self.bin);
+        for (p, _) in &self.positional {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for o in &self.opts {
+            let left = match &o.kind {
+                Kind::Flag => format!("--{}", o.name),
+                Kind::Value(d) if d.is_empty() => format!("--{} <value> (required)", o.name),
+                Kind::Value(d) => format!("--{} <value> [default: {}]", o.name, d),
+            };
+            s.push_str(&format!("  {left:<44} {}\n", o.help));
+        }
+        for (p, h) in &self.positional {
+            s.push_str(&format!("  <{p}>  {h}\n"));
+        }
+        s
+    }
+
+    /// Parse a raw arg list (excluding argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        // seed defaults
+        for o in &self.opts {
+            match &o.kind {
+                Kind::Flag => {
+                    out.flags.insert(o.name.clone(), false);
+                }
+                Kind::Value(d) if !d.is_empty() => {
+                    out.values.insert(o.name.clone(), d.clone());
+                }
+                _ => {}
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help_text())))?;
+                match &opt.kind {
+                    Kind::Flag => {
+                        if inline.is_some() {
+                            return Err(CliError(format!("--{name} takes no value")));
+                        }
+                        out.flags.insert(name, true);
+                    }
+                    Kind::Value(_) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => {
+                                i += 1;
+                                argv.get(i)
+                                    .cloned()
+                                    .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                            }
+                        };
+                        out.values.insert(name, v);
+                    }
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for o in &self.opts {
+            if o.required && !out.values.contains_key(&o.name) {
+                return Err(CliError(format!("missing required --{}\n\n{}", o.name, self.help_text())));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> String {
+        self.values.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected integer, got {:?}", self.str(name))))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.u64(name)? as usize)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        self.str(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name}: expected number, got {:?}", self.str(name))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("defl", "test")
+            .opt("rounds", "10", "number of rounds")
+            .opt("dataset", "mnist", "dataset name")
+            .req("out", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = cli().parse(&argv(&["--out", "x.json"])).unwrap();
+        assert_eq!(a.str("rounds"), "10");
+        assert_eq!(a.u64("rounds").unwrap(), 10);
+        assert_eq!(a.str("out"), "x.json");
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = cli()
+            .parse(&argv(&["--out=o", "--rounds=25", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.u64("rounds").unwrap(), 25);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli().parse(&argv(&["--out", "o", "--bogus", "1"])).is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&argv(&["fig1a", "--out", "o"])).unwrap();
+        assert_eq!(a.positional, vec!["fig1a"]);
+    }
+
+    #[test]
+    fn value_missing_errors() {
+        assert!(cli().parse(&argv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cli().parse(&argv(&["--out", "o", "--verbose=yes"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reports() {
+        let a = cli().parse(&argv(&["--out", "o", "--rounds", "ten"])).unwrap();
+        assert!(a.u64("rounds").is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cli().help_text();
+        assert!(h.contains("--rounds"));
+        assert!(h.contains("required"));
+        let e = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(e.0.contains("USAGE"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Leveled stderr logger (substrate) with wall-clock and virtual-clock
+//! stamps. Level comes from `DEFL_LOG` (error|warn|info|debug|trace),
+//! defaulting to `info`.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // lazily initialised
+/// Virtual time in microseconds, mirrored from the active simclock so log
+/// lines can carry both clocks.
+static VIRT_US: AtomicU64 = AtomicU64::new(0);
+
+fn start() -> Instant {
+    static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let l = Level::parse(&std::env::var("DEFL_LOG").unwrap_or_default());
+        LEVEL.store(l as u8, Ordering::Relaxed);
+        return l;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Mirror the coordinator's virtual clock (seconds) into log stamps.
+pub fn set_virtual_time(seconds: f64) {
+    VIRT_US.store((seconds * 1e6) as u64, Ordering::Relaxed);
+}
+
+pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
+    if l > level() {
+        return;
+    }
+    let wall = start().elapsed().as_secs_f64();
+    let virt = VIRT_US.load(Ordering::Relaxed) as f64 / 1e6;
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(err, "[{wall:9.3}s|vt {virt:10.3}s] {} {args}", l.tag());
+}
+
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("TRACE"), Level::Trace);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn ordering_matches_severity() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_round_trips() {
+        let prev = level();
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(prev);
+    }
+
+    #[test]
+    fn virtual_time_stamp_updates() {
+        set_virtual_time(12.5);
+        assert_eq!(VIRT_US.load(Ordering::Relaxed), 12_500_000);
+        set_virtual_time(0.0);
+    }
+}

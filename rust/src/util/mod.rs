@@ -1,0 +1,11 @@
+//! Shared substrates built from scratch for the offline environment:
+//! PRNG, statistics, JSON, CLI parsing, thread pool, property testing,
+//! logging. See DESIGN.md §3 for the substitution table.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,164 @@
+//! Minimal thread pool + scoped parallel map (substrate; no `tokio`/`rayon`).
+//!
+//! The coordinator's device fleet is logically parallel (paper: synchronous
+//! rounds, per-round time = max over devices). On this testbed the fleet is
+//! executed either sequentially or via [`parallel_map`], which spawns scoped
+//! threads in chunks. Virtual time (simclock) is what implements the paper's
+//! synchronous `max`; wall-clock parallelism is just an execution detail.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// A fixed-size pool executing boxed jobs; join with [`ThreadPool::wait`].
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = Arc::clone(&rx);
+            let pending = Arc::clone(&pending);
+            workers.push(thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match job {
+                    Ok(job) => {
+                        job();
+                        let (lock, cvar) = &*pending;
+                        let mut p = lock.lock().unwrap();
+                        *p -= 1;
+                        if *p == 0 {
+                            cvar.notify_all();
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+        ThreadPool { tx: Some(tx), workers, pending }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        let (lock, _) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let (lock, cvar) = &*self.pending;
+        let mut p = lock.lock().unwrap();
+        while *p > 0 {
+            p = cvar.wait(p).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers drain and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Scoped parallel map: applies `f` to each item on up to `threads` OS
+/// threads and returns results in input order. Falls back to sequential
+/// when `threads <= 1` or the input is tiny.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().map(|x| f(x)).collect();
+    }
+    let n = items.len();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let work: Vec<(usize, T)> = items.into_iter().enumerate().collect();
+    let queue = Mutex::new(work);
+    let slots_mutex = Mutex::new(&mut slots);
+    thread::scope(|s| {
+        for _ in 0..threads.min(n) {
+            s.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, x)) => {
+                        let r = f(x);
+                        slots_mutex.lock().unwrap()[i] = Some(r);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("worker died")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_wait_idempotent() {
+        let pool = ThreadPool::new(2);
+        pool.wait(); // nothing submitted
+        let c = Arc::new(AtomicUsize::new(0));
+        let cc = Arc::clone(&c);
+        pool.execute(move || {
+            cc.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait();
+        pool.wait();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let xs: Vec<usize> = (0..200).collect();
+        let ys = parallel_map(xs.clone(), 8, |x| x * 2);
+        assert_eq!(ys, xs.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_sequential_fallback() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+}

@@ -1,0 +1,358 @@
+//! Cellular channel model: placement, path loss, shadowing, Rayleigh fading.
+//!
+//! The paper gives only `B` and `N0`; for per-device heterogeneity we use a
+//! standard urban-macro triple (3GPP TR 36.814 style):
+//!
+//! * path loss `PL(d) = 128.1 + 37.6·log10(d_km)` dB,
+//! * log-normal shadowing, default σ = 8 dB (frozen per device),
+//! * Rayleigh fast fading: power gain ~ Exp(1), redrawn per round.
+//!
+//! Bandwidth policy: `Dedicated` gives every device the full `B` (the
+//! paper's synchronous max in eq. (7) implicitly assumes devices don't
+//! contend); `Ofdma` splits `B` equally across the M participants — kept
+//! as an ablation (`defl exp fig1a --ofdma`-style flags).
+
+use crate::util::rng::Pcg32;
+use super::{dbm_to_watt, db_to_linear, shannon_rate, uplink_time};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BandwidthPolicy {
+    /// Every device transmits over the full band (paper default).
+    Dedicated,
+    /// Equal OFDMA share `B / M` per device.
+    Ofdma,
+}
+
+#[derive(Clone, Debug)]
+pub struct ChannelConfig {
+    /// Uplink bandwidth `B` in Hz (paper: 20 MHz).
+    pub bandwidth_hz: f64,
+    /// Noise power spectral density in dBm/Hz (paper: −174).
+    pub noise_dbm_per_hz: f64,
+    /// Device transmit power in dBm (typical UE: 23 dBm ≈ 200 mW).
+    pub tx_power_dbm: f64,
+    /// Cell radius bounds for device placement, meters.
+    pub min_radius_m: f64,
+    pub max_radius_m: f64,
+    /// Log-normal shadowing std in dB (0 disables). The paper's setting
+    /// specifies no shadowing, so the default is 0; the heterogeneity
+    /// example turns it on.
+    pub shadowing_db: f64,
+    /// Redraw Rayleigh fading each round (true) or freeze it (false).
+    pub fast_fading: bool,
+    pub policy: BandwidthPolicy,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        ChannelConfig {
+            bandwidth_hz: 20e6,
+            noise_dbm_per_hz: -174.0,
+            tx_power_dbm: 23.0,
+            min_radius_m: 50.0,
+            max_radius_m: 500.0,
+            shadowing_db: 0.0,
+            fast_fading: true,
+            policy: BandwidthPolicy::Dedicated,
+        }
+    }
+}
+
+/// Static state of one device's link (placement + shadowing are frozen;
+/// fading is redrawn per round when `fast_fading`).
+#[derive(Clone, Debug)]
+pub struct DeviceLink {
+    pub distance_m: f64,
+    pub path_loss_db: f64,
+    pub shadowing_db: f64,
+}
+
+impl DeviceLink {
+    /// Average (fading-free) linear gain.
+    pub fn mean_gain(&self) -> f64 {
+        db_to_linear(-(self.path_loss_db + self.shadowing_db))
+    }
+}
+
+/// 3GPP-style log-distance path loss in dB.
+pub fn path_loss_db(distance_m: f64) -> f64 {
+    let d_km = (distance_m / 1000.0).max(1e-3);
+    128.1 + 37.6 * d_km.log10()
+}
+
+/// The channel substrate: owns per-device links and draws per-round gains.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    pub cfg: ChannelConfig,
+    pub links: Vec<DeviceLink>,
+    rng: Pcg32,
+}
+
+impl Channel {
+    /// Place `m` devices uniformly (by area) in the configured annulus.
+    pub fn new(cfg: ChannelConfig, m: usize, seed: u64) -> Self {
+        assert!(m > 0, "need at least one device");
+        assert!(cfg.min_radius_m > 0.0 && cfg.max_radius_m > cfg.min_radius_m);
+        let mut rng = Pcg32::new(seed, 0xC4A77E1);
+        let links = (0..m)
+            .map(|_| {
+                // uniform by area: r = sqrt(U·(R²−r₀²) + r₀²)
+                let u = rng.uniform();
+                let r2 = cfg.min_radius_m.powi(2)
+                    + u * (cfg.max_radius_m.powi(2) - cfg.min_radius_m.powi(2));
+                let d = r2.sqrt();
+                let shadow = if cfg.shadowing_db > 0.0 {
+                    rng.normal_ms(0.0, cfg.shadowing_db)
+                } else {
+                    0.0
+                };
+                DeviceLink {
+                    distance_m: d,
+                    path_loss_db: path_loss_db(d),
+                    shadowing_db: shadow,
+                }
+            })
+            .collect();
+        Channel { cfg, links, rng }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.links.len()
+    }
+
+    fn per_device_bandwidth(&self) -> f64 {
+        match self.cfg.policy {
+            BandwidthPolicy::Dedicated => self.cfg.bandwidth_hz,
+            BandwidthPolicy::Ofdma => self.cfg.bandwidth_hz / self.links.len() as f64,
+        }
+    }
+
+    /// Draw this round's linear gains (Rayleigh power fading on top of the
+    /// frozen mean gain). With `fast_fading=false` the mean gain is used.
+    pub fn draw_gains(&mut self) -> Vec<f64> {
+        let fast = self.cfg.fast_fading;
+        let rng = &mut self.rng;
+        self.links
+            .iter()
+            .map(|l| {
+                let fade = if fast { rng.exponential(1.0) } else { 1.0 };
+                l.mean_gain() * fade
+            })
+            .collect()
+    }
+
+    /// Per-device uplink rates (bits/s) for a set of gains.
+    pub fn rates(&self, gains: &[f64]) -> Vec<f64> {
+        let bw = self.per_device_bandwidth();
+        let noise_w = dbm_to_watt(self.cfg.noise_dbm_per_hz) * bw;
+        let p = dbm_to_watt(self.cfg.tx_power_dbm);
+        gains.iter().map(|&h| shannon_rate(bw, p, h, noise_w)).collect()
+    }
+
+    /// Eq. (6) per device for an `update_bits` model update.
+    pub fn uplink_times(&self, gains: &[f64], update_bits: f64) -> Vec<f64> {
+        self.rates(gains)
+            .into_iter()
+            .map(|r| uplink_time(update_bits, r))
+            .collect()
+    }
+
+    /// One synchronous round: draw gains, return (per-device times, max).
+    pub fn round(&mut self, update_bits: f64) -> (Vec<f64>, f64) {
+        let gains = self.draw_gains();
+        let times = self.uplink_times(&gains, update_bits);
+        let t = super::round_time(&times);
+        (times, t)
+    }
+
+    /// One synchronous round over an *unreliable* uplink (the abstract's
+    /// "unreliable network connections may obstruct ... communication").
+    ///
+    /// Each transmission independently fails with probability
+    /// `outage_prob`; a failed device retries (each retry costs another
+    /// full uplink) up to `max_retries` total attempts, after which its
+    /// update is dropped from this round's aggregation. The synchronous
+    /// round still waits for the slowest device's attempts (eq. 7 over
+    /// *time spent*, delivered or not).
+    ///
+    /// Returns (per-device time spent, round T_cm, delivered flags).
+    pub fn round_with_outage(
+        &mut self,
+        update_bits: f64,
+        outage_prob: f64,
+        max_retries: usize,
+    ) -> (Vec<f64>, f64, Vec<bool>) {
+        assert!((0.0..=1.0).contains(&outage_prob));
+        assert!(max_retries >= 1);
+        let gains = self.draw_gains();
+        let base = self.uplink_times(&gains, update_bits);
+        let mut spent = Vec::with_capacity(base.len());
+        let mut delivered = Vec::with_capacity(base.len());
+        for &t in &base {
+            let mut attempts = 0usize;
+            let mut ok = false;
+            while attempts < max_retries {
+                attempts += 1;
+                if self.rng.uniform() >= outage_prob {
+                    ok = true;
+                    break;
+                }
+            }
+            spent.push(attempts as f64 * t);
+            delivered.push(ok);
+        }
+        let t_cm = super::round_time(&spent);
+        (spent, t_cm, delivered)
+    }
+
+    /// Expected (fading-free) synchronous communication time — used by the
+    /// DEFL optimizer, which plans on expectations (eq. 29 takes T_cm as a
+    /// known quantity).
+    pub fn expected_round_time(&self, update_bits: f64) -> f64 {
+        let gains: Vec<f64> = self.links.iter().map(|l| l.mean_gain()).collect();
+        let times = self.uplink_times(&gains, update_bits);
+        super::round_time(&times)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn placement_within_annulus_and_deterministic() {
+        let cfg = ChannelConfig::default();
+        let a = Channel::new(cfg.clone(), 10, 42);
+        let b = Channel::new(cfg.clone(), 10, 42);
+        for (la, lb) in a.links.iter().zip(&b.links) {
+            assert_eq!(la.distance_m, lb.distance_m);
+            assert!(la.distance_m >= cfg.min_radius_m && la.distance_m <= cfg.max_radius_m);
+        }
+        let c = Channel::new(cfg, 10, 43);
+        assert!(a.links.iter().zip(&c.links).any(|(x, y)| x.distance_m != y.distance_m));
+    }
+
+    #[test]
+    fn path_loss_increases_with_distance() {
+        assert!(path_loss_db(100.0) < path_loss_db(200.0));
+        assert!(path_loss_db(200.0) < path_loss_db(500.0));
+    }
+
+    #[test]
+    fn farther_devices_have_lower_mean_gain() {
+        let near = DeviceLink { distance_m: 100.0, path_loss_db: path_loss_db(100.0), shadowing_db: 0.0 };
+        let far = DeviceLink { distance_m: 400.0, path_loss_db: path_loss_db(400.0), shadowing_db: 0.0 };
+        assert!(near.mean_gain() > far.mean_gain());
+    }
+
+    #[test]
+    fn round_time_is_max_of_device_times() {
+        let mut ch = Channel::new(ChannelConfig::default(), 10, 7);
+        let (times, t) = ch.round(3.3e6);
+        assert_eq!(times.len(), 10);
+        let max = times.iter().copied().fold(0.0, f64::max);
+        assert_eq!(t, max);
+        assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn ofdma_slower_than_dedicated() {
+        let mut cfg = ChannelConfig::default();
+        cfg.fast_fading = false;
+        let ded = Channel::new(cfg.clone(), 10, 11);
+        cfg.policy = BandwidthPolicy::Ofdma;
+        let ofd = Channel::new(cfg, 10, 11);
+        let bits = 3.3e6;
+        assert!(ofd.expected_round_time(bits) > ded.expected_round_time(bits));
+    }
+
+    #[test]
+    fn fast_fading_varies_rounds_frozen_does_not() {
+        let mut cfg = ChannelConfig::default();
+        cfg.fast_fading = true;
+        let mut ch = Channel::new(cfg.clone(), 5, 3);
+        let (_, t1) = ch.round(1e6);
+        let (_, t2) = ch.round(1e6);
+        assert_ne!(t1, t2);
+        cfg.fast_fading = false;
+        let mut ch = Channel::new(cfg, 5, 3);
+        let (_, t1) = ch.round(1e6);
+        let (_, t2) = ch.round(1e6);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn expected_round_time_scales_with_update_size() {
+        let ch = Channel::new(ChannelConfig::default(), 8, 5);
+        let t1 = ch.expected_round_time(1e6);
+        let t2 = ch.expected_round_time(2e6);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outage_zero_delivers_everyone() {
+        let mut ch = Channel::new(ChannelConfig::default(), 8, 1);
+        let (spent, t_cm, delivered) = ch.round_with_outage(1e6, 0.0, 3);
+        assert!(delivered.iter().all(|&d| d));
+        assert_eq!(t_cm, spent.iter().copied().fold(0.0, f64::max));
+    }
+
+    #[test]
+    fn outage_one_drops_everyone_but_costs_time() {
+        let mut ch = Channel::new(ChannelConfig::default(), 8, 1);
+        let (spent, t_cm, delivered) = ch.round_with_outage(1e6, 1.0, 3);
+        assert!(delivered.iter().all(|&d| !d));
+        assert!(t_cm > 0.0);
+        // every device spent exactly max_retries × its uplink time
+        let mut ch2 = Channel::new(ChannelConfig::default(), 8, 1);
+        let gains = ch2.draw_gains();
+        let base = ch2.uplink_times(&gains, 1e6);
+        for (s, b) in spent.iter().zip(&base) {
+            assert!((s - 3.0 * b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn outage_partial_mixes_and_inflates_tcm() {
+        let mut ch = Channel::new(ChannelConfig::default(), 32, 5);
+        let (_, t_out, delivered) = ch.round_with_outage(1e6, 0.5, 4);
+        let n_ok = delivered.iter().filter(|&&d| d).count();
+        assert!(n_ok > 0 && n_ok < 32, "{n_ok}");
+        let mut ch2 = Channel::new(ChannelConfig::default(), 32, 5);
+        let (_, t_clean) = ch2.round(1e6);
+        // retransmissions can only slow the synchronous round
+        assert!(t_out >= t_clean * 0.99, "{t_out} vs {t_clean}");
+    }
+
+    #[test]
+    fn prop_rates_positive_finite() {
+        prop::check(0xC0FFEE, 50, |g| {
+            let m = g.usize_in(1, 32);
+            let seed = g.rng.next_u64();
+            let mut ch = Channel::new(ChannelConfig::default(), m, seed);
+            let gains = ch.draw_gains();
+            for r in ch.rates(&gains) {
+                if !(r.is_finite() && r >= 0.0) {
+                    return Err(format!("bad rate {r}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_round_is_max_invariant() {
+        prop::check(0xBEEF, 50, |g| {
+            let m = g.usize_in(1, 16);
+            let mut ch = Channel::new(ChannelConfig::default(), m, g.rng.next_u64());
+            let bits = g.f64_in(1e5, 1e8);
+            let (times, t) = ch.round(bits);
+            let max = times.iter().copied().fold(0.0, f64::max);
+            if (t - max).abs() > 1e-12 {
+                return Err(format!("{t} != max {max}"));
+            }
+            Ok(())
+        });
+    }
+}

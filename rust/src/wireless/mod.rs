@@ -1,0 +1,120 @@
+//! Wireless communication model — the "talk" half of the paper.
+//!
+//! Implements eq. (6)/(7): per-device uplink time of one model update
+//!
+//! ```text
+//! T_cm^m = s / ( B · log2(1 + p_m·h_m / N0) )        (6)
+//! T_cm   = max_m T_cm^m                              (7)  (synchronous)
+//! ```
+//!
+//! with the paper's evaluation defaults (Section VI-A): `B = 20 MHz`,
+//! `N0 = −174 dBm/Hz`. Channel gains `h_m` come from a standard cellular
+//! triple: 3GPP log-distance path loss + log-normal shadowing + Rayleigh
+//! fast fading; device placement is seeded and reproducible.
+//!
+//! The paper treats only the uplink (downlink broadcast is assumed fast,
+//! Section II-C) — so does this module.
+
+pub mod channel;
+
+pub use channel::{Channel, ChannelConfig, DeviceLink};
+
+/// Convert dBm to watts.
+pub fn dbm_to_watt(dbm: f64) -> f64 {
+    10f64.powf((dbm - 30.0) / 10.0)
+}
+
+/// Convert dB to a linear ratio.
+pub fn db_to_linear(db: f64) -> f64 {
+    10f64.powf(db / 10.0)
+}
+
+/// Shannon uplink rate in bits/s: `B·log2(1 + p·h/N)`.
+///
+/// * `bandwidth_hz` — allocated uplink bandwidth `B`.
+/// * `tx_power_w` — transmit power `p_m` (watts).
+/// * `gain` — linear channel gain `h_m` (includes path loss/fading).
+/// * `noise_w` — total noise power over `B` (i.e. `N0_density · B`).
+pub fn shannon_rate(bandwidth_hz: f64, tx_power_w: f64, gain: f64, noise_w: f64) -> f64 {
+    assert!(bandwidth_hz > 0.0 && noise_w > 0.0);
+    let snr = (tx_power_w * gain / noise_w).max(0.0);
+    bandwidth_hz * (1.0 + snr).log2()
+}
+
+/// Eq. (6): time to push one `update_bits`-sized local update uplink.
+pub fn uplink_time(update_bits: f64, rate_bps: f64) -> f64 {
+    assert!(update_bits >= 0.0);
+    if rate_bps <= 0.0 {
+        return f64::INFINITY;
+    }
+    update_bits / rate_bps
+}
+
+/// Eq. (7): synchronous-round communication time = slowest device.
+pub fn round_time(per_device: &[f64]) -> f64 {
+    per_device.iter().copied().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_conversions() {
+        assert!((dbm_to_watt(30.0) - 1.0).abs() < 1e-12);
+        assert!((dbm_to_watt(0.0) - 1e-3).abs() < 1e-15);
+        assert!((db_to_linear(10.0) - 10.0).abs() < 1e-12);
+        assert!((db_to_linear(0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shannon_rate_matches_hand_calc() {
+        // SNR = 1 ⇒ rate = B·log2(2) = B
+        let r = shannon_rate(20e6, 1.0, 1.0, 1.0);
+        assert!((r - 20e6).abs() < 1e-3);
+        // SNR = 3 ⇒ rate = 2B
+        let r = shannon_rate(20e6, 3.0, 1.0, 1.0);
+        assert!((r - 40e6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rate_monotone_in_power_and_gain() {
+        let r1 = shannon_rate(20e6, 0.1, 1e-9, 1e-13);
+        let r2 = shannon_rate(20e6, 0.2, 1e-9, 1e-13);
+        let r3 = shannon_rate(20e6, 0.2, 2e-9, 1e-13);
+        assert!(r1 < r2 && r2 < r3);
+    }
+
+    #[test]
+    fn zero_gain_gives_zero_rate_infinite_time() {
+        let r = shannon_rate(20e6, 0.2, 0.0, 1e-13);
+        assert_eq!(r, 0.0);
+        assert_eq!(uplink_time(1e6, r), f64::INFINITY);
+    }
+
+    #[test]
+    fn uplink_time_scales_linearly_with_size() {
+        let t1 = uplink_time(1e6, 1e7);
+        let t2 = uplink_time(2e6, 1e7);
+        assert!((t2 - 2.0 * t1).abs() < 1e-12);
+        assert!((t1 - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_time_is_max() {
+        assert_eq!(round_time(&[0.1, 0.5, 0.3]), 0.5);
+        assert_eq!(round_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn paper_scale_sanity() {
+        // Paper setting: s = 4·103k bits ≈ 3.3 Mbit update, B = 20 MHz,
+        // N0 = −174 dBm/Hz, p = 23 dBm, gain ≈ −100 dB ⇒ rate ≈ 100+ Mbps
+        // and sub-second uplink.
+        let noise = dbm_to_watt(-174.0) * 20e6;
+        let rate = shannon_rate(20e6, dbm_to_watt(23.0), db_to_linear(-100.0), noise);
+        assert!(rate > 50e6, "rate {rate}");
+        let t = uplink_time(3.3e6, rate);
+        assert!(t < 0.2, "t {t}");
+    }
+}

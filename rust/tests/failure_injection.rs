@@ -1,0 +1,205 @@
+//! Failure-injection tests: corrupt manifests, missing/truncated
+//! artifacts, bad configs, lossy channels — the system must fail loudly
+//! and helpfully, or degrade exactly as designed.
+
+use defl::config::{DatasetKind, ExperimentConfig, Policy};
+use defl::coordinator::FlSystem;
+use defl::runtime::ArtifactRegistry;
+use std::fs;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+fn scratch_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("defl-fi-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_manifest_mentions_make_artifacts() {
+    let dir = scratch_dir("nomanifest");
+    let err = ArtifactRegistry::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_rejected() {
+    let dir = scratch_dir("badjson");
+    fs::write(dir.join("manifest.json"), "{not json").unwrap();
+    assert!(ArtifactRegistry::open(&dir).is_err());
+}
+
+#[test]
+fn wrong_format_field_is_rejected() {
+    let dir = scratch_dir("badformat");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "protobuf", "models": {}}"#,
+    )
+    .unwrap();
+    let err = ArtifactRegistry::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("format"), "{err}");
+}
+
+#[test]
+fn manifest_referencing_missing_files_is_rejected() {
+    let dir = scratch_dir("missingfiles");
+    fs::write(
+        dir.join("manifest.json"),
+        r#"{"format": "hlo-text", "models": {"m": {
+            "params": [{"name": "w", "shape": [2]}],
+            "input": {"classes": 10, "height": 8, "width": 8, "channels": 1},
+            "train": {"16": {"file": "nonexistent.hlo.txt"}},
+            "eval": {"256": {"file": "also-missing.hlo.txt"}},
+            "init": "missing.npz"
+        }}}"#,
+    )
+    .unwrap();
+    let err = ArtifactRegistry::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("missing"), "{err}");
+}
+
+#[test]
+fn truncated_hlo_fails_at_compile_not_silently() {
+    let src = require_artifacts!();
+    let dir = scratch_dir("trunchlo");
+    // copy real manifest + npz files, truncate one HLO artifact
+    for entry in fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        let name = entry.file_name();
+        let dst = dir.join(&name);
+        fs::copy(entry.path(), &dst).unwrap();
+    }
+    let victim = dir.join("mlp_train_b16.hlo.txt");
+    let full = fs::read_to_string(&victim).unwrap();
+    fs::write(&victim, &full[..full.len() / 3]).unwrap();
+    let mut rt = defl::runtime::Runtime::new(&dir).unwrap(); // registry ok
+    let err = rt.preload("mlp", &[16]);
+    assert!(err.is_err(), "truncated HLO must not compile");
+}
+
+#[test]
+fn corrupt_init_npz_is_rejected() {
+    let src = require_artifacts!();
+    let dir = scratch_dir("badnpz");
+    for entry in fs::read_dir(&src).unwrap() {
+        let entry = entry.unwrap();
+        fs::copy(entry.path(), dir.join(entry.file_name())).unwrap();
+    }
+    fs::write(dir.join("mlp_init.npz"), b"garbage").unwrap();
+    let rt = defl::runtime::Runtime::new(&dir).unwrap();
+    assert!(rt.initial_params("mlp").is_err());
+}
+
+#[test]
+fn unknown_model_lists_alternatives() {
+    let dir = require_artifacts!();
+    let rt = defl::runtime::Runtime::new(&dir).unwrap();
+    let err = rt.spec("resnet152").unwrap_err();
+    assert!(err.to_string().contains("mlp"), "{err}");
+}
+
+#[test]
+fn config_rejects_out_of_range_extensions() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.outage_prob = 1.5;
+    assert!(cfg.validate().is_err());
+    let mut cfg = ExperimentConfig::default();
+    cfg.compression = 0.0;
+    assert!(cfg.validate().is_err());
+    let mut cfg = ExperimentConfig::default();
+    cfg.max_retries = 0;
+    assert!(cfg.validate().is_err());
+}
+
+fn tiny_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.dataset = DatasetKind::Tiny;
+    cfg.devices = 4;
+    cfg.train_per_device = 64;
+    cfg.test_size = 256;
+    cfg.max_rounds = 4;
+    cfg.eval_every = 4;
+    cfg.policy = Policy::Fixed { batch: 16, local_rounds: 2 };
+    cfg.seed = 3;
+    cfg.artifacts_dir = artifacts_dir().unwrap().to_string_lossy().into_owned();
+    cfg
+}
+
+#[test]
+fn outage_inflates_tcm_but_training_survives() {
+    require_artifacts!();
+    let mut clean = tiny_cfg("fi-clean");
+    clean.wireless.fast_fading = false;
+    let mut sys = FlSystem::build(clean).unwrap();
+    sys.run().unwrap();
+    let t_clean: f64 = sys.log.rounds.iter().map(|r| r.t_cm).sum();
+
+    let mut lossy = tiny_cfg("fi-lossy");
+    lossy.wireless.fast_fading = false;
+    lossy.outage_prob = 0.4;
+    let mut sys = FlSystem::build(lossy).unwrap();
+    let outcome = sys.run().unwrap();
+    let t_lossy: f64 = sys.log.rounds.iter().map(|r| r.t_cm).sum();
+    assert!(t_lossy > t_clean, "retransmissions must cost time: {t_lossy} vs {t_clean}");
+    assert!(outcome.final_train_loss.is_finite());
+}
+
+#[test]
+fn total_outage_keeps_global_model_stable() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg("fi-blackout");
+    cfg.outage_prob = 1.0;
+    cfg.max_rounds = 2;
+    let mut sys = FlSystem::build(cfg).unwrap();
+    let before = sys.global.clone();
+    sys.run().unwrap();
+    // no update ever arrives ⇒ global params unchanged
+    assert_eq!(before.leaves, sys.global.leaves);
+}
+
+#[test]
+fn compression_shrinks_communication_time() {
+    require_artifacts!();
+    let mut fp32 = tiny_cfg("fi-fp32");
+    fp32.wireless.fast_fading = false;
+    let mut sys32 = FlSystem::build(fp32).unwrap();
+    sys32.run().unwrap();
+    let mut int8 = tiny_cfg("fi-int8");
+    int8.wireless.fast_fading = false;
+    int8.compression = 0.25;
+    let mut sys8 = FlSystem::build(int8).unwrap();
+    sys8.run().unwrap();
+    let t32 = sys32.log.rounds[0].t_cm;
+    let t8 = sys8.log.rounds[0].t_cm;
+    assert!(
+        (t8 / t32 - 0.25).abs() < 1e-6,
+        "int8 T_cm should be exactly 1/4 of fp32: {t8} vs {t32}"
+    );
+}
+
+#[test]
+fn dataset_too_small_for_devices_errors() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg("fi-tiny-data");
+    cfg.devices = 4;
+    cfg.train_per_device = 0;
+    assert!(cfg.validate().is_err());
+}

@@ -1,0 +1,285 @@
+//! Integration tests across runtime + coordinator, against real artifacts.
+//!
+//! These need `make artifacts` to have run (the repo ships a Makefile rule;
+//! tests skip with a clear message if artifacts are absent — CI runs
+//! `make test` which builds them first).
+
+use defl::config::{DatasetKind, ExperimentConfig, Policy};
+use defl::coordinator::FlSystem;
+use defl::runtime::Runtime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+/// Small fast config for coordinator tests.
+fn tiny_cfg(name: &str, policy: Policy) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.dataset = DatasetKind::Tiny;
+    cfg.devices = 4;
+    cfg.train_per_device = 64;
+    cfg.test_size = 256;
+    cfg.max_rounds = 6;
+    cfg.eval_every = 3;
+    cfg.policy = policy;
+    cfg.seed = 7;
+    cfg.artifacts_dir = artifacts_dir().unwrap().to_string_lossy().into_owned();
+    cfg
+}
+
+#[test]
+fn golden_roundtrip_all_models() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let names: Vec<String> = rt.registry.model_names().iter().map(|s| s.to_string()).collect();
+    assert!(names.contains(&"mlp".to_string()));
+    for name in names {
+        let golden = rt.registry.model(&name).unwrap().golden.clone().unwrap();
+        let report = defl::runtime::golden::check(&mut rt, &name, &golden).unwrap();
+        assert!(report.pass, "{name}: {report:?}");
+    }
+}
+
+#[test]
+fn train_step_determinism() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let params = rt.initial_params("mlp").unwrap();
+    let spec = rt.spec("mlp").unwrap().clone();
+    let b = 16;
+    let elems = spec.height * spec.width * spec.channels;
+    let x: Vec<f32> = (0..b * elems).map(|i| (i % 17) as f32 / 17.0).collect();
+    let y: Vec<i32> = (0..b).map(|i| (i % 10) as i32).collect();
+    let o1 = rt.train_step("mlp", b, &params, &x, &y, 0.05).unwrap();
+    let o2 = rt.train_step("mlp", b, &params, &x, &y, 0.05).unwrap();
+    assert_eq!(o1.loss, o2.loss);
+    assert_eq!(o1.params.leaves, o2.params.leaves);
+}
+
+#[test]
+fn train_step_rejects_wrong_shapes() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let params = rt.initial_params("mlp").unwrap();
+    let x = vec![0f32; 10]; // wrong
+    let y = vec![0i32; 16];
+    assert!(rt.train_step("mlp", 16, &params, &x, &y, 0.05).is_err());
+}
+
+#[test]
+fn zero_lr_step_preserves_params() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let params = rt.initial_params("mlp").unwrap();
+    let spec = rt.spec("mlp").unwrap().clone();
+    let b = 16;
+    let elems = spec.height * spec.width * spec.channels;
+    let x = vec![0.3f32; b * elems];
+    let y = vec![1i32; b];
+    let out = rt.train_step("mlp", b, &params, &x, &y, 0.0).unwrap();
+    for (a, bvec) in out.params.leaves.iter().zip(&params.leaves) {
+        assert_eq!(a, bvec);
+    }
+}
+
+#[test]
+fn evaluate_counts_are_sane() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let params = rt.initial_params("mlp").unwrap();
+    let test = defl::data::synth::generate(&defl::data::synth::SynthSpec::tiny(512), 3);
+    let (loss, acc, n) = rt.evaluate("mlp", &params, &test).unwrap();
+    assert_eq!(n, 512);
+    assert!(loss > 0.0 && loss.is_finite());
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn fl_training_reduces_loss_tiny() {
+    require_artifacts!();
+    let cfg = tiny_cfg("it-loss", Policy::Fixed { batch: 16, local_rounds: 4 });
+    let mut sys = FlSystem::build(cfg).unwrap();
+    let outcome = sys.run().unwrap();
+    let first_loss = sys.log.rounds.first().unwrap().train_loss;
+    let last_loss = sys.log.rounds.last().unwrap().train_loss;
+    assert!(
+        last_loss < first_loss,
+        "loss did not decrease: {first_loss} -> {last_loss}"
+    );
+    assert_eq!(outcome.rounds, 6);
+    assert!(outcome.overall_time > 0.0);
+    // monotone virtual clock, recorded per round
+    let mut prev = 0.0;
+    for r in &sys.log.rounds {
+        assert!(r.virtual_time > prev);
+        prev = r.virtual_time;
+    }
+}
+
+#[test]
+fn fl_defl_policy_builds_and_plans() {
+    require_artifacts!();
+    let cfg = tiny_cfg("it-defl", Policy::Defl);
+    let sys = FlSystem::build(cfg).unwrap();
+    let plan = sys.resolved.plan.as_ref().expect("plan");
+    assert!(plan.batch.is_power_of_two());
+    assert!(sys.batch >= 1);
+    assert!((0.0..=1.0).contains(&plan.theta));
+    // requested batch clamps to an existing artifact batch
+    let avail = sys.runtime.train_batches("mlp").unwrap();
+    assert!(avail.contains(&sys.batch), "{:?} vs {}", avail, sys.batch);
+}
+
+#[test]
+fn fl_deterministic_same_seed() {
+    require_artifacts!();
+    let run = |seed: u64| {
+        let mut cfg = tiny_cfg("it-det", Policy::Fixed { batch: 16, local_rounds: 2 });
+        cfg.seed = seed;
+        cfg.max_rounds = 3;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        (
+            sys.log.rounds.iter().map(|r| r.train_loss).collect::<Vec<_>>(),
+            sys.log.overall_time(),
+        )
+    };
+    let (l1, t1) = run(11);
+    let (l2, t2) = run(11);
+    let (l3, _) = run(12);
+    assert_eq!(l1, l2);
+    assert_eq!(t1, t2);
+    assert_ne!(l1, l3);
+}
+
+#[test]
+fn fedavg_aggregation_weighted_by_data_size() {
+    require_artifacts!();
+    // Dirichlet partition ⇒ uneven shards; the run must still work and
+    // weights must sum correctly (checked inside federated_average).
+    let mut cfg = tiny_cfg("it-weights", Policy::Fixed { batch: 16, local_rounds: 2 });
+    cfg.partition = defl::config::PartitionKind::Dirichlet;
+    cfg.dirichlet_alpha = 0.3;
+    cfg.max_rounds = 2;
+    let mut sys = FlSystem::build(cfg).unwrap();
+    let shard_sizes: Vec<usize> = sys.devices.iter().map(|d| d.data_size()).collect();
+    assert!(shard_sizes.iter().any(|&s| s != shard_sizes[0]) || shard_sizes.len() == 1);
+    sys.run().unwrap();
+}
+
+#[test]
+fn run_log_json_written() {
+    require_artifacts!();
+    let tmp = std::env::temp_dir().join(format!("defl-it-{}.json", std::process::id()));
+    let mut cfg = tiny_cfg("it-json", Policy::Fixed { batch: 16, local_rounds: 2 });
+    cfg.max_rounds = 2;
+    cfg.out = Some(tmp.to_string_lossy().into_owned());
+    let mut sys = FlSystem::build(cfg).unwrap();
+    sys.run().unwrap();
+    let j = defl::util::json::Json::parse_file(&tmp).unwrap();
+    assert_eq!(j.get("name").unwrap().as_str(), Some("it-json"));
+    assert_eq!(j.get("rounds").unwrap().as_arr().unwrap().len(), 2);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn virtual_time_composition_matches_models() {
+    require_artifacts!();
+    let cfg = tiny_cfg("it-vt", Policy::Fixed { batch: 16, local_rounds: 3 });
+    let mut sys = FlSystem::build(cfg).unwrap();
+    sys.run().unwrap();
+    // every round: vt_delta == t_cm + V·t_cp
+    let mut prev = 0.0;
+    for r in &sys.log.rounds {
+        let delta = r.virtual_time - prev;
+        let expect = r.t_cm + r.local_rounds as f64 * r.t_cp;
+        assert!((delta - expect).abs() < 1e-9, "round {}: {delta} vs {expect}", r.round);
+        prev = r.virtual_time;
+    }
+}
+
+#[test]
+fn partial_participation_random_k() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg("it-randk", Policy::Fixed { batch: 16, local_rounds: 2 });
+    cfg.selection = defl::coordinator::Selection::RandomK(2);
+    cfg.max_rounds = 3;
+    let mut sys = FlSystem::build(cfg).unwrap();
+    let outcome = sys.run().unwrap();
+    assert_eq!(outcome.rounds, 3);
+    assert!(outcome.final_train_loss.is_finite());
+    // energy ledger must record exactly cohort-many entries per round
+    for round in &sys.energy.per_round {
+        assert_eq!(round.len(), 2);
+    }
+}
+
+#[test]
+fn fastest_k_selection_reduces_tcm() {
+    require_artifacts!();
+    let mut all = tiny_cfg("it-all", Policy::Fixed { batch: 16, local_rounds: 2 });
+    all.wireless.fast_fading = false;
+    all.max_rounds = 2;
+    let mut fast = all.clone();
+    fast.name = "it-fastk".into();
+    fast.selection = defl::coordinator::Selection::FastestK(2);
+    let mut s_all = FlSystem::build(all).unwrap();
+    s_all.run().unwrap();
+    let mut s_fast = FlSystem::build(fast).unwrap();
+    s_fast.run().unwrap();
+    // picking the best-rate cohort can only shrink the synchronous max
+    assert!(
+        s_fast.log.rounds[0].t_cm <= s_all.log.rounds[0].t_cm + 1e-12,
+        "{} vs {}",
+        s_fast.log.rounds[0].t_cm,
+        s_all.log.rounds[0].t_cm
+    );
+}
+
+#[test]
+fn energy_ledger_positive_and_split_consistent() {
+    require_artifacts!();
+    let cfg = tiny_cfg("it-energy", Policy::Fixed { batch: 16, local_rounds: 3 });
+    let mut sys = FlSystem::build(cfg).unwrap();
+    sys.run().unwrap();
+    let total = sys.energy.total();
+    let (comm, comp) = sys.energy.split();
+    assert!(total > 0.0);
+    assert!((comm + comp - total).abs() < 1e-9 * total.max(1.0));
+    assert_eq!(sys.energy.per_round.len(), sys.log.rounds.len());
+}
+
+#[test]
+fn straggler_heterogeneity_slows_rounds() {
+    require_artifacts!();
+    let mut base = tiny_cfg("it-hom", Policy::Fixed { batch: 16, local_rounds: 2 });
+    base.max_rounds = 2;
+    let mut het = base.clone();
+    het.name = "it-het".into();
+    het.fleet.heterogeneity = 0.5;
+    het.fleet.max_freq_hz = 4e9; // let jitter act both ways around 2.8GHz
+    base.fleet.max_freq_hz = 4e9;
+    let mut s1 = FlSystem::build(base).unwrap();
+    s1.run().unwrap();
+    let mut s2 = FlSystem::build(het).unwrap();
+    s2.run().unwrap();
+    // with a slow straggler, per-round compute time can only be ≥ the
+    // homogeneous fleet's (eq. 5 max) — compare t_cp directly
+    let t1 = s1.log.rounds[0].t_cp;
+    let t2 = s2.log.rounds[0].t_cp;
+    assert!(t2 >= t1 * 0.99, "het {t2} vs hom {t1}");
+}
