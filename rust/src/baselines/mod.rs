@@ -2,6 +2,12 @@
 //! per-round operating point (batch b, local rounds V) plus the plan
 //! diagnostics DEFL computed. This is where the paper's eq. (29) meets the
 //! baselines it is compared against (FedAvg, Rand.).
+//!
+//! The operating point is orthogonal to the round *schedule*: every
+//! [`crate::coordinator::RoundEngine`] (sync, deadline, async-buffered)
+//! consumes the same resolved (b, V). Note the closed form plans for the
+//! synchronous eq. (8) round; under the other engines its predicted H/𝒯
+//! are an upper-bound heuristic, not the priced schedule.
 
 use crate::config::{ExperimentConfig, Policy};
 use crate::defl_opt::{self, Plan, PlanInputs};

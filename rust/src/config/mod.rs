@@ -130,6 +130,8 @@ pub struct ExperimentConfig {
     pub c: f64,
     // [policy]
     pub policy: Policy,
+    // [engine]
+    pub engine: crate::coordinator::EngineConfig,
     // [selection]
     pub selection: crate::coordinator::Selection,
     // [run]
@@ -176,6 +178,7 @@ impl Default for ExperimentConfig {
             nu: 8.0,
             c: 1.0,
             policy: Policy::Defl,
+            engine: crate::coordinator::EngineConfig::default(),
             selection: crate::coordinator::Selection::All,
             max_rounds: 60,
             eval_every: 5,
@@ -283,6 +286,14 @@ impl ExperimentConfig {
                 }
             }
         }
+        if let Some(e) = j.get("engine") {
+            if let Some(kind) = e.get("kind").and_then(|x| x.as_str()) {
+                self.engine.kind = crate::coordinator::EngineKind::parse(kind)?;
+            }
+            get_f64(e, "deadline_s", &mut self.engine.deadline_s)?;
+            get_usize(e, "buffer_k", &mut self.engine.buffer_k)?;
+            get_f64(e, "staleness_exponent", &mut self.engine.staleness_exponent)?;
+        }
         if let Some(s) = j.get("selection") {
             let mut k = 1usize;
             get_usize(s, "k", &mut k)?;
@@ -352,6 +363,7 @@ impl ExperimentConfig {
         if let Policy::Fixed { batch, local_rounds } = self.policy {
             anyhow::ensure!(batch >= 1 && local_rounds >= 1, "fixed policy bounds");
         }
+        self.engine.validate()?;
         Ok(())
     }
 }
@@ -509,6 +521,26 @@ mod tests {
         // bare b/V against a non-fixed policy is an error, not a no-op
         let mut c = ExperimentConfig::default();
         assert!(c.set_override("policy.batch=64").is_err());
+    }
+
+    #[test]
+    fn engine_section_parses_and_validates() {
+        use crate::coordinator::EngineKind;
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.engine.kind, EngineKind::Sync);
+        c.set_override("engine.kind=deadline").unwrap();
+        c.set_override("engine.deadline_s=1.5").unwrap();
+        assert_eq!(c.engine.kind, EngineKind::Deadline);
+        assert_eq!(c.engine.deadline_s, 1.5);
+        c.set_override("engine.kind=async_buffered").unwrap();
+        c.set_override("engine.buffer_k=3").unwrap();
+        c.set_override("engine.staleness_exponent=1.0").unwrap();
+        assert_eq!(c.engine.kind, EngineKind::AsyncBuffered);
+        assert_eq!(c.engine.buffer_k, 3);
+        assert!(c.validate().is_ok());
+        assert!(c.set_override("engine.kind=psychic").is_err());
+        c.engine.deadline_s = -1.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -46,9 +46,49 @@ impl Device {
         out
     }
 
+    /// Draw and gather the next `v` mini-batches (the device-local, RNG +
+    /// memcpy half of Algorithm 1 step 3). Batch indices depend only on the
+    /// device's private RNG, never on training results, so the whole plan
+    /// can be materialised up front — and, across devices, in parallel
+    /// ([`crate::util::threadpool::parallel_map`]) — while producing the
+    /// exact same batch sequence as drawing one batch per iteration.
+    pub fn plan_batches(&mut self, batch: usize, v: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+        assert!(v >= 1, "V must be ≥ 1");
+        (0..v)
+            .map(|_| {
+                let idx = self.next_batch(batch);
+                self.data.gather(&idx)
+            })
+            .collect()
+    }
+
+    /// Execute `v` SGD iterations over a pre-gathered batch plan (the PJRT
+    /// half of Algorithm 1 step 3); returns the local model and the mean
+    /// local training loss. Associated fn: needs no `&self`, so the round
+    /// engines can run it while the device list is not borrowed.
+    pub fn train_planned(
+        rt: &mut Runtime,
+        model: &str,
+        global: &ParamSet,
+        batch: usize,
+        plan: &[(Vec<f32>, Vec<i32>)],
+        lr: f32,
+    ) -> anyhow::Result<(ParamSet, f64)> {
+        assert!(!plan.is_empty(), "V must be ≥ 1");
+        let mut params = global.clone();
+        let mut loss_acc = 0f64;
+        for (x, y) in plan {
+            let out = rt.train_step(model, batch, &params, x, y, lr)?;
+            params = out.params;
+            loss_acc += out.loss as f64;
+        }
+        Ok((params, loss_acc / plan.len() as f64))
+    }
+
     /// Algorithm 1 step 3: run `v` local mini-batch SGD iterations from the
     /// received global model; returns the local model and the mean local
-    /// training loss.
+    /// training loss. (Plan + execute; kept as the one-device convenience
+    /// path — the engines call the two halves separately.)
     pub fn local_train(
         &mut self,
         rt: &mut Runtime,
@@ -58,17 +98,8 @@ impl Device {
         v: usize,
         lr: f32,
     ) -> anyhow::Result<(ParamSet, f64)> {
-        assert!(v >= 1, "V must be ≥ 1");
-        let mut params = global.clone();
-        let mut loss_acc = 0f64;
-        for _ in 0..v {
-            let idx = self.next_batch(batch);
-            let (x, y) = self.data.gather(&idx);
-            let out = rt.train_step(model, batch, &params, &x, &y, lr)?;
-            params = out.params;
-            loss_acc += out.loss as f64;
-        }
-        Ok((params, loss_acc / v as f64))
+        let plan = self.plan_batches(batch, v);
+        Self::train_planned(rt, model, global, batch, &plan, lr)
     }
 }
 
@@ -116,6 +147,21 @@ mod tests {
     fn empty_shard_panics() {
         let ds = Arc::new(generate(&SynthSpec::tiny(8), 3));
         Device::new(0, vec![], ds, 1);
+    }
+
+    #[test]
+    fn plan_batches_matches_iterative_draws() {
+        let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
+        let mut a = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let mut b = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let plan = a.plan_batches(10, 4);
+        assert_eq!(plan.len(), 4);
+        for (x, y) in &plan {
+            let idx = b.next_batch(10);
+            let (bx, by) = ds.gather(&idx);
+            assert_eq!(*x, bx);
+            assert_eq!(*y, by);
+        }
     }
 
     #[test]

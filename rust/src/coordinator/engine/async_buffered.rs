@@ -1,0 +1,203 @@
+//! Buffered asynchronous aggregation (FedBuff-style).
+//!
+//! Instead of closing a synchronous barrier every round, the server keeps
+//! a buffer of in-flight updates and aggregates as soon as `K` of them
+//! have arrived (Nguyen et al., *Federated Learning with Buffered
+//! Asynchronous Aggregation*, AISTATS'22 — the async design point the
+//! paper's related work gestures at). Consequences for the delay model:
+//!
+//! * the virtual clock advances to the K-th *arrival*, not to the slowest
+//!   device (per-arrival pricing instead of eq. 7's per-round max);
+//! * an update computed against an old global model arrives with
+//!   staleness `s` = number of aggregations since its device pulled the
+//!   model, and is discounted by `1/(1+s)^a` on top of its FedAvg weight;
+//! * slow devices never block fast ones — they just land stale.
+//!
+//! One [`RoundEngine::round`] call = one aggregation. Devices idle after
+//! an aggregation restart from the *new* global model on the next call;
+//! devices still in flight keep their (now stale) update in the buffer.
+
+use super::{
+    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
+    RoundEngine,
+};
+use crate::coordinator::FlSystem;
+use crate::metrics::RoundRecord;
+use crate::model::{federated_average, ParamSet};
+use crate::simclock::RoundDelay;
+use std::time::Instant;
+
+/// One update travelling from a device to the server.
+struct InFlight {
+    device: usize,
+    params: ParamSet,
+    /// FedAvg weight `D_m` before staleness discounting.
+    weight: f64,
+    loss: f64,
+    /// Per-iteration compute time of the producing device (for the
+    /// round-delay decomposition).
+    t_cp: f64,
+    /// Absolute virtual time at which the update lands at the server.
+    arrival: f64,
+    /// Aggregation index at which the device pulled the global model.
+    born_agg: usize,
+}
+
+/// FedBuff-style engine: aggregate the `K` earliest-arriving updates,
+/// staleness-discounted.
+pub struct AsyncBuffered {
+    buffer_k: usize,
+    staleness_exponent: f64,
+    in_flight: Vec<InFlight>,
+    aggregations: usize,
+}
+
+impl AsyncBuffered {
+    pub fn new(buffer_k: usize, staleness_exponent: f64) -> Self {
+        assert!(buffer_k >= 1);
+        AsyncBuffered { buffer_k, staleness_exponent, in_flight: Vec::new(), aggregations: 0 }
+    }
+
+    /// `1/(1+s)^a` — FedBuff's polynomial staleness discount.
+    fn discount(&self, staleness: usize) -> f64 {
+        1.0 / (1.0 + staleness as f64).powf(self.staleness_exponent)
+    }
+}
+
+impl RoundEngine for AsyncBuffered {
+    fn kind(&self) -> EngineKind {
+        EngineKind::AsyncBuffered
+    }
+
+    fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord> {
+        let wall_start = Instant::now();
+        let round_no = sys.clock.rounds_elapsed() + 1;
+        let v = sys.local_rounds;
+        let now = sys.clock.now();
+        let bits_per_sample = sys.test_set.bits_per_sample();
+
+        // 1. every idle cohort device pulls the current global model and
+        //    starts V local iterations (devices still in flight keep
+        //    flying; their updates only grow staler).
+        let cohort = pick_cohort(sys);
+        let starters: Vec<usize> = cohort
+            .iter()
+            .copied()
+            .filter(|&i| self.in_flight.iter().all(|f| f.device != i))
+            .collect();
+        let mut lost = 0usize;
+        // Spent-time stats over starters, for the blackout fallback below.
+        let mut started_r_max = 0f64;
+        let mut started_tcp_max = 0f64;
+        let mut started_loss = f64::NAN;
+        if !starters.is_empty() {
+            let updates = local_computation(sys, &starters)?;
+            let up = uplink_phase(sys)?;
+            started_loss = weighted_loss(&updates);
+            for u in updates {
+                let t_cp = sys.fleet.specs[u.device].minibatch_time(bits_per_sample, sys.batch);
+                started_r_max = started_r_max.max(v as f64 * t_cp + up.times[u.device]);
+                started_tcp_max = started_tcp_max.max(t_cp);
+                if !up.delivered[u.device] {
+                    lost += 1; // outage ate the update; device retries next call
+                    continue;
+                }
+                self.in_flight.push(InFlight {
+                    device: u.device,
+                    params: u.params,
+                    weight: u.weight,
+                    loss: u.loss,
+                    t_cp,
+                    arrival: now + v as f64 * t_cp + up.times[u.device],
+                    born_agg: self.aggregations,
+                });
+            }
+            push_energy(sys, &starters, &up.times, bits_per_sample);
+        } else {
+            sys.energy.push_round(Vec::new());
+        }
+
+        // Blackout corner: every update this round was lost to outage and
+        // nothing was buffered. Burn the wasted airtime, keep the global
+        // model (mirrors SyncFedAvg's total-outage behaviour).
+        if self.in_flight.is_empty() {
+            crate::log_warn!(
+                "round {round_no}: every update lost to outage — global model kept"
+            );
+            let delay = RoundDelay::from_total(started_r_max, started_tcp_max, v);
+            let (t_cm, t_cp) = (delay.t_cm, delay.t_cp);
+            let vt = sys.clock.advance(delay);
+            return Ok(RoundRecord {
+                round: round_no,
+                virtual_time: vt,
+                t_cm,
+                t_cp,
+                local_rounds: v,
+                train_loss: started_loss,
+                test_loss: f64::NAN,
+                test_accuracy: f64::NAN,
+                wall_seconds: wall_start.elapsed().as_secs_f64(),
+                participants: 0,
+                dropped: lost,
+                mean_staleness: 0.0,
+            });
+        }
+
+        // 2. wait for the K earliest arrivals (deterministic tie-break on
+        //    device id), pop them from the buffer.
+        self.in_flight
+            .sort_by(|a, b| a.arrival.total_cmp(&b.arrival).then(a.device.cmp(&b.device)));
+        let k = self.buffer_k.min(self.in_flight.len());
+        let taken: Vec<InFlight> = self.in_flight.drain(..k).collect();
+
+        // 3. the clock advances to the last taken arrival (updates already
+        //    buffered before `now` cost nothing extra).
+        let arrived_at = taken.iter().map(|f| f.arrival).fold(0.0, f64::max);
+        let delta = (arrived_at - now).max(0.0);
+
+        // 4. staleness-discounted FedAvg over the buffer.
+        let staleness: Vec<usize> =
+            taken.iter().map(|f| self.aggregations - f.born_agg).collect();
+        let agg_weights: Vec<f64> = taken
+            .iter()
+            .zip(&staleness)
+            .map(|(f, &s)| f.weight * self.discount(s))
+            .collect();
+        let agg_refs: Vec<&ParamSet> = taken.iter().map(|f| &f.params).collect();
+        sys.global = federated_average(&agg_refs, &agg_weights);
+        self.aggregations += 1;
+
+        // 5. price the step on the simclock: t_cm + V·t_cp == delta with
+        //    t_cp ≤ the slowest taken device's per-iteration time (compute
+        //    share is attributable only up to what was actually computed
+        //    inside this step's window).
+        let t_cp_max = taken.iter().map(|f| f.t_cp).fold(0.0, f64::max);
+        let delay = RoundDelay::from_total(delta, t_cp_max, v);
+        let (t_cm, t_cp) = (delay.t_cm, delay.t_cp);
+        let vt = sys.clock.advance(delay);
+
+        // The server-observed training loss: over this aggregation's buffer.
+        let mut loss_acc = 0f64;
+        let mut wsum = 0f64;
+        for f in &taken {
+            loss_acc += f.loss * f.weight;
+            wsum += f.weight;
+        }
+        let mean_staleness = staleness.iter().sum::<usize>() as f64 / staleness.len() as f64;
+
+        Ok(RoundRecord {
+            round: round_no,
+            virtual_time: vt,
+            t_cm,
+            t_cp,
+            local_rounds: v,
+            train_loss: loss_acc / wsum,
+            test_loss: f64::NAN,
+            test_accuracy: f64::NAN,
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+            participants: taken.len(),
+            dropped: lost,
+            mean_staleness,
+        })
+    }
+}

@@ -1,0 +1,110 @@
+//! Deadline-bounded synchronous rounds — straggler dropping.
+//!
+//! The paper motivates DEFL with *unreliable network connections*, yet its
+//! Algorithm 1 waits for the slowest device every round. `DeadlineSync`
+//! models the standard production answer (cf. Lin et al. arXiv:2008.09323,
+//! Nickel et al. arXiv:2112.13926): the server closes the round at a fixed
+//! deadline `T_dl`. A device whose end-to-end round time
+//! `V·T_cp^m + T_up^m` exceeds `T_dl` is dropped from this round's
+//! aggregation, and FedAvg (eq. 2) reweights over the survivors. The round
+//! costs `min(T_dl, max_m V·T_cp^m + T_up^m)` of virtual time — with a
+//! straggling fleet that is strictly less than the synchronous max.
+//!
+//! With a generous deadline and a homogeneous fleet every device survives
+//! and the engine degenerates to [`super::SyncFedAvg`]'s schedule (pinned
+//! by `rust/tests/integration.rs::engine_parity_deadline_generous`).
+
+use super::{
+    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
+    RoundEngine,
+};
+use crate::coordinator::FlSystem;
+use crate::metrics::RoundRecord;
+use crate::model::{federated_average, ParamSet};
+use crate::simclock::RoundDelay;
+use std::time::Instant;
+
+/// Synchronous rounds with a hard per-round deadline.
+pub struct DeadlineSync {
+    /// The per-round deadline `T_dl` in seconds (resolved — never 0).
+    pub deadline_s: f64,
+}
+
+impl RoundEngine for DeadlineSync {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Deadline
+    }
+
+    fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord> {
+        let wall_start = Instant::now();
+        let round_no = sys.clock.rounds_elapsed() + 1;
+        let v = sys.local_rounds;
+
+        // Phases 0–2 mirror SyncFedAvg exactly (same RNG stream), so the
+        // two engines are comparable draw-for-draw on a shared seed.
+        let cohort = pick_cohort(sys);
+        let updates = local_computation(sys, &cohort)?;
+        let train_loss = weighted_loss(&updates);
+        let up = uplink_phase(sys)?;
+
+        // Per-device end-to-end round time: V·T_cp^m + T_up^m. (The sync
+        // engine prices max(T_up) + V·max(T_cp); per-device totals are what
+        // a deadline actually cuts.)
+        let bits_per_sample = sys.test_set.bits_per_sample();
+        let tcp_of = |i: usize| sys.fleet.specs[i].minibatch_time(bits_per_sample, sys.batch);
+        let mut slowest = 0f64;
+        let mut any_late = false;
+        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(updates.len());
+        let mut agg_weights: Vec<f64> = Vec::with_capacity(updates.len());
+        let mut t_cp_survivors = 0f64;
+        for u in &updates {
+            let t_cp_m = tcp_of(u.device);
+            let r_m = v as f64 * t_cp_m + up.times[u.device];
+            slowest = slowest.max(r_m);
+            if r_m > self.deadline_s {
+                any_late = true;
+                continue; // dropped: the server has already closed the round
+            }
+            if up.delivered[u.device] {
+                agg_refs.push(&u.params);
+                agg_weights.push(u.weight);
+                t_cp_survivors = t_cp_survivors.max(t_cp_m);
+            }
+        }
+        let participants = agg_refs.len();
+        if agg_refs.is_empty() {
+            crate::log_warn!(
+                "round {round_no}: no update beat the deadline ({:.3}s) — global model kept",
+                self.deadline_s
+            );
+        } else {
+            sys.global = federated_average(&agg_refs, &agg_weights);
+        }
+
+        // The server waits until every cohort device is in, or until the
+        // deadline fires — whichever comes first. Compute share = the
+        // slowest *survivor*'s iterations; the remainder is time spent
+        // waiting on the air interface / the deadline.
+        let round_wall = if any_late { self.deadline_s.min(slowest) } else { slowest };
+        let delay = RoundDelay::from_total(round_wall, t_cp_survivors, v);
+        let (t_cm, t_cp) = (delay.t_cm, delay.t_cp);
+        let vt = sys.clock.advance(delay);
+
+        push_energy(sys, &cohort, &up.times, bits_per_sample);
+
+        Ok(RoundRecord {
+            round: round_no,
+            virtual_time: vt,
+            t_cm,
+            t_cp,
+            local_rounds: v,
+            train_loss,
+            test_loss: f64::NAN,
+            test_accuracy: f64::NAN,
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+            participants,
+            dropped: cohort.len() - participants,
+            mean_staleness: 0.0,
+        })
+    }
+}

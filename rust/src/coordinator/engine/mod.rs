@@ -1,0 +1,325 @@
+//! Pluggable round engines — how one "round" of FL is scheduled and priced.
+//!
+//! The paper's Algorithm 1 is a *synchronous* loop: every round waits for
+//! the slowest device's compute (eq. 5) and uplink (eq. 7). Its own
+//! motivation — unreliable links, heterogeneous edge devices — is exactly
+//! the regime where that schedule is not the only sensible one (Lin et al.
+//! arXiv:2008.09323, Nickel et al. arXiv:2112.13926). [`RoundEngine`]
+//! makes the schedule a strategy:
+//!
+//! * [`SyncFedAvg`] — the paper's loop, bit-identical to the pre-engine
+//!   coordinator (the parity tests pin this).
+//! * [`DeadlineSync`] — synchronous with a per-round deadline `T_dl`;
+//!   devices whose `V·T_cp + T_up` exceeds it are dropped and FedAvg
+//!   reweights over the survivors.
+//! * [`AsyncBuffered`] — FedBuff-style buffered asynchrony: the server
+//!   aggregates as soon as `K` updates arrive, discounting stale updates;
+//!   the virtual clock advances per-arrival, not per-round-max.
+//!
+//! All engines share the same substrate phases (selection, local
+//! computation, uplink draw, energy accounting) so their delay numbers are
+//! comparable. The local-computation phase fans its per-device mini-batch
+//! planning (RNG + gather) out over [`parallel_map`]; PJRT execution stays
+//! on the calling thread because the PJRT client handle is not `Sync`
+//! (DESIGN.md §5). The simclock remains the single owner of virtual time:
+//! every engine prices its round as one [`crate::simclock::RoundDelay`]
+//! advance.
+
+pub mod async_buffered;
+pub mod deadline;
+pub mod sync;
+
+pub use async_buffered::AsyncBuffered;
+pub use deadline::DeadlineSync;
+pub use sync::SyncFedAvg;
+
+use crate::coordinator::{Device, FlSystem};
+use crate::metrics::RoundRecord;
+use crate::model::ParamSet;
+use crate::util::threadpool::parallel_map;
+use crate::wireless::dbm_to_watt;
+
+/// Which round engine drives the run (`[engine] kind` in the config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Sync,
+    Deadline,
+    AsyncBuffered,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "sync" | "fedavg" => Ok(EngineKind::Sync),
+            "deadline" | "deadline_sync" => Ok(EngineKind::Deadline),
+            "async_buffered" | "async" | "fedbuff" => Ok(EngineKind::AsyncBuffered),
+            other => anyhow::bail!("unknown engine {other:?} (sync|deadline|async_buffered)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Sync => "sync",
+            EngineKind::Deadline => "deadline",
+            EngineKind::AsyncBuffered => "async_buffered",
+        }
+    }
+}
+
+/// `[engine]` configuration section.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub kind: EngineKind,
+    /// DeadlineSync: per-round deadline `T_dl` in seconds. 0 = auto
+    /// (2× the expected synchronous round time, so only genuine
+    /// stragglers/deep fades get dropped).
+    pub deadline_s: f64,
+    /// AsyncBuffered: aggregate once this many updates are buffered.
+    /// 0 = auto (⌈M/2⌉).
+    pub buffer_k: usize,
+    /// AsyncBuffered: staleness discount exponent `a` in
+    /// `w ∝ D_m / (1+s)^a` (FedBuff uses a = 0.5).
+    pub staleness_exponent: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            kind: EngineKind::Sync,
+            deadline_s: 0.0,
+            buffer_k: 0,
+            staleness_exponent: 0.5,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.deadline_s >= 0.0, "engine.deadline_s must be ≥ 0");
+        anyhow::ensure!(
+            self.staleness_exponent >= 0.0,
+            "engine.staleness_exponent must be ≥ 0"
+        );
+        Ok(())
+    }
+}
+
+/// The strategy interface: one call = one aggregation step. Engines own
+/// cross-round scheduling state (e.g. AsyncBuffered's in-flight buffer);
+/// everything else (model, devices, channel, clock, log) lives in
+/// [`FlSystem`] and is threaded through by reference.
+pub trait RoundEngine {
+    fn kind(&self) -> EngineKind;
+
+    /// Execute one aggregation step: schedule device work, aggregate, and
+    /// advance the virtual clock by exactly this step's delay.
+    fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord>;
+}
+
+/// Build the engine a config asks for. `devices` resolves `buffer_k`'s
+/// auto value; `expected_round_s` (the planner's `T_cm + V·T_cp`)
+/// resolves the deadline auto value.
+pub fn build(cfg: &EngineConfig, devices: usize, expected_round_s: f64) -> Box<dyn RoundEngine> {
+    match cfg.kind {
+        EngineKind::Sync => Box::new(SyncFedAvg),
+        EngineKind::Deadline => {
+            let deadline_s = if cfg.deadline_s > 0.0 {
+                cfg.deadline_s
+            } else {
+                2.0 * expected_round_s
+            };
+            Box::new(DeadlineSync { deadline_s })
+        }
+        EngineKind::AsyncBuffered => {
+            let buffer_k = if cfg.buffer_k > 0 { cfg.buffer_k } else { (devices + 1) / 2 };
+            Box::new(AsyncBuffered::new(buffer_k.max(1), cfg.staleness_exponent))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared substrate phases
+// ---------------------------------------------------------------------------
+
+/// One device's finished local update.
+pub(crate) struct LocalUpdate {
+    pub device: usize,
+    pub params: ParamSet,
+    /// FedAvg weight `D_m` (eq. 2).
+    pub weight: f64,
+    /// Mean local training loss over the V iterations.
+    pub loss: f64,
+}
+
+/// This round's uplink draw for the whole fleet.
+pub(crate) struct UplinkDraw {
+    /// Per-device time spent transmitting (including failed retries).
+    pub times: Vec<f64>,
+    /// Whether the update actually arrived (outage model).
+    pub delivered: Vec<bool>,
+}
+
+/// Client selection (paper: full participation = `Selection::All`).
+pub(crate) fn pick_cohort(sys: &mut FlSystem) -> Vec<usize> {
+    let mean_gains: Vec<f64> = sys.channel.links.iter().map(|l| l.mean_gain()).collect();
+    let mean_rates = sys.channel.rates(&mean_gains);
+    sys.selector.pick(sys.devices.len(), &mean_rates)
+}
+
+/// Local computation over a cohort (Algorithm 1 step 3). Mini-batch
+/// planning (per-device RNG + gather — pure CPU) fans out over
+/// `cfg.threads` via [`parallel_map`]; the PJRT train steps then execute
+/// on the calling thread in cohort order, so results are bit-identical to
+/// the sequential path regardless of thread count.
+pub(crate) fn local_computation(
+    sys: &mut FlSystem,
+    cohort: &[usize],
+) -> anyhow::Result<Vec<LocalUpdate>> {
+    let (batch, v, threads) = (sys.batch, sys.local_rounds, sys.cfg.threads);
+    let plans = {
+        // Disjoint &mut Device in cohort order (cohort is sorted+deduped,
+        // so filtering iter_mut visits exactly the cohort, in order).
+        let refs: Vec<&mut Device> = sys
+            .devices
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| cohort.binary_search(i).is_ok())
+            .map(|(_, dev)| dev)
+            .collect();
+        debug_assert_eq!(refs.len(), cohort.len(), "cohort index out of range");
+        parallel_map(refs, threads, |dev| dev.plan_batches(batch, v))
+    };
+    let mut out = Vec::with_capacity(cohort.len());
+    for (pos, &di) in cohort.iter().enumerate() {
+        let (params, loss) = Device::train_planned(
+            &mut sys.runtime,
+            &sys.model,
+            &sys.global,
+            batch,
+            &plans[pos],
+            sys.cfg.lr,
+        )?;
+        out.push(LocalUpdate {
+            device: di,
+            params,
+            weight: sys.devices[di].data_size() as f64,
+            loss,
+        });
+    }
+    Ok(out)
+}
+
+/// Data-size-weighted mean training loss over a set of updates (what the
+/// seed coordinator reported; kept as one shared fold so every engine
+/// sums in the same order).
+pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
+    let mut loss_acc = 0f64;
+    let mut total = 0f64;
+    for u in updates {
+        loss_acc += u.loss * u.weight;
+        total += u.weight;
+    }
+    if total > 0.0 {
+        loss_acc / total
+    } else {
+        f64::NAN
+    }
+}
+
+/// Wireless uplink of each local update (eq. 6/7), optionally over an
+/// unreliable channel with retransmissions. Times are drawn for the whole
+/// fleet; engines restrict maxima/filters to their own cohorts.
+pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
+    let spec_bits = sys.runtime.spec(&sys.model)?.update_bits() * sys.cfg.compression;
+    if sys.cfg.outage_prob > 0.0 {
+        let (times, _, delivered) =
+            sys.channel
+                .round_with_outage(spec_bits, sys.cfg.outage_prob, sys.cfg.max_retries);
+        Ok(UplinkDraw { times, delivered })
+    } else {
+        let (times, _) = sys.channel.round(spec_bits);
+        let n = times.len();
+        Ok(UplinkDraw { times, delivered: vec![true; n] })
+    }
+}
+
+/// Energy ledger entry for every device that worked this round
+/// (extension; pure accounting).
+pub(crate) fn push_energy(
+    sys: &mut FlSystem,
+    cohort: &[usize],
+    times: &[f64],
+    bits_per_sample: f64,
+) {
+    let tx_w = dbm_to_watt(sys.cfg.wireless.tx_power_dbm);
+    let recs: Vec<crate::metrics::EnergyRecord> = cohort
+        .iter()
+        .map(|&i| {
+            sys.energy_model.round(
+                tx_w,
+                times[i],
+                sys.fleet.specs[i].freq_hz,
+                sys.fleet.specs[i].cycles_per_bit,
+                bits_per_sample,
+                sys.batch,
+                sys.local_rounds,
+            )
+        })
+        .collect();
+    sys.energy.push_round(recs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_kinds_and_aliases() {
+        assert_eq!(EngineKind::parse("sync").unwrap(), EngineKind::Sync);
+        assert_eq!(EngineKind::parse("deadline").unwrap(), EngineKind::Deadline);
+        assert_eq!(EngineKind::parse("async_buffered").unwrap(), EngineKind::AsyncBuffered);
+        assert_eq!(EngineKind::parse("fedbuff").unwrap(), EngineKind::AsyncBuffered);
+        assert!(EngineKind::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for k in [EngineKind::Sync, EngineKind::Deadline, EngineKind::AsyncBuffered] {
+            assert_eq!(EngineKind::parse(k.label()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn config_validates_and_defaults_to_sync() {
+        let c = EngineConfig::default();
+        assert_eq!(c.kind, EngineKind::Sync);
+        assert!(c.validate().is_ok());
+        let mut bad = EngineConfig::default();
+        bad.deadline_s = -1.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn build_resolves_auto_values() {
+        let mut c = EngineConfig::default();
+        c.kind = EngineKind::Deadline;
+        let e = build(&c, 10, 3.0);
+        assert_eq!(e.kind(), EngineKind::Deadline);
+        c.kind = EngineKind::AsyncBuffered;
+        let e = build(&c, 9, 3.0);
+        assert_eq!(e.kind(), EngineKind::AsyncBuffered);
+    }
+
+    #[test]
+    fn weighted_loss_matches_hand_fold() {
+        let mk = |w: f64, l: f64| LocalUpdate {
+            device: 0,
+            params: ParamSet { leaves: vec![] },
+            weight: w,
+            loss: l,
+        };
+        let ups = vec![mk(1.0, 2.0), mk(3.0, 4.0)];
+        assert!((weighted_loss(&ups) - (2.0 + 12.0) / 4.0).abs() < 1e-12);
+        assert!(weighted_loss(&[]).is_nan());
+    }
+}

@@ -1,0 +1,86 @@
+//! The paper's synchronous FedAvg round (Algorithm 1) as a [`RoundEngine`].
+//!
+//! This is the seed coordinator's round loop, extracted verbatim: the same
+//! phase order, the same RNG stream consumption, the same floating-point
+//! fold order — `rust/tests/integration.rs::engine_parity_*` pins that a
+//! fixed-seed run reproduces the pre-refactor `RunLog` exactly.
+
+use super::{
+    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
+    RoundEngine,
+};
+use crate::coordinator::FlSystem;
+use crate::metrics::RoundRecord;
+use crate::model::{federated_average, ParamSet};
+use crate::simclock::RoundDelay;
+use std::time::Instant;
+
+/// Synchronous FedAvg: every round waits for the slowest cohort device
+/// (eq. 5/7) and aggregates everything that arrived (eq. 2).
+pub struct SyncFedAvg;
+
+impl RoundEngine for SyncFedAvg {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sync
+    }
+
+    fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord> {
+        let wall_start = Instant::now();
+        let round_no = sys.clock.rounds_elapsed() + 1;
+
+        // 0. client selection (paper: full participation = Selection::All).
+        let cohort = pick_cohort(sys);
+
+        // 1. local computation on the cohort (paper: parallel; the
+        //    synchronous max is what the virtual clock prices).
+        let updates = local_computation(sys, &cohort)?;
+        let train_loss = weighted_loss(&updates);
+
+        // 2. wireless uplink (eq. 6/7); the synchronous max runs over the
+        //    cohort only.
+        let up = uplink_phase(sys)?;
+        let t_cm = cohort.iter().map(|&i| up.times[i]).fold(0.0, f64::max);
+
+        // 3. aggregation (eq. 2) over cohort updates that actually arrived.
+        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(updates.len());
+        let mut agg_weights: Vec<f64> = Vec::with_capacity(updates.len());
+        for u in &updates {
+            if up.delivered[u.device] {
+                agg_refs.push(&u.params);
+                agg_weights.push(u.weight);
+            }
+        }
+        let participants = agg_refs.len();
+        if agg_refs.is_empty() {
+            crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
+        } else {
+            sys.global = federated_average(&agg_refs, &agg_weights);
+        }
+
+        // 4. virtual time (eq. 8), cohort-restricted eq. (5). Train/test
+        //    sets share dims, so the test set's bits/sample prices eq. (4).
+        let bits_per_sample = sys.test_set.bits_per_sample();
+        let t_cp = sys.fleet.round_time_of(&cohort, bits_per_sample, sys.batch);
+        let vt = sys
+            .clock
+            .advance(RoundDelay { t_cm, t_cp, local_rounds: sys.local_rounds });
+
+        // 5. energy ledger (extension; pure accounting).
+        push_energy(sys, &cohort, &up.times, bits_per_sample);
+
+        Ok(RoundRecord {
+            round: round_no,
+            virtual_time: vt,
+            t_cm,
+            t_cp,
+            local_rounds: sys.local_rounds,
+            train_loss,
+            test_loss: f64::NAN,
+            test_accuracy: f64::NAN,
+            wall_seconds: wall_start.elapsed().as_secs_f64(),
+            participants,
+            dropped: cohort.len() - participants,
+            mean_staleness: 0.0,
+        })
+    }
+}

@@ -1,36 +1,43 @@
 //! The FL coordinator — Algorithm 1 (DEFL) end to end.
 //!
 //! Owns the parameter server, the device fleet, the wireless and compute
-//! delay models, the virtual clock, and the metrics log. Each synchronous
-//! round performs:
+//! delay models, the virtual clock, and the metrics log. *How* a round is
+//! scheduled and priced is delegated to a pluggable [`RoundEngine`]
+//! ([`engine`]): the paper's synchronous loop ([`engine::SyncFedAvg`]),
+//! deadline-bounded straggler dropping ([`engine::DeadlineSync`]), or
+//! FedBuff-style buffered asynchrony ([`engine::AsyncBuffered`]). Every
+//! engine composes the same substrate phases:
 //!
-//! 1. **Local computation** — every device runs `V` mini-batch SGD
-//!    iterations from the global model (real PJRT execution of the L2/L1
-//!    artifact).
-//! 2. **Wireless communication** — the channel draws this round's gains;
-//!    the round's `T_cm` is the slowest uplink (eq. 7).
+//! 1. **Local computation** — each cohort device runs `V` mini-batch SGD
+//!    iterations from its pulled global model (real PJRT execution of the
+//!    L2/L1 artifact; batch planning fans out over the thread pool).
+//! 2. **Wireless communication** — the channel draws this round's gains
+//!    and per-device uplink times (eq. 6).
 //! 3. **Aggregation & broadcast** — FedAvg weighted by `D_m` (eq. 2);
-//!    the virtual clock advances by `T_cm + V·T_cp` (eq. 8).
+//!    the virtual clock advances by the engine's round delay (eq. 8 for
+//!    the synchronous engines, per-arrival for the async one).
 //!
 //! The operating point (b, V) comes from [`crate::baselines::resolve`] —
 //! DEFL's closed form or one of the paper's baselines.
 
 pub mod device;
+pub mod engine;
 pub mod selection;
 
 pub use device::Device;
+pub use engine::{EngineConfig, EngineKind, RoundEngine};
 pub use selection::{Selection, Selector};
 
 use crate::baselines::{resolve, Resolved};
 use crate::compute::gpu::GpuFleet;
 use crate::config::ExperimentConfig;
 use crate::data::{self, synth, Dataset};
-use crate::metrics::{EnergyLedger, EnergyModel, EnergyRecord, RoundRecord, RunLog};
-use crate::model::{federated_average, ParamSet};
+use crate::metrics::{EnergyLedger, EnergyModel, RoundRecord, RunLog};
+use crate::model::ParamSet;
 use crate::runtime::Runtime;
-use crate::simclock::{RoundDelay, SimClock};
+use crate::simclock::SimClock;
 use crate::util::json::Json;
-use crate::wireless::{dbm_to_watt, Channel};
+use crate::wireless::Channel;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -53,6 +60,9 @@ pub struct FlSystem {
     pub batch: usize,
     pub local_rounds: usize,
     pub resolved: Resolved,
+    /// The round engine (`Option` only so [`FlSystem::round`] can lend
+    /// `self` to it mutably; always `Some` between calls).
+    engine: Option<Box<dyn RoundEngine>>,
 }
 
 /// Outcome snapshot of a completed run.
@@ -148,7 +158,16 @@ impl FlSystem {
         runtime.preload(&model, &[batch])?;
         let global = runtime.initial_params(&model)?;
 
+        // --- round engine ---------------------------------------------
+        // Auto knobs (deadline) are anchored to the planner's expected
+        // synchronous round time: T_cm·compression + V·T_cp(b).
+        let bits_per_sample = train.bits_per_sample();
+        let expected_round_s = t_cm * cfg.compression
+            + local_rounds as f64 * fleet.round_time(bits_per_sample, batch);
+        let engine = engine::build(&cfg.engine, cfg.devices, expected_round_s);
+
         let mut log = RunLog::new(&cfg.name);
+        log.set_meta("engine", Json::str(engine.kind().label()));
         log.set_meta("policy", Json::str(cfg.policy.label()));
         log.set_meta("batch", Json::Num(batch as f64));
         log.set_meta("local_rounds", Json::Num(local_rounds as f64));
@@ -187,109 +206,23 @@ impl FlSystem {
             batch,
             local_rounds,
             resolved,
+            engine: Some(engine),
         })
     }
 
-    /// Execute one synchronous communication round. Returns the record.
+    /// The active round engine's kind.
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine.as_ref().expect("engine present between rounds").kind()
+    }
+
+    /// Execute one aggregation step of the configured [`RoundEngine`]
+    /// (one synchronous round for the sync engines, one buffer flush for
+    /// the async one). Returns the record.
     pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
-        let wall_start = Instant::now();
-        let round_no = self.clock.rounds_elapsed() + 1;
-
-        // 0. client selection (paper: full participation = Selection::All).
-        let mean_gains: Vec<f64> = self.channel.links.iter().map(|l| l.mean_gain()).collect();
-        let mean_rates = self.channel.rates(&mean_gains);
-        let cohort = self.selector.pick(self.devices.len(), &mean_rates);
-
-        // 1. local computation on the cohort (paper: parallel; the
-        //    synchronous max is what the virtual clock prices).
-        let mut locals: Vec<ParamSet> = Vec::with_capacity(cohort.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(cohort.len());
-        let mut loss_acc = 0f64;
-        for &di in &cohort {
-            let dev = &mut self.devices[di];
-            let (params, loss) = dev.local_train(
-                &mut self.runtime,
-                &self.model,
-                &self.global,
-                self.batch,
-                self.local_rounds,
-                self.cfg.lr,
-            )?;
-            loss_acc += loss * dev.data_size() as f64;
-            weights.push(dev.data_size() as f64);
-            locals.push(params);
-        }
-        let total_weight: f64 = weights.iter().sum();
-        let train_loss = loss_acc / total_weight;
-
-        // 2. wireless uplink of each local update (eq. 6/7), optionally
-        //    over an unreliable channel with retransmissions. Times are
-        //    drawn for the whole fleet; the synchronous max runs over the
-        //    cohort only.
-        let spec_bits = self.runtime.spec(&self.model)?.update_bits() * self.cfg.compression;
-        let (times, delivered_all) = if self.cfg.outage_prob > 0.0 {
-            let (times, _, d) =
-                self.channel
-                    .round_with_outage(spec_bits, self.cfg.outage_prob, self.cfg.max_retries);
-            (times, d)
-        } else {
-            let (times, _) = self.channel.round(spec_bits);
-            let n = times.len();
-            (times, vec![true; n])
-        };
-        let t_cm = cohort.iter().map(|&i| times[i]).fold(0.0, f64::max);
-
-        // 3. aggregation (eq. 2) over cohort updates that actually arrived.
-        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(locals.len());
-        let mut agg_weights: Vec<f64> = Vec::with_capacity(locals.len());
-        for (pos, &di) in cohort.iter().enumerate() {
-            if delivered_all[di] {
-                agg_refs.push(&locals[pos]);
-                agg_weights.push(weights[pos]);
-            }
-        }
-        if agg_refs.is_empty() {
-            crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
-        } else {
-            self.global = federated_average(&agg_refs, &agg_weights);
-        }
-
-        // 4. virtual time (eq. 8), cohort-restricted eq. (5). Train/test
-        //    sets share dims, so the test set's bits/sample prices eq. (4).
-        let bits_per_sample = self.test_set.bits_per_sample();
-        let t_cp = self.fleet.round_time_of(&cohort, bits_per_sample, self.batch);
-        let vt = self.clock.advance(RoundDelay { t_cm, t_cp, local_rounds: self.local_rounds });
-
-        // 5. energy ledger (extension; pure accounting).
-        let tx_w = dbm_to_watt(self.cfg.wireless.tx_power_dbm);
-        let energy_round: Vec<EnergyRecord> = cohort
-            .iter()
-            .map(|&i| {
-                self.energy_model.round(
-                    tx_w,
-                    times[i],
-                    self.fleet.specs[i].freq_hz,
-                    self.fleet.specs[i].cycles_per_bit,
-                    bits_per_sample,
-                    self.batch,
-                    self.local_rounds,
-                )
-            })
-            .collect();
-        self.energy.push_round(energy_round);
-
-        let record = RoundRecord {
-            round: round_no,
-            virtual_time: vt,
-            t_cm,
-            t_cp,
-            local_rounds: self.local_rounds,
-            train_loss,
-            test_loss: f64::NAN,
-            test_accuracy: f64::NAN,
-            wall_seconds: wall_start.elapsed().as_secs_f64(),
-        };
-        Ok(record)
+        let mut engine = self.engine.take().expect("engine present between rounds");
+        let result = engine.round(self);
+        self.engine = Some(engine);
+        result
     }
 
     /// Evaluate the global model on the held-out set.

@@ -1,5 +1,7 @@
 //! Ablation: the paper's closed-form KKT point (eq. 29) vs an exact
-//! discrete search over the same feasible set (DESIGN.md §6).
+//! discrete search over the same feasible set, plus the round-engine
+//! comparison (sync vs deadline vs async-buffered on one straggling
+//! fleet) — DESIGN.md §6, EXPERIMENTS.md §ablation.
 //!
 //! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
 //! point of the relaxed objective (18); the exact search improves the
@@ -8,10 +10,10 @@
 //! (b*≈32, θ*≈0.15 at the paper's operating point) with O(1) cost.
 
 use super::{write_result, ExpOpts};
-use crate::config::ExperimentConfig;
-use crate::coordinator::FlSystem;
+use crate::config::{DatasetKind, ExperimentConfig, Policy};
+use crate::coordinator::{EngineKind, FlSystem};
 use crate::defl_opt::{self, PlanInputs};
-use crate::metrics::Table;
+use crate::metrics::{RunLog, Table};
 use crate::util::json::Json;
 
 /// Batch caps to study (the practical on-device memory/generalization
@@ -85,13 +87,101 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     }
     println!("Ablation — eq. (29) closed form vs exact discrete search");
     println!("{}", table.render());
+
+    let (engine_table, engine_rows, deadline_s) = engine_sweep(opts)?;
+    println!("Ablation — round engines under a straggling fleet (deadline = {deadline_s:.3}s)");
+    println!("{}", engine_table.render());
+
     let doc = Json::obj(vec![
         ("figure", Json::str("ablation")),
         ("t_cm", Json::Num(t_cm)),
         ("t_cp_per_sample", Json::Num(t_cps)),
         ("series", Json::Arr(rows)),
+        ("engine_deadline_s", Json::Num(deadline_s)),
+        ("engines", Json::Arr(engine_rows)),
     ]);
     let path = write_result(opts, "ablation", &doc)?;
     println!("wrote {path}");
     Ok(doc)
+}
+
+/// The straggler scenario the engines differ on: a heterogeneous fleet
+/// (DVFS jitter, cap lifted so it shows) under the default fading channel.
+fn engine_cfg(opts: &ExpOpts, kind: EngineKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = format!("ablation-engine-{}", kind.label());
+    cfg.dataset = DatasetKind::Tiny;
+    cfg.devices = 6;
+    cfg.train_per_device = 96;
+    cfg.test_size = 256;
+    cfg.policy = Policy::Fixed { batch: 16, local_rounds: 4 };
+    cfg.max_rounds = 10;
+    cfg.fleet.heterogeneity = 0.35;
+    cfg.fleet.max_freq_hz = 4e9;
+    cfg.engine.kind = kind;
+    opts.apply(&mut cfg);
+    cfg.eval_every = cfg.max_rounds; // evaluate once, at the end
+    cfg
+}
+
+/// Same seed, same scenario, three schedules. The deadline is set to 90%
+/// of the sync engine's median round time, so the straggling tail is what
+/// gets cut — the per-engine total-delay numbers are the deliverable.
+fn engine_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
+    let mut table = Table::new(&[
+        "engine", "rounds", "total 𝒯 (s)", "final loss", "best acc", "mean part.", "dropped",
+        "staleness",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+
+    let record = |table: &mut Table, rows: &mut Vec<Json>, kind: EngineKind, log: &RunLog| {
+        let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
+        table.row(&[
+            kind.label().into(),
+            log.rounds.len().to_string(),
+            format!("{:.2}", log.overall_time()),
+            format!("{final_loss:.4}"),
+            format!("{:.4}", log.best_accuracy()),
+            format!("{:.2}", log.mean_participation()),
+            log.total_dropped().to_string(),
+            format!("{:.2}", log.mean_staleness()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("engine", Json::str(kind.label())),
+            ("rounds", Json::Num(log.rounds.len() as f64)),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("final_train_loss", Json::Num(final_loss)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+            ("mean_participation", Json::Num(log.mean_participation())),
+            ("total_dropped", Json::Num(log.total_dropped() as f64)),
+            ("mean_staleness", Json::Num(log.mean_staleness())),
+        ]));
+    };
+
+    // sync first: its round times anchor the deadline for the other two.
+    let mut sync_sys = FlSystem::build(engine_cfg(opts, EngineKind::Sync))?;
+    sync_sys.run()?;
+    let mut totals: Vec<f64> = sync_sys
+        .log
+        .rounds
+        .iter()
+        .map(|r| r.t_cm + r.local_rounds as f64 * r.t_cp)
+        .collect();
+    totals.sort_by(f64::total_cmp);
+    let deadline_s = 0.9 * totals[totals.len() / 2];
+    record(&mut table, &mut rows, EngineKind::Sync, &sync_sys.log);
+    drop(sync_sys);
+
+    let mut cfg = engine_cfg(opts, EngineKind::Deadline);
+    cfg.engine.deadline_s = deadline_s;
+    let mut sys = FlSystem::build(cfg)?;
+    sys.run()?;
+    record(&mut table, &mut rows, EngineKind::Deadline, &sys.log);
+    drop(sys);
+
+    let mut sys = FlSystem::build(engine_cfg(opts, EngineKind::AsyncBuffered))?;
+    sys.run()?;
+    record(&mut table, &mut rows, EngineKind::AsyncBuffered, &sys.log);
+
+    Ok((table, rows, deadline_s))
 }

@@ -7,8 +7,11 @@
 //! * **L3 (this crate)** — the coordinator: a federated-learning parameter
 //!   server, a fleet of simulated mobile edge devices, the paper's wireless
 //!   (eq. 6–7) and GPU computation (eq. 3–5) delay models, the DEFL
-//!   closed-form optimizer (eq. 29), a virtual-time ledger, and the
-//!   experiment harnesses that regenerate every figure of the paper.
+//!   closed-form optimizer (eq. 29), a virtual-time ledger, pluggable
+//!   round engines ([`coordinator::engine`]: synchronous FedAvg,
+//!   deadline-bounded straggler dropping, FedBuff-style buffered
+//!   asynchrony), and the experiment harnesses that regenerate every
+//!   figure of the paper.
 //! * **L2/L1 (python/, build-time only)** — the CNN forward/backward +
 //!   SGD step written in JAX, with the dense-layer and parameter-update
 //!   hot spots as Pallas kernels, AOT-lowered to HLO text once by

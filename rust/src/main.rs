@@ -6,6 +6,11 @@
 //! defl exp <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset d]
 //! defl doctor                                        check artifacts + PJRT
 //! ```
+//!
+//! The round schedule is pluggable: `--set engine.kind=sync` (paper
+//! default), `deadline` (straggler dropping, `engine.deadline_s`), or
+//! `async_buffered` (FedBuff-style, `engine.buffer_k`,
+//! `engine.staleness_exponent`) — see `DESIGN.md` §5.
 
 use defl::config::{ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
@@ -43,6 +48,7 @@ fn usage() -> String {
     "defl — delay-efficient federated learning (paper reproduction)\n\n\
      USAGE:\n\
      \x20 defl train  [--config <toml>] [--set section.key=value ...]\n\
+     \x20             (e.g. --set engine.kind=sync|deadline|async_buffered)\n\
      \x20 defl plan   [--set section.key=value ...]\n\
      \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
      \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\

@@ -25,6 +25,13 @@ pub struct RoundRecord {
     pub test_accuracy: f64,
     /// Wall-clock seconds spent on this round (measured, not modeled).
     pub wall_seconds: f64,
+    /// Updates aggregated into the global model this round.
+    pub participants: usize,
+    /// Cohort updates NOT aggregated (deadline-dropped, outage-lost).
+    pub dropped: usize,
+    /// Mean staleness (aggregations since model pull) of the aggregated
+    /// updates — 0 for the synchronous engines.
+    pub mean_staleness: f64,
 }
 
 /// A named experiment run: config echo + round records.
@@ -98,6 +105,9 @@ impl RunLog {
                     ("test_loss", Json::Num(r.test_loss)),
                     ("test_accuracy", Json::Num(r.test_accuracy)),
                     ("wall_seconds", Json::Num(r.wall_seconds)),
+                    ("participants", Json::Num(r.participants as f64)),
+                    ("dropped", Json::Num(r.dropped as f64)),
+                    ("mean_staleness", Json::Num(r.mean_staleness)),
                 ])
             })
             .collect();
@@ -117,11 +127,11 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -130,10 +140,35 @@ impl RunLog {
                 r.train_loss,
                 r.test_loss,
                 r.test_accuracy,
-                r.wall_seconds
+                r.wall_seconds,
+                r.participants,
+                r.dropped,
+                r.mean_staleness
             ));
         }
         s
+    }
+
+    /// Mean number of aggregated updates per round (participation).
+    pub fn mean_participation(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.participants as f64).sum::<f64>() / self.rounds.len() as f64
+    }
+
+    /// Total updates dropped (deadline/outage) across the run.
+    pub fn total_dropped(&self) -> usize {
+        self.rounds.iter().map(|r| r.dropped).sum()
+    }
+
+    /// Mean staleness of aggregated updates across the run (0 for the
+    /// synchronous engines).
+    pub fn mean_staleness(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().map(|r| r.mean_staleness).sum::<f64>() / self.rounds.len() as f64
     }
 }
 
@@ -198,7 +233,29 @@ mod tests {
             test_loss: loss,
             test_accuracy: acc,
             wall_seconds: 0.01,
+            participants: 4,
+            dropped: 1,
+            mean_staleness: 0.5,
         }
+    }
+
+    #[test]
+    fn participation_and_staleness_aggregates() {
+        let mut log = RunLog::new("t");
+        assert_eq!(log.mean_participation(), 0.0);
+        let mut a = rec(1, 1.0, 2.0, 0.3);
+        a.participants = 4;
+        a.dropped = 0;
+        a.mean_staleness = 0.0;
+        let mut b = rec(2, 2.0, 1.0, 0.4);
+        b.participants = 2;
+        b.dropped = 2;
+        b.mean_staleness = 1.0;
+        log.push(a);
+        log.push(b);
+        assert_eq!(log.mean_participation(), 3.0);
+        assert_eq!(log.total_dropped(), 2);
+        assert_eq!(log.mean_staleness(), 0.5);
     }
 
     #[test]

@@ -24,6 +24,21 @@ impl RoundDelay {
         self.t_cm + self.local_rounds as f64 * self.t_cp
     }
 
+    /// Decompose a known round total into a delay whose [`Self::total`]
+    /// equals `total` (up to float round-off), attributing at most
+    /// `t_cp_cap` per iteration to computation and the (non-negative)
+    /// remainder to communication/waiting. The deadline and async round
+    /// engines price with this: their round walls — `min(T_dl, …)`,
+    /// K-th-arrival gaps — are not of eq. (8)'s `max + V·max` shape, but
+    /// the ledger still wants a comm/comp split.
+    pub fn from_total(total: f64, t_cp_cap: f64, local_rounds: usize) -> RoundDelay {
+        assert!(total >= 0.0 && t_cp_cap >= 0.0, "negative delay");
+        let v = local_rounds.max(1);
+        let t_cp = t_cp_cap.min(total / v as f64);
+        let t_cm = (total - v as f64 * t_cp).max(0.0);
+        RoundDelay { t_cm, t_cp, local_rounds: v }
+    }
+
     /// Computation share of the round (for the fig. 1(d) split).
     pub fn compute_fraction(&self) -> f64 {
         let t = self.total();
@@ -86,6 +101,39 @@ mod tests {
     fn eq8_total() {
         let d = RoundDelay { t_cm: 0.5, t_cp: 0.1, local_rounds: 4 };
         assert!((d.total() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_total_preserves_total_and_caps_compute() {
+        // compute cap binds: remainder goes to t_cm
+        let d = RoundDelay::from_total(1.0, 0.1, 4);
+        assert!((d.total() - 1.0).abs() < 1e-12);
+        assert_eq!(d.t_cp, 0.1);
+        assert!((d.t_cm - 0.6).abs() < 1e-12);
+        // total binds: everything is compute, t_cm = 0
+        let d = RoundDelay::from_total(0.2, 1.0, 4);
+        assert!((d.total() - 0.2).abs() < 1e-12);
+        assert_eq!(d.t_cm, 0.0);
+        // degenerate zero round
+        let d = RoundDelay::from_total(0.0, 0.0, 1);
+        assert_eq!(d.total(), 0.0);
+    }
+
+    #[test]
+    fn prop_from_total_roundtrips() {
+        prop::check(0x52, 100, |g| {
+            let total = g.f64_in(0.0, 10.0);
+            let cap = g.f64_in(0.0, 1.0);
+            let v = g.usize_in(1, 50);
+            let d = RoundDelay::from_total(total, cap, v);
+            if d.t_cm < 0.0 || d.t_cp < 0.0 {
+                return Err("negative component".into());
+            }
+            if d.t_cp > cap + 1e-15 {
+                return Err(format!("t_cp {} exceeds cap {cap}", d.t_cp));
+            }
+            prop::close(d.total(), total, 1e-9, "total preserved")
+        });
     }
 
     #[test]

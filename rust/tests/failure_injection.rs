@@ -195,6 +195,63 @@ fn compression_shrinks_communication_time() {
     );
 }
 
+/// Inject one pathologically slow device post-build. DeadlineSync must
+/// drop it every round (survivor-reweighted FedAvg) and finish the run in
+/// strictly less virtual time than SyncFedAvg, which waits for it.
+#[test]
+fn deadline_engine_drops_injected_straggler_and_is_faster() {
+    require_artifacts!();
+    let build = |name: &str, kind: defl::coordinator::EngineKind, deadline_s: f64| {
+        let mut cfg = tiny_cfg(name);
+        cfg.wireless.fast_fading = false; // isolate the compute straggler
+        cfg.engine.kind = kind;
+        cfg.engine.deadline_s = deadline_s;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        // fault injection: device 0's GPU collapses to 1/10000th of its
+        // frequency AFTER policy planning, so both engines face the
+        // identical fleet. (The factor is huge because the tiny model's
+        // compute share is tiny next to its uplink: the injected straggle
+        // must dominate the round regardless of channel draws.)
+        sys.fleet.specs[0].freq_hz /= 1e4;
+        sys
+    };
+    // a deadline calibrated to the healthy fleet: the expected round of
+    // the un-slowed system (everything the healthy devices need, with
+    // fading-free uplinks), which the injected straggler can never beat
+    let probe = build("fi-probe", defl::coordinator::EngineKind::Sync, 0.0);
+    let bits = probe.test_set.bits_per_sample();
+    let healthy_tcp = probe.fleet.specs[1].minibatch_time(bits, probe.batch);
+    let spec_bits = probe.runtime.registry.model("mlp").unwrap().spec.update_bits();
+    let t_cm_exp = probe.channel.expected_round_time(spec_bits);
+    let v = probe.local_rounds;
+    let deadline = 1.5 * (t_cm_exp + v as f64 * healthy_tcp);
+    drop(probe);
+
+    let mut sync = build("fi-sync", defl::coordinator::EngineKind::Sync, 0.0);
+    sync.run().unwrap();
+    let mut dl = build("fi-deadline", defl::coordinator::EngineKind::Deadline, deadline);
+    dl.run().unwrap();
+
+    // every deadline round dropped exactly the straggler
+    for r in &dl.log.rounds {
+        assert_eq!(r.participants, 3, "round {}: straggler must be cut", r.round);
+        assert_eq!(r.dropped, 1);
+    }
+    // sync still aggregated everyone (it just waited)
+    for r in &sync.log.rounds {
+        assert_eq!(r.participants, 4);
+    }
+    let t_sync = sync.log.overall_time();
+    let t_dl = dl.log.overall_time();
+    assert!(
+        t_dl < t_sync,
+        "deadline engine must beat sync under a straggler: {t_dl} vs {t_sync}"
+    );
+    // both runs still learn
+    assert!(sync.log.rounds.last().unwrap().train_loss.is_finite());
+    assert!(dl.log.rounds.last().unwrap().train_loss.is_finite());
+}
+
 #[test]
 fn dataset_too_small_for_devices_errors() {
     require_artifacts!();

@@ -166,6 +166,120 @@ fn fl_deterministic_same_seed() {
     assert_ne!(l1, l3);
 }
 
+/// The SyncFedAvg engine must reproduce the pre-refactor (sequential,
+/// hard-coded) round loop record-for-record. The risky part of the
+/// extraction is the parallel batch-planning stage, so we pin that a
+/// multi-threaded run is bit-identical to the single-threaded one, and
+/// that the sync engine reports full, staleness-free participation.
+#[test]
+fn engine_parity_sync_parallel_stepping() {
+    require_artifacts!();
+    let run = |threads: usize| {
+        let mut cfg = tiny_cfg("it-par", Policy::Fixed { batch: 16, local_rounds: 3 });
+        cfg.threads = threads;
+        cfg.max_rounds = 4;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        sys.log.clone()
+    };
+    let seq = run(1);
+    let par = run(4);
+    assert_eq!(seq.rounds.len(), par.rounds.len());
+    for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.virtual_time, b.virtual_time, "round {}", a.round);
+        assert_eq!(a.t_cm, b.t_cm);
+        assert_eq!(a.t_cp, b.t_cp);
+        assert_eq!(a.participants, 4, "sync aggregates the full cohort");
+        assert_eq!(a.dropped, 0);
+        assert_eq!(a.mean_staleness, 0.0);
+    }
+}
+
+/// DeadlineSync with a deadline nothing can miss degenerates to the sync
+/// schedule: same losses bit-for-bit (same RNG streams), same delay
+/// numbers up to the float round-off of the deadline decomposition.
+#[test]
+fn engine_parity_deadline_generous() {
+    require_artifacts!();
+    let run = |kind: defl::coordinator::EngineKind| {
+        let mut cfg = tiny_cfg("it-dl-gen", Policy::Fixed { batch: 16, local_rounds: 3 });
+        cfg.max_rounds = 4;
+        cfg.engine.kind = kind;
+        cfg.engine.deadline_s = 1e12; // nobody misses this
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        sys.log.clone()
+    };
+    let sync = run(defl::coordinator::EngineKind::Sync);
+    let dl = run(defl::coordinator::EngineKind::Deadline);
+    assert_eq!(sync.rounds.len(), dl.rounds.len());
+    for (a, b) in sync.rounds.iter().zip(&dl.rounds) {
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(b.dropped, 0);
+        assert!((a.virtual_time - b.virtual_time).abs() < 1e-9, "round {}", a.round);
+        assert!((a.t_cm - b.t_cm).abs() < 1e-9);
+        assert!((a.t_cp - b.t_cp).abs() < 1e-9);
+    }
+}
+
+/// All three engines run end-to-end from a `--set engine.kind=...`-style
+/// config override and report sane records.
+#[test]
+fn all_engines_run_end_to_end() {
+    require_artifacts!();
+    for kind in ["sync", "deadline", "async_buffered"] {
+        let mut cfg = tiny_cfg("it-engines", Policy::Fixed { batch: 16, local_rounds: 2 });
+        cfg.set_override(&format!("engine.kind={kind}")).unwrap();
+        cfg.max_rounds = 3;
+        // fading-free channel: the auto deadline (2× expected round) can
+        // then never fire, so every engine aggregates the full cohort
+        cfg.wireless.fast_fading = false;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        let outcome = sys.run().unwrap();
+        assert_eq!(outcome.rounds, 3, "{kind}");
+        assert!(outcome.final_train_loss.is_finite(), "{kind}");
+        assert!(outcome.overall_time > 0.0, "{kind}");
+        let mut prev = 0.0;
+        for r in &sys.log.rounds {
+            assert!(r.virtual_time >= prev, "{kind}: clock went backwards");
+            assert!(r.participants >= 1, "{kind}: empty aggregation");
+            prev = r.virtual_time;
+        }
+        assert_eq!(
+            sys.log.meta.get("engine").and_then(|v| v.as_str()),
+            Some(kind),
+            "engine recorded in run meta"
+        );
+    }
+}
+
+/// AsyncBuffered aggregates K-at-a-time and actually accrues staleness
+/// when the buffer outlives an aggregation.
+#[test]
+fn async_buffered_staleness_accrues() {
+    require_artifacts!();
+    let mut cfg = tiny_cfg("it-async", Policy::Fixed { batch: 16, local_rounds: 2 });
+    cfg.devices = 4;
+    cfg.max_rounds = 6;
+    cfg.engine.kind = defl::coordinator::EngineKind::AsyncBuffered;
+    cfg.engine.buffer_k = 2; // half the fleet per aggregation
+    // heterogeneous fleet ⇒ the slow devices' updates land late and stale
+    cfg.fleet.heterogeneity = 0.4;
+    cfg.fleet.max_freq_hz = 4e9;
+    let mut sys = FlSystem::build(cfg).unwrap();
+    sys.run().unwrap();
+    for r in &sys.log.rounds {
+        assert!(r.participants <= 2, "buffer_k bounds the aggregation");
+    }
+    assert!(
+        sys.log.rounds.iter().any(|r| r.mean_staleness > 0.0),
+        "some update should aggregate stale: {:?}",
+        sys.log.rounds.iter().map(|r| r.mean_staleness).collect::<Vec<_>>()
+    );
+}
+
 #[test]
 fn fedavg_aggregation_weighted_by_data_size() {
     require_artifacts!();
