@@ -1,12 +1,16 @@
 //! Quickstart: the end-to-end driver proving all three layers compose.
 //!
 //! Trains the small MLP over 4 simulated edge devices for a few rounds of
-//! real federated SGD (PJRT executes the JAX/Pallas artifact), prints the
-//! loss curve and the DEFL plan, and reports both virtual (modeled) and
-//! wall time.
+//! real federated SGD, prints the loss curve and the DEFL plan, and
+//! reports both virtual (modeled) and wall time. Any config key can be
+//! overridden on the command line (`[--set] section.key=value`) — most
+//! usefully the training substrate:
 //!
 //! ```sh
+//! # PJRT (the default when compiled in; executes the JAX/Pallas artifact)
 //! make artifacts && cargo run --release --example quickstart
+//! # pure-Rust native backend — no artifacts, no XLA
+//! cargo run --release --example quickstart -- --set backend.kind=native
 //! ```
 
 use defl::config::{DatasetKind, ExperimentConfig, Policy};
@@ -15,7 +19,7 @@ use defl::coordinator::FlSystem;
 fn main() -> anyhow::Result<()> {
     let mut cfg = ExperimentConfig::default();
     cfg.name = "quickstart".into();
-    cfg.dataset = DatasetKind::Tiny; // 8×8 synthetic, mlp artifact
+    cfg.dataset = DatasetKind::Tiny; // 8×8 synthetic, the `mlp` model
     cfg.devices = 4;
     cfg.train_per_device = 128;
     cfg.test_size = 512;
@@ -23,8 +27,19 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 3;
     cfg.policy = Policy::Defl;
     cfg.out = Some("results/quickstart.json".into());
+    // `--set section.key=value` overrides (the `--set` token is optional).
+    for arg in std::env::args().skip(1) {
+        if arg == "--set" {
+            continue;
+        }
+        if arg.contains('=') {
+            cfg.set_override(&arg)?;
+        } else {
+            anyhow::bail!("unrecognised argument {arg:?} (expected section.key=value)");
+        }
+    }
 
-    println!("== DEFL quickstart ==");
+    println!("== DEFL quickstart ({} backend) ==", cfg.backend.label());
     let mut sys = FlSystem::build(cfg)?;
     if let Some(plan) = &sys.resolved.plan {
         println!(

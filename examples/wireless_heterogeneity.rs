@@ -65,7 +65,9 @@ fn main() -> anyhow::Result<()> {
 
     // Straggler study: compute heterogeneity inflates T_cp (eq. 5 max).
     let mut t = Table::new(&["fleet", "t_cp/sample (s)", "b*", "V", "pred 𝒯 (s)"]);
-    for (label, het) in [("homogeneous (paper)", 0.0), ("mild jitter", 0.2), ("severe stragglers", 0.5)] {
+    let scenarios =
+        [("homogeneous (paper)", 0.0), ("mild jitter", 0.2), ("severe stragglers", 0.5)];
+    for (label, het) in scenarios {
         let mut fc = FleetConfig::default();
         fc.heterogeneity = het;
         fc.max_freq_hz = 4e9; // let jitter act (paper cap binds otherwise)

@@ -9,7 +9,7 @@ use defl::experiments::{fig1a, ExpOpts};
 
 fn main() -> anyhow::Result<()> {
     // regenerate the figure's series (analytic mode: no training)
-    let mut opts = ExpOpts::from_env();
+    let mut opts = ExpOpts::from_env()?;
     opts.fast = true;
     opts.out_dir = "results/bench".into();
     fig1a::run(&opts, true)?;

@@ -4,7 +4,7 @@
 use defl::experiments::{fig1c, ExpOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env();
+    let mut opts = ExpOpts::from_env()?;
     opts.fast = true;
     opts.out_dir = "results/bench".into();
     let t0 = std::time::Instant::now();

@@ -1,11 +1,14 @@
 //! Hot-path microbenchmarks: the L3 pieces the round loop spends time in
 //! (EXPERIMENTS.md §Perf records these before/after optimization), plus
-//! the PJRT execute path itself per batch size.
+//! the train/eval step of every compiled backend per batch size.
+//!
+//! `DEFL_BENCH_FAST=1` shrinks iteration counts (the CI smoke lane);
+//! `DEFL_BENCH_JSON=path.json` additionally writes the machine-readable
+//! report CI uploads as the perf-trajectory artifact.
 
 use defl::bench::Suite;
 use defl::data::synth::{generate, SynthSpec};
 use defl::model::{federated_average, ParamSet};
-use defl::runtime::Runtime;
 use defl::util::rng::Pcg32;
 use defl::wireless::{Channel, ChannelConfig};
 
@@ -40,47 +43,89 @@ fn main() -> anyhow::Result<()> {
     let idx: Vec<usize> = (0..64).collect();
     suite.bench_units("gather_b64", 64.0, || ds.gather(&idx));
 
+    // --- native backend steps (no artifacts needed) --------------------
+    #[cfg(feature = "native")]
+    native_benches(&mut suite)?;
+
     // --- PJRT execute path (needs artifacts) ---------------------------
-    if std::path::Path::new("artifacts/manifest.json").exists() {
-        let mut rt = Runtime::new("artifacts")?;
-        for model in ["mlp", "mnist_cnn"] {
-            let params = rt.initial_params(model)?;
-            let spec = rt.spec(model)?.clone();
-            let elems = spec.height * spec.width * spec.channels;
-            for &b in rt.train_batches(model)?.iter() {
-                let tds = generate(
-                    &SynthSpec {
-                        n: b.max(1),
-                        height: spec.height,
-                        width: spec.width,
-                        channels: spec.channels,
-                        classes: spec.classes,
-                        noise: 0.1,
-                        label_noise: 0.0,
-                        modes: 3,
-                    },
-                    5,
-                );
-                let idx: Vec<usize> = (0..b).collect();
-                let (x, y) = tds.gather(&idx);
-                assert_eq!(x.len(), b * elems);
-                rt.preload(model, &[b])?;
-                suite.bench_units(&format!("train_step_{model}_b{b}"), b as f64, || {
-                    rt.train_step(model, b, &params, &x, &y, 0.01).unwrap()
-                });
-                // marshalling-only share: literal construction for the
-                // same call, no execute (perf-pass diagnostics)
-                if b == 32 || model == "mlp" {
-                    suite.bench(&format!("marshal_only_{model}_b{b}"), || {
-                        defl::runtime::marshal_probe(&rt, model, b, &params, &x, &y).unwrap()
-                    });
-                }
-            }
-        }
-    } else {
-        eprintln!("artifacts missing — PJRT benches skipped (run `make artifacts`)");
-    }
+    #[cfg(feature = "pjrt")]
+    pjrt_benches(&mut suite)?;
 
     println!("{}", suite.render());
+    if let Some(path) = suite.write_json_env()? {
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+#[cfg(feature = "native")]
+fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
+    use defl::runtime::{NativeBackend, TrainBackend};
+    let mut be = NativeBackend::new(5);
+    for (model, spec_fn) in [
+        ("mlp", SynthSpec::tiny as fn(usize) -> SynthSpec),
+        ("mnist_cnn", SynthSpec::mnist_like as fn(usize) -> SynthSpec),
+    ] {
+        let params = be.initial_params(model)?;
+        for b in [16usize, 64] {
+            let tds = generate(&spec_fn(b), 5);
+            let idx: Vec<usize> = (0..b).collect();
+            let (x, y) = tds.gather(&idx);
+            suite.bench_units(&format!("native_train_step_{model}_b{b}"), b as f64, || {
+                be.train_step(model, b, &params, &x, &y, 0.01).unwrap()
+            });
+        }
+        let eds = generate(&spec_fn(256), 6);
+        let idx: Vec<usize> = (0..256).collect();
+        let (ex, ey) = eds.gather(&idx);
+        suite.bench_units(&format!("native_eval_step_{model}_b256"), 256.0, || {
+            be.eval_step(model, 256, &params, &ex, &ey).unwrap()
+        });
+    }
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(suite: &mut Suite) -> anyhow::Result<()> {
+    use defl::runtime::Runtime;
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts missing — PJRT benches skipped (run `make artifacts`)");
+        return Ok(());
+    }
+    let mut rt = Runtime::new("artifacts")?;
+    for model in ["mlp", "mnist_cnn"] {
+        let params = rt.initial_params(model)?;
+        let spec = rt.spec(model)?.clone();
+        let elems = spec.height * spec.width * spec.channels;
+        for &b in rt.train_batches(model)?.iter() {
+            let tds = generate(
+                &SynthSpec {
+                    n: b.max(1),
+                    height: spec.height,
+                    width: spec.width,
+                    channels: spec.channels,
+                    classes: spec.classes,
+                    noise: 0.1,
+                    label_noise: 0.0,
+                    modes: 3,
+                },
+                5,
+            );
+            let idx: Vec<usize> = (0..b).collect();
+            let (x, y) = tds.gather(&idx);
+            assert_eq!(x.len(), b * elems);
+            rt.preload(model, &[b])?;
+            suite.bench_units(&format!("train_step_{model}_b{b}"), b as f64, || {
+                rt.train_step(model, b, &params, &x, &y, 0.01).unwrap()
+            });
+            // marshalling-only share: literal construction for the
+            // same call, no execute (perf-pass diagnostics)
+            if b == 32 || model == "mlp" {
+                suite.bench(&format!("marshal_only_{model}_b{b}"), || {
+                    defl::runtime::marshal_probe(&rt, model, b, &params, &x, &y).unwrap()
+                });
+            }
+        }
+    }
     Ok(())
 }

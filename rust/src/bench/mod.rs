@@ -4,6 +4,7 @@
 //! per benchmark, printed in a fixed-width table. Used by every target in
 //! `rust/benches/` (wired with `harness = false`).
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -105,6 +106,47 @@ impl Suite {
         &self.results
     }
 
+    /// Machine-readable report — the perf-trajectory artifact CI uploads
+    /// (`BENCH_<suite>.json`) so regressions are diffable across commits.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("suite", Json::str(self.name.clone())),
+            ("warmup_iters", Json::Num(self.opts.warmup_iters as f64)),
+            ("iters", Json::Num(self.opts.iters as f64)),
+            (
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("n", Json::Num(r.summary.n as f64)),
+                                ("mean_s", Json::Num(r.summary.mean)),
+                                ("p50_s", Json::Num(r.summary.p50)),
+                                ("p95_s", Json::Num(r.summary.p95)),
+                                ("max_s", Json::Num(r.summary.max)),
+                                ("throughput_per_s", r.throughput().map_or(Json::Null, Json::Num)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write [`Suite::to_json`] to the path named by `DEFL_BENCH_JSON`,
+    /// when set. Returns the path written, if any.
+    pub fn write_json_env(&self) -> anyhow::Result<Option<String>> {
+        match std::env::var("DEFL_BENCH_JSON") {
+            Ok(path) if !path.is_empty() => {
+                self.to_json().write_file(&path)?;
+                Ok(Some(path))
+            }
+            _ => Ok(None),
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut t = crate::metrics::Table::new(&[
             "benchmark", "n", "mean", "p50", "p95", "max", "throughput",
@@ -172,6 +214,22 @@ mod tests {
         suite.record("external", &[0.5, 0.6]);
         let s = suite.render();
         assert!(s.contains("demo") && s.contains("a") && s.contains("external"));
+    }
+
+    #[test]
+    fn to_json_carries_every_result() {
+        let mut suite = Suite::new("j");
+        suite.opts = BenchOpts { warmup_iters: 0, iters: 2 };
+        suite.bench("plain", || 1 + 1);
+        suite.bench_units("tp", 10.0, || 2 + 2);
+        let j = suite.to_json();
+        assert_eq!(j.get("suite").and_then(|v| v.as_str()), Some("j"));
+        let rs = j.get("results").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").and_then(|v| v.as_str()), Some("plain"));
+        assert_eq!(rs[0].get("throughput_per_s"), Some(&Json::Null));
+        assert!(rs[1].get("throughput_per_s").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(rs[1].get("mean_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
     }
 
     #[test]

@@ -8,7 +8,8 @@ fn main() -> Result<()> {
     let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
 
     let init: Vec<(String, xla::Literal)> = xla::Literal::read_npz("artifacts/mlp_init.npz", &())?;
-    let golden: Vec<(String, xla::Literal)> = xla::Literal::read_npz("artifacts/mlp_golden.npz", &())?;
+    let golden: Vec<(String, xla::Literal)> =
+        xla::Literal::read_npz("artifacts/mlp_golden.npz", &())?;
     let get = |name: &str| -> xla::Literal {
         golden.iter().find(|(n, _)| n == name).map(|(_, l)| l.clone()).unwrap()
     };

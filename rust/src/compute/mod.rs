@@ -30,7 +30,12 @@ pub use gpu::{GpuSpec, GpuFleet, effective_frequency};
 /// * `bits_per_sample` — input sample size in bits (e.g. MNIST f32 NHWC:
 ///   28·28·1·32).
 /// * `freq_hz` — effective frequency `f_m` from eq. (3) (paper caps 2 GHz).
-pub fn minibatch_time(cycles_per_bit: f64, bits_per_sample: f64, batch: usize, freq_hz: f64) -> f64 {
+pub fn minibatch_time(
+    cycles_per_bit: f64,
+    bits_per_sample: f64,
+    batch: usize,
+    freq_hz: f64,
+) -> f64 {
     minibatch_time_parallel(cycles_per_bit, bits_per_sample, batch, freq_hz, 1)
 }
 
@@ -66,7 +71,13 @@ pub fn minibatch_time_parallel(
 }
 
 /// Eq. (5): synchronous-round computation time = slowest device.
+///
+/// Same contract as `wireless::round_time`: an empty fleet/cohort has no
+/// meaningful round time, and silently answering `0.0` would price a
+/// round as free — a `debug_assert` so a selection bug cannot hide here
+/// (this is also what `GpuFleet::round_time_of` feeds cohort slices into).
 pub fn round_time(per_device: &[f64]) -> f64 {
+    debug_assert!(!per_device.is_empty(), "round_time over an empty fleet");
     per_device.iter().copied().fold(0.0, f64::max)
 }
 
@@ -102,7 +113,14 @@ mod tests {
     #[test]
     fn round_is_max() {
         assert_eq!(round_time(&[1.0, 3.0, 2.0]), 3.0);
-        assert_eq!(round_time(&[]), 0.0);
+        assert_eq!(round_time(&[0.4]), 0.4);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty fleet")]
+    fn round_time_empty_fleet_asserts() {
+        round_time(&[]);
     }
 
     #[test]

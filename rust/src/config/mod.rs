@@ -130,6 +130,11 @@ pub struct ExperimentConfig {
     pub c: f64,
     // [policy]
     pub policy: Policy,
+    // [backend]
+    /// Which training substrate executes the hot path: `pjrt` (AOT HLO
+    /// artifacts, the default when compiled in) or `native` (pure-Rust
+    /// softmax/MLP — no artifacts, no XLA).
+    pub backend: crate::runtime::BackendKind,
     // [engine]
     pub engine: crate::coordinator::EngineConfig,
     // [selection]
@@ -178,6 +183,7 @@ impl Default for ExperimentConfig {
             nu: 8.0,
             c: 1.0,
             policy: Policy::Defl,
+            backend: crate::runtime::BackendKind::default(),
             engine: crate::coordinator::EngineConfig::default(),
             selection: crate::coordinator::Selection::All,
             max_rounds: 60,
@@ -237,7 +243,8 @@ impl ExperimentConfig {
             get_f64(w, "outage_prob", &mut self.outage_prob)?;
             get_usize(w, "max_retries", &mut self.max_retries)?;
             get_f64(w, "compression", &mut self.compression)?;
-            let mut ofdma = self.wireless.policy == crate::wireless::channel::BandwidthPolicy::Ofdma;
+            let mut ofdma =
+                self.wireless.policy == crate::wireless::channel::BandwidthPolicy::Ofdma;
             get_bool(w, "ofdma", &mut ofdma)?;
             self.wireless.policy = if ofdma {
                 crate::wireless::channel::BandwidthPolicy::Ofdma
@@ -284,6 +291,11 @@ impl ExperimentConfig {
                         self.policy.label()
                     );
                 }
+            }
+        }
+        if let Some(b) = j.get("backend") {
+            if let Some(kind) = b.get("kind").and_then(|x| x.as_str()) {
+                self.backend = crate::runtime::BackendKind::parse(kind)?;
             }
         }
         if let Some(e) = j.get("engine") {
@@ -521,6 +533,19 @@ mod tests {
         // bare b/V against a non-fixed policy is an error, not a no-op
         let mut c = ExperimentConfig::default();
         assert!(c.set_override("policy.batch=64").is_err());
+    }
+
+    #[test]
+    fn backend_section_parses() {
+        use crate::runtime::BackendKind;
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.backend, BackendKind::default());
+        c.set_override("backend.kind=native").unwrap();
+        assert_eq!(c.backend, BackendKind::Native);
+        c.set_override("backend.kind=pjrt").unwrap();
+        assert_eq!(c.backend, BackendKind::Pjrt);
+        assert!(c.set_override("backend.kind=tpu").is_err());
+        assert!(c.validate().is_ok());
     }
 
     #[test]

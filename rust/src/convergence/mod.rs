@@ -85,6 +85,7 @@ pub fn overall_time(h: f64, t_round: f64) -> f64 {
 
 /// The complete objective (14): 𝒯(b, α) for given delay inputs.
 /// `t_cp_per_sample` is the bottleneck `G·bits/f` so that `T_cp = b·that`.
+#[allow(clippy::too_many_arguments)] // the paper's (14) takes 8 natural knobs
 pub fn objective(
     c: f64,
     eps: f64,
@@ -204,7 +205,9 @@ mod tests {
             let alpha = g.log_uniform(1e-3, 1e2);
             let eps = g.log_uniform(1e-4, 0.5);
             let m = g.usize_in(1, 100);
-            let t = objective(1.0, eps, m, 2.0, g.f64_in(0.01, 5.0), g.log_uniform(1e-6, 1e-2), b, alpha);
+            let t_cm = g.f64_in(0.01, 5.0);
+            let tps = g.log_uniform(1e-6, 1e-2);
+            let t = objective(1.0, eps, m, 2.0, t_cm, tps, b, alpha);
             if t.is_finite() && t > 0.0 {
                 Ok(())
             } else {

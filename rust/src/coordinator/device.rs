@@ -3,7 +3,7 @@
 
 use crate::data::Dataset;
 use crate::model::ParamSet;
-use crate::runtime::Runtime;
+use crate::runtime::{ParallelStep, TrainBackend};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
@@ -62,12 +62,12 @@ impl Device {
             .collect()
     }
 
-    /// Execute `v` SGD iterations over a pre-gathered batch plan (the PJRT
-    /// half of Algorithm 1 step 3); returns the local model and the mean
-    /// local training loss. Associated fn: needs no `&self`, so the round
-    /// engines can run it while the device list is not borrowed.
+    /// Execute `v` SGD iterations over a pre-gathered batch plan (the
+    /// backend half of Algorithm 1 step 3); returns the local model and
+    /// the mean local training loss. Associated fn: needs no `&self`, so
+    /// the round engines can run it while the device list is not borrowed.
     pub fn train_planned(
-        rt: &mut Runtime,
+        be: &mut dyn TrainBackend,
         model: &str,
         global: &ParamSet,
         batch: usize,
@@ -78,7 +78,31 @@ impl Device {
         let mut params = global.clone();
         let mut loss_acc = 0f64;
         for (x, y) in plan {
-            let out = rt.train_step(model, batch, &params, x, y, lr)?;
+            let out = be.train_step(model, batch, &params, x, y, lr)?;
+            params = out.params;
+            loss_acc += out.loss as f64;
+        }
+        Ok((params, loss_acc / plan.len() as f64))
+    }
+
+    /// [`Device::train_planned`] through a `&self`-shareable backend — the
+    /// variant the engines fan out over the thread pool when the backend
+    /// opts into [`ParallelStep`] (native). Iteration order and arithmetic
+    /// are identical to the `&mut` path, so a parallel run is bit-identical
+    /// to a sequential one.
+    pub fn train_planned_shared(
+        be: &dyn ParallelStep,
+        model: &str,
+        global: &ParamSet,
+        batch: usize,
+        plan: &[(Vec<f32>, Vec<i32>)],
+        lr: f32,
+    ) -> anyhow::Result<(ParamSet, f64)> {
+        assert!(!plan.is_empty(), "V must be ≥ 1");
+        let mut params = global.clone();
+        let mut loss_acc = 0f64;
+        for (x, y) in plan {
+            let out = be.train_step_shared(model, batch, &params, x, y, lr)?;
             params = out.params;
             loss_acc += out.loss as f64;
         }
@@ -91,7 +115,7 @@ impl Device {
     /// path — the engines call the two halves separately.)
     pub fn local_train(
         &mut self,
-        rt: &mut Runtime,
+        be: &mut dyn TrainBackend,
         model: &str,
         global: &ParamSet,
         batch: usize,
@@ -99,7 +123,7 @@ impl Device {
         lr: f32,
     ) -> anyhow::Result<(ParamSet, f64)> {
         let plan = self.plan_batches(batch, v);
-        Self::train_planned(rt, model, global, batch, &plan, lr)
+        Self::train_planned(be, model, global, batch, &plan, lr)
     }
 }
 

@@ -30,6 +30,27 @@ pub struct DeadlineSync {
     pub deadline_s: f64,
 }
 
+impl DeadlineSync {
+    /// Does a device with per-iteration compute `t_cp_m` and uplink
+    /// `t_up_m` beat the deadline after `v` local iterations? An infinite
+    /// uplink time — the `wireless::uplink_time` contract for a dead link
+    /// (rate 0) — never survives, for any finite deadline.
+    fn survives(&self, v: usize, t_cp_m: f64, t_up_m: f64) -> bool {
+        v as f64 * t_cp_m + t_up_m <= self.deadline_s
+    }
+
+    /// Virtual-time cost of the round: the slowest device, capped by the
+    /// deadline whenever anyone missed it. Stays finite (= `T_dl`) even
+    /// when the slowest "device round time" is infinite.
+    fn round_wall(&self, slowest: f64, any_late: bool) -> f64 {
+        if any_late {
+            self.deadline_s.min(slowest)
+        } else {
+            slowest
+        }
+    }
+}
+
 impl RoundEngine for DeadlineSync {
     fn kind(&self) -> EngineKind {
         EngineKind::Deadline
@@ -59,9 +80,8 @@ impl RoundEngine for DeadlineSync {
         let mut t_cp_survivors = 0f64;
         for u in &updates {
             let t_cp_m = tcp_of(u.device);
-            let r_m = v as f64 * t_cp_m + up.times[u.device];
-            slowest = slowest.max(r_m);
-            if r_m > self.deadline_s {
+            slowest = slowest.max(v as f64 * t_cp_m + up.times[u.device]);
+            if !self.survives(v, t_cp_m, up.times[u.device]) {
                 any_late = true;
                 continue; // dropped: the server has already closed the round
             }
@@ -85,7 +105,7 @@ impl RoundEngine for DeadlineSync {
         // deadline fires — whichever comes first. Compute share = the
         // slowest *survivor*'s iterations; the remainder is time spent
         // waiting on the air interface / the deadline.
-        let round_wall = if any_late { self.deadline_s.min(slowest) } else { slowest };
+        let round_wall = self.round_wall(slowest, any_late);
         let delay = RoundDelay::from_total(round_wall, t_cp_survivors, v);
         let (t_cm, t_cp) = (delay.t_cm, delay.t_cp);
         let vt = sys.clock.advance(delay);
@@ -106,5 +126,48 @@ impl RoundEngine for DeadlineSync {
             dropped: cohort.len() - participants,
             mean_staleness: 0.0,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wireless::uplink_time;
+
+    #[test]
+    fn finite_times_survive_or_miss_exactly_at_deadline() {
+        let e = DeadlineSync { deadline_s: 10.0 };
+        assert!(e.survives(4, 1.0, 6.0)); // 4·1 + 6 = 10 ≤ 10
+        assert!(!e.survives(4, 1.0, 6.1)); // 10.1 > 10
+        assert!(e.survives(1, 0.0, 0.0));
+    }
+
+    /// The wireless contract for a dead link (rate 0) is an *infinite*
+    /// uplink time — the deadline engine must treat it as a straggler
+    /// (dropped), never as a survivor, and must still price the round at
+    /// a finite `T_dl`.
+    #[test]
+    fn infinite_uplink_is_dropped_and_round_stays_finite() {
+        let e = DeadlineSync { deadline_s: 5.0 };
+        let dead_uplink = uplink_time(1e6, 0.0);
+        assert!(dead_uplink.is_infinite());
+        assert!(!e.survives(3, 1e-3, dead_uplink));
+        // ...even with an enormous (but finite) deadline
+        let generous = DeadlineSync { deadline_s: 1e12 };
+        assert!(!generous.survives(3, 1e-3, dead_uplink));
+        // the round itself closes at the deadline, not at +∞
+        let wall = e.round_wall(3.0 * 1e-3 + dead_uplink, true);
+        assert_eq!(wall, 5.0);
+        assert!(wall.is_finite());
+    }
+
+    #[test]
+    fn round_wall_without_stragglers_is_the_slowest_device() {
+        let e = DeadlineSync { deadline_s: 10.0 };
+        assert_eq!(e.round_wall(7.5, false), 7.5);
+        // a missed deadline caps the wall even if the slowest was slower
+        assert_eq!(e.round_wall(12.0, true), 10.0);
+        // the deadline never *adds* time when the fleet was faster
+        assert_eq!(e.round_wall(2.0, true), 2.0);
     }
 }

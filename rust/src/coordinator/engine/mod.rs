@@ -19,11 +19,13 @@
 //! All engines share the same substrate phases (selection, local
 //! computation, uplink draw, energy accounting) so their delay numbers are
 //! comparable. The local-computation phase fans its per-device mini-batch
-//! planning (RNG + gather) out over [`parallel_map`]; PJRT execution stays
-//! on the calling thread because the PJRT client handle is not `Sync`
-//! (DESIGN.md §5). The simclock remains the single owner of virtual time:
-//! every engine prices its round as one [`crate::simclock::RoundDelay`]
-//! advance.
+//! planning (RNG + gather) out over [`parallel_map`], and — when the
+//! backend's step is `&self`-shareable ([`crate::runtime::ParallelStep`],
+//! i.e. the native backend) — the per-device training too; PJRT execution
+//! stays on the calling thread because the PJRT client handle is not
+//! `Sync` (DESIGN.md §5). The simclock remains the single owner of
+//! virtual time: every engine prices its round as one
+//! [`crate::simclock::RoundDelay`] advance.
 
 pub mod async_buffered;
 pub mod deadline;
@@ -36,6 +38,7 @@ pub use sync::SyncFedAvg;
 use crate::coordinator::{Device, FlSystem};
 use crate::metrics::RoundRecord;
 use crate::model::ParamSet;
+use crate::runtime::TrainBackend;
 use crate::util::threadpool::parallel_map;
 use crate::wireless::dbm_to_watt;
 
@@ -168,9 +171,13 @@ pub(crate) fn pick_cohort(sys: &mut FlSystem) -> Vec<usize> {
 
 /// Local computation over a cohort (Algorithm 1 step 3). Mini-batch
 /// planning (per-device RNG + gather — pure CPU) fans out over
-/// `cfg.threads` via [`parallel_map`]; the PJRT train steps then execute
-/// on the calling thread in cohort order, so results are bit-identical to
-/// the sequential path regardless of thread count.
+/// `cfg.threads` via [`parallel_map`]. Training then fans out too when
+/// the backend's step is `&self`-shareable
+/// ([`crate::runtime::ParallelStep`] — the native backend); otherwise
+/// (PJRT, whose client is not `Sync`) the steps execute on the calling
+/// thread in cohort order. Per-device training is independent and
+/// deterministic, so both paths are bit-identical to the sequential one
+/// regardless of thread count.
 pub(crate) fn local_computation(
     sys: &mut FlSystem,
     cohort: &[usize],
@@ -189,16 +196,32 @@ pub(crate) fn local_computation(
         debug_assert_eq!(refs.len(), cohort.len(), "cohort index out of range");
         parallel_map(refs, threads, |dev| dev.plan_batches(batch, v))
     };
+    let fan_out = threads > 1 && plans.len() > 1 && sys.backend.parallel().is_some();
+    let results: Vec<anyhow::Result<(ParamSet, f64)>> = if fan_out {
+        let par = sys.backend.parallel().expect("checked by fan_out");
+        let model = sys.model.as_str();
+        let global = &sys.global;
+        let lr = sys.cfg.lr;
+        parallel_map(plans, threads, |plan| {
+            Device::train_planned_shared(par, model, global, batch, &plan, lr)
+        })
+    } else {
+        let mut results = Vec::with_capacity(plans.len());
+        for plan in &plans {
+            results.push(Device::train_planned(
+                &mut *sys.backend,
+                &sys.model,
+                &sys.global,
+                batch,
+                plan,
+                sys.cfg.lr,
+            ));
+        }
+        results
+    };
     let mut out = Vec::with_capacity(cohort.len());
-    for (pos, &di) in cohort.iter().enumerate() {
-        let (params, loss) = Device::train_planned(
-            &mut sys.runtime,
-            &sys.model,
-            &sys.global,
-            batch,
-            &plans[pos],
-            sys.cfg.lr,
-        )?;
+    for (&di, res) in cohort.iter().zip(results) {
+        let (params, loss) = res?;
         out.push(LocalUpdate {
             device: di,
             params,
@@ -230,7 +253,7 @@ pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
 /// unreliable channel with retransmissions. Times are drawn for the whole
 /// fleet; engines restrict maxima/filters to their own cohorts.
 pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
-    let spec_bits = sys.runtime.spec(&sys.model)?.update_bits() * sys.cfg.compression;
+    let spec_bits = sys.spec.update_bits() * sys.cfg.compression;
     if sys.cfg.outage_prob > 0.0 {
         let (times, _, delivered) =
             sys.channel

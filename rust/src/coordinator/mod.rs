@@ -9,8 +9,10 @@
 //! engine composes the same substrate phases:
 //!
 //! 1. **Local computation** — each cohort device runs `V` mini-batch SGD
-//!    iterations from its pulled global model (real PJRT execution of the
-//!    L2/L1 artifact; batch planning fans out over the thread pool).
+//!    iterations from its pulled global model on the configured
+//!    [`crate::runtime::TrainBackend`] (PJRT artifact execution or the
+//!    pure-Rust native substrate; batch planning always fans out over the
+//!    thread pool, and native training does too).
 //! 2. **Wireless communication** — the channel draws this round's gains
 //!    and per-device uplink times (eq. 6).
 //! 3. **Aggregation & broadcast** — FedAvg weighted by `D_m` (eq. 2);
@@ -33,8 +35,8 @@ use crate::compute::gpu::GpuFleet;
 use crate::config::ExperimentConfig;
 use crate::data::{self, synth, Dataset};
 use crate::metrics::{EnergyLedger, EnergyModel, RoundRecord, RunLog};
-use crate::model::ParamSet;
-use crate::runtime::Runtime;
+use crate::model::{ModelSpec, ParamSet};
+use crate::runtime::{build_backend, TrainBackend};
 use crate::simclock::SimClock;
 use crate::util::json::Json;
 use crate::wireless::Channel;
@@ -45,7 +47,12 @@ use std::time::Instant;
 pub struct FlSystem {
     pub cfg: ExperimentConfig,
     pub model: String,
-    pub runtime: Runtime,
+    /// The model's parameter layout (cached from the backend at build;
+    /// its `update_bits` prices every uplink).
+    pub spec: ModelSpec,
+    /// The training substrate (`[backend] kind = pjrt|native`) — see
+    /// [`crate::runtime::TrainBackend`].
+    pub backend: Box<dyn TrainBackend>,
     pub channel: Channel,
     pub fleet: GpuFleet,
     pub devices: Vec<Device>,
@@ -78,12 +85,13 @@ pub struct RunOutcome {
 
 impl FlSystem {
     /// Build everything from a config: datasets, partition, channel,
-    /// fleet, runtime (artifacts compiled), policy resolution.
+    /// fleet, training backend (PJRT artifacts compiled / native model
+    /// table), policy resolution.
     pub fn build(cfg: ExperimentConfig) -> anyhow::Result<FlSystem> {
         cfg.validate()?;
         let model = cfg.dataset.model_name().to_string();
-        let mut runtime = Runtime::new(&cfg.artifacts_dir)?;
-        let spec = runtime.spec(&model)?.clone();
+        let mut backend = build_backend(cfg.backend, &cfg.artifacts_dir, cfg.seed)?;
+        let spec = backend.spec(&model)?;
 
         // --- data ---------------------------------------------------
         let n_train = cfg.train_per_device * cfg.devices;
@@ -112,7 +120,9 @@ impl FlSystem {
         let train = Arc::new(synth::generate_split(&train_spec, cfg.seed, cfg.seed));
         let test_set = Arc::new(synth::generate_split(&test_spec, cfg.seed, cfg.seed ^ 0x7E57));
         anyhow::ensure!(
-            train.height == spec.height && train.width == spec.width && train.channels == spec.channels,
+            train.height == spec.height
+                && train.width == spec.width
+                && train.channels == spec.channels,
             "dataset dims {:?} do not match model {model} dims {:?}",
             (train.height, train.width, train.channels),
             (spec.height, spec.width, spec.channels)
@@ -131,7 +141,9 @@ impl FlSystem {
             .device_indices
             .iter()
             .enumerate()
-            .map(|(i, shard)| Device::new(i, shard.clone(), Arc::clone(&train), cfg.seed ^ (0xD0 + i as u64)))
+            .map(|(i, shard)| {
+                Device::new(i, shard.clone(), Arc::clone(&train), cfg.seed ^ (0xD0 + i as u64))
+            })
             .collect();
 
         // --- delay models --------------------------------------------
@@ -144,19 +156,18 @@ impl FlSystem {
         let t_cm = channel.expected_round_time(spec.update_bits());
         let t_cps = fleet.bottleneck_seconds_per_sample(train.bits_per_sample());
         let resolved = resolve(&cfg, t_cm, t_cps);
-        let artifacts = runtime.registry.model(&model)?;
-        let batch = artifacts.nearest_train_batch(resolved.batch);
+        let batch = backend.nearest_train_batch(&model, resolved.batch)?;
         if batch != resolved.batch {
             crate::log_warn!(
-                "policy requested b={} but nearest artifact batch is b={batch}",
+                "policy requested b={} but nearest executable batch is b={batch}",
                 resolved.batch
             );
         }
         let local_rounds = resolved.local_rounds.max(1);
 
-        // --- runtime warmup -------------------------------------------
-        runtime.preload(&model, &[batch])?;
-        let global = runtime.initial_params(&model)?;
+        // --- backend warmup -------------------------------------------
+        backend.preload(&model, &[batch])?;
+        let global = backend.initial_params(&model)?;
 
         // --- round engine ---------------------------------------------
         // Auto knobs (deadline) are anchored to the planner's expected
@@ -167,6 +178,7 @@ impl FlSystem {
         let engine = engine::build(&cfg.engine, cfg.devices, expected_round_s);
 
         let mut log = RunLog::new(&cfg.name);
+        log.set_meta("backend", Json::str(backend.kind().label()));
         log.set_meta("engine", Json::str(engine.kind().label()));
         log.set_meta("policy", Json::str(cfg.policy.label()));
         log.set_meta("batch", Json::Num(batch as f64));
@@ -192,7 +204,8 @@ impl FlSystem {
         Ok(FlSystem {
             cfg,
             model,
-            runtime,
+            spec,
+            backend,
             channel,
             fleet,
             devices,
@@ -227,7 +240,7 @@ impl FlSystem {
 
     /// Evaluate the global model on the held-out set.
     pub fn evaluate(&mut self) -> anyhow::Result<(f64, f64)> {
-        let (loss, acc, _) = self.runtime.evaluate(&self.model, &self.global, &self.test_set)?;
+        let (loss, acc, _) = self.backend.evaluate(&self.model, &self.global, &self.test_set)?;
         Ok((loss, acc))
     }
 

@@ -86,6 +86,9 @@ impl Dataset {
 }
 
 /// Load a dataset from an npz with `x: f32 [n,h,w,c]`, `y: i32/i64 [n]`.
+/// (npz IO comes from the `xla` crate, so this is `pjrt`-only; the native
+/// backend always trains on the synthetic generators.)
+#[cfg(feature = "pjrt")]
 pub fn load_npz_dataset(path: &std::path::Path, classes: usize) -> anyhow::Result<Dataset> {
     use xla::FromRawBytes;
     let entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())?;

@@ -85,7 +85,8 @@ pub fn partition_dirichlet(ds: &Dataset, devices: usize, alpha: f64, seed: u64) 
         let props = rng.dirichlet(&vec![alpha; devices]);
         // proportional integer allocation, remainder to largest shares
         let n = idxs.len();
-        let mut counts: Vec<usize> = props.iter().map(|p| (p * n as f64).floor() as usize).collect();
+        let mut counts: Vec<usize> =
+            props.iter().map(|p| (p * n as f64).floor() as usize).collect();
         let mut assigned: usize = counts.iter().sum();
         let mut order: Vec<usize> = (0..devices).collect();
         order.sort_by(|&a, &b| props[b].partial_cmp(&props[a]).unwrap());
@@ -107,7 +108,12 @@ pub fn partition_dirichlet(ds: &Dataset, devices: usize, alpha: f64, seed: u64) 
 /// McMahan shards: sort by label, cut into `shards_per_device·devices`
 /// shards, deal each device `shards_per_device` random shards — every
 /// device sees only a few classes.
-pub fn partition_shards(ds: &Dataset, devices: usize, shards_per_device: usize, seed: u64) -> Partition {
+pub fn partition_shards(
+    ds: &Dataset,
+    devices: usize,
+    shards_per_device: usize,
+    seed: u64,
+) -> Partition {
     assert!(devices > 0 && shards_per_device > 0);
     let total_shards = devices * shards_per_device;
     assert!(total_shards <= ds.n, "more shards than samples");

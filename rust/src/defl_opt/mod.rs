@@ -306,6 +306,52 @@ mod tests {
     }
 
     #[test]
+    fn prop_closed_form_within_band_of_numeric() {
+        // Two-sided satellite invariant over randomized paper-neighbourhood
+        // PlanInputs, with the numeric search capped at the closed form's
+        // own b* (same feasible neighbourhood — an uncapped search rides
+        // the batch cap and the comparison degenerates, see
+        // `ablation_numeric_vs_closed_form`):
+        //  (1) exactness — the exhaustive search is never worse;
+        //  (2) tolerance — eq. (29) stays within 3·(1 + b*_raw) of the
+        //      exact optimum. The band is derived from the ablation
+        //      finding: the closed form's α* misses the b-conditioned
+        //      stationary point by ≈ the raw b* factor, and an empirical
+        //      scan of this input box shows ratio ≤ 0.2× the band.
+        prop::check(0xC10F, 80, |g| {
+            let inp = PlanInputs {
+                t_cm: g.log_uniform(0.01, 0.3),
+                t_cp_per_sample: g.log_uniform(1e-4, 1e-3),
+                m: g.usize_in(2, 16),
+                epsilon: g.log_uniform(3e-3, 3e-2),
+                nu: g.f64_in(2.0, 8.0),
+                c: 1.0,
+            };
+            let cf = closed_form(&inp);
+            let nm = numeric(&inp, cf.batch);
+            if nm.overall_time > cf.overall_time * (1.0 + 1e-9) + 1e-9 {
+                return Err(format!(
+                    "numeric {} > closed form {}",
+                    nm.overall_time, cf.overall_time
+                ));
+            }
+            let b_raw = 2.0
+                * inp.c
+                * inp.m as f64
+                * (inp.t_cm / inp.t_cp_per_sample * inp.epsilon).sqrt();
+            let band = 3.0 * (1.0 + b_raw);
+            if cf.overall_time <= band * nm.overall_time {
+                Ok(())
+            } else {
+                Err(format!(
+                    "closed form {} vs numeric {} exceeds band {band:.1}× (b_raw {b_raw:.2})",
+                    cf.overall_time, nm.overall_time
+                ))
+            }
+        });
+    }
+
+    #[test]
     fn prop_numeric_beats_closed_form_on_relaxation() {
         // numeric() explores the same ladder the closed form projects onto,
         // so it should never be (meaningfully) worse.

@@ -34,6 +34,9 @@ pub struct ExpOpts {
     pub seed: u64,
     /// Artifacts directory.
     pub artifacts_dir: String,
+    /// Training backend every harness run uses (`defl exp --backend`,
+    /// `DEFL_BACKEND=native` in CI). Default: the build's default.
+    pub backend: crate::runtime::BackendKind,
 }
 
 impl Default for ExpOpts {
@@ -44,23 +47,35 @@ impl Default for ExpOpts {
             rounds: None,
             seed: 42,
             artifacts_dir: "artifacts".into(),
+            backend: crate::runtime::BackendKind::default(),
         }
     }
 }
 
 impl ExpOpts {
-    pub fn from_env() -> Self {
+    /// Environment knobs: `DEFL_FAST=1`, `DEFL_BACKEND=pjrt|native`.
+    /// An unparseable `DEFL_BACKEND` is a hard error (same contract as
+    /// `defl exp --backend`), so a typo can't silently run the wrong
+    /// substrate.
+    pub fn from_env() -> anyhow::Result<Self> {
         let mut o = ExpOpts::default();
         if std::env::var("DEFL_FAST").as_deref() == Ok("1") {
             o.fast = true;
         }
-        o
+        if let Ok(b) = std::env::var("DEFL_BACKEND") {
+            if !b.is_empty() {
+                o.backend = crate::runtime::BackendKind::parse(&b)
+                    .map_err(|e| anyhow::anyhow!("DEFL_BACKEND: {e}"))?;
+            }
+        }
+        Ok(o)
     }
 
     /// Apply the common knobs to a config.
     pub fn apply(&self, cfg: &mut ExperimentConfig) {
         cfg.seed = self.seed;
         cfg.artifacts_dir = self.artifacts_dir.clone();
+        cfg.backend = self.backend;
         if let Some(r) = self.rounds {
             cfg.max_rounds = r;
         }
@@ -114,5 +129,14 @@ mod tests {
         opts.apply(&mut cfg);
         assert!(cfg.max_rounds <= 4);
         assert!(cfg.train_per_device <= 64);
+    }
+
+    #[test]
+    fn apply_threads_backend_through() {
+        use crate::runtime::BackendKind;
+        let opts = ExpOpts { backend: BackendKind::Native, ..Default::default() };
+        let mut cfg = ExperimentConfig::default();
+        opts.apply(&mut cfg);
+        assert_eq!(cfg.backend, BackendKind::Native);
     }
 }

@@ -16,8 +16,12 @@
 //!   SGD step written in JAX, with the dense-layer and parameter-update
 //!   hot spots as Pallas kernels, AOT-lowered to HLO text once by
 //!   `make artifacts`. Python never runs on the training path.
-//! * **Runtime** — [`runtime`] loads the HLO artifacts through the PJRT C
-//!   API (`xla` crate) and executes them from the round loop.
+//! * **Backends** — the round loop trains through a pluggable
+//!   [`runtime::TrainBackend`]: `pjrt` (feature `pjrt`) executes the HLO
+//!   artifacts through the PJRT C API (`xla` crate); `native` (feature
+//!   `native`) is a dependency-free pure-Rust softmax/MLP substrate that
+//!   makes end-to-end FL rounds runnable anywhere — CI included — with no
+//!   artifacts. Select with `--set backend.kind=pjrt|native`.
 //!
 //! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

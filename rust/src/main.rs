@@ -10,7 +10,9 @@
 //! The round schedule is pluggable: `--set engine.kind=sync` (paper
 //! default), `deadline` (straggler dropping, `engine.deadline_s`), or
 //! `async_buffered` (FedBuff-style, `engine.buffer_k`,
-//! `engine.staleness_exponent`) — see `DESIGN.md` §5.
+//! `engine.staleness_exponent`) — see `DESIGN.md` §5. So is the training
+//! substrate: `--set backend.kind=pjrt` (AOT HLO artifacts) or `native`
+//! (pure Rust, no artifacts) — `DESIGN.md` §7.
 
 use defl::config::{ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
@@ -48,11 +50,13 @@ fn usage() -> String {
     "defl — delay-efficient federated learning (paper reproduction)\n\n\
      USAGE:\n\
      \x20 defl train  [--config <toml>] [--set section.key=value ...]\n\
-     \x20             (e.g. --set engine.kind=sync|deadline|async_buffered)\n\
+     \x20             (e.g. --set engine.kind=sync|deadline|async_buffered,\n\
+     \x20                   --set backend.kind=pjrt|native)\n\
      \x20 defl plan   [--set section.key=value ...]\n\
      \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
      \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\
-     \x20 defl doctor [--artifacts <dir>]\n"
+     \x20             [--backend pjrt|native]\n\
+     \x20 defl doctor [--artifacts <dir>]   (needs the `pjrt` build feature)\n"
         .into()
 }
 
@@ -132,19 +136,26 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
         .opt("out-dir", "results", "output directory for JSON series")
         .opt("seed", "42", "base seed")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("backend", "", "training backend: pjrt|native (default: build default)")
         .flag("fast", "smoke-scale run (few rounds, tiny data)")
         .flag("analytic-only", "fig1a: skip training runs");
     let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
     let figure = args
         .positional
         .first()
-        .ok_or_else(|| anyhow::anyhow!("which figure? (fig1a|fig1b|fig1c|fig1d|fig2|ablation|all)"))?
+        .ok_or_else(|| {
+            anyhow::anyhow!("which figure? (fig1a|fig1b|fig1c|fig1d|fig2|ablation|all)")
+        })?
         .clone();
-    let mut opts = ExpOpts::from_env();
+    let mut opts = ExpOpts::from_env()?;
     opts.fast = opts.fast || args.flag("fast");
     opts.out_dir = args.str("out-dir");
     opts.seed = args.u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
     opts.artifacts_dir = args.str("artifacts");
+    let backend = args.str("backend");
+    if !backend.is_empty() {
+        opts.backend = defl::runtime::BackendKind::parse(&backend)?;
+    }
     let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
     if rounds > 0 {
         opts.rounds = Some(rounds);
@@ -174,6 +185,15 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_doctor(_rest: &[String]) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "`defl doctor` verifies the PJRT artifact round-trip, but this binary was built \
+         without the `pjrt` feature — rebuild with `--features pjrt`"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_doctor(rest: &[String]) -> anyhow::Result<()> {
     let cli = Cli::new("defl doctor", "verify artifacts + PJRT round-trip")
         .opt("artifacts", "artifacts", "artifacts directory");

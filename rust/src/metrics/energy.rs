@@ -61,6 +61,7 @@ impl EnergyModel {
     }
 
     /// Full per-device round record.
+    #[allow(clippy::too_many_arguments)] // one knob per physical quantity of eq. (energy)
     pub fn round(
         &self,
         tx_power_w: f64,

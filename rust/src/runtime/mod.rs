@@ -1,27 +1,45 @@
-//! PJRT runtime: loads the AOT artifacts and executes them on the hot path.
+//! Training backends — the execution substrate behind the round loop.
 //!
-//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`. One compiled
-//! executable per (model, entry-point, batch); all compilation happens at
-//! startup ([`Runtime::preload`]) so the round loop never compiles.
+//! [`TrainBackend`] is the seam between the FL control plane (coordinator,
+//! round engines, delay models, DEFL planner) and whatever actually
+//! computes gradients:
 //!
-//! Python never runs here — the artifacts are the only interface to L2/L1.
+//! * [`pjrt`] (feature `pjrt`, on by default) — the paper-faithful path:
+//!   the JAX/Pallas HLO artifacts executed through the PJRT C API
+//!   ([`Runtime`]), pinned to JAX golden vectors.
+//! * [`native`] (feature `native`, on by default) — a dependency-free
+//!   pure-Rust substrate: deterministic softmax regression and a
+//!   one-hidden-layer MLP with hand-written f32 SGD. End-to-end FL rounds
+//!   run on a bare machine — CI included — with no XLA download, and a
+//!   step costs microseconds, so fleet-scale (1k+ device) simulations are
+//!   testable. Its step is `&self`-shareable ([`ParallelStep`]), so
+//!   per-device local training fans out across the thread pool; PJRT
+//!   stays serialized on the calling thread (its client is not `Sync`).
+//!
+//! Select with `[backend] kind = "pjrt"|"native"` in the config
+//! (`--set backend.kind=native` on any CLI). What must stay faithful for
+//! the paper's claims is the delay/convergence *coupling* — the eq. (4)–(8)
+//! pricing, FedAvg weighting and the round engines — and that is
+//! backend-independent by construction: engines only see this trait.
 
-pub mod golden;
 pub mod registry;
+
+#[cfg(feature = "pjrt")]
+pub mod golden;
+#[cfg(feature = "native")]
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use registry::{ArtifactRegistry, ModelArtifacts};
 
-use crate::model::{ModelSpec, ParamSet};
-use std::collections::HashMap;
+#[cfg(feature = "native")]
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{marshal_probe, Runtime};
 
-/// Marshalling + execution wrapper around the PJRT CPU client.
-pub struct Runtime {
-    pub registry: ArtifactRegistry,
-    client: xla::PjRtClient,
-    /// (model, "train"|"eval", batch) → compiled executable
-    executables: HashMap<(String, &'static str, usize), xla::PjRtLoadedExecutable>,
-}
+use crate::data::Dataset;
+use crate::model::{ModelSpec, ParamSet};
 
 /// Output of one training step.
 #[derive(Debug)]
@@ -37,128 +55,92 @@ pub struct EvalOutput {
     pub correct: f32,
 }
 
-impl Runtime {
-    /// Open the artifact directory and create the PJRT CPU client.
-    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
-        let registry = ArtifactRegistry::open(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { registry, client, executables: HashMap::new() })
-    }
+/// Which training backend drives the hot path (`[backend] kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO artifacts through the PJRT C API (needs `make artifacts`).
+    Pjrt,
+    /// Pure-Rust softmax/MLP with hand-written SGD (no external deps).
+    Native,
+}
 
-    /// Compile every artifact of `model` needed for `batches` (train) and
-    /// all its eval batches. Compilation is front-loaded here so that the
-    /// coordinator's round loop is execute-only.
-    pub fn preload(&mut self, model: &str, batches: &[usize]) -> anyhow::Result<()> {
-        for &b in batches {
-            self.train_executable(model, b)?;
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            "native" | "rust" => Ok(BackendKind::Native),
+            other => anyhow::bail!("unknown backend {other:?} (pjrt|native)"),
         }
-        let eval_batches: Vec<usize> = self.registry.model(model)?.eval_batches();
-        for b in eval_batches {
-            self.eval_executable(model, b)?;
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
         }
-        Ok(())
     }
+}
 
-    pub fn spec(&self, model: &str) -> anyhow::Result<&ModelSpec> {
-        Ok(&self.registry.model(model)?.spec)
+impl Default for BackendKind {
+    /// The most faithful backend this build carries: `pjrt` when compiled
+    /// in, else `native` — so a `--no-default-features --features native`
+    /// binary runs out of the box with no artifacts.
+    fn default() -> Self {
+        if cfg!(feature = "pjrt") {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Native
+        }
     }
+}
 
-    /// Initial parameters as shipped by `make artifacts` (seeded npz).
-    pub fn initial_params(&self, model: &str) -> anyhow::Result<ParamSet> {
-        self.registry.model(model)?.load_init()
-    }
-
-    fn compile_file(&self, path: &std::path::Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        Ok(self.client.compile(&comp)?)
-    }
-
-    fn train_executable(
-        &mut self,
+/// A backend whose train step can be called through `&self` from many
+/// threads at once. The round engines use this to fan per-device local
+/// training out over the thread pool; backends with thread-bound state
+/// (PJRT) simply do not implement it and stay serialized.
+pub trait ParallelStep: Sync {
+    /// Identical contract to [`TrainBackend::train_step`], minus `&mut`.
+    fn train_step_shared(
+        &self,
         model: &str,
         batch: usize,
-    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
-        let key = (model.to_string(), "train", batch);
-        if !self.executables.contains_key(&key) {
-            let path = self.registry.model(model)?.train_path(batch)?;
-            crate::log_debug!("compiling {}", path.display());
-            let exe = self.compile_file(&path)?;
-            self.executables.insert(key.clone(), exe);
-        }
-        Ok(self.executables.get(&key).unwrap())
-    }
-
-    fn eval_executable(
-        &mut self,
-        model: &str,
-        batch: usize,
-    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
-        let key = (model.to_string(), "eval", batch);
-        if !self.executables.contains_key(&key) {
-            let path = self.registry.model(model)?.eval_path(batch)?;
-            crate::log_debug!("compiling {}", path.display());
-            let exe = self.compile_file(&path)?;
-            self.executables.insert(key.clone(), exe);
-        }
-        Ok(self.executables.get(&key).unwrap())
-    }
-
-    /// Available train batch sizes for a model (sorted ascending).
-    pub fn train_batches(&self, model: &str) -> anyhow::Result<Vec<usize>> {
-        Ok(self.registry.model(model)?.train_batches())
-    }
-
-    /// The eval batch size (the registry guarantees at least one).
-    pub fn eval_batch(&self, model: &str) -> anyhow::Result<usize> {
-        self.registry
-            .model(model)?
-            .eval_batches()
-            .first()
-            .copied()
-            .ok_or_else(|| anyhow::anyhow!("{model}: no eval artifact"))
-    }
-
-    fn params_to_literals(spec: &ModelSpec, params: &ParamSet) -> anyhow::Result<Vec<xla::Literal>> {
-        params
-            .leaves
-            .iter()
-            .zip(&spec.leaves)
-            .map(|(buf, leaf)| {
-                let dims: Vec<i64> = leaf.shape.iter().map(|&d| d as i64).collect();
-                Ok(xla::Literal::vec1(buf.as_slice()).reshape(&dims)?)
-            })
-            .collect()
-    }
-
-    fn batch_literals(
-        spec: &ModelSpec,
+        params: &ParamSet,
         x: &[f32],
         y: &[i32],
-        batch: usize,
-    ) -> anyhow::Result<(xla::Literal, xla::Literal)> {
-        let elems = spec.height * spec.width * spec.channels;
-        anyhow::ensure!(
-            x.len() == batch * elems,
-            "x has {} elems, want {batch}×{elems}",
-            x.len()
-        );
-        anyhow::ensure!(y.len() == batch, "y has {} labels, want {batch}", y.len());
-        let xl = xla::Literal::vec1(x).reshape(&[
-            batch as i64,
-            spec.height as i64,
-            spec.width as i64,
-            spec.channels as i64,
-        ])?;
-        let yl = xla::Literal::vec1(y);
-        Ok((xl, yl))
-    }
+        lr: f32,
+    ) -> anyhow::Result<StepOutput>;
+}
 
-    /// One mini-batch SGD step (fwd + bwd + Pallas update) — eq. (4)'s
-    /// workload, executed for real on the CPU PJRT backend.
-    pub fn train_step(
+/// The hot-path contract: everything the coordinator and the round
+/// engines need from an execution substrate. One mini-batch SGD step
+/// ([`TrainBackend::train_step`]) is eq. (4)'s priced unit of work.
+pub trait TrainBackend {
+    fn kind(&self) -> BackendKind;
+
+    /// Parameter layout + input dims of `model` (the manifest contract
+    /// for PJRT; built-in for native).
+    fn spec(&self, model: &str) -> anyhow::Result<ModelSpec>;
+
+    /// Deterministic initial parameters (seeded npz / seeded init).
+    fn initial_params(&self, model: &str) -> anyhow::Result<ParamSet>;
+
+    /// Train batch sizes this backend can execute (PJRT: the AOT ladder;
+    /// native: advisory — any batch executes).
+    fn train_batches(&self, model: &str) -> anyhow::Result<Vec<usize>>;
+
+    /// The eval batch size the default [`TrainBackend::evaluate`] tiles with.
+    fn eval_batch(&self, model: &str) -> anyhow::Result<usize>;
+
+    /// Closest executable train batch to a requested `want` (the DEFL b*
+    /// may not be available; PJRT clamps to the artifact ladder, native
+    /// runs it exactly).
+    fn nearest_train_batch(&self, model: &str, want: usize) -> anyhow::Result<usize>;
+
+    /// Front-load any compilation so the round loop is execute-only.
+    fn preload(&mut self, model: &str, batches: &[usize]) -> anyhow::Result<()>;
+
+    /// One mini-batch SGD step: returns updated params + mean batch loss.
+    fn train_step(
         &mut self,
         model: &str,
         batch: usize,
@@ -166,61 +148,32 @@ impl Runtime {
         x: &[f32],
         y: &[i32],
         lr: f32,
-    ) -> anyhow::Result<StepOutput> {
-        let spec = self.registry.model(model)?.spec.clone();
-        let mut args = Self::params_to_literals(&spec, params)?;
-        let (xl, yl) = Self::batch_literals(&spec, x, y, batch)?;
-        args.push(xl);
-        args.push(yl);
-        args.push(xla::Literal::from(lr));
-        let exe = self.train_executable(model, batch)?;
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let mut outs = result.to_tuple()?;
-        anyhow::ensure!(
-            outs.len() == spec.leaves.len() + 1,
-            "train_step returned {} outputs, want {}",
-            outs.len(),
-            spec.leaves.len() + 1
-        );
-        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
-        let leaves = outs
-            .into_iter()
-            .map(|l| Ok(l.to_vec::<f32>()?))
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(StepOutput { params: ParamSet { leaves }, loss })
-    }
+    ) -> anyhow::Result<StepOutput>;
 
     /// Summed loss + correct count over one eval batch.
-    pub fn eval_step(
+    fn eval_step(
         &mut self,
         model: &str,
         batch: usize,
         params: &ParamSet,
         x: &[f32],
         y: &[i32],
-    ) -> anyhow::Result<EvalOutput> {
-        let spec = self.registry.model(model)?.spec.clone();
-        let mut args = Self::params_to_literals(&spec, params)?;
-        let (xl, yl) = Self::batch_literals(&spec, x, y, batch)?;
-        args.push(xl);
-        args.push(yl);
-        let exe = self.eval_executable(model, batch)?;
-        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == 2, "eval_step returned {} outputs", outs.len());
-        Ok(EvalOutput {
-            loss_sum: outs[0].to_vec::<f32>()?[0],
-            correct: outs[1].to_vec::<f32>()?[0],
-        })
+    ) -> anyhow::Result<EvalOutput>;
+
+    /// The `&self`-shareable view of this backend, when its step supports
+    /// concurrent callers (native). `None` ⇒ engines serialize.
+    fn parallel(&self) -> Option<&dyn ParallelStep> {
+        None
     }
 
-    /// Evaluate over a whole test set (truncated to a multiple of the eval
-    /// batch). Returns (mean loss, accuracy, samples used).
-    pub fn evaluate(
+    /// Evaluate over a whole test set (default: tiled by
+    /// [`TrainBackend::eval_batch`], truncating the remainder). Returns
+    /// (mean loss, accuracy, samples used).
+    fn evaluate(
         &mut self,
         model: &str,
         params: &ParamSet,
-        test: &crate::data::Dataset,
+        test: &Dataset,
     ) -> anyhow::Result<(f64, f64, usize)> {
         let eb = self.eval_batch(model)?;
         let batches = test.n / eb;
@@ -239,25 +192,76 @@ impl Runtime {
     }
 }
 
-/// Perf-pass diagnostic: build the full literal argument list of a
-/// train_step without executing — isolates the marshalling cost the bench
-/// harness compares against the end-to-end step (EXPERIMENTS.md §Perf).
-pub fn marshal_probe(
-    rt: &Runtime,
-    model: &str,
-    batch: usize,
-    params: &ParamSet,
-    x: &[f32],
-    y: &[i32],
-) -> anyhow::Result<usize> {
-    let spec = &rt.registry.model(model)?.spec;
-    let mut args = Runtime::params_to_literals(spec, params)?;
-    let (xl, yl) = Runtime::batch_literals(spec, x, y, batch)?;
-    args.push(xl);
-    args.push(yl);
-    args.push(xla::Literal::from(0.01f32));
-    Ok(args.len())
+/// Build the backend a config asks for. `artifacts_dir` feeds the PJRT
+/// registry; `seed` feeds the native deterministic init.
+pub fn build_backend(
+    kind: BackendKind,
+    artifacts_dir: &str,
+    seed: u64,
+) -> anyhow::Result<Box<dyn TrainBackend>> {
+    match kind {
+        #[cfg(feature = "pjrt")]
+        BackendKind::Pjrt => {
+            let _ = seed;
+            Ok(Box::new(Runtime::new(artifacts_dir)?))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendKind::Pjrt => anyhow::bail!(
+            "backend.kind=pjrt (artifacts at {artifacts_dir:?}), but this binary was built \
+             without the `pjrt` feature — rebuild with `--features pjrt` or use \
+             `--set backend.kind=native`"
+        ),
+        #[cfg(feature = "native")]
+        BackendKind::Native => {
+            let _ = artifacts_dir;
+            Ok(Box::new(NativeBackend::new(seed)))
+        }
+        #[cfg(not(feature = "native"))]
+        BackendKind::Native => {
+            let _ = seed;
+            anyhow::bail!(
+                "backend.kind=native, but this binary was built without the `native` feature"
+            )
+        }
+    }
 }
 
-// Runtime behaviour is exercised by rust/tests/integration.rs against the
-// golden vectors JAX produced at artifact-build time.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parse_and_labels_roundtrip() {
+        for k in [BackendKind::Pjrt, BackendKind::Native] {
+            assert_eq!(BackendKind::parse(k.label()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::parse("xla").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("rust").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu-pod").is_err());
+    }
+
+    #[test]
+    fn default_kind_matches_compiled_features() {
+        let d = BackendKind::default();
+        if cfg!(feature = "pjrt") {
+            assert_eq!(d, BackendKind::Pjrt);
+        } else {
+            assert_eq!(d, BackendKind::Native);
+        }
+    }
+
+    #[cfg(feature = "native")]
+    #[test]
+    fn build_backend_native_works_without_artifacts() {
+        let be = build_backend(BackendKind::Native, "/nonexistent", 1).unwrap();
+        assert_eq!(be.kind(), BackendKind::Native);
+        assert!(be.spec("mlp").is_ok());
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn build_backend_pjrt_missing_artifacts_errors_helpfully() {
+        let err = build_backend(BackendKind::Pjrt, "/nonexistent-artifacts", 1).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

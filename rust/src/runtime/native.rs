@@ -1,0 +1,681 @@
+//! Pure-Rust training backend (feature `native`) — no XLA, no artifacts.
+//!
+//! The paper's contribution is the *delay schedule* (eq. 14/29's talk-vs-
+//! work trade-off), not the kernels: for the system to be testable on
+//! every commit, the learning substrate only has to be a small exact model
+//! whose loss really decreases under mini-batch SGD. This module provides
+//! two such models with hand-written f32 forward/backward/update:
+//!
+//! * **softmax regression** (`mnist_cnn`, `cifar_cnn` stand-ins) — convex,
+//!   so loss decrease under SGD is a theorem, not a hope;
+//! * **one-hidden-layer MLP** (the `mlp` model, ReLU hidden layer) — the
+//!   quickstart/`tiny` model, enough capacity to overfit the synthetic
+//!   tasks.
+//!
+//! The model *names* keep the `DatasetKind::model_name` binding so configs
+//! are backend-agnostic; natively the `_cnn` names are linear stand-ins.
+//! The wireless/compute delay models price this backend's own
+//! `ModelSpec::update_bits`, so the simulated system stays self-consistent
+//! (EXPERIMENTS.md §Backends records that native absolute numbers differ
+//! from the PJRT golden path for exactly this reason).
+//!
+//! Everything here is deterministic in `(seed, inputs)` and the struct is
+//! plain data (`Send + Sync`), so [`NativeBackend`] implements
+//! [`ParallelStep`] and per-device local training fans out across the
+//! coordinator's thread pool.
+
+use super::{BackendKind, EvalOutput, ParallelStep, StepOutput, TrainBackend};
+use crate::data::Dataset;
+use crate::model::{LeafSpec, ModelSpec, ParamSet};
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+/// Architecture of one native model.
+#[derive(Clone, Copy, Debug)]
+enum Arch {
+    /// `z = xW + b` — leaves `w [d,k]`, `b [k]`.
+    Softmax,
+    /// `z = relu(xW₁+b₁)W₂ + b₂` — leaves `w1 [d,h]`, `b1 [h]`,
+    /// `w2 [h,k]`, `b2 [k]`.
+    Mlp { hidden: usize },
+}
+
+struct NativeModel {
+    spec: ModelSpec,
+    arch: Arch,
+}
+
+impl NativeModel {
+    fn input_dim(&self) -> usize {
+        self.spec.height * self.spec.width * self.spec.channels
+    }
+
+    /// Forward one sample into logits `z`; the MLP also fills `hpre`/`hact`
+    /// (pre/post ReLU hidden activations, sized `hidden`; unused for
+    /// softmax).
+    fn forward_row(
+        &self,
+        params: &ParamSet,
+        xi: &[f32],
+        hpre: &mut [f32],
+        hact: &mut [f32],
+        z: &mut [f32],
+    ) {
+        let k = self.spec.classes;
+        match self.arch {
+            Arch::Softmax => {
+                let (w, b) = (&params.leaves[0], &params.leaves[1]);
+                z.copy_from_slice(b);
+                for (di, &xv) in xi.iter().enumerate() {
+                    if xv != 0.0 {
+                        for (zj, &wv) in z.iter_mut().zip(&w[di * k..(di + 1) * k]) {
+                            *zj += xv * wv;
+                        }
+                    }
+                }
+            }
+            Arch::Mlp { hidden } => {
+                let (w1, b1) = (&params.leaves[0], &params.leaves[1]);
+                let (w2, b2) = (&params.leaves[2], &params.leaves[3]);
+                hpre.copy_from_slice(b1);
+                for (di, &xv) in xi.iter().enumerate() {
+                    if xv != 0.0 {
+                        for (hp, &wv) in hpre.iter_mut().zip(&w1[di * hidden..(di + 1) * hidden]) {
+                            *hp += xv * wv;
+                        }
+                    }
+                }
+                for (a, &p) in hact.iter_mut().zip(hpre.iter()) {
+                    *a = p.max(0.0);
+                }
+                z.copy_from_slice(b2);
+                for (hi, &hv) in hact.iter().enumerate() {
+                    if hv != 0.0 {
+                        for (zj, &wv) in z.iter_mut().zip(&w2[hi * k..(hi + 1) * k]) {
+                            *zj += hv * wv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Numerically-stable softmax cross-entropy on one row of logits.
+/// Returns the loss; `z` is left holding `dz = softmax(z) − onehot(label)`.
+fn xent_row(z: &mut [f32], label: usize) -> f32 {
+    let m = z.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in z.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let p_label = (z[label] / sum).max(f32::MIN_POSITIVE);
+    for v in z.iter_mut() {
+        *v /= sum;
+    }
+    z[label] -= 1.0;
+    -p_label.ln()
+}
+
+/// Tile size [`TrainBackend::eval_batch`] advertises and
+/// `NativeBackend::evaluate` tiles with (any batch executes; this only
+/// bounds per-call buffer size).
+const NATIVE_EVAL_BATCH: usize = 64;
+
+/// The dependency-free training substrate (`backend.kind = native`).
+pub struct NativeBackend {
+    models: BTreeMap<String, NativeModel>,
+    seed: u64,
+}
+
+fn softmax_model(name: &str, h: usize, w: usize, c: usize, classes: usize) -> NativeModel {
+    let d = h * w * c;
+    NativeModel {
+        spec: ModelSpec {
+            name: name.into(),
+            leaves: vec![
+                LeafSpec { name: "w".into(), shape: vec![d, classes] },
+                LeafSpec { name: "b".into(), shape: vec![classes] },
+            ],
+            classes,
+            height: h,
+            width: w,
+            channels: c,
+        },
+        arch: Arch::Softmax,
+    }
+}
+
+fn mlp_model(
+    name: &str,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    hidden: usize,
+) -> NativeModel {
+    let d = h * w * c;
+    NativeModel {
+        spec: ModelSpec {
+            name: name.into(),
+            leaves: vec![
+                LeafSpec { name: "w1".into(), shape: vec![d, hidden] },
+                LeafSpec { name: "b1".into(), shape: vec![hidden] },
+                LeafSpec { name: "w2".into(), shape: vec![hidden, classes] },
+                LeafSpec { name: "b2".into(), shape: vec![classes] },
+            ],
+            classes,
+            height: h,
+            width: w,
+            channels: c,
+        },
+        arch: Arch::Mlp { hidden },
+    }
+}
+
+/// FNV-1a over the model name — salts the per-model init streams.
+fn name_salt(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ u64::from(b)).wrapping_mul(0x100000001b3))
+}
+
+impl NativeBackend {
+    /// Build the model table. Dims mirror the dataset presets so any
+    /// config that works against the artifact registry works here too.
+    pub fn new(seed: u64) -> Self {
+        let mut models = BTreeMap::new();
+        models.insert("mlp".to_string(), mlp_model("mlp", 8, 8, 1, 10, 32));
+        models.insert("mnist_cnn".to_string(), softmax_model("mnist_cnn", 28, 28, 1, 10));
+        models.insert("cifar_cnn".to_string(), softmax_model("cifar_cnn", 32, 32, 3, 10));
+        NativeBackend { models, seed }
+    }
+
+    fn model(&self, name: &str) -> anyhow::Result<&NativeModel> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "native backend: model {name:?} not built in (have {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Deterministic Xavier-uniform weights, zero biases — seeded per
+    /// (backend seed, model name, leaf index), so every call returns the
+    /// exact same parameters.
+    fn init_params(&self, m: &NativeModel) -> ParamSet {
+        let leaves = m
+            .spec
+            .leaves
+            .iter()
+            .enumerate()
+            .map(|(li, leaf)| {
+                if leaf.shape.len() < 2 {
+                    vec![0.0; leaf.elems()]
+                } else {
+                    let fan = (leaf.shape[0] + leaf.shape[1]) as f64;
+                    let s = (6.0 / fan).sqrt();
+                    let mut rng =
+                        Pcg32::new(self.seed ^ name_salt(&m.spec.name), li as u64 + 1);
+                    (0..leaf.elems()).map(|_| rng.uniform_in(-s, s) as f32).collect()
+                }
+            })
+            .collect();
+        ParamSet { leaves }
+    }
+
+    fn check_batch(spec: &ModelSpec, batch: usize, x: &[f32], y: &[i32]) -> anyhow::Result<()> {
+        anyhow::ensure!(batch >= 1, "batch must be ≥ 1");
+        let d = spec.height * spec.width * spec.channels;
+        anyhow::ensure!(
+            x.len() == batch * d,
+            "x has {} elems, want {batch}×{d}",
+            x.len()
+        );
+        anyhow::ensure!(y.len() == batch, "y has {} labels, want {batch}", y.len());
+        anyhow::ensure!(
+            y.iter().all(|&l| (0..spec.classes as i32).contains(&l)),
+            "label out of range [0, {})",
+            spec.classes
+        );
+        Ok(())
+    }
+
+    /// One batch-SGD step of softmax regression. Gradients are taken at
+    /// the *original* params for the whole batch and applied into fresh
+    /// copies, i.e. a single exact step `w ← w − (lr/B)·Σᵢ ∇ℓᵢ(w)`.
+    fn step_softmax(
+        m: &NativeModel,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        lr: f32,
+    ) -> StepOutput {
+        let d = m.input_dim();
+        let k = m.spec.classes;
+        let mut nw = params.leaves[0].clone();
+        let mut nb = params.leaves[1].clone();
+        let scale = lr / batch as f32;
+        let mut z = vec![0f32; k];
+        let mut loss_sum = 0f64;
+        for i in 0..batch {
+            let xi = &x[i * d..(i + 1) * d];
+            m.forward_row(params, xi, &mut [], &mut [], &mut z);
+            loss_sum += xent_row(&mut z, y[i] as usize) as f64;
+            for (nbj, &g) in nb.iter_mut().zip(z.iter()) {
+                *nbj -= scale * g;
+            }
+            for (di, &xv) in xi.iter().enumerate() {
+                if xv != 0.0 {
+                    for (nwj, &g) in nw[di * k..(di + 1) * k].iter_mut().zip(z.iter()) {
+                        *nwj -= scale * xv * g;
+                    }
+                }
+            }
+        }
+        StepOutput {
+            params: ParamSet { leaves: vec![nw, nb] },
+            loss: (loss_sum / batch as f64) as f32,
+        }
+    }
+
+    /// One batch-SGD step of the one-hidden-layer ReLU MLP (same
+    /// grads-at-original-params contract as [`Self::step_softmax`]).
+    fn step_mlp(
+        m: &NativeModel,
+        hidden: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        lr: f32,
+    ) -> StepOutput {
+        let d = m.input_dim();
+        let k = m.spec.classes;
+        let (w1, b1) = (&params.leaves[0], &params.leaves[1]);
+        let (w2, b2) = (&params.leaves[2], &params.leaves[3]);
+        let mut nw1 = w1.clone();
+        let mut nb1 = b1.clone();
+        let mut nw2 = w2.clone();
+        let mut nb2 = b2.clone();
+        let scale = lr / batch as f32;
+        let mut hpre = vec![0f32; hidden];
+        let mut hact = vec![0f32; hidden];
+        let mut z = vec![0f32; k];
+        let mut dh = vec![0f32; hidden];
+        let mut loss_sum = 0f64;
+        for i in 0..batch {
+            let xi = &x[i * d..(i + 1) * d];
+            m.forward_row(params, xi, &mut hpre, &mut hact, &mut z);
+            loss_sum += xent_row(&mut z, y[i] as usize) as f64;
+            // z now holds dz = p − onehot. Output layer:
+            for (nbj, &g) in nb2.iter_mut().zip(z.iter()) {
+                *nbj -= scale * g;
+            }
+            for (hi, &hv) in hact.iter().enumerate() {
+                if hv != 0.0 {
+                    for (nwj, &g) in nw2[hi * k..(hi + 1) * k].iter_mut().zip(z.iter()) {
+                        *nwj -= scale * hv * g;
+                    }
+                }
+                // backprop through the ORIGINAL w2, masked by relu'
+                dh[hi] = if hpre[hi] > 0.0 {
+                    w2[hi * k..(hi + 1) * k]
+                        .iter()
+                        .zip(z.iter())
+                        .map(|(&wv, &g)| wv * g)
+                        .sum::<f32>()
+                } else {
+                    0.0
+                };
+            }
+            // Hidden layer:
+            for (nbj, &g) in nb1.iter_mut().zip(dh.iter()) {
+                *nbj -= scale * g;
+            }
+            for (di, &xv) in xi.iter().enumerate() {
+                if xv != 0.0 {
+                    for (nwj, &g) in nw1[di * hidden..(di + 1) * hidden].iter_mut().zip(dh.iter())
+                    {
+                        *nwj -= scale * xv * g;
+                    }
+                }
+            }
+        }
+        StepOutput {
+            params: ParamSet { leaves: vec![nw1, nb1, nw2, nb2] },
+            loss: (loss_sum / batch as f64) as f32,
+        }
+    }
+
+    fn eval_step_impl(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<EvalOutput> {
+        let m = self.model(model)?;
+        Self::check_batch(&m.spec, batch, x, y)?;
+        params.validate(&m.spec)?;
+        let d = m.input_dim();
+        let k = m.spec.classes;
+        let hidden = match m.arch {
+            Arch::Mlp { hidden } => hidden,
+            Arch::Softmax => 0,
+        };
+        let mut hpre = vec![0f32; hidden];
+        let mut hact = vec![0f32; hidden];
+        let mut z = vec![0f32; k];
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        for i in 0..batch {
+            let xi = &x[i * d..(i + 1) * d];
+            m.forward_row(params, xi, &mut hpre, &mut hact, &mut z);
+            let mut best = 0usize;
+            for (j, &v) in z.iter().enumerate().skip(1) {
+                if v > z[best] {
+                    best = j;
+                }
+            }
+            if best as i32 == y[i] {
+                correct += 1;
+            }
+            loss_sum += xent_row(&mut z, y[i] as usize) as f64;
+        }
+        Ok(EvalOutput { loss_sum: loss_sum as f32, correct: correct as f32 })
+    }
+}
+
+impl ParallelStep for NativeBackend {
+    fn train_step_shared(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<StepOutput> {
+        let m = self.model(model)?;
+        Self::check_batch(&m.spec, batch, x, y)?;
+        params.validate(&m.spec)?;
+        Ok(match m.arch {
+            Arch::Softmax => Self::step_softmax(m, params, x, y, batch, lr),
+            Arch::Mlp { hidden } => Self::step_mlp(m, hidden, params, x, y, batch, lr),
+        })
+    }
+}
+
+impl TrainBackend for NativeBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Native
+    }
+
+    fn spec(&self, model: &str) -> anyhow::Result<ModelSpec> {
+        Ok(self.model(model)?.spec.clone())
+    }
+
+    fn initial_params(&self, model: &str) -> anyhow::Result<ParamSet> {
+        Ok(self.init_params(self.model(model)?))
+    }
+
+    fn train_batches(&self, model: &str) -> anyhow::Result<Vec<usize>> {
+        self.model(model)?;
+        // Advisory ladder (for display/sweeps); any batch ≥ 1 executes.
+        Ok((0..=9).map(|p| 1usize << p).collect())
+    }
+
+    fn eval_batch(&self, model: &str) -> anyhow::Result<usize> {
+        self.model(model)?;
+        Ok(NATIVE_EVAL_BATCH)
+    }
+
+    fn nearest_train_batch(&self, model: &str, want: usize) -> anyhow::Result<usize> {
+        self.model(model)?;
+        Ok(want.max(1))
+    }
+
+    fn preload(&mut self, model: &str, _batches: &[usize]) -> anyhow::Result<()> {
+        self.model(model)?;
+        Ok(())
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<StepOutput> {
+        self.train_step_shared(model, batch, params, x, y, lr)
+    }
+
+    fn eval_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<EvalOutput> {
+        self.eval_step_impl(model, batch, params, x, y)
+    }
+
+    fn parallel(&self) -> Option<&dyn ParallelStep> {
+        Some(self)
+    }
+
+    /// Native steps take any batch size, so evaluation covers the whole
+    /// test set exactly (no truncation to a batch multiple).
+    fn evaluate(
+        &mut self,
+        model: &str,
+        params: &ParamSet,
+        test: &Dataset,
+    ) -> anyhow::Result<(f64, f64, usize)> {
+        anyhow::ensure!(test.n > 0, "empty test set");
+        let eb = self.eval_batch(model)?;
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut i = 0usize;
+        while i < test.n {
+            let b = (test.n - i).min(eb);
+            let idx: Vec<usize> = (i..i + b).collect();
+            let (x, y) = test.gather(&idx);
+            let out = self.eval_step_impl(model, b, params, &x, &y)?;
+            loss_sum += out.loss_sum as f64;
+            correct += out.correct as f64;
+            i += b;
+        }
+        Ok((loss_sum / test.n as f64, correct / test.n as f64, test.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{generate, SynthSpec};
+
+    fn batch_for(model: &str, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let spec = match model {
+            "mlp" => SynthSpec::tiny(b),
+            "mnist_cnn" => SynthSpec::mnist_like(b),
+            "cifar_cnn" => SynthSpec::cifar_like(b),
+            other => panic!("{other}"),
+        };
+        let ds = generate(&spec, seed);
+        let idx: Vec<usize> = (0..b).collect();
+        ds.gather(&idx)
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seed_sensitive() {
+        let a = NativeBackend::new(7);
+        let b = NativeBackend::new(7);
+        let c = NativeBackend::new(8);
+        for model in ["mlp", "mnist_cnn", "cifar_cnn"] {
+            let pa = a.initial_params(model).unwrap();
+            let pb = b.initial_params(model).unwrap();
+            let pc = c.initial_params(model).unwrap();
+            assert_eq!(pa.leaves, pb.leaves, "{model}");
+            assert_ne!(pa.leaves, pc.leaves, "{model}");
+            pa.validate(&a.spec(model).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn specs_match_dataset_dims() {
+        let be = NativeBackend::new(1);
+        let s = be.spec("mnist_cnn").unwrap();
+        assert_eq!((s.height, s.width, s.channels, s.classes), (28, 28, 1, 10));
+        let s = be.spec("cifar_cnn").unwrap();
+        assert_eq!((s.height, s.width, s.channels, s.classes), (32, 32, 3, 10));
+        let s = be.spec("mlp").unwrap();
+        assert_eq!((s.height, s.width, s.channels, s.classes), (8, 8, 1, 10));
+        assert!(s.update_bits() > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_lists_alternatives() {
+        let be = NativeBackend::new(1);
+        let err = be.spec("resnet152").unwrap_err();
+        assert!(err.to_string().contains("mlp"), "{err}");
+    }
+
+    #[test]
+    fn train_step_reduces_loss_on_fixed_batch_both_archs() {
+        let mut be = NativeBackend::new(3);
+        for model in ["mlp", "mnist_cnn"] {
+            let (x, y) = batch_for(model, 32, 5);
+            let mut params = be.initial_params(model).unwrap();
+            let first = be.train_step(model, 32, &params, &x, &y, 0.1).unwrap();
+            params = first.params;
+            let mut last = first.loss;
+            for _ in 0..29 {
+                let out = be.train_step(model, 32, &params, &x, &y, 0.1).unwrap();
+                params = out.params;
+                last = out.loss;
+            }
+            assert!(
+                last < first.loss,
+                "{model}: loss did not decrease ({} -> {last})",
+                first.loss
+            );
+            assert!(last.is_finite());
+        }
+    }
+
+    #[test]
+    fn trained_model_fits_its_batch() {
+        let mut be = NativeBackend::new(3);
+        let (x, y) = batch_for("mlp", 32, 9);
+        let mut params = be.initial_params("mlp").unwrap();
+        for _ in 0..60 {
+            params = be.train_step("mlp", 32, &params, &x, &y, 0.2).unwrap().params;
+        }
+        let out = be.eval_step("mlp", 32, &params, &x, &y).unwrap();
+        assert!(
+            out.correct >= 10.0,
+            "memorization should beat chance: {} / 32 correct",
+            out.correct
+        );
+    }
+
+    #[test]
+    fn zero_lr_step_preserves_params() {
+        let mut be = NativeBackend::new(4);
+        for model in ["mlp", "mnist_cnn"] {
+            let (x, y) = batch_for(model, 8, 2);
+            let params = be.initial_params(model).unwrap();
+            let out = be.train_step(model, 8, &params, &x, &y, 0.0).unwrap();
+            assert_eq!(out.params.leaves, params.leaves, "{model}");
+            assert!(out.loss > 0.0);
+        }
+    }
+
+    #[test]
+    fn train_step_is_deterministic_and_matches_shared_path() {
+        let mut be = NativeBackend::new(5);
+        let (x, y) = batch_for("mlp", 16, 3);
+        let params = be.initial_params("mlp").unwrap();
+        let a = be.train_step("mlp", 16, &params, &x, &y, 0.05).unwrap();
+        let b = be.train_step_shared("mlp", 16, &params, &x, &y, 0.05).unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.params.leaves, b.params.leaves);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_labels() {
+        let mut be = NativeBackend::new(6);
+        let params = be.initial_params("mlp").unwrap();
+        let (x, y) = batch_for("mlp", 8, 1);
+        assert!(be.train_step("mlp", 8, &params, &x[..10], &y, 0.1).is_err());
+        assert!(be.train_step("mlp", 8, &params, &x, &y[..4], 0.1).is_err());
+        let mut bad = y.clone();
+        bad[0] = 99;
+        assert!(be.train_step("mlp", 8, &params, &x, &bad, 0.1).is_err());
+        assert!(be.eval_step("mlp", 8, &params, &x[..10], &y).is_err());
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // Check ∂L/∂w and ∂L/∂b of the softmax model against a central
+        // difference of the (identical) eval loss. SGD exposes the
+        // gradient as g = (w_old − w_new)/lr.
+        let mut be = NativeBackend::new(7);
+        let model = "mnist_cnn";
+        let b = 4usize;
+        let (x, y) = batch_for(model, b, 11);
+        let params = be.initial_params(model).unwrap();
+        let lr = 1.0f32;
+        let out = be.train_step(model, b, &params, &x, &y, lr).unwrap();
+        let loss_at = |be: &mut NativeBackend, p: &ParamSet| -> f64 {
+            let o = be.eval_step(model, b, p, &x, &y).unwrap();
+            o.loss_sum as f64 / b as f64
+        };
+        let eps = 1e-2f32;
+        // one weight touching a mid-image pixel, and one bias
+        for (leaf, idx) in [(0usize, (14 * 28 + 14) * 10 + 3), (1usize, 3usize)] {
+            let analytic =
+                (params.leaves[leaf][idx] - out.params.leaves[leaf][idx]) as f64 / lr as f64;
+            let mut plus = params.clone();
+            plus.leaves[leaf][idx] += eps;
+            let mut minus = params.clone();
+            minus.leaves[leaf][idx] -= eps;
+            let numeric = (loss_at(&mut be, &plus) - loss_at(&mut be, &minus)) / (2.0 * eps as f64);
+            let tol = 0.25 * numeric.abs().max(analytic.abs()) + 2e-3;
+            assert!(
+                (analytic - numeric).abs() <= tol,
+                "leaf {leaf}[{idx}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn eval_counts_are_sane_and_whole_set_evaluate_works() {
+        let mut be = NativeBackend::new(8);
+        let ds = generate(&SynthSpec::tiny(300), 3); // not a multiple of 256
+        let params = be.initial_params("mlp").unwrap();
+        let (loss, acc, n) = be.evaluate("mlp", &params, &ds).unwrap();
+        assert_eq!(n, 300);
+        assert!(loss > 0.0 && loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn xent_row_loss_and_gradient_shape() {
+        let mut z = vec![1.0f32, 2.0, 0.5];
+        let loss = xent_row(&mut z, 1);
+        assert!(loss > 0.0);
+        // gradient sums to zero: Σ(p − onehot) = 1 − 1
+        let s: f32 = z.iter().sum();
+        assert!(s.abs() < 1e-5, "{s}");
+        // the true-label entry is negative (p₁ − 1 < 0)
+        assert!(z[1] < 0.0);
+    }
+}

@@ -1,0 +1,320 @@
+//! PJRT backend: loads the AOT artifacts and executes them on the hot path.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. One compiled
+//! executable per (model, entry-point, batch); all compilation happens at
+//! startup ([`Runtime::preload`]) so the round loop never compiles.
+//!
+//! Python never runs here — the artifacts are the only interface to L2/L1.
+//!
+//! [`Runtime`] implements [`TrainBackend`] (`backend.kind = pjrt`). The
+//! PJRT client handle is not `Sync`, so this backend does not opt into the
+//! [`super::ParallelStep`] fan-out: per-device train steps stay serialized
+//! on the calling thread (DESIGN.md §5).
+
+use super::{EvalOutput, StepOutput, TrainBackend};
+use crate::model::{ModelSpec, ParamSet};
+use crate::runtime::registry::ArtifactRegistry;
+use std::collections::HashMap;
+
+/// Marshalling + execution wrapper around the PJRT CPU client.
+pub struct Runtime {
+    pub registry: ArtifactRegistry,
+    client: xla::PjRtClient,
+    /// (model, "train"|"eval", batch) → compiled executable
+    executables: HashMap<(String, &'static str, usize), xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory and create the PJRT CPU client.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let registry = ArtifactRegistry::open(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { registry, client, executables: HashMap::new() })
+    }
+
+    /// Compile every artifact of `model` needed for `batches` (train) and
+    /// all its eval batches. Compilation is front-loaded here so that the
+    /// coordinator's round loop is execute-only.
+    pub fn preload(&mut self, model: &str, batches: &[usize]) -> anyhow::Result<()> {
+        for &b in batches {
+            self.train_executable(model, b)?;
+        }
+        let eval_batches: Vec<usize> = self.registry.model(model)?.eval_batches();
+        for b in eval_batches {
+            self.eval_executable(model, b)?;
+        }
+        Ok(())
+    }
+
+    pub fn spec(&self, model: &str) -> anyhow::Result<&ModelSpec> {
+        Ok(&self.registry.model(model)?.spec)
+    }
+
+    /// Initial parameters as shipped by `make artifacts` (seeded npz).
+    pub fn initial_params(&self, model: &str) -> anyhow::Result<ParamSet> {
+        self.registry.model(model)?.load_init()
+    }
+
+    fn compile_file(&self, path: &std::path::Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    fn train_executable(
+        &mut self,
+        model: &str,
+        batch: usize,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = (model.to_string(), "train", batch);
+        if !self.executables.contains_key(&key) {
+            let path = self.registry.model(model)?.train_path(batch)?;
+            crate::log_debug!("compiling {}", path.display());
+            let exe = self.compile_file(&path)?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(self.executables.get(&key).unwrap())
+    }
+
+    fn eval_executable(
+        &mut self,
+        model: &str,
+        batch: usize,
+    ) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = (model.to_string(), "eval", batch);
+        if !self.executables.contains_key(&key) {
+            let path = self.registry.model(model)?.eval_path(batch)?;
+            crate::log_debug!("compiling {}", path.display());
+            let exe = self.compile_file(&path)?;
+            self.executables.insert(key.clone(), exe);
+        }
+        Ok(self.executables.get(&key).unwrap())
+    }
+
+    /// Available train batch sizes for a model (sorted ascending).
+    pub fn train_batches(&self, model: &str) -> anyhow::Result<Vec<usize>> {
+        Ok(self.registry.model(model)?.train_batches())
+    }
+
+    /// The eval batch size (the registry guarantees at least one).
+    pub fn eval_batch(&self, model: &str) -> anyhow::Result<usize> {
+        self.registry
+            .model(model)?
+            .eval_batches()
+            .first()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("{model}: no eval artifact"))
+    }
+
+    fn params_to_literals(
+        spec: &ModelSpec,
+        params: &ParamSet,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        params
+            .leaves
+            .iter()
+            .zip(&spec.leaves)
+            .map(|(buf, leaf)| {
+                let dims: Vec<i64> = leaf.shape.iter().map(|&d| d as i64).collect();
+                Ok(xla::Literal::vec1(buf.as_slice()).reshape(&dims)?)
+            })
+            .collect()
+    }
+
+    fn batch_literals(
+        spec: &ModelSpec,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+    ) -> anyhow::Result<(xla::Literal, xla::Literal)> {
+        let elems = spec.height * spec.width * spec.channels;
+        anyhow::ensure!(
+            x.len() == batch * elems,
+            "x has {} elems, want {batch}×{elems}",
+            x.len()
+        );
+        anyhow::ensure!(y.len() == batch, "y has {} labels, want {batch}", y.len());
+        let xl = xla::Literal::vec1(x).reshape(&[
+            batch as i64,
+            spec.height as i64,
+            spec.width as i64,
+            spec.channels as i64,
+        ])?;
+        let yl = xla::Literal::vec1(y);
+        Ok((xl, yl))
+    }
+
+    /// One mini-batch SGD step (fwd + bwd + Pallas update) — eq. (4)'s
+    /// workload, executed for real on the CPU PJRT backend.
+    pub fn train_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<StepOutput> {
+        let spec = self.registry.model(model)?.spec.clone();
+        let mut args = Self::params_to_literals(&spec, params)?;
+        let (xl, yl) = Self::batch_literals(&spec, x, y, batch)?;
+        args.push(xl);
+        args.push(yl);
+        args.push(xla::Literal::from(lr));
+        let exe = self.train_executable(model, batch)?;
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == spec.leaves.len() + 1,
+            "train_step returned {} outputs, want {}",
+            outs.len(),
+            spec.leaves.len() + 1
+        );
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let leaves = outs
+            .into_iter()
+            .map(|l| Ok(l.to_vec::<f32>()?))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(StepOutput { params: ParamSet { leaves }, loss })
+    }
+
+    /// Summed loss + correct count over one eval batch.
+    pub fn eval_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<EvalOutput> {
+        let spec = self.registry.model(model)?.spec.clone();
+        let mut args = Self::params_to_literals(&spec, params)?;
+        let (xl, yl) = Self::batch_literals(&spec, x, y, batch)?;
+        args.push(xl);
+        args.push(yl);
+        let exe = self.eval_executable(model, batch)?;
+        let result = exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 2, "eval_step returned {} outputs", outs.len());
+        Ok(EvalOutput {
+            loss_sum: outs[0].to_vec::<f32>()?[0],
+            correct: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Evaluate over a whole test set (truncated to a multiple of the eval
+    /// batch). Returns (mean loss, accuracy, samples used).
+    pub fn evaluate(
+        &mut self,
+        model: &str,
+        params: &ParamSet,
+        test: &crate::data::Dataset,
+    ) -> anyhow::Result<(f64, f64, usize)> {
+        let eb = self.eval_batch(model)?;
+        let batches = test.n / eb;
+        anyhow::ensure!(batches > 0, "test set ({}) smaller than eval batch {eb}", test.n);
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for i in 0..batches {
+            let idx: Vec<usize> = (i * eb..(i + 1) * eb).collect();
+            let (x, y) = test.gather(&idx);
+            let out = self.eval_step(model, eb, params, &x, &y)?;
+            loss_sum += out.loss_sum as f64;
+            correct += out.correct as f64;
+        }
+        let n = batches * eb;
+        Ok((loss_sum / n as f64, correct / n as f64, n))
+    }
+}
+
+/// [`TrainBackend`] façade over the inherent methods (which tests, the
+/// golden checker and the benches keep calling directly). Method-call
+/// syntax inside this impl resolves to the inherent methods, so each
+/// delegation is a plain forward, not a recursion.
+impl TrainBackend for Runtime {
+    fn kind(&self) -> super::BackendKind {
+        super::BackendKind::Pjrt
+    }
+
+    fn spec(&self, model: &str) -> anyhow::Result<ModelSpec> {
+        Ok(Runtime::spec(self, model)?.clone())
+    }
+
+    fn initial_params(&self, model: &str) -> anyhow::Result<ParamSet> {
+        Runtime::initial_params(self, model)
+    }
+
+    fn train_batches(&self, model: &str) -> anyhow::Result<Vec<usize>> {
+        Runtime::train_batches(self, model)
+    }
+
+    fn eval_batch(&self, model: &str) -> anyhow::Result<usize> {
+        Runtime::eval_batch(self, model)
+    }
+
+    fn nearest_train_batch(&self, model: &str, want: usize) -> anyhow::Result<usize> {
+        Ok(self.registry.model(model)?.nearest_train_batch(want))
+    }
+
+    fn preload(&mut self, model: &str, batches: &[usize]) -> anyhow::Result<()> {
+        Runtime::preload(self, model, batches)
+    }
+
+    fn train_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<StepOutput> {
+        Runtime::train_step(self, model, batch, params, x, y, lr)
+    }
+
+    fn eval_step(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+    ) -> anyhow::Result<EvalOutput> {
+        Runtime::eval_step(self, model, batch, params, x, y)
+    }
+
+    fn evaluate(
+        &mut self,
+        model: &str,
+        params: &ParamSet,
+        test: &crate::data::Dataset,
+    ) -> anyhow::Result<(f64, f64, usize)> {
+        Runtime::evaluate(self, model, params, test)
+    }
+}
+
+/// Perf-pass diagnostic: build the full literal argument list of a
+/// train_step without executing — isolates the marshalling cost the bench
+/// harness compares against the end-to-end step (EXPERIMENTS.md §Perf).
+pub fn marshal_probe(
+    rt: &Runtime,
+    model: &str,
+    batch: usize,
+    params: &ParamSet,
+    x: &[f32],
+    y: &[i32],
+) -> anyhow::Result<usize> {
+    let spec = Runtime::spec(rt, model)?;
+    let mut args = Runtime::params_to_literals(spec, params)?;
+    let (xl, yl) = Runtime::batch_literals(spec, x, y, batch)?;
+    args.push(xl);
+    args.push(yl);
+    args.push(xla::Literal::from(0.01f32));
+    Ok(args.len())
+}
+
+// Runtime behaviour is exercised by rust/tests/integration.rs against the
+// golden vectors JAX produced at artifact-build time.

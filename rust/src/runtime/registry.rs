@@ -3,7 +3,9 @@
 //! The manifest is the L2↔L3 contract: parameter leaf order, input dims,
 //! artifact file names per (entry-point, batch), init/golden npz names.
 
-use crate::model::{ModelSpec, ParamSet};
+use crate::model::ModelSpec;
+#[cfg(feature = "pjrt")]
+use crate::model::ParamSet;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -52,7 +54,9 @@ impl ModelArtifacts {
         self.eval
             .get(&batch)
             .map(|f| self.dir.join(f))
-            .ok_or_else(|| anyhow::anyhow!("{}: no eval artifact for batch {batch}", self.spec.name))
+            .ok_or_else(|| {
+                anyhow::anyhow!("{}: no eval artifact for batch {batch}", self.spec.name)
+            })
     }
 
     pub fn init_path(&self) -> PathBuf {
@@ -80,12 +84,15 @@ impl ModelArtifacts {
     }
 
     /// Load the seeded initial parameters (npz leaf names = spec names).
+    #[cfg(feature = "pjrt")]
     pub fn load_init(&self) -> anyhow::Result<ParamSet> {
         load_params_npz(&self.init_path(), &self.spec)
     }
 }
 
-/// Read a ParamSet out of an npz keyed by leaf names.
+/// Read a ParamSet out of an npz keyed by leaf names (npz IO comes from
+/// the `xla` crate, so this is `pjrt`-only).
+#[cfg(feature = "pjrt")]
 pub fn load_params_npz(path: &Path, spec: &ModelSpec) -> anyhow::Result<ParamSet> {
     use xla::FromRawBytes;
     let entries: Vec<(String, xla::Literal)> = xla::Literal::read_npz(path, &())?;

@@ -54,7 +54,8 @@ impl Cli {
 
     /// Boolean flag (`--verbose`).
     pub fn flag(mut self, name: &str, help: &str) -> Self {
-        self.opts.push(Opt { name: name.into(), kind: Kind::Flag, help: help.into(), required: false });
+        self.opts
+            .push(Opt { name: name.into(), kind: Kind::Flag, help: help.into(), required: false });
         self
     }
 
@@ -136,7 +137,9 @@ impl Cli {
                     .opts
                     .iter()
                     .find(|o| o.name == name)
-                    .ok_or_else(|| CliError(format!("unknown option --{name}\n\n{}", self.help_text())))?;
+                    .ok_or_else(|| {
+                        CliError(format!("unknown option --{name}\n\n{}", self.help_text()))
+                    })?;
                 match &opt.kind {
                     Kind::Flag => {
                         if inline.is_some() {
@@ -164,7 +167,11 @@ impl Cli {
         }
         for o in &self.opts {
             if o.required && !out.values.contains_key(&o.name) {
-                return Err(CliError(format!("missing required --{}\n\n{}", o.name, self.help_text())));
+                return Err(CliError(format!(
+                    "missing required --{}\n\n{}",
+                    o.name,
+                    self.help_text()
+                )));
             }
         }
         Ok(out)

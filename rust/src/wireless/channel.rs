@@ -241,8 +241,10 @@ mod tests {
 
     #[test]
     fn farther_devices_have_lower_mean_gain() {
-        let near = DeviceLink { distance_m: 100.0, path_loss_db: path_loss_db(100.0), shadowing_db: 0.0 };
-        let far = DeviceLink { distance_m: 400.0, path_loss_db: path_loss_db(400.0), shadowing_db: 0.0 };
+        let near =
+            DeviceLink { distance_m: 100.0, path_loss_db: path_loss_db(100.0), shadowing_db: 0.0 };
+        let far =
+            DeviceLink { distance_m: 400.0, path_loss_db: path_loss_db(400.0), shadowing_db: 0.0 };
         assert!(near.mean_gain() > far.mean_gain());
     }
 

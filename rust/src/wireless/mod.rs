@@ -51,7 +51,13 @@ pub fn uplink_time(update_bits: f64, rate_bps: f64) -> f64 {
 }
 
 /// Eq. (7): synchronous-round communication time = slowest device.
+///
+/// An empty fleet has no meaningful round time — silently answering `0.0`
+/// once masked a selection bug, so it is a `debug_assert` now (config
+/// validation enforces `devices > 0`, and every in-tree caller passes the
+/// full per-device draw).
 pub fn round_time(per_device: &[f64]) -> f64 {
+    debug_assert!(!per_device.is_empty(), "round_time over an empty fleet");
     per_device.iter().copied().fold(0.0, f64::max)
 }
 
@@ -103,7 +109,23 @@ mod tests {
     #[test]
     fn round_time_is_max() {
         assert_eq!(round_time(&[0.1, 0.5, 0.3]), 0.5);
-        assert_eq!(round_time(&[]), 0.0);
+        assert_eq!(round_time(&[0.2]), 0.2);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "empty fleet")]
+    fn round_time_empty_fleet_asserts() {
+        round_time(&[]);
+    }
+
+    #[test]
+    fn infinite_uplink_propagates_to_round_time() {
+        // a dead link (rate 0) makes the *synchronous* round unbounded —
+        // the deadline engine is the component that must cut this off
+        // (see coordinator::engine::deadline's unit tests).
+        let t = uplink_time(1e6, 0.0);
+        assert_eq!(round_time(&[0.1, t]), f64::INFINITY);
     }
 
     #[test]

@@ -1,12 +1,16 @@
-//! Integration tests across runtime + coordinator, against real artifacts.
+//! Integration tests across the PJRT runtime + coordinator, against real
+//! artifacts.
 //!
 //! These need `make artifacts` to have run (the repo ships a Makefile rule;
 //! tests skip with a clear message if artifacts are absent — CI runs
-//! `make test` which builds them first).
+//! `make test` which builds them first). The artifact-free end-to-end
+//! coverage lives in `rust/tests/native_backend.rs`, which runs — without
+//! skipping — on every build carrying the `native` feature.
+#![cfg(feature = "pjrt")]
 
 use defl::config::{DatasetKind, ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
-use defl::runtime::Runtime;
+use defl::runtime::{Runtime, TrainBackend};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -37,6 +41,7 @@ fn tiny_cfg(name: &str, policy: Policy) -> ExperimentConfig {
     cfg.eval_every = 3;
     cfg.policy = policy;
     cfg.seed = 7;
+    cfg.backend = defl::runtime::BackendKind::Pjrt;
     cfg.artifacts_dir = artifacts_dir().unwrap().to_string_lossy().into_owned();
     cfg
 }
@@ -140,8 +145,34 @@ fn fl_defl_policy_builds_and_plans() {
     assert!(sys.batch >= 1);
     assert!((0.0..=1.0).contains(&plan.theta));
     // requested batch clamps to an existing artifact batch
-    let avail = sys.runtime.train_batches("mlp").unwrap();
+    let avail = sys.backend.train_batches("mlp").unwrap();
     assert!(avail.contains(&sys.batch), "{:?} vs {}", avail, sys.batch);
+}
+
+/// Satellite check (mirrored for the native backend in
+/// `rust/tests/native_backend.rs` and `runtime::native`'s unit tests):
+/// repeated PJRT train steps on one fixed synthetic batch reduce the loss.
+#[test]
+fn train_step_reduces_loss_on_fixed_batch() {
+    let dir = require_artifacts!();
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut params = rt.initial_params("mlp").unwrap();
+    let ds = defl::data::synth::generate(&defl::data::synth::SynthSpec::tiny(16), 11);
+    let idx: Vec<usize> = (0..16).collect();
+    let (x, y) = ds.gather(&idx);
+    let first = rt.train_step("mlp", 16, &params, &x, &y, 0.1).unwrap();
+    params = first.params;
+    let mut last = first.loss;
+    for _ in 0..19 {
+        let out = rt.train_step("mlp", 16, &params, &x, &y, 0.1).unwrap();
+        params = out.params;
+        last = out.loss;
+    }
+    assert!(
+        last < first.loss,
+        "pjrt loss did not decrease: {} -> {last}",
+        first.loss
+    );
 }
 
 #[test]
