@@ -2,36 +2,83 @@
 //! (EXPERIMENTS.md §Perf records these before/after optimization), plus
 //! the train/eval step of every compiled backend per batch size.
 //!
-//! `DEFL_BENCH_FAST=1` shrinks iteration counts (the CI smoke lane);
-//! `DEFL_BENCH_JSON=path.json` additionally writes the machine-readable
-//! report CI uploads as the perf-trajectory artifact.
+//! The aggregation benches cover both the allocating `federated_average`
+//! (kept for comparison) and the streaming `FedAccumulator` fold the round
+//! engines actually run, at 10/100/1000 devices; `native_round_loop_*`
+//! times one whole engine round (plan → batched in-place train → delta
+//! fold) end to end. `native_train_step_reference_*` keeps the
+//! pre-batching per-sample kernel in the suite so the batched speedup is
+//! measurable inside a single run.
+//!
+//! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
+//! count behind the 1000-device fold (64 sets cycled instead of 1000
+//! resident — the fold cost is identical, the setup footprint is not: CI
+//! smoke should not allocate 400 MB); `DEFL_BENCH_JSON=path.json`
+//! additionally writes the machine-readable report CI uploads and diffs
+//! against the committed baseline (tools/bench_diff.py).
 
 use defl::bench::Suite;
 use defl::data::synth::{generate, SynthSpec};
-use defl::model::{federated_average, ParamSet};
+use defl::model::{federated_average, FedAccumulator, ParamSet};
 use defl::util::rng::Pcg32;
 use defl::wireless::{Channel, ChannelConfig};
 
-fn main() -> anyhow::Result<()> {
-    let mut suite = Suite::new("hotpath");
+/// mnist_cnn-ish leaf layout (~103k params).
+const LEAVES_103K: [usize; 4] = [100_352, 128, 1_280, 10];
 
-    // --- aggregation (the L3 CPU hot spot) ---------------------------
-    let leaves: Vec<usize> = vec![100_352, 128, 1_280, 10]; // mnist_cnn-ish
-    let mut rng = Pcg32::seeded(1);
-    let sets: Vec<ParamSet> = (0..10)
+fn random_sets(n: usize, leaves: &[usize], seed: u64) -> Vec<ParamSet> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n)
         .map(|_| ParamSet {
             leaves: leaves
                 .iter()
-                .map(|&n| (0..n).map(|_| rng.uniform() as f32).collect())
+                .map(|&len| (0..len).map(|_| rng.uniform() as f32).collect())
                 .collect(),
         })
-        .collect();
+        .collect()
+}
+
+fn fast_mode() -> bool {
+    std::env::var("DEFL_BENCH_FAST").as_deref() == Ok("1")
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut suite = Suite::new("hotpath");
+    let total_params: usize = LEAVES_103K.iter().sum();
+
+    // --- aggregation (the L3 CPU hot spot) ---------------------------
+    let sets = random_sets(10, &LEAVES_103K, 1);
     let weights = vec![600.0; 10];
-    let total_params: usize = leaves.iter().sum();
+    // Hoisted out of the timed closure: the old bench rebuilt this ref
+    // vec per iteration and so timed an allocation alongside the fold.
+    let refs: Vec<&ParamSet> = sets.iter().collect();
     suite.bench_units("fedavg_10dev_103k", (10 * total_params) as f64, || {
-        let refs: Vec<&ParamSet> = sets.iter().collect();
         federated_average(&refs, &weights)
     });
+
+    // The engines' path: stream weighted deltas into a preallocated
+    // accumulator and apply to a resident global — zero allocation per
+    // round at any fleet size.
+    let mut global = ParamSet::zeros_matching(&sets[0]);
+    let mut acc = FedAccumulator::zeros_like(&sets[0]);
+    for (devices, label) in [
+        (10usize, "fedavg_stream_10dev_103k"),
+        (100, "fedavg_stream_100dev_103k"),
+        (1000, "fedavg_stream_1000dev_103k"),
+    ] {
+        // Distinct resident sets: full count normally (honest memory
+        // traffic), capped in CI smoke to bound the footprint.
+        let distinct = if fast_mode() { devices.min(64) } else { devices };
+        let pool = random_sets(distinct, &LEAVES_103K, 2 + devices as u64);
+        suite.bench_units(label, (devices * total_params) as f64, || {
+            acc.begin(600.0 * devices as f64);
+            for i in 0..devices {
+                acc.fold(600.0, &pool[i % distinct]);
+            }
+            acc.apply_delta_to(&mut global);
+            acc.count()
+        });
+    }
 
     // --- channel sampling --------------------------------------------
     let mut channel = Channel::new(ChannelConfig::default(), 10, 3);
@@ -43,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     let idx: Vec<usize> = (0..64).collect();
     suite.bench_units("gather_b64", 64.0, || ds.gather(&idx));
 
-    // --- native backend steps (no artifacts needed) --------------------
+    // --- native backend steps + whole-round loop (no artifacts needed) --
     #[cfg(feature = "native")]
     native_benches(&mut suite)?;
 
@@ -60,7 +107,10 @@ fn main() -> anyhow::Result<()> {
 
 #[cfg(feature = "native")]
 fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
-    use defl::runtime::{NativeBackend, TrainBackend};
+    use defl::config::{DatasetKind, ExperimentConfig, Policy};
+    use defl::coordinator::FlSystem;
+    use defl::runtime::{BackendKind, NativeBackend, ParallelStep, TrainBackend};
+
     let mut be = NativeBackend::new(5);
     for (model, spec_fn) in [
         ("mlp", SynthSpec::tiny as fn(usize) -> SynthSpec),
@@ -74,12 +124,48 @@ fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
             suite.bench_units(&format!("native_train_step_{model}_b{b}"), b as f64, || {
                 be.train_step(model, b, &params, &x, &y, 0.01).unwrap()
             });
+            // the engines' path: in-place batched step through a reusable
+            // scratch — no output clone, no allocation after warmup
+            let mut scratch = ParallelStep::new_scratch(&be, model, b)?;
+            let mut live = params.clone();
+            let name = format!("native_train_step_inplace_{model}_b{b}");
+            suite.bench_units(&name, b as f64, || {
+                be.train_step_in_place(model, b, &mut live, &x, &y, 0.01, &mut *scratch)
+                    .unwrap()
+            });
+            // the pre-batching per-sample kernel, for the before/after
+            // factor inside one run
+            suite.bench_units(&format!("native_train_step_reference_{model}_b{b}"), b as f64, || {
+                be.train_step_reference(model, b, &params, &x, &y, 0.01).unwrap()
+            });
         }
         let eds = generate(&spec_fn(256), 6);
         let idx: Vec<usize> = (0..256).collect();
         let (ex, ey) = eds.gather(&idx);
         suite.bench_units(&format!("native_eval_step_{model}_b256"), 256.0, || {
             be.eval_step(model, 256, &params, &ex, &ey).unwrap()
+        });
+    }
+
+    // Whole-round-loop benches: one engine round end to end — cohort
+    // selection, fan-out plan + batched in-place training, uplink draw,
+    // streaming delta fold — at 100 and 1000 devices.
+    for devices in [100usize, 1000] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("bench-round-{devices}");
+        cfg.dataset = DatasetKind::Tiny;
+        cfg.devices = devices;
+        cfg.train_per_device = 8;
+        cfg.test_size = 64;
+        cfg.max_rounds = 1;
+        cfg.policy = Policy::Fixed { batch: 8, local_rounds: 1 };
+        cfg.threads = 4;
+        cfg.seed = 7;
+        cfg.backend = BackendKind::Native;
+        cfg.artifacts_dir = "/nonexistent-on-purpose".into();
+        let mut sys = FlSystem::build(cfg)?;
+        suite.bench_units(&format!("native_round_loop_{devices}dev_b8"), devices as f64, || {
+            sys.round().unwrap()
         });
     }
     Ok(())

@@ -1,9 +1,18 @@
 //! A simulated mobile edge device: its data shard, its batching RNG, and
 //! the V-round local SGD loop (Algorithm 1, step 3).
+//!
+//! The device owns every buffer its local round needs — the gathered batch
+//! plan, the local-model/delta buffer and the backend's step scratch — and
+//! reuses them round over round, so a warm round loop runs per-device
+//! training without touching the allocator (DESIGN.md §8). After
+//! [`Device::train_planned_shared`] / [`Device::train_planned_mut`] the
+//! device holds its update **delta** `Δ = w_local − w_global`; the round
+//! engines fold those deltas straight into the coordinator's preallocated
+//! [`crate::model::FedAccumulator`] instead of copying K full models.
 
 use crate::data::Dataset;
 use crate::model::ParamSet;
-use crate::runtime::{ParallelStep, TrainBackend};
+use crate::runtime::{ParallelStep, StepScratch, TrainBackend};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
@@ -17,13 +26,37 @@ pub struct Device {
     /// Epoch-style sampling cursor (reshuffled when exhausted).
     cursor: usize,
     order: Vec<usize>,
+    /// Reusable mini-batch index buffer (next_batch_into's workspace).
+    idx_buf: Vec<usize>,
+    /// Reusable gathered batch plan: `plan[..planned]` holds this round's
+    /// V mini-batches (x, y); buffers persist across rounds.
+    plan: Vec<(Vec<f32>, Vec<i32>)>,
+    /// Batches currently planned (plan entries beyond this are stale).
+    planned: usize,
+    /// Local-model buffer during training; after a local round it holds
+    /// the update delta `Δ = w_local − w_global`.
+    delta: Option<ParamSet>,
+    /// The backend's reusable step workspace (lazy; sized at first use).
+    scratch: Option<Box<dyn StepScratch>>,
 }
 
 impl Device {
     pub fn new(id: usize, shard: Vec<usize>, data: Arc<Dataset>, seed: u64) -> Self {
         assert!(!shard.is_empty(), "device {id} got an empty shard");
         let order = shard.clone();
-        Device { id, shard, data, rng: Pcg32::new(seed, id as u64 + 1), cursor: 0, order }
+        Device {
+            id,
+            shard,
+            data,
+            rng: Pcg32::new(seed, id as u64 + 1),
+            cursor: 0,
+            order,
+            idx_buf: Vec::new(),
+            plan: Vec::new(),
+            planned: 0,
+            delta: None,
+            scratch: None,
+        }
     }
 
     /// Local data size D_m (the FedAvg aggregation weight, eq. 2).
@@ -31,10 +64,12 @@ impl Device {
         self.shard.len()
     }
 
-    /// Next mini-batch of `b` sample indices: epoch sampling without
-    /// replacement, reshuffling between epochs (standard mini-batch SGD).
-    fn next_batch(&mut self, b: usize) -> Vec<usize> {
-        let mut out = Vec::with_capacity(b);
+    /// Next mini-batch of `b` sample indices into `out`: epoch sampling
+    /// without replacement, reshuffling between epochs (standard
+    /// mini-batch SGD). The RNG stream depends only on the draw sequence,
+    /// never on the output buffer.
+    fn next_batch_into(&mut self, b: usize, out: &mut Vec<usize>) {
+        out.clear();
         while out.len() < b {
             if self.cursor == 0 {
                 self.rng.shuffle(&mut self.order);
@@ -43,87 +78,126 @@ impl Device {
             out.extend_from_slice(&self.order[self.cursor..self.cursor + take]);
             self.cursor = (self.cursor + take) % self.order.len();
         }
-        out
     }
 
-    /// Draw and gather the next `v` mini-batches (the device-local, RNG +
-    /// memcpy half of Algorithm 1 step 3). Batch indices depend only on the
-    /// device's private RNG, never on training results, so the whole plan
-    /// can be materialised up front — and, across devices, in parallel
+    /// Draw and gather the next `v` mini-batches into the device's
+    /// reusable plan buffers (the device-local, RNG + memcpy half of
+    /// Algorithm 1 step 3). Batch indices depend only on the device's
+    /// private RNG, never on training results, so the whole plan can be
+    /// materialised up front — and, across devices, in parallel
     /// ([`crate::util::threadpool::parallel_map`]) — while producing the
     /// exact same batch sequence as drawing one batch per iteration.
-    pub fn plan_batches(&mut self, batch: usize, v: usize) -> Vec<(Vec<f32>, Vec<i32>)> {
+    pub fn plan_batches_into(&mut self, batch: usize, v: usize) {
         assert!(v >= 1, "V must be ≥ 1");
-        (0..v)
-            .map(|_| {
-                let idx = self.next_batch(batch);
-                self.data.gather(&idx)
-            })
-            .collect()
-    }
-
-    /// Execute `v` SGD iterations over a pre-gathered batch plan (the
-    /// backend half of Algorithm 1 step 3); returns the local model and
-    /// the mean local training loss. Associated fn: needs no `&self`, so
-    /// the round engines can run it while the device list is not borrowed.
-    pub fn train_planned(
-        be: &mut dyn TrainBackend,
-        model: &str,
-        global: &ParamSet,
-        batch: usize,
-        plan: &[(Vec<f32>, Vec<i32>)],
-        lr: f32,
-    ) -> anyhow::Result<(ParamSet, f64)> {
-        assert!(!plan.is_empty(), "V must be ≥ 1");
-        let mut params = global.clone();
-        let mut loss_acc = 0f64;
-        for (x, y) in plan {
-            let out = be.train_step(model, batch, &params, x, y, lr)?;
-            params = out.params;
-            loss_acc += out.loss as f64;
+        if self.plan.len() < v {
+            self.plan.resize_with(v, Default::default);
         }
-        Ok((params, loss_acc / plan.len() as f64))
+        let mut idx = std::mem::take(&mut self.idx_buf);
+        let mut plan = std::mem::take(&mut self.plan);
+        for (x, y) in plan[..v].iter_mut() {
+            self.next_batch_into(batch, &mut idx);
+            self.data.gather_into(&idx, x, y);
+        }
+        self.plan = plan;
+        self.idx_buf = idx;
+        self.planned = v;
     }
 
-    /// [`Device::train_planned`] through a `&self`-shareable backend — the
-    /// variant the engines fan out over the thread pool when the backend
-    /// opts into [`ParallelStep`] (native). Iteration order and arithmetic
-    /// are identical to the `&mut` path, so a parallel run is bit-identical
-    /// to a sequential one.
+    /// The planned batches of the current round (empty until
+    /// [`Device::plan_batches_into`] ran).
+    pub fn planned_batches(&self) -> &[(Vec<f32>, Vec<i32>)] {
+        &self.plan[..self.planned]
+    }
+
+    /// This round's update delta `Δ = w_local − w_global` — valid after a
+    /// `train_planned_*` call, until the next one.
+    pub fn delta(&self) -> &ParamSet {
+        self.delta.as_ref().expect("delta read before local training")
+    }
+
+    /// Reuse (or first-allocate) the local-model buffer, loaded with the
+    /// global model.
+    fn pull_global(&mut self, global: &ParamSet) -> ParamSet {
+        match self.delta.take() {
+            Some(mut p) if p.same_shape(global) => {
+                p.copy_from(global);
+                p
+            }
+            _ => global.clone(),
+        }
+    }
+
+    /// Execute `v = planned` SGD iterations over the planned batches
+    /// through a `&self`-shareable backend (the thread-pool fan-out path),
+    /// leaving the update delta in the device and returning the mean local
+    /// training loss. Iteration order and arithmetic are identical to the
+    /// `&mut` path, so a parallel run is bit-identical to a sequential one.
     pub fn train_planned_shared(
+        &mut self,
         be: &dyn ParallelStep,
         model: &str,
         global: &ParamSet,
         batch: usize,
-        plan: &[(Vec<f32>, Vec<i32>)],
         lr: f32,
-    ) -> anyhow::Result<(ParamSet, f64)> {
-        assert!(!plan.is_empty(), "V must be ≥ 1");
-        let mut params = global.clone();
-        let mut loss_acc = 0f64;
-        for (x, y) in plan {
-            let out = be.train_step_shared(model, batch, &params, x, y, lr)?;
-            params = out.params;
-            loss_acc += out.loss as f64;
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(self.planned >= 1, "plan_batches_into before training");
+        let mut local = self.pull_global(global);
+        if self.scratch.is_none() {
+            self.scratch = Some(be.new_scratch(model, batch)?);
         }
-        Ok((params, loss_acc / plan.len() as f64))
+        let scratch: &mut dyn StepScratch = &mut **self.scratch.as_mut().expect("just ensured");
+        let mut loss_acc = 0f64;
+        for (x, y) in &self.plan[..self.planned] {
+            let loss = be.train_step_in_place_shared(model, batch, &mut local, x, y, lr, scratch)?;
+            loss_acc += loss as f64;
+        }
+        local.sub_assign(global);
+        self.delta = Some(local);
+        Ok(loss_acc / self.planned as f64)
     }
 
-    /// Algorithm 1 step 3: run `v` local mini-batch SGD iterations from the
-    /// received global model; returns the local model and the mean local
-    /// training loss. (Plan + execute; kept as the one-device convenience
-    /// path — the engines call the two halves separately.)
-    pub fn local_train(
+    /// [`Device::train_planned_shared`] through an exclusive backend —
+    /// the serialized path for backends without [`ParallelStep`] (PJRT,
+    /// whose client handle is thread-bound).
+    pub fn train_planned_mut(
         &mut self,
         be: &mut dyn TrainBackend,
         model: &str,
         global: &ParamSet,
         batch: usize,
+        lr: f32,
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(self.planned >= 1, "plan_batches_into before training");
+        let mut local = self.pull_global(global);
+        if self.scratch.is_none() {
+            self.scratch = Some(be.new_scratch(model, batch)?);
+        }
+        let scratch: &mut dyn StepScratch = &mut **self.scratch.as_mut().expect("just ensured");
+        let mut loss_acc = 0f64;
+        for (x, y) in &self.plan[..self.planned] {
+            let loss = be.train_step_in_place(model, batch, &mut local, x, y, lr, scratch)?;
+            loss_acc += loss as f64;
+        }
+        local.sub_assign(global);
+        self.delta = Some(local);
+        Ok(loss_acc / self.planned as f64)
+    }
+
+    /// Algorithm 1 step 3 in one call: plan `v` batches, run them, leave
+    /// the delta in the device (plan + execute; the engines call the two
+    /// halves separately so planning can fan out even when training
+    /// cannot).
+    pub fn local_round_shared(
+        &mut self,
+        be: &dyn ParallelStep,
+        model: &str,
+        global: &ParamSet,
+        batch: usize,
         v: usize,
         lr: f32,
-    ) -> anyhow::Result<(ParamSet, f64)> {
-        let plan = self.plan_batches(batch, v);
-        Self::train_planned(be, model, global, batch, &plan, lr)
+    ) -> anyhow::Result<f64> {
+        self.plan_batches_into(batch, v);
+        self.train_planned_shared(be, model, global, batch, lr)
     }
 }
 
@@ -137,11 +211,17 @@ mod tests {
         Device::new(0, (0..50).collect(), ds, 7)
     }
 
+    fn next_batch(d: &mut Device, b: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        d.next_batch_into(b, &mut out);
+        out
+    }
+
     #[test]
     fn batches_have_requested_size_and_valid_indices() {
         let mut d = device();
         for _ in 0..20 {
-            let b = d.next_batch(16);
+            let b = next_batch(&mut d, 16);
             assert_eq!(b.len(), 16);
             assert!(b.iter().all(|&i| i < 50));
         }
@@ -153,7 +233,7 @@ mod tests {
         let mut seen = std::collections::HashSet::new();
         // 50 samples, batches of 10 ⇒ 5 batches = 1 epoch
         for _ in 0..5 {
-            seen.extend(d.next_batch(10));
+            seen.extend(next_batch(&mut d, 10));
         }
         assert_eq!(seen.len(), 50);
     }
@@ -162,7 +242,7 @@ mod tests {
     fn batch_larger_than_shard_wraps() {
         let ds = Arc::new(generate(&SynthSpec::tiny(8), 3));
         let mut d = Device::new(1, (0..8).collect(), ds, 7);
-        let b = d.next_batch(20);
+        let b = next_batch(&mut d, 20);
         assert_eq!(b.len(), 20);
     }
 
@@ -178,11 +258,28 @@ mod tests {
         let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
         let mut a = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
         let mut b = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
-        let plan = a.plan_batches(10, 4);
+        a.plan_batches_into(10, 4);
+        let plan = a.planned_batches();
         assert_eq!(plan.len(), 4);
-        for (x, y) in &plan {
-            let idx = b.next_batch(10);
+        for (x, y) in plan {
+            let idx = next_batch(&mut b, 10);
             let (bx, by) = ds.gather(&idx);
+            assert_eq!(*x, bx);
+            assert_eq!(*y, by);
+        }
+    }
+
+    #[test]
+    fn replanning_reuses_buffers_and_advances_the_stream() {
+        let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
+        let mut a = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let mut b = Device::new(0, (0..50).collect(), ds, 9);
+        a.plan_batches_into(10, 3);
+        let round1: Vec<_> = a.planned_batches().to_vec();
+        a.plan_batches_into(10, 3); // second round reuses the buffers
+        for (x, y) in round1.iter().chain(a.planned_batches()) {
+            let idx = next_batch(&mut b, 10);
+            let (bx, by) = b.data.gather(&idx);
             assert_eq!(*x, bx);
             assert_eq!(*y, by);
         }
@@ -193,7 +290,43 @@ mod tests {
         let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
         let mut a = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
         let mut b = Device::new(0, (0..50).collect(), ds, 9);
-        assert_eq!(a.next_batch(10), b.next_batch(10));
-        assert_eq!(a.next_batch(10), b.next_batch(10));
+        assert_eq!(next_batch(&mut a, 10), next_batch(&mut b, 10));
+        assert_eq!(next_batch(&mut a, 10), next_batch(&mut b, 10));
+    }
+
+    /// The delta contract: after a local round the device holds
+    /// `Δ = w_local − w_global`, the shared and exclusive paths agree
+    /// bit-for-bit, and a second round reuses the same buffers.
+    #[cfg(feature = "native")]
+    #[test]
+    fn local_round_leaves_delta_and_paths_agree() {
+        use crate::runtime::NativeBackend;
+        let ds = Arc::new(generate(&SynthSpec::tiny(64), 5));
+        let mut be = NativeBackend::new(3);
+        let global = {
+            use crate::runtime::TrainBackend as _;
+            be.initial_params("mlp").unwrap()
+        };
+        let mut a = Device::new(0, (0..64).collect(), Arc::clone(&ds), 11);
+        let mut b = Device::new(0, (0..64).collect(), ds, 11);
+        let loss_a = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1).unwrap();
+        b.plan_batches_into(8, 3);
+        let loss_b = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1).unwrap();
+        assert_eq!(loss_a, loss_b);
+        assert_eq!(a.delta().leaves, b.delta().leaves);
+        // a delta is a difference, not a model: applying it to the global
+        // recovers the trained local model the old contract returned
+        let mut local = global.clone();
+        local.axpy(1.0, a.delta());
+        assert!(local.leaves.iter().flatten().all(|v| v.is_finite()));
+        // deltas are non-trivial under a real lr
+        assert!(a.delta().leaves.iter().flatten().any(|&v| v != 0.0));
+        assert!(loss_a.is_finite());
+        // second round through the same buffers stays consistent
+        let loss_a2 = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1).unwrap();
+        b.plan_batches_into(8, 3);
+        let loss_b2 = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1).unwrap();
+        assert_eq!(loss_a2, loss_b2);
+        assert_eq!(a.delta().leaves, b.delta().leaves);
     }
 }

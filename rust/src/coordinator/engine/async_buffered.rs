@@ -13,6 +13,16 @@
 //!   model, and is discounted by `1/(1+s)^a` on top of its FedAvg weight;
 //! * slow devices never block fast ones — they just land stale.
 //!
+//! What travels is the update **delta** `Δ = w_local − w_pulled` (FedBuff's
+//! actual contract): aggregation applies
+//! `global += Σ (w̄_m·disc_m)·Δ_m` via the preallocated
+//! [`crate::model::FedAccumulator`], so a stale update nudges the *current*
+//! global instead of dragging it back toward the old model it was trained
+//! from. The delta itself stays in the producing device's buffer
+//! ([`crate::coordinator::Device::delta`]) — safe because a device is
+//! excluded from new cohorts while its update is in flight, so the buffer
+//! is untouched until the fold consumes it.
+//!
 //! One [`RoundEngine::round`] call = one aggregation. Devices idle after
 //! an aggregation restart from the *new* global model on the next call;
 //! devices still in flight keep their (now stale) update in the buffer.
@@ -23,14 +33,13 @@ use super::{
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
-use crate::model::{federated_average, ParamSet};
 use crate::simclock::RoundDelay;
 use std::time::Instant;
 
-/// One update travelling from a device to the server.
+/// One update travelling from a device to the server. The delta payload
+/// lives in the device's reusable buffer; this records the metadata.
 struct InFlight {
     device: usize,
-    params: ParamSet,
     /// FedAvg weight `D_m` before staleness discounting.
     weight: f64,
     loss: f64,
@@ -104,7 +113,6 @@ impl RoundEngine for AsyncBuffered {
                 }
                 self.in_flight.push(InFlight {
                     device: u.device,
-                    params: u.params,
                     weight: u.weight,
                     loss: u.loss,
                     t_cp,
@@ -155,16 +163,25 @@ impl RoundEngine for AsyncBuffered {
         let arrived_at = taken.iter().map(|f| f.arrival).fold(0.0, f64::max);
         let delta = (arrived_at - now).max(0.0);
 
-        // 4. staleness-discounted FedAvg over the buffer.
+        // 4. staleness-discounted FedBuff fold over the buffer: stream
+        //    each taken device's delta into the preallocated accumulator
+        //    (arrival order — deterministic after the sort above) and
+        //    apply the mean delta to the current global model.
         let staleness: Vec<usize> =
             taken.iter().map(|f| self.aggregations - f.born_agg).collect();
-        let agg_weights: Vec<f64> = taken
+        let total_w: f64 = taken
             .iter()
             .zip(&staleness)
             .map(|(f, &s)| f.weight * self.discount(s))
-            .collect();
-        let agg_refs: Vec<&ParamSet> = taken.iter().map(|f| &f.params).collect();
-        sys.global = federated_average(&agg_refs, &agg_weights);
+            .sum();
+        {
+            let FlSystem { devices, global, agg, .. } = &mut *sys;
+            agg.begin(total_w);
+            for (f, &s) in taken.iter().zip(&staleness) {
+                agg.fold(f.weight * self.discount(s), devices[f.device].delta());
+            }
+            agg.apply_delta_to(global);
+        }
         self.aggregations += 1;
 
         // 5. price the step on the simclock: t_cm + V·t_cp == delta with

@@ -20,7 +20,6 @@ use super::{
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
-use crate::model::{federated_average, ParamSet};
 use crate::simclock::RoundDelay;
 use std::time::Instant;
 
@@ -70,35 +69,44 @@ impl RoundEngine for DeadlineSync {
 
         // Per-device end-to-end round time: V·T_cp^m + T_up^m. (The sync
         // engine prices max(T_up) + V·max(T_cp); per-device totals are what
-        // a deadline actually cuts.)
+        // a deadline actually cuts.) Pass 1 sizes the survivor set; pass 2
+        // streams survivor deltas into the preallocated accumulator in
+        // device-index order — no per-round allocation.
         let bits_per_sample = sys.test_set.bits_per_sample();
-        let tcp_of = |i: usize| sys.fleet.specs[i].minibatch_time(bits_per_sample, sys.batch);
+        let batch = sys.batch;
         let mut slowest = 0f64;
         let mut any_late = false;
-        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(updates.len());
-        let mut agg_weights: Vec<f64> = Vec::with_capacity(updates.len());
         let mut t_cp_survivors = 0f64;
+        let mut total_w = 0f64;
+        let mut participants = 0usize;
         for u in &updates {
-            let t_cp_m = tcp_of(u.device);
+            let t_cp_m = sys.fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
             slowest = slowest.max(v as f64 * t_cp_m + up.times[u.device]);
             if !self.survives(v, t_cp_m, up.times[u.device]) {
                 any_late = true;
                 continue; // dropped: the server has already closed the round
             }
             if up.delivered[u.device] {
-                agg_refs.push(&u.params);
-                agg_weights.push(u.weight);
+                total_w += u.weight;
+                participants += 1;
                 t_cp_survivors = t_cp_survivors.max(t_cp_m);
             }
         }
-        let participants = agg_refs.len();
-        if agg_refs.is_empty() {
+        if participants == 0 {
             crate::log_warn!(
                 "round {round_no}: no update beat the deadline ({:.3}s) — global model kept",
                 self.deadline_s
             );
         } else {
-            sys.global = federated_average(&agg_refs, &agg_weights);
+            let FlSystem { devices, global, agg, fleet, .. } = sys;
+            agg.begin(total_w);
+            for u in &updates {
+                let t_cp_m = fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
+                if self.survives(v, t_cp_m, up.times[u.device]) && up.delivered[u.device] {
+                    agg.fold(u.weight, devices[u.device].delta());
+                }
+            }
+            agg.apply_delta_to(global);
         }
 
         // The server waits until every cohort device is in, or until the

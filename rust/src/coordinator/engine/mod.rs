@@ -37,8 +37,6 @@ pub use sync::SyncFedAvg;
 
 use crate::coordinator::{Device, FlSystem};
 use crate::metrics::RoundRecord;
-use crate::model::ParamSet;
-use crate::runtime::TrainBackend;
 use crate::util::threadpool::parallel_map;
 use crate::wireless::dbm_to_watt;
 
@@ -144,10 +142,13 @@ pub fn build(cfg: &EngineConfig, devices: usize, expected_round_s: f64) -> Box<d
 // Shared substrate phases
 // ---------------------------------------------------------------------------
 
-/// One device's finished local update.
+/// One device's finished local update. The update *delta*
+/// `Δ = w_local − w_global` itself stays in the producing device's
+/// reusable buffer ([`Device::delta`]) — engines fold it into the
+/// system's preallocated [`crate::model::FedAccumulator`] instead of
+/// copying K full models per round (DESIGN.md §8).
 pub(crate) struct LocalUpdate {
     pub device: usize,
-    pub params: ParamSet,
     /// FedAvg weight `D_m` (eq. 2).
     pub weight: f64,
     /// Mean local training loss over the V iterations.
@@ -162,72 +163,64 @@ pub(crate) struct UplinkDraw {
     pub delivered: Vec<bool>,
 }
 
-/// Client selection (paper: full participation = `Selection::All`).
+/// Client selection (paper: full participation = `Selection::All`). Link
+/// mean gains are frozen per run, so the fading-free rates the selector
+/// ranks by come from [`crate::wireless::Channel`]'s cache — no
+/// fleet-sized allocation per round.
 pub(crate) fn pick_cohort(sys: &mut FlSystem) -> Vec<usize> {
-    let mean_gains: Vec<f64> = sys.channel.links.iter().map(|l| l.mean_gain()).collect();
-    let mean_rates = sys.channel.rates(&mean_gains);
-    sys.selector.pick(sys.devices.len(), &mean_rates)
+    let FlSystem { selector, channel, devices, .. } = sys;
+    selector.pick(devices.len(), channel.mean_rates())
 }
 
-/// Local computation over a cohort (Algorithm 1 step 3). Mini-batch
-/// planning (per-device RNG + gather — pure CPU) fans out over
-/// `cfg.threads` via [`parallel_map`]. Training then fans out too when
-/// the backend's step is `&self`-shareable
-/// ([`crate::runtime::ParallelStep`] — the native backend); otherwise
-/// (PJRT, whose client is not `Sync`) the steps execute on the calling
-/// thread in cohort order. Per-device training is independent and
-/// deterministic, so both paths are bit-identical to the sequential one
-/// regardless of thread count.
+/// Local computation over a cohort (Algorithm 1 step 3). When the
+/// backend's step is `&self`-shareable ([`crate::runtime::ParallelStep`]
+/// — the native backend), whole device rounds (plan + V in-place batched
+/// steps) fan out over `cfg.threads` via [`parallel_map`]; otherwise
+/// (PJRT, whose client is not `Sync`) planning still fans out but the
+/// steps execute on the calling thread in cohort order. Per-device
+/// training is independent and deterministic — batch indices come from
+/// each device's private RNG, the kernels are sequential — so both paths
+/// are bit-identical to the sequential one regardless of thread count.
+/// Each device's update delta lands in its own reusable buffer
+/// ([`Device::delta`]); only (device, weight, loss) rows are returned.
 pub(crate) fn local_computation(
     sys: &mut FlSystem,
     cohort: &[usize],
 ) -> anyhow::Result<Vec<LocalUpdate>> {
-    let (batch, v, threads) = (sys.batch, sys.local_rounds, sys.cfg.threads);
-    let plans = {
-        // Disjoint &mut Device in cohort order (cohort is sorted+deduped,
-        // so filtering iter_mut visits exactly the cohort, in order).
-        let refs: Vec<&mut Device> = sys
-            .devices
-            .iter_mut()
-            .enumerate()
-            .filter(|(i, _)| cohort.binary_search(i).is_ok())
-            .map(|(_, dev)| dev)
-            .collect();
-        debug_assert_eq!(refs.len(), cohort.len(), "cohort index out of range");
-        parallel_map(refs, threads, |dev| dev.plan_batches(batch, v))
-    };
-    let fan_out = threads > 1 && plans.len() > 1 && sys.backend.parallel().is_some();
-    let results: Vec<anyhow::Result<(ParamSet, f64)>> = if fan_out {
-        let par = sys.backend.parallel().expect("checked by fan_out");
-        let model = sys.model.as_str();
-        let global = &sys.global;
-        let lr = sys.cfg.lr;
-        parallel_map(plans, threads, |plan| {
-            Device::train_planned_shared(par, model, global, batch, &plan, lr)
+    let (batch, v, threads, lr) = (sys.batch, sys.local_rounds, sys.cfg.threads, sys.cfg.lr);
+    let fan_out = threads > 1 && cohort.len() > 1 && sys.backend.parallel().is_some();
+    let FlSystem { devices, backend, global, model, .. } = sys;
+    let model = model.as_str();
+    let global = &*global;
+    // Disjoint &mut Device in cohort order (cohort is sorted+deduped,
+    // so filtering iter_mut visits exactly the cohort, in order).
+    let refs: Vec<&mut Device> = devices
+        .iter_mut()
+        .enumerate()
+        .filter(|(i, _)| cohort.binary_search(i).is_ok())
+        .map(|(_, dev)| dev)
+        .collect();
+    debug_assert_eq!(refs.len(), cohort.len(), "cohort index out of range");
+    let losses: Vec<anyhow::Result<f64>> = if fan_out {
+        let par = backend.parallel().expect("checked by fan_out");
+        parallel_map(refs, threads, |dev| {
+            dev.local_round_shared(par, model, global, batch, v, lr)
         })
     } else {
-        let mut results = Vec::with_capacity(plans.len());
-        for plan in &plans {
-            results.push(Device::train_planned(
-                &mut *sys.backend,
-                &sys.model,
-                &sys.global,
-                batch,
-                plan,
-                sys.cfg.lr,
-            ));
-        }
-        results
+        // Planning (RNG + gather — pure CPU) still parallelizes; training
+        // then runs serialized through the exclusive backend.
+        let refs = parallel_map(refs, threads, |dev| {
+            dev.plan_batches_into(batch, v);
+            dev
+        });
+        refs.into_iter()
+            .map(|dev| dev.train_planned_mut(&mut **backend, model, global, batch, lr))
+            .collect()
     };
     let mut out = Vec::with_capacity(cohort.len());
-    for (&di, res) in cohort.iter().zip(results) {
-        let (params, loss) = res?;
-        out.push(LocalUpdate {
-            device: di,
-            params,
-            weight: sys.devices[di].data_size() as f64,
-            loss,
-        });
+    for (&di, res) in cohort.iter().zip(losses) {
+        let loss = res?;
+        out.push(LocalUpdate { device: di, weight: sys.devices[di].data_size() as f64, loss });
     }
     Ok(out)
 }
@@ -335,12 +328,7 @@ mod tests {
 
     #[test]
     fn weighted_loss_matches_hand_fold() {
-        let mk = |w: f64, l: f64| LocalUpdate {
-            device: 0,
-            params: ParamSet { leaves: vec![] },
-            weight: w,
-            loss: l,
-        };
+        let mk = |w: f64, l: f64| LocalUpdate { device: 0, weight: w, loss: l };
         let ups = vec![mk(1.0, 2.0), mk(3.0, 4.0)];
         assert!((weighted_loss(&ups) - (2.0 + 12.0) / 4.0).abs() < 1e-12);
         assert!(weighted_loss(&[]).is_nan());

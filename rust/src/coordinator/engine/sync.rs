@@ -1,9 +1,12 @@
 //! The paper's synchronous FedAvg round (Algorithm 1) as a [`RoundEngine`].
 //!
-//! This is the seed coordinator's round loop, extracted verbatim: the same
-//! phase order, the same RNG stream consumption, the same floating-point
-//! fold order — `rust/tests/integration.rs::engine_parity_*` pins that a
-//! fixed-seed run reproduces the pre-refactor `RunLog` exactly.
+//! The seed coordinator's round loop — same phase order, same RNG stream
+//! consumption, and a fixed floating-point fold order: deltas stream into
+//! the preallocated accumulator in device-index order
+//! (`global += Σ (D_m/D)·Δ_m`, algebraically eq. 2 — DESIGN.md §8), so a
+//! fixed-seed run is reproducible to the bit at any thread count
+//! (`rust/tests/integration.rs::engine_parity_*`,
+//! `rust/tests/native_backend.rs::parallel_fanout_is_bit_identical_to_sequential`).
 
 use super::{
     local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
@@ -11,7 +14,6 @@ use super::{
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
-use crate::model::{federated_average, ParamSet};
 use crate::simclock::RoundDelay;
 use std::time::Instant;
 
@@ -41,20 +43,29 @@ impl RoundEngine for SyncFedAvg {
         let up = uplink_phase(sys)?;
         let t_cm = cohort.iter().map(|&i| up.times[i]).fold(0.0, f64::max);
 
-        // 3. aggregation (eq. 2) over cohort updates that actually arrived.
-        let mut agg_refs: Vec<&ParamSet> = Vec::with_capacity(updates.len());
-        let mut agg_weights: Vec<f64> = Vec::with_capacity(updates.len());
+        // 3. aggregation (eq. 2) over cohort updates that actually
+        //    arrived: stream each device's delta into the preallocated
+        //    accumulator in device-index order, then apply the folded
+        //    mean delta to the global model — no per-round allocation.
+        let mut total_w = 0f64;
+        let mut participants = 0usize;
         for u in &updates {
             if up.delivered[u.device] {
-                agg_refs.push(&u.params);
-                agg_weights.push(u.weight);
+                total_w += u.weight;
+                participants += 1;
             }
         }
-        let participants = agg_refs.len();
-        if agg_refs.is_empty() {
+        if participants == 0 {
             crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
         } else {
-            sys.global = federated_average(&agg_refs, &agg_weights);
+            let FlSystem { devices, global, agg, .. } = sys;
+            agg.begin(total_w);
+            for u in &updates {
+                if up.delivered[u.device] {
+                    agg.fold(u.weight, devices[u.device].delta());
+                }
+            }
+            agg.apply_delta_to(global);
         }
 
         // 4. virtual time (eq. 8), cohort-restricted eq. (5). Train/test

@@ -35,7 +35,7 @@ use crate::compute::gpu::GpuFleet;
 use crate::config::ExperimentConfig;
 use crate::data::{self, synth, Dataset};
 use crate::metrics::{EnergyLedger, EnergyModel, RoundRecord, RunLog};
-use crate::model::{ModelSpec, ParamSet};
+use crate::model::{FedAccumulator, ModelSpec, ParamSet};
 use crate::runtime::{build_backend, TrainBackend};
 use crate::simclock::SimClock;
 use crate::util::json::Json;
@@ -58,6 +58,11 @@ pub struct FlSystem {
     pub devices: Vec<Device>,
     pub test_set: Arc<Dataset>,
     pub global: ParamSet,
+    /// Preallocated streaming-aggregation buffer: every engine folds the
+    /// round's weighted update deltas into it (`begin → fold × K →
+    /// apply_delta_to`) instead of materialising K model copies
+    /// (DESIGN.md §8).
+    pub agg: FedAccumulator,
     pub clock: SimClock,
     pub log: RunLog,
     pub selector: Selector,
@@ -201,6 +206,7 @@ impl FlSystem {
         );
 
         let selector = Selector::new(cfg.selection.clone(), cfg.seed ^ 0x5E1);
+        let agg = FedAccumulator::zeros_like(&global);
         Ok(FlSystem {
             cfg,
             model,
@@ -211,6 +217,7 @@ impl FlSystem {
             devices,
             test_set,
             global,
+            agg,
             clock: SimClock::new(),
             log,
             selector,

@@ -50,14 +50,24 @@ impl Dataset {
 
     /// Gather `idx` into a contiguous batch buffer (x, y).
     pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<i32>) {
-        let d = self.sample_elems();
-        let mut x = Vec::with_capacity(idx.len() * d);
+        let mut x = Vec::with_capacity(idx.len() * self.sample_elems());
         let mut y = Vec::with_capacity(idx.len());
+        self.gather_into(idx, &mut x, &mut y);
+        (x, y)
+    }
+
+    /// [`Dataset::gather`] into caller-owned buffers (cleared, then
+    /// filled) — the devices' per-round batch planning reuses its buffers
+    /// through this, so a warm round loop gathers without allocating.
+    pub fn gather_into(&self, idx: &[usize], x: &mut Vec<f32>, y: &mut Vec<i32>) {
+        x.clear();
+        y.clear();
+        x.reserve(idx.len() * self.sample_elems());
+        y.reserve(idx.len());
         for &i in idx {
             x.extend_from_slice(self.image(i));
             y.push(self.labels[i]);
         }
-        (x, y)
     }
 
     /// Class histogram (used by partition tests and non-IID diagnostics).
@@ -137,6 +147,18 @@ mod tests {
         let (x, y) = ds.gather(&[0, 5, 9]);
         assert_eq!(x.len(), 3 * ds.sample_elems());
         assert_eq!(y.len(), 3);
+    }
+
+    #[test]
+    fn gather_into_reuses_buffers_and_matches_gather() {
+        let ds = tiny();
+        let (x, y) = ds.gather(&[1, 2, 3]);
+        let mut bx = Vec::new();
+        let mut by = Vec::new();
+        ds.gather_into(&[7, 8], &mut bx, &mut by); // stale contents…
+        ds.gather_into(&[1, 2, 3], &mut bx, &mut by); // …must be replaced
+        assert_eq!(bx, x);
+        assert_eq!(by, y);
     }
 
     #[test]

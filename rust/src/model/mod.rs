@@ -106,6 +106,11 @@ impl ParamSet {
         ParamSet { leaves: spec.leaves.iter().map(|l| vec![0.0; l.elems()]).collect() }
     }
 
+    /// A zeroed set with the same leaf layout as `shape` (donor set).
+    pub fn zeros_matching(shape: &ParamSet) -> ParamSet {
+        ParamSet { leaves: shape.leaves.iter().map(|l| vec![0.0; l.len()]).collect() }
+    }
+
     pub fn validate(&self, spec: &ModelSpec) -> anyhow::Result<()> {
         anyhow::ensure!(self.leaves.len() == spec.leaves.len(), "leaf count");
         for (buf, l) in self.leaves.iter().zip(&spec.leaves) {
@@ -145,6 +150,34 @@ impl ParamSet {
         }
     }
 
+    /// Same-shape copy that reuses this set's buffers (no allocation) —
+    /// the round loop's "pull the global model" step.
+    pub fn copy_from(&mut self, src: &ParamSet) {
+        debug_assert_eq!(self.leaves.len(), src.leaves.len());
+        for (dst, s) in self.leaves.iter_mut().zip(&src.leaves) {
+            dst.copy_from_slice(s);
+        }
+    }
+
+    /// Whether `other` has exactly this set's leaf layout (buffer-reuse
+    /// guard for [`ParamSet::copy_from`]).
+    pub fn same_shape(&self, other: &ParamSet) -> bool {
+        self.leaves.len() == other.leaves.len()
+            && self.leaves.iter().zip(&other.leaves).all(|(a, b)| a.len() == b.len())
+    }
+
+    /// In-place subtract: `self -= other`. Turns a trained local model
+    /// into its update delta `Δ = w_local − w_global`.
+    pub fn sub_assign(&mut self, other: &ParamSet) {
+        debug_assert_eq!(self.leaves.len(), other.leaves.len());
+        for (dst, src) in self.leaves.iter_mut().zip(&other.leaves) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d -= s;
+            }
+        }
+    }
+
     pub fn scale(&mut self, w: f32) {
         for leaf in &mut self.leaves {
             for v in leaf.iter_mut() {
@@ -164,16 +197,93 @@ impl ParamSet {
 /// device data sizes `D_m` (need not be normalised).
 pub fn federated_average(sets: &[&ParamSet], weights: &[f64]) -> ParamSet {
     assert!(!sets.is_empty(), "no updates to aggregate");
+    let mut out = ParamSet::zeros_matching(sets[0]);
+    federated_average_into(sets, weights, &mut out);
+    out
+}
+
+/// Allocation-free [`federated_average`]: the same fold, written into a
+/// caller-owned output buffer (zeroed first). Bit-identical to the
+/// allocating form — both are `out = Σ axpy((wᵢ/Σw)·setᵢ)` in input order.
+pub fn federated_average_into(sets: &[&ParamSet], weights: &[f64], out: &mut ParamSet) {
+    assert!(!sets.is_empty(), "no updates to aggregate");
     assert_eq!(sets.len(), weights.len());
     let total: f64 = weights.iter().sum();
     assert!(total > 0.0, "zero total weight");
-    let mut out = ParamSet {
-        leaves: sets[0].leaves.iter().map(|l| vec![0.0; l.len()]).collect(),
-    };
+    out.fill(0.0);
     for (set, &w) in sets.iter().zip(weights) {
         out.axpy((w / total) as f32, set);
     }
-    out
+}
+
+/// Preallocated streaming FedAvg — the round loop's aggregation buffer.
+///
+/// The engines no longer materialise K full local models and average them
+/// (`federated_average` allocates a fresh model and needs every update
+/// alive at once); instead each device's update is *folded* into this
+/// accumulator as `acc += (wᵢ/Σw)·updateᵢ` the moment it is consumed, in
+/// fixed device-index order. The arithmetic is exactly
+/// [`federated_average_into`]'s (one [`ParamSet::axpy`] per update with
+/// the same pre-normalised weight), so folding full models is
+/// bit-identical to the allocating form — pinned by
+/// `prop_streaming_fold_matches_federated_average`. The engines fold
+/// *deltas* (`Δᵢ = localᵢ − global`) and finish with
+/// [`FedAccumulator::apply_delta_to`], i.e. `global += Σ (wᵢ/Σw)·Δᵢ` —
+/// algebraically FedAvg whenever every delta was taken against the same
+/// global (Σ wᵢ/Σw = 1), and the proper FedBuff form when they were not.
+///
+/// The buffer is allocated once per run ([`FedAccumulator::zeros_like`])
+/// and reused every round: `begin → fold × K → apply_delta_to` touches no
+/// allocator.
+#[derive(Clone, Debug)]
+pub struct FedAccumulator {
+    acc: ParamSet,
+    total: f64,
+    count: usize,
+}
+
+impl FedAccumulator {
+    /// Preallocate for the leaf layout of `shape` (any donor set).
+    pub fn zeros_like(shape: &ParamSet) -> FedAccumulator {
+        FedAccumulator { acc: ParamSet::zeros_matching(shape), total: 0.0, count: 0 }
+    }
+
+    /// Start a fold over updates whose weights sum to `total_weight`
+    /// (must be known up front — eq. 2 normalises by it). Zeroes the
+    /// buffer in place; no allocation.
+    pub fn begin(&mut self, total_weight: f64) {
+        assert!(
+            total_weight > 0.0 && total_weight.is_finite(),
+            "zero total weight"
+        );
+        self.acc.fill(0.0);
+        self.total = total_weight;
+        self.count = 0;
+    }
+
+    /// Fold one update: `acc += (weight/total)·set` ([`ParamSet::axpy`]).
+    pub fn fold(&mut self, weight: f64, set: &ParamSet) {
+        debug_assert!(self.total > 0.0, "begin() before fold()");
+        self.acc.axpy((weight / self.total) as f32, set);
+        self.count += 1;
+    }
+
+    /// Updates folded since [`FedAccumulator::begin`].
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Full-model mode: write the folded average into `dst`
+    /// (≡ `federated_average` of the folded sets, bit for bit).
+    pub fn write_average_into(&self, dst: &mut ParamSet) {
+        dst.copy_from(&self.acc);
+    }
+
+    /// Delta mode: `dst += acc`, i.e. apply the weighted-mean update delta
+    /// to the global model in place.
+    pub fn apply_delta_to(&self, dst: &mut ParamSet) {
+        dst.axpy(1.0, &self.acc);
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +410,124 @@ mod tests {
                 }
             }
             let _ = s;
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn copy_from_and_sub_assign_roundtrip() {
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.fill(3.0);
+        let mut b = ParamSet::zeros_like(&s);
+        b.copy_from(&a);
+        assert_eq!(a.leaves, b.leaves);
+        assert!(a.same_shape(&b));
+        b.sub_assign(&a);
+        assert!(b.leaves.iter().flatten().all(|&v| v == 0.0));
+        let other = ParamSet { leaves: vec![vec![0.0; 5]] };
+        assert!(!a.same_shape(&other));
+    }
+
+    #[test]
+    fn fedavg_into_matches_allocating_form() {
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.fill(1.0);
+        let mut b = ParamSet::zeros_like(&s);
+        b.fill(3.0);
+        let avg = federated_average(&[&a, &b], &[1.0, 3.0]);
+        let mut out = ParamSet::zeros_like(&s);
+        out.fill(99.0); // stale contents must be overwritten
+        federated_average_into(&[&a, &b], &[1.0, 3.0], &mut out);
+        assert_eq!(avg.leaves, out.leaves);
+    }
+
+    #[test]
+    fn streaming_fold_full_model_mode_is_fedavg() {
+        let s = spec();
+        let mut a = ParamSet::zeros_like(&s);
+        a.fill(0.0);
+        let mut b = ParamSet::zeros_like(&s);
+        b.fill(4.0);
+        let mut acc = FedAccumulator::zeros_like(&a);
+        acc.begin(400.0);
+        acc.fold(300.0, &a);
+        acc.fold(100.0, &b);
+        assert_eq!(acc.count(), 2);
+        let mut out = ParamSet::zeros_like(&s);
+        acc.write_average_into(&mut out);
+        let reference = federated_average(&[&a, &b], &[300.0, 100.0]);
+        assert_eq!(out.leaves, reference.leaves);
+    }
+
+    #[test]
+    fn streaming_fold_delta_mode_recovers_fedavg_of_locals() {
+        // global + Σ w̄ᵢ·(localᵢ − global) == Σ w̄ᵢ·localᵢ (up to f32
+        // round-off) when every delta is taken against the same global.
+        let s = spec();
+        let mut global = ParamSet::zeros_like(&s);
+        global.fill(0.5);
+        let mut l1 = ParamSet::zeros_like(&s);
+        l1.fill(1.5);
+        let mut l2 = ParamSet::zeros_like(&s);
+        l2.fill(-0.5);
+        let mut d1 = l1.clone();
+        d1.sub_assign(&global);
+        let mut d2 = l2.clone();
+        d2.sub_assign(&global);
+        let mut acc = FedAccumulator::zeros_like(&global);
+        acc.begin(10.0);
+        acc.fold(7.0, &d1);
+        acc.fold(3.0, &d2);
+        let mut updated = global.clone();
+        acc.apply_delta_to(&mut updated);
+        let reference = federated_average(&[&l1, &l2], &[7.0, 3.0]);
+        for (x, y) in updated.leaves.iter().flatten().zip(reference.leaves.iter().flatten()) {
+            assert!((x - y).abs() < 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "zero total weight")]
+    fn accumulator_rejects_zero_total() {
+        let s = spec();
+        let a = ParamSet::zeros_like(&s);
+        let mut acc = FedAccumulator::zeros_like(&a);
+        acc.begin(0.0);
+    }
+
+    #[test]
+    fn prop_streaming_fold_matches_federated_average() {
+        // The aggregation-parity pin: folding full models through the
+        // streaming accumulator in device-index order is BIT-identical to
+        // federated_average, across randomized weights and leaf shapes.
+        prop::check(0xACC0, 60, |g| {
+            let n = g.usize_in(1, 8);
+            let n_leaves = g.usize_in(1, 3);
+            let shapes: Vec<usize> = (0..n_leaves).map(|_| g.usize_in(1, 40)).collect();
+            let sets: Vec<ParamSet> = (0..n)
+                .map(|_| ParamSet {
+                    leaves: shapes.iter().map(|&len| g.vec_f32(len, -3.0, 3.0)).collect(),
+                })
+                .collect();
+            let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 500.0)).collect();
+            let refs: Vec<&ParamSet> = sets.iter().collect();
+            let reference = federated_average(&refs, &ws);
+            let mut acc = FedAccumulator::zeros_like(&sets[0]);
+            // reuse across two successive rounds: second pass must be
+            // unaffected by the first (begin() resets)
+            for _ in 0..2 {
+                acc.begin(ws.iter().sum());
+                for (set, &w) in sets.iter().zip(&ws) {
+                    acc.fold(w, set);
+                }
+            }
+            let mut out = ParamSet::zeros_matching(&sets[0]);
+            acc.write_average_into(&mut out);
+            if out.leaves != reference.leaves {
+                return Err("streaming fold diverged from federated_average".into());
+            }
             Ok(())
         });
     }

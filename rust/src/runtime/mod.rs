@@ -27,6 +27,8 @@ pub mod registry;
 #[cfg(feature = "pjrt")]
 pub mod golden;
 #[cfg(feature = "native")]
+pub mod kernels;
+#[cfg(feature = "native")]
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -94,6 +96,29 @@ impl Default for BackendKind {
     }
 }
 
+/// A reusable per-device training workspace (activations, logits,
+/// backprop buffers). Allocated once per device via
+/// [`TrainBackend::new_scratch`] / [`ParallelStep::new_scratch`] and
+/// threaded back into every step, so the hot path touches no allocator
+/// after warmup. Opaque to the control plane: each backend downcasts to
+/// its own concrete type ([`std::any::Any`]) and must tolerate (error on)
+/// a foreign scratch. `Send` because devices — and their scratches — fan
+/// out across the thread pool.
+pub trait StepScratch: Send {
+    fn as_any(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// The no-op workspace for backends whose step has nothing to reuse
+/// (PJRT marshals into XLA literals per call).
+#[derive(Debug, Default)]
+pub struct NoScratch;
+
+impl StepScratch for NoScratch {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
 /// A backend whose train step can be called through `&self` from many
 /// threads at once. The round engines use this to fan per-device local
 /// training out over the thread pool; backends with thread-bound state
@@ -109,6 +134,26 @@ pub trait ParallelStep: Sync {
         y: &[i32],
         lr: f32,
     ) -> anyhow::Result<StepOutput>;
+
+    /// Allocate the per-device workspace [`Self::train_step_in_place_shared`]
+    /// reuses (sized for `(model, batch)`).
+    fn new_scratch(&self, model: &str, batch: usize) -> anyhow::Result<Box<dyn StepScratch>>;
+
+    /// The allocation-free hot path: one mini-batch SGD step updating
+    /// `params` in place, all intermediates living in `scratch`. Returns
+    /// the mean batch loss. Must be bit-identical to
+    /// [`Self::train_step_shared`] on the same inputs.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place_shared(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        scratch: &mut dyn StepScratch,
+    ) -> anyhow::Result<f32>;
 }
 
 /// The hot-path contract: everything the coordinator and the round
@@ -149,6 +194,34 @@ pub trait TrainBackend {
         y: &[i32],
         lr: f32,
     ) -> anyhow::Result<StepOutput>;
+
+    /// Allocate the reusable per-device workspace for
+    /// [`TrainBackend::train_step_in_place`]. Backends with nothing to
+    /// reuse return [`NoScratch`].
+    fn new_scratch(&self, _model: &str, _batch: usize) -> anyhow::Result<Box<dyn StepScratch>> {
+        Ok(Box::new(NoScratch))
+    }
+
+    /// One mini-batch SGD step updating `params` in place; returns the
+    /// mean batch loss. The default routes through [`Self::train_step`]
+    /// (allocating — fine for PJRT, whose marshalling dominates); the
+    /// native backend overrides it with batched kernels that reuse
+    /// `scratch` and touch no allocator.
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        _scratch: &mut dyn StepScratch,
+    ) -> anyhow::Result<f32> {
+        let out = self.train_step(model, batch, params, x, y, lr)?;
+        *params = out.params;
+        Ok(out.loss)
+    }
 
     /// Summed loss + correct count over one eval batch.
     fn eval_step(

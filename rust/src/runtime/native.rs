@@ -19,12 +19,24 @@
 //! (EXPERIMENTS.md §Backends records that native absolute numbers differ
 //! from the PJRT golden path for exactly this reason).
 //!
-//! Everything here is deterministic in `(seed, inputs)` and the struct is
-//! plain data (`Send + Sync`), so [`NativeBackend`] implements
-//! [`ParallelStep`] and per-device local training fans out across the
-//! coordinator's thread pool.
+//! **Hot path** (DESIGN.md §8): a train step runs the whole minibatch
+//! through the cache-blocked kernels in [`super::kernels`] and updates the
+//! parameters *in place*, with every intermediate (logits, hidden
+//! activations, backprop buffer) living in a reusable [`Scratch`]
+//! workspace — after warmup a step touches no allocator. The pre-batching
+//! per-sample path is kept as [`NativeBackend::train_step_reference`], the
+//! numerical oracle the batched path is toleranced against (forward/loss
+//! are bit-identical; updates regroup the f32 sample reduction, see
+//! `kernels`).
+//!
+//! Everything here is deterministic in `(seed, inputs)` — independent of
+//! thread count and scratch history — and the struct is plain data
+//! (`Send + Sync`), so [`NativeBackend`] implements [`ParallelStep`] and
+//! per-device local training fans out across the coordinator's thread
+//! pool.
 
-use super::{BackendKind, EvalOutput, ParallelStep, StepOutput, TrainBackend};
+use super::kernels;
+use super::{BackendKind, EvalOutput, ParallelStep, StepOutput, StepScratch, TrainBackend};
 use crate::data::Dataset;
 use crate::model::{LeafSpec, ModelSpec, ParamSet};
 use crate::util::rng::Pcg32;
@@ -50,9 +62,16 @@ impl NativeModel {
         self.spec.height * self.spec.width * self.spec.channels
     }
 
-    /// Forward one sample into logits `z`; the MLP also fills `hpre`/`hact`
-    /// (pre/post ReLU hidden activations, sized `hidden`; unused for
-    /// softmax).
+    fn hidden(&self) -> usize {
+        match self.arch {
+            Arch::Mlp { hidden } => hidden,
+            Arch::Softmax => 0,
+        }
+    }
+
+    /// Reference forward of one sample into logits `z`; the MLP also fills
+    /// `hpre`/`hact` (pre/post ReLU hidden activations, sized `hidden`;
+    /// unused for softmax). Kept for the per-sample reference path.
     fn forward_row(
         &self,
         params: &ParamSet,
@@ -123,10 +142,54 @@ fn xent_row(z: &mut [f32], label: usize) -> f32 {
 /// bounds per-call buffer size).
 const NATIVE_EVAL_BATCH: usize = 64;
 
+/// The native backend's reusable step workspace: batch-sized logits,
+/// hidden activations and the ReLU-masked backprop buffer. Model-agnostic
+/// — `ensure` grows each buffer to the high-water mark and the steps
+/// slice exact views, so one scratch serves every (model, batch) a
+/// device runs; after warmup a step allocates nothing. Steps fully
+/// overwrite every view they read, so results never depend on scratch
+/// history.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    z: Vec<f32>,
+    hpre: Vec<f32>,
+    hact: Vec<f32>,
+    dh: Vec<f32>,
+}
+
+impl Scratch {
+    /// Grow to at least `zn` logit slots and `hn` hidden slots.
+    fn ensure(&mut self, zn: usize, hn: usize) {
+        if self.z.len() < zn {
+            self.z.resize(zn, 0.0);
+        }
+        if self.hpre.len() < hn {
+            self.hpre.resize(hn, 0.0);
+            self.hact.resize(hn, 0.0);
+            self.dh.resize(hn, 0.0);
+        }
+    }
+}
+
+impl StepScratch for Scratch {
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+fn downcast_scratch(scratch: &mut dyn StepScratch) -> anyhow::Result<&mut Scratch> {
+    scratch.as_any().downcast_mut::<Scratch>().ok_or_else(|| {
+        anyhow::anyhow!("native backend handed a foreign scratch (want runtime::native::Scratch)")
+    })
+}
+
 /// The dependency-free training substrate (`backend.kind = native`).
 pub struct NativeBackend {
     models: BTreeMap<String, NativeModel>,
     seed: u64,
+    /// Workspace for the `&mut self` step path (the `&self`-shareable
+    /// paths use the caller's per-device scratch instead).
+    scratch: Scratch,
 }
 
 fn softmax_model(name: &str, h: usize, w: usize, c: usize, classes: usize) -> NativeModel {
@@ -188,7 +251,7 @@ impl NativeBackend {
         models.insert("mlp".to_string(), mlp_model("mlp", 8, 8, 1, 10, 32));
         models.insert("mnist_cnn".to_string(), softmax_model("mnist_cnn", 28, 28, 1, 10));
         models.insert("cifar_cnn".to_string(), softmax_model("cifar_cnn", 32, 32, 3, 10));
-        NativeBackend { models, seed }
+        NativeBackend { models, seed, scratch: Scratch::default() }
     }
 
     fn model(&self, name: &str) -> anyhow::Result<&NativeModel> {
@@ -241,10 +304,139 @@ impl NativeBackend {
         Ok(())
     }
 
-    /// One batch-SGD step of softmax regression. Gradients are taken at
+    /// A [`Scratch`] presized for one `(model, batch)` step.
+    fn scratch_for(&self, model: &str, batch: usize) -> anyhow::Result<Scratch> {
+        let m = self.model(model)?;
+        let mut s = Scratch::default();
+        s.ensure(batch.max(1) * m.spec.classes, batch.max(1) * m.hidden());
+        Ok(s)
+    }
+
+    /// Validate, then run one batched in-place SGD step (the one hot-path
+    /// entry every train-step variant funnels through).
+    #[allow(clippy::too_many_arguments)]
+    fn step_in_place_checked(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        scratch: &mut Scratch,
+    ) -> anyhow::Result<f32> {
+        let m = self.model(model)?;
+        Self::check_batch(&m.spec, batch, x, y)?;
+        params.validate(&m.spec)?;
+        Ok(match m.arch {
+            Arch::Softmax => Self::step_softmax_batched(m, params, x, y, batch, lr, scratch),
+            Arch::Mlp { hidden } => {
+                Self::step_mlp_batched(m, hidden, params, x, y, batch, lr, scratch)
+            }
+        })
+    }
+
+    /// One batched in-place SGD step of softmax regression. The whole
+    /// batch's `dz` is computed from the original parameters before any
+    /// update touches them, so the in-place update is the same exact step
+    /// `w ← w − (lr/B)·Σᵢ ∇ℓᵢ(w)` the reference path takes.
+    fn step_softmax_batched(
+        m: &NativeModel,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        lr: f32,
+        s: &mut Scratch,
+    ) -> f32 {
+        let d = m.input_dim();
+        let k = m.spec.classes;
+        s.ensure(batch * k, 0);
+        let z = &mut s.z[..batch * k];
+        let [w, b] = params.leaves.as_mut_slice() else {
+            unreachable!("validated: softmax has 2 leaves")
+        };
+        kernels::matmul_bias(x, w, b, z, batch, d, k);
+        let mut loss_sum = 0f64;
+        for (zrow, &label) in z.chunks_exact_mut(k).zip(y) {
+            loss_sum += xent_row(zrow, label as usize) as f64;
+        }
+        // z now holds dz = softmax − onehot for every row.
+        let scale = -(lr / batch as f32);
+        kernels::accum_colsum(z, b, scale);
+        kernels::accum_xt_g(x, z, w, batch, d, k, scale);
+        (loss_sum / batch as f64) as f32
+    }
+
+    /// One batched in-place SGD step of the one-hidden-layer ReLU MLP
+    /// (same grads-at-original-params contract as the softmax step: `dh`
+    /// is backpropagated through the original `w2` before `w2` updates).
+    #[allow(clippy::too_many_arguments)]
+    fn step_mlp_batched(
+        m: &NativeModel,
+        hidden: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        batch: usize,
+        lr: f32,
+        s: &mut Scratch,
+    ) -> f32 {
+        let d = m.input_dim();
+        let k = m.spec.classes;
+        s.ensure(batch * k, batch * hidden);
+        let Scratch { z, hpre, hact, dh } = s;
+        let z = &mut z[..batch * k];
+        let hpre = &mut hpre[..batch * hidden];
+        let hact = &mut hact[..batch * hidden];
+        let dh = &mut dh[..batch * hidden];
+        let [w1, b1, w2, b2] = params.leaves.as_mut_slice() else {
+            unreachable!("validated: mlp has 4 leaves")
+        };
+        kernels::matmul_bias(x, w1, b1, hpre, batch, d, hidden);
+        kernels::relu(hpre, hact);
+        kernels::matmul_bias(hact, w2, b2, z, batch, hidden, k);
+        let mut loss_sum = 0f64;
+        for (zrow, &label) in z.chunks_exact_mut(k).zip(y) {
+            loss_sum += xent_row(zrow, label as usize) as f64;
+        }
+        // dz is in z; backprop through the ORIGINAL w2 first.
+        kernels::backprop_dh(z, w2, hpre, dh, batch, hidden, k);
+        let scale = -(lr / batch as f32);
+        kernels::accum_colsum(z, b2, scale);
+        kernels::accum_xt_g(hact, z, w2, batch, hidden, k, scale);
+        kernels::accum_colsum(dh, b1, scale);
+        kernels::accum_xt_g(x, dh, w1, batch, d, hidden, scale);
+        (loss_sum / batch as f64) as f32
+    }
+
+    /// The pre-batching per-sample step, kept as the numerical oracle the
+    /// batched hot path is toleranced against (`tests` here and in
+    /// `rust/tests/native_backend.rs`): forward/loss are bit-identical,
+    /// parameter updates agree to ≤ 1e-5 absolute per element (the batched
+    /// update regroups the f32 sample reduction four-wide).
+    pub fn train_step_reference(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> anyhow::Result<StepOutput> {
+        let m = self.model(model)?;
+        Self::check_batch(&m.spec, batch, x, y)?;
+        params.validate(&m.spec)?;
+        Ok(match m.arch {
+            Arch::Softmax => Self::step_softmax_reference(m, params, x, y, batch, lr),
+            Arch::Mlp { hidden } => Self::step_mlp_reference(m, hidden, params, x, y, batch, lr),
+        })
+    }
+
+    /// Per-sample reference: softmax regression. Gradients are taken at
     /// the *original* params for the whole batch and applied into fresh
     /// copies, i.e. a single exact step `w ← w − (lr/B)·Σᵢ ∇ℓᵢ(w)`.
-    fn step_softmax(
+    fn step_softmax_reference(
         m: &NativeModel,
         params: &ParamSet,
         x: &[f32],
@@ -280,9 +472,9 @@ impl NativeBackend {
         }
     }
 
-    /// One batch-SGD step of the one-hidden-layer ReLU MLP (same
-    /// grads-at-original-params contract as [`Self::step_softmax`]).
-    fn step_mlp(
+    /// Per-sample reference: the one-hidden-layer ReLU MLP (same
+    /// grads-at-original-params contract as the softmax reference).
+    fn step_mlp_reference(
         m: &NativeModel,
         hidden: usize,
         params: &ParamSet,
@@ -349,6 +541,9 @@ impl NativeBackend {
         }
     }
 
+    /// Batched whole-batch eval (same forward kernels as training, so
+    /// eval logits are bit-identical to the training forward). The small
+    /// per-call buffers are eval-only — the train path never allocates.
     fn eval_step_impl(
         &self,
         model: &str,
@@ -362,28 +557,35 @@ impl NativeBackend {
         params.validate(&m.spec)?;
         let d = m.input_dim();
         let k = m.spec.classes;
-        let hidden = match m.arch {
-            Arch::Mlp { hidden } => hidden,
-            Arch::Softmax => 0,
-        };
-        let mut hpre = vec![0f32; hidden];
-        let mut hact = vec![0f32; hidden];
-        let mut z = vec![0f32; k];
+        let mut z = vec![0f32; batch * k];
+        match m.arch {
+            Arch::Softmax => {
+                let (w, b) = (&params.leaves[0], &params.leaves[1]);
+                kernels::matmul_bias(x, w, b, &mut z, batch, d, k);
+            }
+            Arch::Mlp { hidden } => {
+                let (w1, b1) = (&params.leaves[0], &params.leaves[1]);
+                let (w2, b2) = (&params.leaves[2], &params.leaves[3]);
+                let mut hpre = vec![0f32; batch * hidden];
+                let mut hact = vec![0f32; batch * hidden];
+                kernels::matmul_bias(x, w1, b1, &mut hpre, batch, d, hidden);
+                kernels::relu(&hpre, &mut hact);
+                kernels::matmul_bias(&hact, w2, b2, &mut z, batch, hidden, k);
+            }
+        }
         let mut loss_sum = 0f64;
         let mut correct = 0usize;
-        for i in 0..batch {
-            let xi = &x[i * d..(i + 1) * d];
-            m.forward_row(params, xi, &mut hpre, &mut hact, &mut z);
+        for (zrow, &label) in z.chunks_exact_mut(k).zip(y) {
             let mut best = 0usize;
-            for (j, &v) in z.iter().enumerate().skip(1) {
-                if v > z[best] {
+            for (j, &v) in zrow.iter().enumerate().skip(1) {
+                if v > zrow[best] {
                     best = j;
                 }
             }
-            if best as i32 == y[i] {
+            if best as i32 == label {
                 correct += 1;
             }
-            loss_sum += xent_row(&mut z, y[i] as usize) as f64;
+            loss_sum += xent_row(zrow, label as usize) as f64;
         }
         Ok(EvalOutput { loss_sum: loss_sum as f32, correct: correct as f32 })
     }
@@ -399,13 +601,29 @@ impl ParallelStep for NativeBackend {
         y: &[i32],
         lr: f32,
     ) -> anyhow::Result<StepOutput> {
-        let m = self.model(model)?;
-        Self::check_batch(&m.spec, batch, x, y)?;
-        params.validate(&m.spec)?;
-        Ok(match m.arch {
-            Arch::Softmax => Self::step_softmax(m, params, x, y, batch, lr),
-            Arch::Mlp { hidden } => Self::step_mlp(m, hidden, params, x, y, batch, lr),
-        })
+        let mut out = params.clone();
+        let mut scratch = self.scratch_for(model, batch)?;
+        let loss = self.step_in_place_checked(model, batch, &mut out, x, y, lr, &mut scratch)?;
+        Ok(StepOutput { params: out, loss })
+    }
+
+    fn new_scratch(&self, model: &str, batch: usize) -> anyhow::Result<Box<dyn StepScratch>> {
+        Ok(Box::new(self.scratch_for(model, batch)?))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place_shared(
+        &self,
+        model: &str,
+        batch: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        scratch: &mut dyn StepScratch,
+    ) -> anyhow::Result<f32> {
+        let s = downcast_scratch(scratch)?;
+        self.step_in_place_checked(model, batch, params, x, y, lr, s)
     }
 }
 
@@ -443,6 +661,10 @@ impl TrainBackend for NativeBackend {
         Ok(())
     }
 
+    fn new_scratch(&self, model: &str, batch: usize) -> anyhow::Result<Box<dyn StepScratch>> {
+        Ok(Box::new(self.scratch_for(model, batch)?))
+    }
+
     fn train_step(
         &mut self,
         model: &str,
@@ -452,7 +674,26 @@ impl TrainBackend for NativeBackend {
         y: &[i32],
         lr: f32,
     ) -> anyhow::Result<StepOutput> {
-        self.train_step_shared(model, batch, params, x, y, lr)
+        let mut out = params.clone();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = self.step_in_place_checked(model, batch, &mut out, x, y, lr, &mut scratch);
+        self.scratch = scratch;
+        Ok(StepOutput { params: out, loss: res? })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_step_in_place(
+        &mut self,
+        model: &str,
+        batch: usize,
+        params: &mut ParamSet,
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        scratch: &mut dyn StepScratch,
+    ) -> anyhow::Result<f32> {
+        let s = downcast_scratch(scratch)?;
+        self.step_in_place_checked(model, batch, params, x, y, lr, s)
     }
 
     fn eval_step(
@@ -607,6 +848,89 @@ mod tests {
         let b = be.train_step_shared("mlp", 16, &params, &x, &y, 0.05).unwrap();
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.params.leaves, b.params.leaves);
+    }
+
+    /// The in-place scratch path IS train_step minus the output clone —
+    /// pinned bit-identical through both trait entry points, and across
+    /// scratch reuse (a dirty scratch must not leak into the next step).
+    #[test]
+    fn in_place_step_matches_train_step_bitwise() {
+        let mut be = NativeBackend::new(9);
+        for model in ["mlp", "mnist_cnn"] {
+            let (x, y) = batch_for(model, 12, 4);
+            let params = be.initial_params(model).unwrap();
+            let want = be.train_step(model, 12, &params, &x, &y, 0.07).unwrap();
+            let mut scratch = TrainBackend::new_scratch(&be, model, 12).unwrap();
+            let mut got = params.clone();
+            let loss = be
+                .train_step_in_place(model, 12, &mut got, &x, &y, 0.07, &mut *scratch)
+                .unwrap();
+            assert_eq!(loss, want.loss, "{model}");
+            assert_eq!(got.leaves, want.params.leaves, "{model}");
+            // second step through the SAME scratch: still bit-identical
+            let want2 = be.train_step(model, 12, &want.params, &x, &y, 0.07).unwrap();
+            let loss2 = be
+                .train_step_in_place(model, 12, &mut got, &x, &y, 0.07, &mut *scratch)
+                .unwrap();
+            assert_eq!(loss2, want2.loss, "{model}");
+            assert_eq!(got.leaves, want2.params.leaves, "{model}");
+        }
+    }
+
+    /// The recorded tolerance of the batched kernels vs the per-sample
+    /// reference path: loss (forward) is bit-identical; parameter updates
+    /// regroup the f32 sample reduction four-wide and must agree to
+    /// ≤ 1e-5 absolute per element at b = 32, lr = 0.1.
+    #[test]
+    fn batched_step_matches_reference_within_tolerance() {
+        let mut be = NativeBackend::new(11);
+        for model in ["mlp", "mnist_cnn"] {
+            let (x, y) = batch_for(model, 32, 6);
+            let params = be.initial_params(model).unwrap();
+            let batched = be.train_step(model, 32, &params, &x, &y, 0.1).unwrap();
+            let reference = be.train_step_reference(model, 32, &params, &x, &y, 0.1).unwrap();
+            assert_eq!(batched.loss, reference.loss, "{model}: forward must be bit-identical");
+            let mut max_diff = 0f32;
+            for (bl, rl) in batched.params.leaves.iter().zip(&reference.params.leaves) {
+                for (bv, rv) in bl.iter().zip(rl) {
+                    max_diff = max_diff.max((bv - rv).abs());
+                }
+            }
+            assert!(
+                max_diff <= 1e-5,
+                "{model}: batched vs reference update diverged: max |Δ| = {max_diff}"
+            );
+        }
+    }
+
+    /// Below the 4-row micro-tile the batched update degenerates to the
+    /// per-sample order — bit-identical to the reference, which pins that
+    /// the two paths implement the same step (not merely similar ones).
+    #[test]
+    fn batched_step_is_bit_identical_to_reference_for_tiny_batches() {
+        let mut be = NativeBackend::new(13);
+        for model in ["mlp", "mnist_cnn"] {
+            for b in [1usize, 2, 3] {
+                let (x, y) = batch_for(model, b, 8);
+                let params = be.initial_params(model).unwrap();
+                let batched = be.train_step(model, b, &params, &x, &y, 0.1).unwrap();
+                let reference = be.train_step_reference(model, b, &params, &x, &y, 0.1).unwrap();
+                assert_eq!(batched.loss, reference.loss, "{model} b={b}");
+                assert_eq!(batched.params.leaves, reference.params.leaves, "{model} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn foreign_scratch_is_rejected_not_miscomputed() {
+        let mut be = NativeBackend::new(14);
+        let (x, y) = batch_for("mlp", 4, 1);
+        let mut params = be.initial_params("mlp").unwrap();
+        let mut foreign = super::super::NoScratch;
+        let err = be
+            .train_step_in_place("mlp", 4, &mut params, &x, &y, 0.1, &mut foreign)
+            .unwrap_err();
+        assert!(err.to_string().contains("scratch"), "{err}");
     }
 
     #[test]

@@ -86,6 +86,11 @@ pub struct Channel {
     pub cfg: ChannelConfig,
     pub links: Vec<DeviceLink>,
     rng: Pcg32,
+    /// Fading-free per-device uplink rates, computed once at placement —
+    /// placement and shadowing are frozen per run, so these never change.
+    /// Client selection and the DEFL planner read this instead of
+    /// recomputing two fleet-sized vectors every round.
+    mean_rates: Vec<f64>,
 }
 
 impl Channel {
@@ -94,7 +99,7 @@ impl Channel {
         assert!(m > 0, "need at least one device");
         assert!(cfg.min_radius_m > 0.0 && cfg.max_radius_m > cfg.min_radius_m);
         let mut rng = Pcg32::new(seed, 0xC4A77E1);
-        let links = (0..m)
+        let links: Vec<DeviceLink> = (0..m)
             .map(|_| {
                 // uniform by area: r = sqrt(U·(R²−r₀²) + r₀²)
                 let u = rng.uniform();
@@ -113,7 +118,15 @@ impl Channel {
                 }
             })
             .collect();
-        Channel { cfg, links, rng }
+        let mut ch = Channel { cfg, links, rng, mean_rates: Vec::new() };
+        let mean_gains: Vec<f64> = ch.links.iter().map(|l| l.mean_gain()).collect();
+        ch.mean_rates = ch.rates(&mean_gains);
+        ch
+    }
+
+    /// The cached fading-free per-device rates (static per run).
+    pub fn mean_rates(&self) -> &[f64] {
+        &self.mean_rates
     }
 
     pub fn num_devices(&self) -> usize {
@@ -207,11 +220,10 @@ impl Channel {
 
     /// Expected (fading-free) synchronous communication time — used by the
     /// DEFL optimizer, which plans on expectations (eq. 29 takes T_cm as a
-    /// known quantity).
+    /// known quantity). Reads the cached [`Channel::mean_rates`].
     pub fn expected_round_time(&self, update_bits: f64) -> f64 {
-        let gains: Vec<f64> = self.links.iter().map(|l| l.mean_gain()).collect();
-        let times = self.uplink_times(&gains, update_bits);
-        super::round_time(&times)
+        let slowest = self.mean_rates.iter().fold(f64::INFINITY, |m, &r| m.min(r));
+        uplink_time(update_bits, slowest)
     }
 }
 
@@ -282,6 +294,19 @@ mod tests {
         let (_, t1) = ch.round(1e6);
         let (_, t2) = ch.round(1e6);
         assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn mean_rates_cache_matches_fresh_computation() {
+        let mut cfg = ChannelConfig::default();
+        cfg.shadowing_db = 6.0; // exercise the frozen-shadowing path too
+        let ch = Channel::new(cfg, 12, 9);
+        let gains: Vec<f64> = ch.links.iter().map(|l| l.mean_gain()).collect();
+        assert_eq!(ch.mean_rates(), ch.rates(&gains).as_slice());
+        // and the expected round time is the slowest cached rate's uplink
+        let times = ch.uplink_times(&gains, 2e6);
+        let max = times.iter().copied().fold(0.0, f64::max);
+        assert_eq!(ch.expected_round_time(2e6), max);
     }
 
     #[test]

@@ -315,7 +315,8 @@ fn async_buffered_staleness_accrues() {
 fn fedavg_aggregation_weighted_by_data_size() {
     require_artifacts!();
     // Dirichlet partition ⇒ uneven shards; the run must still work and
-    // weights must sum correctly (checked inside federated_average).
+    // weights must sum correctly (FedAccumulator::begin asserts a
+    // positive, finite total).
     let mut cfg = tiny_cfg("it-weights", Policy::Fixed { batch: 16, local_rounds: 2 });
     cfg.partition = defl::config::PartitionKind::Dirichlet;
     cfg.dirichlet_alpha = 0.3;

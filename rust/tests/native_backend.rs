@@ -179,6 +179,32 @@ fn async_buffered_staleness_weighting_accrues() {
     );
 }
 
+/// Engine-level aggregation parity: after a sync round the global model
+/// is exactly `g0 + Σ (D_m/D)·Δ_m` over the devices' reusable delta
+/// buffers — the streaming fold the engines run is the FedAvg fold in
+/// device-index order, bit for bit (the model-layer twin of
+/// `model::tests::prop_streaming_fold_matches_federated_average`).
+#[test]
+fn sync_round_folds_deltas_in_device_index_order() {
+    use defl::model::FedAccumulator;
+    let mut cfg = native_cfg("nb-fold", Policy::Fixed { batch: 8, local_rounds: 2 });
+    cfg.max_rounds = 1;
+    cfg.wireless.fast_fading = false;
+    let mut sys = FlSystem::build(cfg).unwrap();
+    let g0 = sys.global.clone();
+    sys.round().unwrap();
+    let total: f64 = sys.devices.iter().map(|d| d.data_size() as f64).sum();
+    let mut acc = FedAccumulator::zeros_like(&g0);
+    acc.begin(total);
+    for d in &sys.devices {
+        acc.fold(d.data_size() as f64, d.delta());
+    }
+    assert_eq!(acc.count(), 4, "full participation folds the whole fleet");
+    let mut want = g0;
+    acc.apply_delta_to(&mut want);
+    assert_eq!(sys.global.leaves, want.leaves);
+}
+
 #[test]
 fn fixed_seed_runs_are_reproducible() {
     let run = |seed: u64| {

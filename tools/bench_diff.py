@@ -1,0 +1,85 @@
+#!/usr/bin/env python3
+"""Warn-only perf-trajectory diff for the BENCH_*.json reports.
+
+Compares a fresh bench run (``Suite::to_json`` output, uploaded by CI as
+the BENCH_hotpath artifact) against the committed baseline and prints
+GitHub workflow annotations for per-benchmark mean-time regressions
+beyond a threshold. It never fails the build (always exits 0): the CI
+smoke lane runs tiny iteration counts (``DEFL_BENCH_FAST=1``) on shared
+runners, so this is a visibility tool, not a gate — the point is that
+every PR shows its perf trajectory next to its diff.
+
+Refresh the baseline by copying a trusted run's ``BENCH_hotpath.json``
+artifact over the committed file at the repo root.
+
+Usage: bench_diff.py BASELINE FRESH [--warn-pct 25]
+"""
+
+import argparse
+import json
+import sys
+
+
+def load_results(path):
+    with open(path) as f:
+        report = json.load(f)
+    out = {}
+    for r in report.get("results", []):
+        mean = r.get("mean_s")
+        if isinstance(mean, (int, float)) and mean > 0:
+            out[r["name"]] = mean
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--warn-pct", type=float, default=25.0)
+    args = ap.parse_args()
+
+    try:
+        base = load_results(args.baseline)
+    except (OSError, ValueError) as e:
+        print(f"bench_diff: unusable baseline {args.baseline!r} ({e}) — recording only")
+        base = {}
+    try:
+        fresh = load_results(args.fresh)
+    except (OSError, ValueError) as e:
+        print(f"::warning::bench_diff: unusable fresh report {args.fresh!r} ({e})")
+        return 0
+
+    if not base:
+        print(f"bench_diff: baseline empty — no comparison; {len(fresh)} fresh benchmarks:")
+        for name, mean in sorted(fresh.items()):
+            print(f"  {name}: mean {mean:.3e}s")
+        print("bench_diff: commit a trusted BENCH_hotpath.json to start the trajectory")
+        return 0
+
+    regressions = 0
+    for name, mean in sorted(fresh.items()):
+        if name not in base:
+            print(f"  NEW  {name}: mean {mean:.3e}s (no baseline)")
+            continue
+        pct = (mean / base[name] - 1.0) * 100.0
+        marker = " "
+        if pct > args.warn_pct:
+            regressions += 1
+            marker = "!"
+            print(
+                f"::warning::perf regression: {name} mean {mean:.3e}s vs "
+                f"baseline {base[name]:.3e}s (+{pct:.1f}% > {args.warn_pct:.0f}%)"
+            )
+        print(f"  {marker}    {name}: {pct:+.1f}% vs baseline")
+    for name in sorted(set(base) - set(fresh)):
+        print(f"::warning::benchmark disappeared from the suite: {name}")
+
+    print(
+        f"bench_diff: {len(fresh)} benchmarks, {regressions} regression(s) "
+        f"beyond {args.warn_pct:.0f}% (warn-only)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
