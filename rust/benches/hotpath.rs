@@ -10,6 +10,13 @@
 //! pre-batching per-sample kernel in the suite so the batched speedup is
 //! measurable inside a single run.
 //!
+//! The codec benches cover the compressed-update pipeline end to end:
+//! `codec_encode_*` (EF + encode of a 103k-param delta per codec),
+//! `codec_fold_{100,1000}dev_{dense,topk10}` (fused decode-and-fold —
+//! the top-k variant folds strictly fewer f32s per update), and
+//! `native_round_loop_100dev_b8_topk10` (a whole engine round, dense vs
+//! top-k comparable against `native_round_loop_100dev_b8`).
+//!
 //! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
 //! count behind the 1000-device fold (64 sets cycled instead of 1000
 //! resident — the fold cost is identical, the setup footprint is not: CI
@@ -18,6 +25,7 @@
 //! against the committed baseline (tools/bench_diff.py).
 
 use defl::bench::Suite;
+use defl::codec::{Dense32, EncodedDelta, QuantStochastic, TopK, TopKQuant, UpdateCodec};
 use defl::data::synth::{generate, SynthSpec};
 use defl::model::{federated_average, FedAccumulator, ParamSet};
 use defl::util::rng::Pcg32;
@@ -78,6 +86,69 @@ fn main() -> anyhow::Result<()> {
             acc.apply_delta_to(&mut global);
             acc.count()
         });
+    }
+
+    // --- codec encode + fused decode-and-fold ------------------------
+    // Encode: EF-in + select/quantize + buffer write of one 103k-param
+    // delta. Each iteration restores the delta from a pristine copy —
+    // encode mutates it in place (EF-in), and re-feeding the mutated
+    // delta would compound the residual without bound. The restoring
+    // memcpy mirrors the real round's pull-global copy, and the
+    // persistent residual reaches its EF steady state, like the round
+    // loop's. Warm iterations are allocation-free.
+    let codecs: Vec<(&str, Box<dyn UpdateCodec>)> = vec![
+        ("dense", Box::new(Dense32)),
+        ("quant8", Box::new(QuantStochastic { qbits: 8 })),
+        ("topk10", Box::new(TopK { k_ratio: 0.1 })),
+        ("topkq8", Box::new(TopKQuant { k_ratio: 0.1, qbits: 8 })),
+    ];
+    let mut enc_rng = Pcg32::seeded(11);
+    for (name, codec) in &codecs {
+        let pristine = random_sets(1, &LEAVES_103K, 40).pop().unwrap();
+        let mut delta = pristine.clone();
+        let mut residual = ParamSet::zeros_matching(&delta);
+        let mut enc = EncodedDelta::new();
+        suite.bench_units(&format!("codec_encode_{name}_103k"), total_params as f64, || {
+            delta.copy_from(&pristine);
+            let res = if codec.lossy() { Some(&mut residual) } else { None };
+            codec.encode(&mut delta, res, &mut enc_rng, &mut enc);
+            enc.folded_values()
+        });
+    }
+
+    // Fused decode-and-fold at fleet scale: the engines' aggregation
+    // path. Dense folds devices×103k f32s; topk at k_ratio=0.1 folds
+    // strictly fewer (~10%) — the unit counts make the per-value and
+    // per-round wins separately visible in the report.
+    for devices in [100usize, 1000] {
+        for (name, codec) in &codecs {
+            if *name == "quant8" || *name == "topkq8" {
+                continue; // dense-vs-topk is the headline; keep the suite lean
+            }
+            let distinct = if fast_mode() { devices.min(64) } else { devices };
+            let mut pool_rng = Pcg32::seeded(60 + devices as u64);
+            let mut encs: Vec<EncodedDelta> = Vec::with_capacity(distinct);
+            for set in random_sets(distinct, &LEAVES_103K, 50 + devices as u64) {
+                let mut delta = set;
+                let mut residual = ParamSet::zeros_matching(&delta);
+                let mut enc = EncodedDelta::new();
+                let res = if codec.lossy() { Some(&mut residual) } else { None };
+                codec.encode(&mut delta, res, &mut pool_rng, &mut enc);
+                encs.push(enc);
+            }
+            let folded: usize = encs[0].folded_values();
+            let mut acc = FedAccumulator::zeros_like(&sets[0]);
+            let mut fold_global = ParamSet::zeros_matching(&sets[0]);
+            let label = format!("codec_fold_{devices}dev_{name}");
+            suite.bench_units(&label, (devices * folded) as f64, || {
+                acc.begin(600.0 * devices as f64);
+                for i in 0..devices {
+                    codec.decode_fold_into(&mut acc, 600.0, &encs[i % distinct]);
+                }
+                acc.apply_delta_to(&mut fold_global);
+                acc.count()
+            });
+        }
     }
 
     // --- channel sampling --------------------------------------------
@@ -149,8 +220,9 @@ fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
 
     // Whole-round-loop benches: one engine round end to end — cohort
     // selection, fan-out plan + batched in-place training, uplink draw,
-    // streaming delta fold — at 100 and 1000 devices.
-    for devices in [100usize, 1000] {
+    // streaming delta fold — at 100 and 1000 devices, plus a top-k
+    // variant at 100 devices (dense vs sparse fold, same round anatomy).
+    let round_cfg = |devices: usize| {
         let mut cfg = ExperimentConfig::default();
         cfg.name = format!("bench-round-{devices}");
         cfg.dataset = DatasetKind::Tiny;
@@ -163,10 +235,22 @@ fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
         cfg.seed = 7;
         cfg.backend = BackendKind::Native;
         cfg.artifacts_dir = "/nonexistent-on-purpose".into();
-        let mut sys = FlSystem::build(cfg)?;
+        cfg
+    };
+    for devices in [100usize, 1000] {
+        let mut sys = FlSystem::build(round_cfg(devices))?;
         suite.bench_units(&format!("native_round_loop_{devices}dev_b8"), devices as f64, || {
             sys.round().unwrap()
         });
+    }
+    {
+        use defl::codec::CodecKind;
+        let mut cfg = round_cfg(100);
+        cfg.name = "bench-round-100-topk".into();
+        cfg.codec.kind = CodecKind::TopK;
+        cfg.codec.k_ratio = 0.1;
+        let mut sys = FlSystem::build(cfg)?;
+        suite.bench_units("native_round_loop_100dev_b8_topk10", 100.0, || sys.round().unwrap());
     }
     Ok(())
 }

@@ -1,0 +1,853 @@
+//! Compressed-update codecs — shrinking the "talk" side of eq. (6).
+//!
+//! The paper balances *to talk* (uplink `s/r_m`) against *to work*
+//! (local SGD), but the seed simulator could only move the work side:
+//! the update size `s` was pinned to `ModelSpec::update_bits` (32 bits ×
+//! every parameter). Communication-efficient encodings are the standard
+//! lever on the talk side (cf. arXiv:2007.03462, arXiv:2008.09323), and
+//! after the PR 3 streaming-delta contract they also make the *real*
+//! aggregation hot path cheaper: a sparse encoded delta folds k values
+//! instead of P.
+//!
+//! [`UpdateCodec`] is the strategy seam:
+//!
+//! * [`Dense32`] — fp32 passthrough, the default. Bit-identical to the
+//!   PR 3 fold (pinned by `prop_dense_codec_fold_matches_plain_fold`).
+//! * [`QuantStochastic`] — QSGD-style per-tensor stochastic uniform
+//!   quantization to `qbits`-bit signed levels
+//!   ([`crate::runtime::kernels::quantize_stochastic`]).
+//! * [`TopK`] — magnitude top-k as (index, value) pairs, selected with
+//!   an O(P)-expected quickselect
+//!   ([`crate::runtime::kernels::select_top_k`]).
+//! * [`TopKQuant`] — their composition: top-k indices with quantized
+//!   values.
+//!
+//! **Error feedback.** Lossy codecs drop update mass; each device keeps
+//! a residual `e_m` ([`crate::coordinator::Device`]) and encodes
+//! `C(Δ + e_m)`, carrying `e_m ← (Δ + e_m) − decode(C(Δ + e_m))` to the
+//! next round (EF-SGD, Karimireddy et al.) — dropped mass re-enters
+//! later instead of vanishing, which preserves convergence
+//! (`rust/tests/native_backend.rs::lossy_codecs_with_error_feedback_still_learn`).
+//!
+//! **Fused decode-and-fold.** Aggregation never materialises a dense
+//! tensor for a sparse codec: [`UpdateCodec::decode_fold_into`] streams
+//! the encoded payload straight into the round's preallocated
+//! [`FedAccumulator`] via [`FedAccumulator::fold_encoded_with`] — for
+//! top-k that is k fused multiply-adds per leaf instead of P.
+//!
+//! **Bits accounting.** [`UpdateCodec::nominal_bits`] is the exact wire
+//! size of any update of a given [`ModelSpec`] (k and the per-leaf
+//! headers are deterministic), so the channel pricing, the DEFL planner
+//! and the metrics all read one number — and `encoded_bits` of a real
+//! encode always equals it (pinned by `nominal_bits_match_actual_encodes`).
+//! Wire-format accounting per leaf (indices are counted at 32 bits,
+//! scales at 32 bits):
+//!
+//! ```text
+//! dense       32·P
+//! quant       vb·P + 32
+//! topk        (32 + 32)·k
+//! topk_quant  (32 + vb)·k + 32        k = ⌈k_ratio·P⌉ ≥ 1 per leaf
+//! ```
+//!
+//! where `vb = qbits` except at `qbits = 1`, whose ternary alphabet
+//! (`{−1, 0, 1}`) is billed at its honest ⌈log2 3⌉ = 2 bits
+//! (`wire_value_bits`, pinned by
+//! `qbits_one_bills_the_ternary_alphabet_at_two_bits`).
+
+use crate::model::{FedAccumulator, ModelSpec, ParamSet};
+use crate::runtime::kernels;
+use crate::util::rng::Pcg32;
+
+/// Which codec encodes updates (`[codec] kind` in the config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    Dense,
+    Quant,
+    TopK,
+    TopKQuant,
+}
+
+impl CodecKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "dense" | "fp32" => Ok(CodecKind::Dense),
+            "quant" | "qsgd" => Ok(CodecKind::Quant),
+            "topk" | "top_k" => Ok(CodecKind::TopK),
+            "topk_quant" | "topkq" => Ok(CodecKind::TopKQuant),
+            other => anyhow::bail!("unknown codec {other:?} (dense|quant|topk|topk_quant)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CodecKind::Dense => "dense",
+            CodecKind::Quant => "quant",
+            CodecKind::TopK => "topk",
+            CodecKind::TopKQuant => "topk_quant",
+        }
+    }
+}
+
+/// `[codec]` configuration section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CodecConfig {
+    pub kind: CodecKind,
+    /// Quantization bit width (quant / topk_quant): signed levels
+    /// `−L..=L`, `L = max(1, 2^(qbits−1) − 1)`.
+    pub qbits: u32,
+    /// Fraction of parameters top-k keeps per leaf (topk / topk_quant).
+    pub k_ratio: f64,
+}
+
+impl Default for CodecConfig {
+    fn default() -> Self {
+        CodecConfig { kind: CodecKind::Dense, qbits: 8, k_ratio: 0.1 }
+    }
+}
+
+impl CodecConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=16).contains(&self.qbits),
+            "codec.qbits must be in 1..=16 (got {}): quantized values are qbits-bit signed \
+             levels stored in i16 — use qbits=8 for the standard QSGD setting, or \
+             codec.kind=dense to skip quantization",
+            self.qbits
+        );
+        anyhow::ensure!(
+            self.k_ratio > 0.0 && self.k_ratio <= 1.0,
+            "codec.k_ratio must be in (0, 1] (got {}): the fraction of parameters top-k \
+             keeps per leaf — 0.1 keeps the 10% largest-magnitude entries, 1.0 keeps \
+             everything (use codec.kind=dense for an uncompressed update)",
+            self.k_ratio
+        );
+        Ok(())
+    }
+
+    /// Build the configured codec (validates first).
+    pub fn build(&self) -> anyhow::Result<Box<dyn UpdateCodec>> {
+        self.validate()?;
+        Ok(match self.kind {
+            CodecKind::Dense => Box::new(Dense32),
+            CodecKind::Quant => Box::new(QuantStochastic { qbits: self.qbits }),
+            CodecKind::TopK => Box::new(TopK { k_ratio: self.k_ratio }),
+            CodecKind::TopKQuant => {
+                Box::new(TopKQuant { k_ratio: self.k_ratio, qbits: self.qbits })
+            }
+        })
+    }
+}
+
+/// Payload tag of one encoded leaf (the wire-format discriminant).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Payload {
+    #[default]
+    Dense,
+    Quant,
+    TopK,
+    TopKQuant,
+}
+
+/// One encoded parameter leaf. All buffers are reused across rounds
+/// (cleared, never shrunk), so a warm encode touches no allocator.
+#[derive(Clone, Debug, Default)]
+pub struct EncodedLeaf {
+    pub payload: Payload,
+    /// Original element count of the leaf.
+    pub len: usize,
+    /// Wire bits per stored value (32 for fp32 payloads; the honest
+    /// per-level width — `wire_value_bits(qbits)` — for quantized ones).
+    pub value_bits: u32,
+    /// Quantization level step (0 when the payload is unquantized).
+    pub scale: f32,
+    /// Dense fp32 payload ([`Payload::Dense`]).
+    pub dense: Vec<f32>,
+    /// Ascending coordinate indices ([`Payload::TopK`]/[`Payload::TopKQuant`]).
+    pub idx: Vec<u32>,
+    /// fp32 values at `idx` ([`Payload::TopK`]).
+    pub vals: Vec<f32>,
+    /// Quantized levels ([`Payload::Quant`]: per element;
+    /// [`Payload::TopKQuant`]: per `idx` entry).
+    pub q: Vec<i16>,
+}
+
+/// One encoded update: per-leaf payloads in the model's leaf order.
+/// Owned by the producing [`crate::coordinator::Device`] and reused
+/// round over round, mirroring the delta-buffer contract of DESIGN.md §8.
+#[derive(Clone, Debug, Default)]
+pub struct EncodedDelta {
+    pub leaves: Vec<EncodedLeaf>,
+}
+
+impl EncodedDelta {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// f32-equivalent values the fused fold touches — P for dense/quant,
+    /// Σk for the sparse payloads (the aggregation-work win the
+    /// `codec_fold_*` benches measure).
+    pub fn folded_values(&self) -> usize {
+        self.leaves
+            .iter()
+            .map(|l| match l.payload {
+                Payload::Dense | Payload::Quant => l.len,
+                Payload::TopK | Payload::TopKQuant => l.idx.len(),
+            })
+            .sum()
+    }
+
+    /// Exact wire size in bits (the accounting table in the module docs).
+    pub fn wire_bits(&self) -> f64 {
+        self.leaves
+            .iter()
+            .map(|l| match l.payload {
+                Payload::Dense => 32.0 * l.len as f64,
+                Payload::Quant => l.value_bits as f64 * l.len as f64 + 32.0,
+                Payload::TopK => 64.0 * l.idx.len() as f64,
+                Payload::TopKQuant => {
+                    (32.0 + l.value_bits as f64) * l.idx.len() as f64 + 32.0
+                }
+            })
+            .sum()
+    }
+
+    /// Match the per-leaf buffer count to `delta`'s layout (idempotent).
+    fn resize_for(&mut self, delta: &ParamSet) {
+        if self.leaves.len() != delta.leaves.len() {
+            self.leaves.resize_with(delta.leaves.len(), EncodedLeaf::default);
+        }
+    }
+}
+
+/// Wire bits per quantized value. The level alphabet is `−L..=L` with
+/// `L = max(1, 2^(qbits−1) − 1)`, i.e. `2^qbits − 1` symbols for
+/// `qbits ≥ 2` (fits `qbits` bits) — but `qbits = 1` degenerates to the
+/// ternary `{−1, 0, 1}` (3 symbols, ⌈log2 3⌉ = 2 bits). Billing the
+/// honest ⌈log2(symbols)⌉ keeps the T_cm pricing and compression-ratio
+/// metrics achievable by a real encoding at every legal `qbits`.
+fn wire_value_bits(qbits: u32) -> u32 {
+    if qbits == 1 {
+        2
+    } else {
+        qbits
+    }
+}
+
+/// Per-leaf top-k element count: `⌈k_ratio·len⌉`, at least 1, at most
+/// `len` — and exactly 0 for an empty leaf, so `nominal_bits` and a real
+/// encode can never disagree.
+pub fn k_of(len: usize, k_ratio: f64) -> usize {
+    if len == 0 {
+        return 0;
+    }
+    ((k_ratio * len as f64).ceil() as usize).clamp(1, len)
+}
+
+/// The codec strategy seam: encode a device's update delta into a
+/// reusable wire buffer, price it, and fold it back into the round's
+/// accumulator without materialising a dense tensor.
+///
+/// `Send + Sync` because the engines fan device encodes out over the
+/// thread pool; per-device mutable state (residual, RNG, buffers) lives
+/// in the device, never in the codec.
+pub trait UpdateCodec: Send + Sync {
+    fn kind(&self) -> CodecKind;
+
+    /// Whether encoding drops information. Lossy codecs require an
+    /// error-feedback residual from the caller.
+    fn lossy(&self) -> bool {
+        true
+    }
+
+    /// Encode `delta` into `out`. For a lossy codec the caller passes the
+    /// device's residual: the codec folds it into `delta` first
+    /// (error-feedback in) and leaves the newly dropped mass in it
+    /// (error-feedback out), so after the call
+    /// `decode(out) + residual == delta` exactly. `rng` drives stochastic
+    /// rounding (deterministic per-device stream).
+    fn encode(
+        &self,
+        delta: &mut ParamSet,
+        residual: Option<&mut ParamSet>,
+        rng: &mut Pcg32,
+        out: &mut EncodedDelta,
+    );
+
+    /// Exact wire size of an encoded update in bits.
+    fn encoded_bits(&self, enc: &EncodedDelta) -> f64 {
+        enc.wire_bits()
+    }
+
+    /// Exact wire size of *any* update of this model — what the channel
+    /// prices (eq. 6's `s`) and the DEFL planner plans on. Equals
+    /// [`UpdateCodec::encoded_bits`] of a real encode for every codec
+    /// here (k and headers are deterministic).
+    fn nominal_bits(&self, spec: &ModelSpec) -> f64;
+
+    /// Fused decode-and-fold: stream this update into the accumulator as
+    /// `acc += (weight/total)·decode(enc)` without allocating. Fold order
+    /// within the update is fixed (elements/indices ascending), so
+    /// aggregation stays bit-reproducible at any thread count.
+    fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta);
+}
+
+// ---------------------------------------------------------------------------
+// Dense32 — fp32 passthrough (the default; bit-identical to the PR 3 fold)
+// ---------------------------------------------------------------------------
+
+/// Uncompressed fp32 passthrough. Lossless, so no residual is kept, and
+/// its fold is per-element identical to [`ParamSet::axpy`] — running with
+/// `codec.kind=dense` reproduces the pre-codec round loop to the bit.
+///
+/// The round loop never routes through this encode: the device skips
+/// encoding for lossless codecs and the engines fold the delta buffer
+/// directly (`engine::fold_update`), so the default path keeps PR 3's
+/// zero-copy contract. The encode/fold implementations exist for the
+/// wire-path property pins and the `codec_*` benches.
+pub struct Dense32;
+
+impl UpdateCodec for Dense32 {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Dense
+    }
+
+    fn lossy(&self) -> bool {
+        false
+    }
+
+    fn encode(
+        &self,
+        delta: &mut ParamSet,
+        _residual: Option<&mut ParamSet>,
+        _rng: &mut Pcg32,
+        out: &mut EncodedDelta,
+    ) {
+        out.resize_for(delta);
+        for (el, src) in out.leaves.iter_mut().zip(&delta.leaves) {
+            el.payload = Payload::Dense;
+            el.len = src.len();
+            el.value_bits = 32;
+            el.scale = 0.0;
+            el.dense.clear();
+            el.dense.extend_from_slice(src);
+            el.idx.clear();
+            el.vals.clear();
+            el.q.clear();
+        }
+    }
+
+    fn nominal_bits(&self, spec: &ModelSpec) -> f64 {
+        spec.update_bits()
+    }
+
+    fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta) {
+        acc.fold_encoded_with(weight, |w, dst| {
+            for (d, e) in dst.leaves.iter_mut().zip(&enc.leaves) {
+                kernels::axpy_dense(w, &e.dense, d);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// QuantStochastic — QSGD-style per-tensor stochastic uniform quantization
+// ---------------------------------------------------------------------------
+
+/// Every element quantized to `qbits`-bit signed levels with stochastic
+/// (unbiased) rounding; one fp32 scale per leaf. Wire cost
+/// `qbits·P + 32·leaves` bits.
+pub struct QuantStochastic {
+    pub qbits: u32,
+}
+
+impl UpdateCodec for QuantStochastic {
+    fn kind(&self) -> CodecKind {
+        CodecKind::Quant
+    }
+
+    fn encode(
+        &self,
+        delta: &mut ParamSet,
+        residual: Option<&mut ParamSet>,
+        rng: &mut Pcg32,
+        out: &mut EncodedDelta,
+    ) {
+        let residual = residual.expect("lossy codec encodes with a residual");
+        delta.axpy(1.0, residual); // error feedback in
+        out.resize_for(delta);
+        for ((el, src), res) in
+            out.leaves.iter_mut().zip(&delta.leaves).zip(&mut residual.leaves)
+        {
+            el.payload = Payload::Quant;
+            el.len = src.len();
+            el.value_bits = wire_value_bits(self.qbits);
+            el.dense.clear();
+            el.idx.clear();
+            el.vals.clear();
+            el.scale = kernels::quantize_stochastic(src, self.qbits, rng, &mut el.q);
+            kernels::residual_quant(src, &el.q, el.scale, res); // error feedback out
+        }
+    }
+
+    fn nominal_bits(&self, spec: &ModelSpec) -> f64 {
+        let vb = wire_value_bits(self.qbits) as f64;
+        spec.leaves.iter().map(|l| vb * l.elems() as f64 + 32.0).sum()
+    }
+
+    fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta) {
+        acc.fold_encoded_with(weight, |w, dst| {
+            for (d, e) in dst.leaves.iter_mut().zip(&enc.leaves) {
+                kernels::axpy_quant(w, &e.q, e.scale, d);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TopK — magnitude top-k sparsification
+// ---------------------------------------------------------------------------
+
+/// Per leaf, keep the `⌈k_ratio·P⌉` largest-magnitude entries as
+/// ascending (index, fp32 value) pairs. Wire cost `64·k` bits; the fused
+/// fold touches k coordinates instead of P.
+pub struct TopK {
+    pub k_ratio: f64,
+}
+
+impl UpdateCodec for TopK {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopK
+    }
+
+    fn encode(
+        &self,
+        delta: &mut ParamSet,
+        residual: Option<&mut ParamSet>,
+        rng: &mut Pcg32,
+        out: &mut EncodedDelta,
+    ) {
+        let _ = rng; // selection is deterministic
+        let residual = residual.expect("lossy codec encodes with a residual");
+        delta.axpy(1.0, residual);
+        out.resize_for(delta);
+        for ((el, src), res) in
+            out.leaves.iter_mut().zip(&delta.leaves).zip(&mut residual.leaves)
+        {
+            el.payload = Payload::TopK;
+            el.len = src.len();
+            el.value_bits = 32;
+            el.scale = 0.0;
+            el.dense.clear();
+            el.q.clear();
+            kernels::select_top_k(src, k_of(src.len(), self.k_ratio), &mut el.idx);
+            el.vals.clear();
+            el.vals.extend(el.idx.iter().map(|&i| src[i as usize]));
+            // residual: the unsent coordinates keep their mass; sent ones
+            // were transmitted exactly, so theirs drops to zero.
+            res.copy_from_slice(src);
+            for &i in &el.idx {
+                res[i as usize] = 0.0;
+            }
+        }
+    }
+
+    fn nominal_bits(&self, spec: &ModelSpec) -> f64 {
+        spec.leaves
+            .iter()
+            .map(|l| 64.0 * k_of(l.elems(), self.k_ratio) as f64)
+            .sum()
+    }
+
+    fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta) {
+        acc.fold_encoded_with(weight, |w, dst| {
+            for (d, e) in dst.leaves.iter_mut().zip(&enc.leaves) {
+                kernels::axpy_sparse(w, &e.idx, &e.vals, d);
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TopKQuant — top-k indices with quantized values
+// ---------------------------------------------------------------------------
+
+/// [`TopK`] ∘ [`QuantStochastic`]: keep the k largest-magnitude entries,
+/// then quantize the kept values per leaf. Wire cost
+/// `(32 + qbits)·k + 32·leaves` bits.
+pub struct TopKQuant {
+    pub k_ratio: f64,
+    pub qbits: u32,
+}
+
+impl UpdateCodec for TopKQuant {
+    fn kind(&self) -> CodecKind {
+        CodecKind::TopKQuant
+    }
+
+    fn encode(
+        &self,
+        delta: &mut ParamSet,
+        residual: Option<&mut ParamSet>,
+        rng: &mut Pcg32,
+        out: &mut EncodedDelta,
+    ) {
+        let residual = residual.expect("lossy codec encodes with a residual");
+        delta.axpy(1.0, residual);
+        out.resize_for(delta);
+        for ((el, src), res) in
+            out.leaves.iter_mut().zip(&delta.leaves).zip(&mut residual.leaves)
+        {
+            el.payload = Payload::TopKQuant;
+            el.len = src.len();
+            el.value_bits = wire_value_bits(self.qbits);
+            el.dense.clear();
+            kernels::select_top_k(src, k_of(src.len(), self.k_ratio), &mut el.idx);
+            // gather the kept values (vals doubles as quantizer scratch)
+            el.vals.clear();
+            el.vals.extend(el.idx.iter().map(|&i| src[i as usize]));
+            el.scale = kernels::quantize_stochastic(&el.vals, self.qbits, rng, &mut el.q);
+            // residual: full mass off-support, quantization error on it
+            res.copy_from_slice(src);
+            for (j, &i) in el.idx.iter().enumerate() {
+                res[i as usize] = src[i as usize] - el.scale * f32::from(el.q[j]);
+            }
+            el.vals.clear(); // scratch only — the wire carries idx+q+scale
+        }
+    }
+
+    fn nominal_bits(&self, spec: &ModelSpec) -> f64 {
+        let vb = wire_value_bits(self.qbits) as f64;
+        spec.leaves
+            .iter()
+            .map(|l| (32.0 + vb) * k_of(l.elems(), self.k_ratio) as f64 + 32.0)
+            .sum()
+    }
+
+    fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta) {
+        acc.fold_encoded_with(weight, |w, dst| {
+            for (d, e) in dst.leaves.iter_mut().zip(&enc.leaves) {
+                kernels::axpy_sparse_quant(w, &e.idx, &e.q, e.scale, d);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_set(g: &mut prop::Gen, shapes: &[usize]) -> ParamSet {
+        ParamSet {
+            leaves: shapes.iter().map(|&n| g.vec_f32(n, -2.0, 2.0)).collect(),
+        }
+    }
+
+    fn decode_dense(codec: &dyn UpdateCodec, enc: &EncodedDelta, shape: &ParamSet) -> ParamSet {
+        let mut acc = FedAccumulator::zeros_like(shape);
+        acc.begin(1.0);
+        codec.decode_fold_into(&mut acc, 1.0, enc);
+        let mut out = ParamSet::zeros_matching(shape);
+        acc.write_average_into(&mut out);
+        out
+    }
+
+    #[test]
+    fn kind_labels_roundtrip_through_parse() {
+        for k in [CodecKind::Dense, CodecKind::Quant, CodecKind::TopK, CodecKind::TopKQuant] {
+            assert_eq!(CodecKind::parse(k.label()).unwrap(), k);
+        }
+        assert_eq!(CodecKind::parse("qsgd").unwrap(), CodecKind::Quant);
+        assert!(CodecKind::parse("arithmetic").is_err());
+    }
+
+    #[test]
+    fn config_validates_bounds_with_actionable_messages() {
+        let ok = CodecConfig::default();
+        assert!(ok.validate().is_ok());
+        for (qbits, k_ratio) in [(0u32, 0.1f64), (17, 0.1), (8, 0.0), (8, -0.5), (8, 1.5)] {
+            let bad = CodecConfig { kind: CodecKind::TopKQuant, qbits, k_ratio };
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("codec.qbits") || err.contains("codec.k_ratio"),
+                "unactionable error: {err}"
+            );
+        }
+        // boundary values are legal
+        assert!(CodecConfig { kind: CodecKind::Quant, qbits: 1, k_ratio: 1.0 }
+            .validate()
+            .is_ok());
+        assert!(CodecConfig { kind: CodecKind::Quant, qbits: 16, k_ratio: 1.0 }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn build_dispatches_every_kind() {
+        for kind in [CodecKind::Dense, CodecKind::Quant, CodecKind::TopK, CodecKind::TopKQuant] {
+            let c = CodecConfig { kind, ..Default::default() }.build().unwrap();
+            assert_eq!(c.kind(), kind);
+            assert_eq!(c.lossy(), kind != CodecKind::Dense);
+        }
+        assert!(CodecConfig { qbits: 0, ..Default::default() }.build().is_err());
+    }
+
+    /// The Dense32 bit-identity pin: folding through the codec's fused
+    /// decode path equals folding the raw ParamSets through the PR 3
+    /// accumulator, to the bit, across random shapes and weights.
+    #[test]
+    fn prop_dense_codec_fold_matches_plain_fold() {
+        prop::check(0xDE45E, 40, |g| {
+            let n_leaves = g.usize_in(1, 3);
+            let shapes: Vec<usize> = (0..n_leaves).map(|_| g.usize_in(1, 50)).collect();
+            let n = g.usize_in(1, 6);
+            let sets: Vec<ParamSet> = (0..n).map(|_| random_set(g, &shapes)).collect();
+            let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.1, 300.0)).collect();
+            let total: f64 = ws.iter().sum();
+
+            let mut plain = FedAccumulator::zeros_like(&sets[0]);
+            plain.begin(total);
+            for (s, &w) in sets.iter().zip(&ws) {
+                plain.fold(w, s);
+            }
+
+            let codec = Dense32;
+            let mut rng = Pcg32::seeded(1);
+            let mut fused = FedAccumulator::zeros_like(&sets[0]);
+            fused.begin(total);
+            let mut enc = EncodedDelta::new();
+            for (s, &w) in sets.iter().zip(&ws) {
+                let mut d = s.clone();
+                codec.encode(&mut d, None, &mut rng, &mut enc);
+                if codec.encoded_bits(&enc) != 32.0 * s.param_count() as f64 {
+                    return Err("dense bits accounting".into());
+                }
+                codec.decode_fold_into(&mut fused, w, &enc);
+            }
+            if fused.count() != plain.count() {
+                return Err("fold count".into());
+            }
+            let mut a = ParamSet::zeros_matching(&sets[0]);
+            let mut b = ParamSet::zeros_matching(&sets[0]);
+            plain.write_average_into(&mut a);
+            fused.write_average_into(&mut b);
+            if a.leaves != b.leaves {
+                return Err("dense codec fold diverged from plain fold".into());
+            }
+            Ok(())
+        });
+    }
+
+    /// The error-feedback identity every lossy codec must satisfy:
+    /// after `encode(delta, residual)`, `decode(enc) + residual == delta`
+    /// (delta here being the EF-adjusted input the codec actually saw).
+    #[test]
+    fn prop_lossy_roundtrip_residual_identity() {
+        prop::check(0xEFEED, 30, |g| {
+            let shapes = [g.usize_in(1, 80), g.usize_in(1, 15)];
+            let codecs: [Box<dyn UpdateCodec>; 3] = [
+                Box::new(QuantStochastic { qbits: g.usize_in(1, 16) as u32 }),
+                Box::new(TopK { k_ratio: g.f64_in(0.01, 1.0) }),
+                Box::new(TopKQuant {
+                    k_ratio: g.f64_in(0.01, 1.0),
+                    qbits: g.usize_in(2, 16) as u32,
+                }),
+            ];
+            for codec in &codecs {
+                let mut delta = random_set(g, &shapes);
+                let mut residual = ParamSet::zeros_matching(&delta);
+                // pre-load a nonzero residual so EF-in is exercised too
+                residual.leaves[0].iter_mut().for_each(|v| *v = 0.125);
+                let mut rng = Pcg32::seeded(g.rng.next_u64());
+                let mut enc = EncodedDelta::new();
+                codec.encode(&mut delta, Some(&mut residual), &mut rng, &mut enc);
+                let mut recon = decode_dense(&**codec, &enc, &delta);
+                recon.axpy(1.0, &residual);
+                for (r, d) in recon.leaves.iter().flatten().zip(delta.leaves.iter().flatten())
+                {
+                    if (r - d).abs() > 1e-5 {
+                        return Err(format!(
+                            "{}: residual identity broke: {r} vs {d}",
+                            codec.kind().label()
+                        ));
+                    }
+                }
+                if (codec.encoded_bits(&enc) - enc.wire_bits()).abs() > 1e-9 {
+                    return Err("encoded_bits disagrees with wire accounting".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Top-k keeps exactly the k largest magnitudes of the EF-adjusted
+    /// delta, per leaf, in ascending index order.
+    #[test]
+    fn prop_topk_keeps_largest_magnitudes() {
+        prop::check(0x707C, 30, |g| {
+            let len = g.usize_in(2, 120);
+            let k_ratio = g.f64_in(0.05, 0.9);
+            let codec = TopK { k_ratio };
+            let mut delta = random_set(g, &[len]);
+            let frozen = delta.clone();
+            let mut residual = ParamSet::zeros_matching(&delta);
+            let mut rng = Pcg32::seeded(3);
+            let mut enc = EncodedDelta::new();
+            codec.encode(&mut delta, Some(&mut residual), &mut rng, &mut enc);
+            let k = k_of(len, k_ratio);
+            let el = &enc.leaves[0];
+            if el.idx.len() != k || el.vals.len() != k {
+                return Err(format!("kept {} of expected {k}", el.idx.len()));
+            }
+            // with a zero residual the codec saw exactly `frozen`
+            let src = &frozen.leaves[0];
+            let kept_min =
+                el.idx.iter().map(|&i| src[i as usize].abs()).fold(f32::INFINITY, f32::min);
+            for (i, &v) in src.iter().enumerate() {
+                let sent = el.idx.binary_search(&(i as u32)).is_ok();
+                if !sent && v.abs() > kept_min {
+                    return Err(format!("dropped |{v}| > kept min {kept_min}"));
+                }
+                if sent {
+                    let j = el.idx.binary_search(&(i as u32)).unwrap();
+                    if el.vals[j] != v {
+                        return Err("top-k values are exact copies".into());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// nominal_bits is exact: a real encode of a model-shaped delta
+    /// produces exactly the bits the planner/channel were priced with.
+    #[test]
+    fn nominal_bits_match_actual_encodes() {
+        use crate::model::LeafSpec;
+        let spec = ModelSpec {
+            name: "t".into(),
+            leaves: vec![
+                LeafSpec { name: "w".into(), shape: vec![40, 7] },
+                LeafSpec { name: "b".into(), shape: vec![7] },
+            ],
+            classes: 7,
+            height: 8,
+            width: 5,
+            channels: 1,
+        };
+        let codecs: [Box<dyn UpdateCodec>; 4] = [
+            Box::new(Dense32),
+            Box::new(QuantStochastic { qbits: 4 }),
+            Box::new(TopK { k_ratio: 0.1 }),
+            Box::new(TopKQuant { k_ratio: 0.1, qbits: 4 }),
+        ];
+        let mut g = prop::Gen { rng: Pcg32::seeded(0xB175) };
+        for codec in &codecs {
+            let mut delta = random_set(&mut g, &[280, 7]);
+            let mut residual = ParamSet::zeros_matching(&delta);
+            let mut rng = Pcg32::seeded(5);
+            let mut enc = EncodedDelta::new();
+            let res = if codec.lossy() { Some(&mut residual) } else { None };
+            codec.encode(&mut delta, res, &mut rng, &mut enc);
+            assert_eq!(
+                codec.encoded_bits(&enc),
+                codec.nominal_bits(&spec),
+                "{} bits accounting drifted",
+                codec.kind().label()
+            );
+            assert!(codec.nominal_bits(&spec) > 0.0);
+        }
+        // lossy codecs genuinely shrink the wire
+        assert!(codecs[1].nominal_bits(&spec) < spec.update_bits());
+        assert!(codecs[2].nominal_bits(&spec) < spec.update_bits());
+        assert!(codecs[3].nominal_bits(&spec) < codecs[2].nominal_bits(&spec));
+    }
+
+    /// The acceptance pin behind the `codec_fold_1000dev` bench: at
+    /// `k_ratio = 0.1` a top-k encode folds strictly fewer f32s than the
+    /// dense fold of the same model.
+    #[test]
+    fn topk_folds_strictly_fewer_values_than_dense() {
+        let shapes = [100_352usize, 128, 1_280, 10]; // the 103k bench layout
+        let total: usize = shapes.iter().sum();
+        let mut g = prop::Gen { rng: Pcg32::seeded(0xF01D) };
+        let mut delta = random_set(&mut g, &shapes);
+        let mut residual = ParamSet::zeros_matching(&delta);
+        let mut rng = Pcg32::seeded(2);
+        let mut enc = EncodedDelta::new();
+        let topk = TopK { k_ratio: 0.1 };
+        topk.encode(&mut delta, Some(&mut residual), &mut rng, &mut enc);
+        assert!(enc.folded_values() > 0);
+        assert!(
+            enc.folded_values() < total,
+            "top-k must fold fewer values: {} vs {total}",
+            enc.folded_values()
+        );
+        // dense folds every value
+        let dense = Dense32;
+        let mut enc_d = EncodedDelta::new();
+        let mut d2 = random_set(&mut g, &shapes);
+        dense.encode(&mut d2, None, &mut rng, &mut enc_d);
+        assert_eq!(enc_d.folded_values(), total);
+    }
+
+    /// Encode buffers are reused: a second encode into the same
+    /// EncodedDelta yields the same layout with no stale payload mixing.
+    #[test]
+    fn encode_buffers_are_reusable_across_codecs() {
+        let shapes = [60usize, 9];
+        let mut g = prop::Gen { rng: Pcg32::seeded(0xBEEF2) };
+        let mut enc = EncodedDelta::new();
+        let mut rng = Pcg32::seeded(4);
+
+        let mut d = random_set(&mut g, &shapes);
+        let mut res = ParamSet::zeros_matching(&d);
+        TopK { k_ratio: 0.2 }.encode(&mut d, Some(&mut res), &mut rng, &mut enc);
+        assert_eq!(enc.leaves[0].payload, Payload::TopK);
+        assert!(!enc.leaves[0].idx.is_empty());
+
+        // same buffer, now dense: sparse fields must be cleared
+        let mut d2 = random_set(&mut g, &shapes);
+        Dense32.encode(&mut d2, None, &mut rng, &mut enc);
+        for (el, src) in enc.leaves.iter().zip(&d2.leaves) {
+            assert_eq!(el.payload, Payload::Dense);
+            assert_eq!(&el.dense, src);
+            assert!(el.idx.is_empty() && el.vals.is_empty() && el.q.is_empty());
+        }
+        assert_eq!(enc.folded_values(), 69);
+    }
+
+    #[test]
+    fn k_of_bounds() {
+        assert_eq!(k_of(100, 0.1), 10);
+        assert_eq!(k_of(100, 0.001), 1); // floor of 1
+        assert_eq!(k_of(100, 1.0), 100);
+        assert_eq!(k_of(3, 0.5), 2); // ceil
+        assert_eq!(k_of(1, 0.01), 1);
+        assert_eq!(k_of(0, 0.5), 0); // empty leaf: nominal == actual == 0
+    }
+
+    /// qbits = 1 degenerates to a ternary alphabet (−1/0/+1); the wire
+    /// must bill its ⌈log2 3⌉ = 2 bits, not a fictional 1.
+    #[test]
+    fn qbits_one_bills_the_ternary_alphabet_at_two_bits() {
+        assert_eq!(wire_value_bits(1), 2);
+        assert_eq!(wire_value_bits(2), 2);
+        assert_eq!(wire_value_bits(8), 8);
+        assert_eq!(wire_value_bits(16), 16);
+        let spec = ModelSpec {
+            name: "t".into(),
+            leaves: vec![crate::model::LeafSpec { name: "w".into(), shape: vec![10] }],
+            classes: 2,
+            height: 1,
+            width: 10,
+            channels: 1,
+        };
+        let q1 = QuantStochastic { qbits: 1 };
+        let q2 = QuantStochastic { qbits: 2 };
+        assert_eq!(q1.nominal_bits(&spec), q2.nominal_bits(&spec));
+        assert_eq!(q1.nominal_bits(&spec), 2.0 * 10.0 + 32.0);
+    }
+}

@@ -135,6 +135,13 @@ pub struct ExperimentConfig {
     /// artifacts, the default when compiled in) or `native` (pure-Rust
     /// softmax/MLP — no artifacts, no XLA).
     pub backend: crate::runtime::BackendKind,
+    // [codec]
+    /// How update deltas are encoded for the uplink: `dense` (fp32
+    /// passthrough, default), `quant` (QSGD-style stochastic
+    /// quantization, `codec.qbits`), `topk` (magnitude top-k,
+    /// `codec.k_ratio`), or `topk_quant` (both). Lossy codecs keep
+    /// per-device error-feedback residuals.
+    pub codec: crate::codec::CodecConfig,
     // [engine]
     pub engine: crate::coordinator::EngineConfig,
     // [selection]
@@ -184,6 +191,7 @@ impl Default for ExperimentConfig {
             c: 1.0,
             policy: Policy::Defl,
             backend: crate::runtime::BackendKind::default(),
+            codec: crate::codec::CodecConfig::default(),
             engine: crate::coordinator::EngineConfig::default(),
             selection: crate::coordinator::Selection::All,
             max_rounds: 60,
@@ -298,6 +306,18 @@ impl ExperimentConfig {
                 self.backend = crate::runtime::BackendKind::parse(kind)?;
             }
         }
+        if let Some(c) = j.get("codec") {
+            if let Some(kind) = c.get("kind").and_then(|x| x.as_str()) {
+                self.codec.kind = crate::codec::CodecKind::parse(kind)?;
+            }
+            let mut qbits = self.codec.qbits as usize;
+            get_usize(c, "qbits", &mut qbits)?;
+            // usize → u32: the 1..=16 range check happens in validate(),
+            // but an absurd value must not wrap silently here.
+            self.codec.qbits = u32::try_from(qbits)
+                .map_err(|_| anyhow::anyhow!("codec.qbits: {qbits} out of range"))?;
+            get_f64(c, "k_ratio", &mut self.codec.k_ratio)?;
+        }
         if let Some(e) = j.get("engine") {
             if let Some(kind) = e.get("kind").and_then(|x| x.as_str()) {
                 self.engine.kind = crate::coordinator::EngineKind::parse(kind)?;
@@ -375,6 +395,7 @@ impl ExperimentConfig {
         if let Policy::Fixed { batch, local_rounds } = self.policy {
             anyhow::ensure!(batch >= 1 && local_rounds >= 1, "fixed policy bounds");
         }
+        self.codec.validate()?;
         self.engine.validate()?;
         Ok(())
     }
@@ -546,6 +567,50 @@ mod tests {
         assert_eq!(c.backend, BackendKind::Pjrt);
         assert!(c.set_override("backend.kind=tpu").is_err());
         assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn codec_section_parses_and_validates() {
+        use crate::codec::CodecKind;
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.codec.kind, CodecKind::Dense);
+        c.set_override("codec.kind=topk").unwrap();
+        c.set_override("codec.k_ratio=0.05").unwrap();
+        assert_eq!(c.codec.kind, CodecKind::TopK);
+        assert_eq!(c.codec.k_ratio, 0.05);
+        c.set_override("codec.kind=topk_quant").unwrap();
+        c.set_override("codec.qbits=4").unwrap();
+        assert_eq!(c.codec.kind, CodecKind::TopKQuant);
+        assert_eq!(c.codec.qbits, 4);
+        assert!(c.validate().is_ok());
+        assert!(c.set_override("codec.kind=gzip").is_err());
+    }
+
+    #[test]
+    fn codec_validation_rejects_out_of_range_knobs() {
+        // k_ratio outside (0, 1]
+        for bad in ["0", "-0.5", "1.5"] {
+            let mut c = ExperimentConfig::default();
+            c.set_override("codec.kind=topk").unwrap();
+            c.set_override(&format!("codec.k_ratio={bad}")).unwrap();
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains("codec.k_ratio"), "{err}");
+        }
+        // qbits outside 1..=16
+        for bad in ["0", "17"] {
+            let mut c = ExperimentConfig::default();
+            c.set_override("codec.kind=quant").unwrap();
+            c.set_override(&format!("codec.qbits={bad}")).unwrap();
+            let err = c.validate().unwrap_err().to_string();
+            assert!(err.contains("codec.qbits"), "{err}");
+        }
+        // bounds are inclusive where they should be
+        for ok in ["codec.qbits=1", "codec.qbits=16", "codec.k_ratio=1.0"] {
+            let mut c = ExperimentConfig::default();
+            c.set_override("codec.kind=topk_quant").unwrap();
+            c.set_override(ok).unwrap();
+            assert!(c.validate().is_ok(), "{ok} should validate");
+        }
     }
 
     #[test]

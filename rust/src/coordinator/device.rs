@@ -6,10 +6,16 @@
 //! reuses them round over round, so a warm round loop runs per-device
 //! training without touching the allocator (DESIGN.md §8). After
 //! [`Device::train_planned_shared`] / [`Device::train_planned_mut`] the
-//! device holds its update **delta** `Δ = w_local − w_global`; the round
-//! engines fold those deltas straight into the coordinator's preallocated
-//! [`crate::model::FedAccumulator`] instead of copying K full models.
+//! device holds its update **delta** `Δ = w_local − w_global` — and,
+//! under a *lossy* [`crate::codec::UpdateCodec`], its encoded form
+//! ([`Device::encoded`]): training ends with an in-place encode that
+//! applies the device's error-feedback residual (DESIGN.md §9). The
+//! round engines fold updates straight into the coordinator's
+//! preallocated [`crate::model::FedAccumulator`] instead of copying K
+//! full models — through the codec's fused decode for lossy codecs, and
+//! directly from the delta buffer for lossless ones (no wire copy).
 
+use crate::codec::{EncodedDelta, UpdateCodec};
 use crate::data::Dataset;
 use crate::model::ParamSet;
 use crate::runtime::{ParallelStep, StepScratch, TrainBackend};
@@ -34,10 +40,22 @@ pub struct Device {
     /// Batches currently planned (plan entries beyond this are stale).
     planned: usize,
     /// Local-model buffer during training; after a local round it holds
-    /// the update delta `Δ = w_local − w_global`.
+    /// the update delta `Δ = w_local − w_global` (for a lossy codec: the
+    /// error-feedback-adjusted delta the codec saw).
     delta: Option<ParamSet>,
     /// The backend's reusable step workspace (lazy; sized at first use).
     scratch: Option<Box<dyn StepScratch>>,
+    /// Error-feedback residual `e_m` (lossy codecs only; lazily
+    /// allocated, persists across rounds so *compressor*-dropped mass
+    /// re-enters later encodes). Mass the channel or a deadline drops is
+    /// lost exactly as a dense update's would be — the device gets no
+    /// server ack, so EF compensates the encoding, not the link.
+    residual: Option<ParamSet>,
+    /// This round's codec-encoded update (reusable wire buffers).
+    encoded: EncodedDelta,
+    /// Private RNG stream for stochastic quantization — separate from the
+    /// batch stream, so enabling a codec never perturbs batch draws.
+    codec_rng: Pcg32,
 }
 
 impl Device {
@@ -56,6 +74,9 @@ impl Device {
             planned: 0,
             delta: None,
             scratch: None,
+            residual: None,
+            encoded: EncodedDelta::new(),
+            codec_rng: Pcg32::new(seed ^ 0xC0DEC, id as u64 + 1),
         }
     }
 
@@ -110,9 +131,43 @@ impl Device {
     }
 
     /// This round's update delta `Δ = w_local − w_global` — valid after a
-    /// `train_planned_*` call, until the next one.
+    /// `train_planned_*` call, until the next one. For a lossy codec this
+    /// is the error-feedback-adjusted delta (`Δ + e_m`) the codec encoded.
     pub fn delta(&self) -> &ParamSet {
         self.delta.as_ref().expect("delta read before local training")
+    }
+
+    /// This round's codec-encoded update — what the engines fold and the
+    /// channel transmits under a *lossy* codec. Valid after a
+    /// `train_planned_*` call, until the next one. A lossless codec
+    /// never populates this buffer: the engines fold [`Device::delta`]
+    /// directly, preserving the copy-free PR 3 round loop.
+    pub fn encoded(&self) -> &EncodedDelta {
+        &self.encoded
+    }
+
+    /// The device's error-feedback residual (None until a lossy codec
+    /// first encoded an update here).
+    pub fn residual(&self) -> Option<&ParamSet> {
+        self.residual.as_ref()
+    }
+
+    /// Encode the freshly computed delta through `codec`, in place:
+    /// error-feedback in (the residual folds into the delta), encode into
+    /// the reusable wire buffers, error-feedback out (the dropped mass
+    /// becomes the next round's residual). Lossless codecs skip encoding
+    /// entirely — the wire is the delta itself and the engines fold
+    /// [`Device::delta`] directly, so the default dense path performs no
+    /// model-sized copy (the PR 3 contract).
+    fn encode_update(&mut self, codec: &dyn UpdateCodec) {
+        if !codec.lossy() {
+            return;
+        }
+        let delta = self.delta.as_mut().expect("encode before local training");
+        if self.residual.is_none() {
+            self.residual = Some(ParamSet::zeros_matching(delta));
+        }
+        codec.encode(delta, self.residual.as_mut(), &mut self.codec_rng, &mut self.encoded);
     }
 
     /// Reuse (or first-allocate) the local-model buffer, loaded with the
@@ -129,9 +184,11 @@ impl Device {
 
     /// Execute `v = planned` SGD iterations over the planned batches
     /// through a `&self`-shareable backend (the thread-pool fan-out path),
-    /// leaving the update delta in the device and returning the mean local
-    /// training loss. Iteration order and arithmetic are identical to the
-    /// `&mut` path, so a parallel run is bit-identical to a sequential one.
+    /// leaving the update delta *and its codec encoding* in the device and
+    /// returning the mean local training loss. Iteration order and
+    /// arithmetic are identical to the `&mut` path, so a parallel run is
+    /// bit-identical to a sequential one (the encode consumes only the
+    /// device's private codec RNG).
     pub fn train_planned_shared(
         &mut self,
         be: &dyn ParallelStep,
@@ -139,6 +196,7 @@ impl Device {
         global: &ParamSet,
         batch: usize,
         lr: f32,
+        codec: &dyn UpdateCodec,
     ) -> anyhow::Result<f64> {
         anyhow::ensure!(self.planned >= 1, "plan_batches_into before training");
         let mut local = self.pull_global(global);
@@ -153,6 +211,7 @@ impl Device {
         }
         local.sub_assign(global);
         self.delta = Some(local);
+        self.encode_update(codec);
         Ok(loss_acc / self.planned as f64)
     }
 
@@ -166,6 +225,7 @@ impl Device {
         global: &ParamSet,
         batch: usize,
         lr: f32,
+        codec: &dyn UpdateCodec,
     ) -> anyhow::Result<f64> {
         anyhow::ensure!(self.planned >= 1, "plan_batches_into before training");
         let mut local = self.pull_global(global);
@@ -180,13 +240,15 @@ impl Device {
         }
         local.sub_assign(global);
         self.delta = Some(local);
+        self.encode_update(codec);
         Ok(loss_acc / self.planned as f64)
     }
 
     /// Algorithm 1 step 3 in one call: plan `v` batches, run them, leave
-    /// the delta in the device (plan + execute; the engines call the two
-    /// halves separately so planning can fan out even when training
-    /// cannot).
+    /// the encoded delta in the device (plan + execute; the engines call
+    /// the two halves separately so planning can fan out even when
+    /// training cannot).
+    #[allow(clippy::too_many_arguments)]
     pub fn local_round_shared(
         &mut self,
         be: &dyn ParallelStep,
@@ -195,9 +257,10 @@ impl Device {
         batch: usize,
         v: usize,
         lr: f32,
+        codec: &dyn UpdateCodec,
     ) -> anyhow::Result<f64> {
         self.plan_batches_into(batch, v);
-        self.train_planned_shared(be, model, global, batch, lr)
+        self.train_planned_shared(be, model, global, batch, lr, codec)
     }
 }
 
@@ -295,12 +358,15 @@ mod tests {
     }
 
     /// The delta contract: after a local round the device holds
-    /// `Δ = w_local − w_global`, the shared and exclusive paths agree
-    /// bit-for-bit, and a second round reuses the same buffers.
+    /// `Δ = w_local − w_global` and its encoding, the shared and
+    /// exclusive paths agree bit-for-bit, and a second round reuses the
+    /// same buffers.
     #[cfg(feature = "native")]
     #[test]
     fn local_round_leaves_delta_and_paths_agree() {
+        use crate::codec::Dense32;
         use crate::runtime::NativeBackend;
+        let codec = Dense32;
         let ds = Arc::new(generate(&SynthSpec::tiny(64), 5));
         let mut be = NativeBackend::new(3);
         let global = {
@@ -309,11 +375,15 @@ mod tests {
         };
         let mut a = Device::new(0, (0..64).collect(), Arc::clone(&ds), 11);
         let mut b = Device::new(0, (0..64).collect(), ds, 11);
-        let loss_a = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1).unwrap();
+        let loss_a = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1, &codec).unwrap();
         b.plan_batches_into(8, 3);
-        let loss_b = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1).unwrap();
+        let loss_b = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1, &codec).unwrap();
         assert_eq!(loss_a, loss_b);
         assert_eq!(a.delta().leaves, b.delta().leaves);
+        // lossless codecs never touch the wire buffers: the engines fold
+        // the delta directly, so the PR 3 path stays copy-free
+        assert!(a.encoded().leaves.is_empty(), "dense skips the wire copy");
+        assert!(a.residual().is_none(), "dense codec keeps no residual");
         // a delta is a difference, not a model: applying it to the global
         // recovers the trained local model the old contract returned
         let mut local = global.clone();
@@ -323,10 +393,46 @@ mod tests {
         assert!(a.delta().leaves.iter().flatten().any(|&v| v != 0.0));
         assert!(loss_a.is_finite());
         // second round through the same buffers stays consistent
-        let loss_a2 = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1).unwrap();
+        let loss_a2 = a.local_round_shared(&be, "mlp", &global, 8, 3, 0.1, &codec).unwrap();
         b.plan_batches_into(8, 3);
-        let loss_b2 = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1).unwrap();
+        let loss_b2 = b.train_planned_mut(&mut be, "mlp", &global, 8, 0.1, &codec).unwrap();
         assert_eq!(loss_a2, loss_b2);
         assert_eq!(a.delta().leaves, b.delta().leaves);
+    }
+
+    /// A lossy codec leaves the device carrying both an encoded update
+    /// and an error-feedback residual, and decoded + residual recovers
+    /// the (EF-adjusted) delta — the device-level half of DESIGN.md §9.
+    #[cfg(feature = "native")]
+    #[test]
+    fn lossy_codec_keeps_error_feedback_residual() {
+        use crate::codec::{TopK, UpdateCodec as _};
+        use crate::model::FedAccumulator;
+        use crate::runtime::NativeBackend;
+        let codec = TopK { k_ratio: 0.25 };
+        let ds = Arc::new(generate(&SynthSpec::tiny(64), 5));
+        let be = NativeBackend::new(3);
+        let global = {
+            use crate::runtime::TrainBackend as _;
+            be.initial_params("mlp").unwrap()
+        };
+        let mut d = Device::new(0, (0..64).collect(), ds, 11);
+        d.local_round_shared(&be, "mlp", &global, 8, 3, 0.1, &codec).unwrap();
+        let res = d.residual().expect("lossy codec allocates the residual");
+        assert!(res.leaves.iter().flatten().any(|&v| v != 0.0), "some mass dropped");
+        // decode(enc) + residual == EF-adjusted delta
+        let mut acc = FedAccumulator::zeros_like(&global);
+        acc.begin(1.0);
+        codec.decode_fold_into(&mut acc, 1.0, d.encoded());
+        let mut recon = crate::model::ParamSet::zeros_matching(&global);
+        acc.write_average_into(&mut recon);
+        recon.axpy(1.0, res);
+        for (r, dv) in recon.leaves.iter().flatten().zip(d.delta().leaves.iter().flatten()) {
+            assert!((r - dv).abs() <= 1e-6, "{r} vs {dv}");
+        }
+        // second round reuses the residual buffer (EF carries over)
+        let p0 = d.residual().unwrap() as *const _;
+        d.local_round_shared(&be, "mlp", &global, 8, 3, 0.1, &codec).unwrap();
+        assert!(std::ptr::eq(p0, d.residual().unwrap()));
     }
 }

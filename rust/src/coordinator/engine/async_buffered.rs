@@ -28,8 +28,8 @@
 //! devices still in flight keep their (now stale) update in the buffer.
 
 use super::{
-    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
-    RoundEngine,
+    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
+    wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -50,6 +50,8 @@ struct InFlight {
     arrival: f64,
     /// Aggregation index at which the device pulled the global model.
     born_agg: usize,
+    /// Wire size of the encoded update in bits.
+    bits: f64,
 }
 
 /// FedBuff-style engine: aggregate the `K` earliest-arriving updates,
@@ -118,6 +120,7 @@ impl RoundEngine for AsyncBuffered {
                     t_cp,
                     arrival: now + v as f64 * t_cp + up.times[u.device],
                     born_agg: self.aggregations,
+                    bits: u.bits,
                 });
             }
             push_energy(sys, &starters, &up.times, bits_per_sample);
@@ -148,6 +151,8 @@ impl RoundEngine for AsyncBuffered {
                 participants: 0,
                 dropped: lost,
                 mean_staleness: 0.0,
+                encoded_bits: f64::NAN,
+                compression_ratio: f64::NAN,
             });
         }
 
@@ -164,9 +169,10 @@ impl RoundEngine for AsyncBuffered {
         let delta = (arrived_at - now).max(0.0);
 
         // 4. staleness-discounted FedBuff fold over the buffer: stream
-        //    each taken device's delta into the preallocated accumulator
-        //    (arrival order — deterministic after the sort above) and
-        //    apply the mean delta to the current global model.
+        //    each taken device's *encoded* delta into the preallocated
+        //    accumulator (arrival order — deterministic after the sort
+        //    above) through the codec's fused decode-and-fold, and apply
+        //    the mean delta to the current global model.
         let staleness: Vec<usize> =
             taken.iter().map(|f| self.aggregations - f.born_agg).collect();
         let total_w: f64 = taken
@@ -175,10 +181,10 @@ impl RoundEngine for AsyncBuffered {
             .map(|(f, &s)| f.weight * self.discount(s))
             .sum();
         {
-            let FlSystem { devices, global, agg, .. } = &mut *sys;
+            let FlSystem { devices, global, agg, codec, .. } = &mut *sys;
             agg.begin(total_w);
             for (f, &s) in taken.iter().zip(&staleness) {
-                agg.fold(f.weight * self.discount(s), devices[f.device].delta());
+                fold_update(&**codec, agg, f.weight * self.discount(s), &devices[f.device]);
             }
             agg.apply_delta_to(global);
         }
@@ -201,6 +207,11 @@ impl RoundEngine for AsyncBuffered {
             wsum += f.weight;
         }
         let mean_staleness = staleness.iter().sum::<usize>() as f64 / staleness.len() as f64;
+        let (encoded_bits, compression_ratio) = wire_metrics(
+            sys.spec.update_bits(),
+            taken.iter().map(|f| f.bits).sum(),
+            taken.len(),
+        );
 
         Ok(RoundRecord {
             round: round_no,
@@ -215,6 +226,8 @@ impl RoundEngine for AsyncBuffered {
             participants: taken.len(),
             dropped: lost,
             mean_staleness,
+            encoded_bits,
+            compression_ratio,
         })
     }
 }

@@ -15,8 +15,8 @@
 //! by `rust/tests/integration.rs::engine_parity_deadline_generous`).
 
 use super::{
-    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
-    RoundEngine,
+    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
+    wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -79,6 +79,7 @@ impl RoundEngine for DeadlineSync {
         let mut t_cp_survivors = 0f64;
         let mut total_w = 0f64;
         let mut participants = 0usize;
+        let mut bits_sum = 0f64;
         for u in &updates {
             let t_cp_m = sys.fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
             slowest = slowest.max(v as f64 * t_cp_m + up.times[u.device]);
@@ -90,6 +91,7 @@ impl RoundEngine for DeadlineSync {
                 total_w += u.weight;
                 participants += 1;
                 t_cp_survivors = t_cp_survivors.max(t_cp_m);
+                bits_sum += u.bits;
             }
         }
         if participants == 0 {
@@ -98,16 +100,18 @@ impl RoundEngine for DeadlineSync {
                 self.deadline_s
             );
         } else {
-            let FlSystem { devices, global, agg, fleet, .. } = sys;
+            let FlSystem { devices, global, agg, fleet, codec, .. } = sys;
             agg.begin(total_w);
             for u in &updates {
                 let t_cp_m = fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
                 if self.survives(v, t_cp_m, up.times[u.device]) && up.delivered[u.device] {
-                    agg.fold(u.weight, devices[u.device].delta());
+                    fold_update(&**codec, agg, u.weight, &devices[u.device]);
                 }
             }
             agg.apply_delta_to(global);
         }
+        let (encoded_bits, compression_ratio) =
+            wire_metrics(sys.spec.update_bits(), bits_sum, participants);
 
         // The server waits until every cohort device is in, or until the
         // deadline fires — whichever comes first. Compute share = the
@@ -133,6 +137,8 @@ impl RoundEngine for DeadlineSync {
             participants,
             dropped: cohort.len() - participants,
             mean_staleness: 0.0,
+            encoded_bits,
+            compression_ratio,
         })
     }
 }

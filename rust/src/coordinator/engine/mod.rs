@@ -142,17 +142,23 @@ pub fn build(cfg: &EngineConfig, devices: usize, expected_round_s: f64) -> Box<d
 // Shared substrate phases
 // ---------------------------------------------------------------------------
 
-/// One device's finished local update. The update *delta*
-/// `Δ = w_local − w_global` itself stays in the producing device's
-/// reusable buffer ([`Device::delta`]) — engines fold it into the
-/// system's preallocated [`crate::model::FedAccumulator`] instead of
-/// copying K full models per round (DESIGN.md §8).
+/// One device's finished local update. The *encoded* update itself stays
+/// in the producing device's reusable buffers ([`Device::encoded`], with
+/// the raw delta in [`Device::delta`]) — engines fold it into the
+/// system's preallocated [`crate::model::FedAccumulator`] through the
+/// codec's fused decode path instead of copying K full models per round
+/// (DESIGN.md §8–9).
 pub(crate) struct LocalUpdate {
     pub device: usize,
     /// FedAvg weight `D_m` (eq. 2).
     pub weight: f64,
     /// Mean local training loss over the V iterations.
     pub loss: f64,
+    /// Wire size of this update in bits (what eq. 6 transmits) — the
+    /// codec's `nominal_bits`, which equals the realized encode for
+    /// every built-in codec (pinned by
+    /// `codec::tests::nominal_bits_match_actual_encodes`).
+    pub bits: f64,
 }
 
 /// This round's uplink draw for the whole fleet.
@@ -181,17 +187,19 @@ pub(crate) fn pick_cohort(sys: &mut FlSystem) -> Vec<usize> {
 /// training is independent and deterministic — batch indices come from
 /// each device's private RNG, the kernels are sequential — so both paths
 /// are bit-identical to the sequential one regardless of thread count.
-/// Each device's update delta lands in its own reusable buffer
-/// ([`Device::delta`]); only (device, weight, loss) rows are returned.
+/// Each device's update delta — and its codec encoding — lands in its
+/// own reusable buffers ([`Device::delta`]/[`Device::encoded`]); only
+/// (device, weight, loss, bits) rows are returned.
 pub(crate) fn local_computation(
     sys: &mut FlSystem,
     cohort: &[usize],
 ) -> anyhow::Result<Vec<LocalUpdate>> {
     let (batch, v, threads, lr) = (sys.batch, sys.local_rounds, sys.cfg.threads, sys.cfg.lr);
     let fan_out = threads > 1 && cohort.len() > 1 && sys.backend.parallel().is_some();
-    let FlSystem { devices, backend, global, model, .. } = sys;
+    let FlSystem { devices, backend, global, model, codec, .. } = sys;
     let model = model.as_str();
     let global = &*global;
+    let codec: &dyn crate::codec::UpdateCodec = &**codec;
     // Disjoint &mut Device in cohort order (cohort is sorted+deduped,
     // so filtering iter_mut visits exactly the cohort, in order).
     let refs: Vec<&mut Device> = devices
@@ -204,7 +212,7 @@ pub(crate) fn local_computation(
     let losses: Vec<anyhow::Result<f64>> = if fan_out {
         let par = backend.parallel().expect("checked by fan_out");
         parallel_map(refs, threads, |dev| {
-            dev.local_round_shared(par, model, global, batch, v, lr)
+            dev.local_round_shared(par, model, global, batch, v, lr, codec)
         })
     } else {
         // Planning (RNG + gather — pure CPU) still parallelizes; training
@@ -214,15 +222,52 @@ pub(crate) fn local_computation(
             dev
         });
         refs.into_iter()
-            .map(|dev| dev.train_planned_mut(&mut **backend, model, global, batch, lr))
+            .map(|dev| dev.train_planned_mut(&mut **backend, model, global, batch, lr, codec))
             .collect()
     };
+    let bits = sys.codec.nominal_bits(&sys.spec);
     let mut out = Vec::with_capacity(cohort.len());
     for (&di, res) in cohort.iter().zip(losses) {
         let loss = res?;
-        out.push(LocalUpdate { device: di, weight: sys.devices[di].data_size() as f64, loss });
+        out.push(LocalUpdate {
+            device: di,
+            weight: sys.devices[di].data_size() as f64,
+            loss,
+            bits,
+        });
     }
     Ok(out)
+}
+
+/// Fold one finished update into the round accumulator. Lossy codecs
+/// stream their encoded payload through the fused decode path (k values
+/// per sparse update instead of P); the lossless dense codec folds the
+/// device's delta buffer directly — no wire copy was ever made
+/// ([`Device`] skips `encode_update` for lossless codecs), so the
+/// default path is exactly the copy-free PR 3 fold.
+pub(crate) fn fold_update(
+    codec: &dyn crate::codec::UpdateCodec,
+    agg: &mut crate::model::FedAccumulator,
+    weight: f64,
+    dev: &Device,
+) {
+    if codec.lossy() {
+        codec.decode_fold_into(agg, weight, dev.encoded());
+    } else {
+        agg.fold(weight, dev.delta());
+    }
+}
+
+/// The per-round wire metrics every engine records: (mean encoded bits
+/// over the aggregated updates, dense ÷ encoded compression ratio).
+/// `(NaN, NaN)` when nothing aggregated. One shared definition so the
+/// three engines can never drift on the metric's semantics.
+pub(crate) fn wire_metrics(dense_bits: f64, bits_sum: f64, participants: usize) -> (f64, f64) {
+    if participants == 0 {
+        return (f64::NAN, f64::NAN);
+    }
+    let encoded = bits_sum / participants as f64;
+    (encoded, dense_bits / encoded)
 }
 
 /// Data-size-weighted mean training loss over a set of updates (what the
@@ -244,9 +289,12 @@ pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
 
 /// Wireless uplink of each local update (eq. 6/7), optionally over an
 /// unreliable channel with retransmissions. Times are drawn for the whole
-/// fleet; engines restrict maxima/filters to their own cohorts.
+/// fleet; engines restrict maxima/filters to their own cohorts. The
+/// transmitted size is the *codec's* wire size (`nominal_bits`, exact for
+/// every built-in codec — DESIGN.md §9), times the legacy abstract
+/// `wireless.compression` multiplier.
 pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
-    let spec_bits = sys.spec.update_bits() * sys.cfg.compression;
+    let spec_bits = sys.codec.nominal_bits(&sys.spec) * sys.cfg.compression;
     if sys.cfg.outage_prob > 0.0 {
         let (times, _, delivered) =
             sys.channel
@@ -327,8 +375,17 @@ mod tests {
     }
 
     #[test]
+    fn wire_metrics_mean_ratio_and_empty_round() {
+        let (bits, ratio) = wire_metrics(3200.0, 800.0 + 800.0, 2);
+        assert_eq!(bits, 800.0);
+        assert_eq!(ratio, 4.0);
+        let (bits, ratio) = wire_metrics(3200.0, 0.0, 0);
+        assert!(bits.is_nan() && ratio.is_nan());
+    }
+
+    #[test]
     fn weighted_loss_matches_hand_fold() {
-        let mk = |w: f64, l: f64| LocalUpdate { device: 0, weight: w, loss: l };
+        let mk = |w: f64, l: f64| LocalUpdate { device: 0, weight: w, loss: l, bits: 32.0 };
         let ups = vec![mk(1.0, 2.0), mk(3.0, 4.0)];
         assert!((weighted_loss(&ups) - (2.0 + 12.0) / 4.0).abs() < 1e-12);
         assert!(weighted_loss(&[]).is_nan());

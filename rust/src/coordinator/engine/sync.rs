@@ -9,8 +9,8 @@
 //! `rust/tests/native_backend.rs::parallel_fanout_is_bit_identical_to_sequential`).
 
 use super::{
-    local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss, EngineKind,
-    RoundEngine,
+    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
+    wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -44,29 +44,35 @@ impl RoundEngine for SyncFedAvg {
         let t_cm = cohort.iter().map(|&i| up.times[i]).fold(0.0, f64::max);
 
         // 3. aggregation (eq. 2) over cohort updates that actually
-        //    arrived: stream each device's delta into the preallocated
-        //    accumulator in device-index order, then apply the folded
-        //    mean delta to the global model — no per-round allocation.
+        //    arrived: stream each device's *encoded* delta into the
+        //    preallocated accumulator in device-index order through the
+        //    codec's fused decode-and-fold (k values per sparse update
+        //    instead of P), then apply the folded mean delta to the
+        //    global model — no per-round allocation.
         let mut total_w = 0f64;
         let mut participants = 0usize;
+        let mut bits_sum = 0f64;
         for u in &updates {
             if up.delivered[u.device] {
                 total_w += u.weight;
                 participants += 1;
+                bits_sum += u.bits;
             }
         }
         if participants == 0 {
             crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
         } else {
-            let FlSystem { devices, global, agg, .. } = sys;
+            let FlSystem { devices, global, agg, codec, .. } = sys;
             agg.begin(total_w);
             for u in &updates {
                 if up.delivered[u.device] {
-                    agg.fold(u.weight, devices[u.device].delta());
+                    fold_update(&**codec, agg, u.weight, &devices[u.device]);
                 }
             }
             agg.apply_delta_to(global);
         }
+        let (encoded_bits, compression_ratio) =
+            wire_metrics(sys.spec.update_bits(), bits_sum, participants);
 
         // 4. virtual time (eq. 8), cohort-restricted eq. (5). Train/test
         //    sets share dims, so the test set's bits/sample prices eq. (4).
@@ -92,6 +98,8 @@ impl RoundEngine for SyncFedAvg {
             participants,
             dropped: cohort.len() - participants,
             mean_staleness: 0.0,
+            encoded_bits,
+            compression_ratio,
         })
     }
 }

@@ -31,6 +31,7 @@ pub use engine::{EngineConfig, EngineKind, RoundEngine};
 pub use selection::{Selection, Selector};
 
 use crate::baselines::{resolve, Resolved};
+use crate::codec::UpdateCodec;
 use crate::compute::gpu::GpuFleet;
 use crate::config::ExperimentConfig;
 use crate::data::{self, synth, Dataset};
@@ -63,6 +64,11 @@ pub struct FlSystem {
     /// apply_delta_to`) instead of materialising K model copies
     /// (DESIGN.md §8).
     pub agg: FedAccumulator,
+    /// The update codec (`[codec] kind = dense|quant|topk|topk_quant`):
+    /// devices encode their deltas through it, the channel prices its
+    /// wire size, and the engines fold through its fused decode path
+    /// (DESIGN.md §9).
+    pub codec: Box<dyn UpdateCodec>,
     pub clock: SimClock,
     pub log: RunLog,
     pub selector: Selector,
@@ -158,7 +164,14 @@ impl FlSystem {
         let fleet = GpuFleet::new(&fleet_cfg, cfg.seed ^ 0x6B0);
 
         // --- policy --------------------------------------------------
-        let t_cm = channel.expected_round_time(spec.update_bits());
+        // The planner prices the talk side with the *codec's* wire size
+        // (times the abstract `wireless.compression` multiplier — the
+        // same bits uplink_phase transmits), not the raw fp32 update: a
+        // cheaper uplink shifts eq. (29) toward more talking (smaller
+        // b*, larger θ* ⇒ fewer local rounds per communication).
+        let codec = cfg.codec.build()?;
+        let update_bits = codec.nominal_bits(&spec);
+        let t_cm = channel.expected_round_time(update_bits * cfg.compression);
         let t_cps = fleet.bottleneck_seconds_per_sample(train.bits_per_sample());
         let resolved = resolve(&cfg, t_cm, t_cps);
         let batch = backend.nearest_train_batch(&model, resolved.batch)?;
@@ -176,15 +189,19 @@ impl FlSystem {
 
         // --- round engine ---------------------------------------------
         // Auto knobs (deadline) are anchored to the planner's expected
-        // synchronous round time: T_cm·compression + V·T_cp(b).
+        // synchronous round time: T_cm + V·T_cp(b). (T_cm already prices
+        // the codec wire and the compression multiplier.)
         let bits_per_sample = train.bits_per_sample();
-        let expected_round_s = t_cm * cfg.compression
-            + local_rounds as f64 * fleet.round_time(bits_per_sample, batch);
+        let expected_round_s =
+            t_cm + local_rounds as f64 * fleet.round_time(bits_per_sample, batch);
         let engine = engine::build(&cfg.engine, cfg.devices, expected_round_s);
 
         let mut log = RunLog::new(&cfg.name);
         log.set_meta("backend", Json::str(backend.kind().label()));
         log.set_meta("engine", Json::str(engine.kind().label()));
+        log.set_meta("codec", Json::str(codec.kind().label()));
+        log.set_meta("update_bits_dense", Json::Num(spec.update_bits()));
+        log.set_meta("update_bits_encoded", Json::Num(update_bits));
         log.set_meta("policy", Json::str(cfg.policy.label()));
         log.set_meta("batch", Json::Num(batch as f64));
         log.set_meta("local_rounds", Json::Num(local_rounds as f64));
@@ -218,6 +235,7 @@ impl FlSystem {
             test_set,
             global,
             agg,
+            codec,
             clock: SimClock::new(),
             log,
             selector,

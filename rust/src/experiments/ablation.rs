@@ -1,7 +1,9 @@
 //! Ablation: the paper's closed-form KKT point (eq. 29) vs an exact
-//! discrete search over the same feasible set, plus the round-engine
+//! discrete search over the same feasible set, the round-engine
 //! comparison (sync vs deadline vs async-buffered on one straggling
-//! fleet) — DESIGN.md §6, EXPERIMENTS.md §ablation.
+//! fleet), and the compression sweep (update codecs at qbits ∈ {4, 8},
+//! k_ratio ∈ {0.01, 0.1, 1.0}) — DESIGN.md §6/§9, EXPERIMENTS.md
+//! §ablation/§codec.
 //!
 //! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
 //! point of the relaxed objective (18); the exact search improves the
@@ -10,6 +12,7 @@
 //! (b*≈32, θ*≈0.15 at the paper's operating point) with O(1) cost.
 
 use super::{write_result, ExpOpts};
+use crate::codec::CodecKind;
 use crate::config::{DatasetKind, ExperimentConfig, Policy};
 use crate::coordinator::{EngineKind, FlSystem};
 use crate::defl_opt::{self, PlanInputs};
@@ -92,6 +95,10 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     println!("Ablation — round engines under a straggling fleet (deadline = {deadline_s:.3}s)");
     println!("{}", engine_table.render());
 
+    let (codec_table, codec_rows) = codec_sweep(opts)?;
+    println!("Ablation — compression sweep (delay vs rounds at equal seed)");
+    println!("{}", codec_table.render());
+
     let doc = Json::obj(vec![
         ("figure", Json::str("ablation")),
         ("t_cm", Json::Num(t_cm)),
@@ -99,6 +106,7 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
         ("series", Json::Arr(rows)),
         ("engine_deadline_s", Json::Num(deadline_s)),
         ("engines", Json::Arr(engine_rows)),
+        ("codecs", Json::Arr(codec_rows)),
     ]);
     let path = write_result(opts, "ablation", &doc)?;
     println!("wrote {path}");
@@ -184,4 +192,73 @@ fn engine_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
     record(&mut table, &mut rows, EngineKind::AsyncBuffered, &sys.log);
 
     Ok((table, rows, deadline_s))
+}
+
+/// Codec points the compression sweep compares: the EXPERIMENTS.md grid
+/// (qbits ∈ {4, 8}, k_ratio ∈ {0.01, 0.1, 1.0}) plus the composition.
+const CODEC_POINTS: [(&str, CodecKind, u32, f64); 8] = [
+    ("dense", CodecKind::Dense, 8, 0.1),
+    ("quant q=4", CodecKind::Quant, 4, 0.1),
+    ("quant q=8", CodecKind::Quant, 8, 0.1),
+    ("topk k=0.01", CodecKind::TopK, 8, 0.01),
+    ("topk k=0.1", CodecKind::TopK, 8, 0.1),
+    ("topk k=1.0", CodecKind::TopK, 8, 1.0),
+    ("topkq k=0.1 q=4", CodecKind::TopKQuant, 4, 0.1),
+    ("topkq k=0.1 q=8", CodecKind::TopKQuant, 8, 0.1),
+];
+
+/// The compression sweep: same seed, same fleet, same (b, V); only the
+/// update codec changes. Deliverables per point: the wire size the
+/// channel priced, the total virtual delay, and whether convergence
+/// survived the lossy encode (error feedback should keep final losses
+/// close to dense — the EXPERIMENTS.md §codec record).
+fn codec_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>)> {
+    let mut table = Table::new(&[
+        "codec", "bits/update", "ratio", "rounds", "total 𝒯 (s)", "T_cm share", "final loss",
+        "best acc",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    for (label, kind, qbits, k_ratio) in CODEC_POINTS {
+        let mut cfg = engine_cfg(opts, EngineKind::Sync);
+        cfg.name = format!("ablation-codec-{}", label.replace(' ', "-"));
+        cfg.codec.kind = kind;
+        cfg.codec.qbits = qbits;
+        cfg.codec.k_ratio = k_ratio;
+        let mut sys = FlSystem::build(cfg)?;
+        sys.run()?;
+        let log = &sys.log;
+        let bits = log
+            .meta
+            .get("update_bits_encoded")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        let dense_bits = sys.spec.update_bits();
+        let t_total = log.overall_time();
+        let t_cm_sum: f64 = log.rounds.iter().map(|r| r.t_cm).sum();
+        let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
+        table.row(&[
+            label.into(),
+            format!("{:.0}", bits),
+            format!("{:.1}×", dense_bits / bits),
+            log.rounds.len().to_string(),
+            format!("{t_total:.2}"),
+            format!("{:.0}%", 100.0 * t_cm_sum / t_total.max(1e-12)),
+            format!("{final_loss:.4}"),
+            format!("{:.4}", log.best_accuracy()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("codec", Json::str(label)),
+            ("kind", Json::str(sys.codec.kind().label())),
+            ("qbits", Json::Num(qbits as f64)),
+            ("k_ratio", Json::Num(k_ratio)),
+            ("encoded_bits", Json::Num(bits)),
+            ("compression_ratio", Json::Num(dense_bits / bits)),
+            ("rounds", Json::Num(log.rounds.len() as f64)),
+            ("overall_time", Json::Num(t_total)),
+            ("t_cm_total", Json::Num(t_cm_sum)),
+            ("final_train_loss", Json::Num(final_loss)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+        ]));
+    }
+    Ok((table, rows))
 }

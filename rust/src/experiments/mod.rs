@@ -37,6 +37,11 @@ pub struct ExpOpts {
     /// Training backend every harness run uses (`defl exp --backend`,
     /// `DEFL_BACKEND=native` in CI). Default: the build's default.
     pub backend: crate::runtime::BackendKind,
+    /// Update-codec override for every harness run (`defl exp --codec`,
+    /// `DEFL_CODEC=topk`). None = the config's codec (dense unless the
+    /// preset says otherwise); qbits/k_ratio stay at their config values
+    /// (`--set codec.qbits=…` to change them).
+    pub codec: Option<crate::codec::CodecKind>,
 }
 
 impl Default for ExpOpts {
@@ -48,15 +53,17 @@ impl Default for ExpOpts {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             backend: crate::runtime::BackendKind::default(),
+            codec: None,
         }
     }
 }
 
 impl ExpOpts {
-    /// Environment knobs: `DEFL_FAST=1`, `DEFL_BACKEND=pjrt|native`.
-    /// An unparseable `DEFL_BACKEND` is a hard error (same contract as
-    /// `defl exp --backend`), so a typo can't silently run the wrong
-    /// substrate.
+    /// Environment knobs: `DEFL_FAST=1`, `DEFL_BACKEND=pjrt|native`,
+    /// `DEFL_CODEC=dense|quant|topk|topk_quant`. An unparseable
+    /// `DEFL_BACKEND`/`DEFL_CODEC` is a hard error (same contract as
+    /// `defl exp --backend`/`--codec`), so a typo can't silently run the
+    /// wrong substrate or codec.
     pub fn from_env() -> anyhow::Result<Self> {
         let mut o = ExpOpts::default();
         if std::env::var("DEFL_FAST").as_deref() == Ok("1") {
@@ -68,6 +75,14 @@ impl ExpOpts {
                     .map_err(|e| anyhow::anyhow!("DEFL_BACKEND: {e}"))?;
             }
         }
+        if let Ok(c) = std::env::var("DEFL_CODEC") {
+            if !c.is_empty() {
+                o.codec = Some(
+                    crate::codec::CodecKind::parse(&c)
+                        .map_err(|e| anyhow::anyhow!("DEFL_CODEC: {e}"))?,
+                );
+            }
+        }
         Ok(o)
     }
 
@@ -76,6 +91,9 @@ impl ExpOpts {
         cfg.seed = self.seed;
         cfg.artifacts_dir = self.artifacts_dir.clone();
         cfg.backend = self.backend;
+        if let Some(kind) = self.codec {
+            cfg.codec.kind = kind;
+        }
         if let Some(r) = self.rounds {
             cfg.max_rounds = r;
         }
@@ -138,5 +156,20 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         opts.apply(&mut cfg);
         assert_eq!(cfg.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn apply_threads_codec_through() {
+        use crate::codec::CodecKind;
+        let opts = ExpOpts { codec: Some(CodecKind::TopK), ..Default::default() };
+        let mut cfg = ExperimentConfig::default();
+        opts.apply(&mut cfg);
+        assert_eq!(cfg.codec.kind, CodecKind::TopK);
+        // None leaves the config's codec alone
+        let opts = ExpOpts::default();
+        let mut cfg = ExperimentConfig::default();
+        cfg.codec.kind = CodecKind::Quant;
+        opts.apply(&mut cfg);
+        assert_eq!(cfg.codec.kind, CodecKind::Quant);
     }
 }

@@ -10,8 +10,10 @@
 //!   closed-form optimizer (eq. 29), a virtual-time ledger, pluggable
 //!   round engines ([`coordinator::engine`]: synchronous FedAvg,
 //!   deadline-bounded straggler dropping, FedBuff-style buffered
-//!   asynchrony), and the experiment harnesses that regenerate every
-//!   figure of the paper.
+//!   asynchrony), compressed-update codecs ([`codec`]: top-k and
+//!   quantized deltas with per-device error feedback and fused
+//!   decode-and-fold aggregation), and the experiment harnesses that
+//!   regenerate every figure of the paper.
 //! * **L2/L1 (python/, build-time only)** — the CNN forward/backward +
 //!   SGD step written in JAX, with the dense-layer and parameter-update
 //!   hot spots as Pallas kernels, AOT-lowered to HLO text once by
@@ -37,6 +39,7 @@ pub mod model;
 pub mod simclock;
 pub mod metrics;
 pub mod runtime;
+pub mod codec;
 pub mod coordinator;
 pub mod baselines;
 pub mod experiments;

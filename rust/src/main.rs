@@ -12,7 +12,9 @@
 //! `async_buffered` (FedBuff-style, `engine.buffer_k`,
 //! `engine.staleness_exponent`) — see `DESIGN.md` §5. So is the training
 //! substrate: `--set backend.kind=pjrt` (AOT HLO artifacts) or `native`
-//! (pure Rust, no artifacts) — `DESIGN.md` §7.
+//! (pure Rust, no artifacts) — `DESIGN.md` §7. And so is the update
+//! codec: `--set codec.kind=dense|quant|topk|topk_quant` (plus
+//! `codec.qbits`, `codec.k_ratio`) — `DESIGN.md` §9.
 
 use defl::config::{ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
@@ -51,11 +53,12 @@ fn usage() -> String {
      USAGE:\n\
      \x20 defl train  [--config <toml>] [--set section.key=value ...]\n\
      \x20             (e.g. --set engine.kind=sync|deadline|async_buffered,\n\
-     \x20                   --set backend.kind=pjrt|native)\n\
+     \x20                   --set backend.kind=pjrt|native,\n\
+     \x20                   --set codec.kind=dense|quant|topk|topk_quant)\n\
      \x20 defl plan   [--set section.key=value ...]\n\
      \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
      \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\
-     \x20             [--backend pjrt|native]\n\
+     \x20             [--backend pjrt|native] [--codec dense|quant|topk|topk_quant]\n\
      \x20 defl doctor [--artifacts <dir>]   (needs the `pjrt` build feature)\n"
         .into()
 }
@@ -137,6 +140,7 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
         .opt("seed", "42", "base seed")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("backend", "", "training backend: pjrt|native (default: build default)")
+        .opt("codec", "", "update codec: dense|quant|topk|topk_quant (default: config)")
         .flag("fast", "smoke-scale run (few rounds, tiny data)")
         .flag("analytic-only", "fig1a: skip training runs");
     let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -155,6 +159,10 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
     let backend = args.str("backend");
     if !backend.is_empty() {
         opts.backend = defl::runtime::BackendKind::parse(&backend)?;
+    }
+    let codec = args.str("codec");
+    if !codec.is_empty() {
+        opts.codec = Some(defl::codec::CodecKind::parse(&codec)?);
     }
     let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
     if rounds > 0 {

@@ -32,6 +32,14 @@ pub struct RoundRecord {
     /// Mean staleness (aggregations since model pull) of the aggregated
     /// updates — 0 for the synchronous engines.
     pub mean_staleness: f64,
+    /// Mean wire size (bits) of the updates aggregated this round —
+    /// the codec-encoded `s` of eq. (6). NaN when nothing aggregated.
+    pub encoded_bits: f64,
+    /// Dense fp32 update bits ÷ `encoded_bits` — the talk-time savings
+    /// factor sweeps plot. Exactly 1 for the dense codec; below 1 when
+    /// index overhead dominates (top-k at `k_ratio` near 1 pays 64 bits
+    /// per kept parameter).
+    pub compression_ratio: f64,
 }
 
 /// A named experiment run: config echo + round records.
@@ -108,6 +116,8 @@ impl RunLog {
                     ("participants", Json::Num(r.participants as f64)),
                     ("dropped", Json::Num(r.dropped as f64)),
                     ("mean_staleness", Json::Num(r.mean_staleness)),
+                    ("encoded_bits", Json::Num(r.encoded_bits)),
+                    ("compression_ratio", Json::Num(r.compression_ratio)),
                 ])
             })
             .collect();
@@ -127,11 +137,11 @@ impl RunLog {
 
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -143,7 +153,9 @@ impl RunLog {
                 r.wall_seconds,
                 r.participants,
                 r.dropped,
-                r.mean_staleness
+                r.mean_staleness,
+                r.encoded_bits,
+                r.compression_ratio
             ));
         }
         s
@@ -236,6 +248,8 @@ mod tests {
             participants: 4,
             dropped: 1,
             mean_staleness: 0.5,
+            encoded_bits: 288.0,
+            compression_ratio: 1.0,
         }
     }
 

@@ -268,6 +268,19 @@ impl FedAccumulator {
         self.count += 1;
     }
 
+    /// Fused decode-and-fold hook for codec-encoded updates
+    /// ([`crate::codec::UpdateCodec::decode_fold_into`]): hands the
+    /// caller the pre-normalised fold coefficient `weight/total` and the
+    /// accumulator buffer, so a sparse or quantized payload can stream
+    /// straight in without materialising a dense [`ParamSet`]. A caller
+    /// that performs `dst += coeff·update` element-ascending per leaf is
+    /// arithmetically exactly [`FedAccumulator::fold`].
+    pub fn fold_encoded_with<F: FnOnce(f32, &mut ParamSet)>(&mut self, weight: f64, fold: F) {
+        debug_assert!(self.total > 0.0, "begin() before fold()");
+        fold((weight / self.total) as f32, &mut self.acc);
+        self.count += 1;
+    }
+
     /// Updates folded since [`FedAccumulator::begin`].
     pub fn count(&self) -> usize {
         self.count

@@ -21,6 +21,8 @@
 //! regroup the sample reduction and therefore differ from the reference
 //! by f32 round-off — `runtime::native` pins the tolerance.
 
+use crate::util::rng::Pcg32;
+
 /// Rows per register micro-tile: four samples share each loaded weight
 /// row. Chosen to fit the accumulator rows of the widest native model
 /// (k = 10 logits) comfortably in registers.
@@ -235,6 +237,135 @@ pub fn relu(x: &[f32], y: &mut [f32]) {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Codec kernels (crate::codec) — quantize/dequantize and sparse folds.
+//
+// Same determinism discipline as the training kernels above: every fold
+// walks its input ascending (dense: element order; sparse: the encoder's
+// ascending index order), so results depend only on the inputs. The dense
+// fold is per-element identical to `ParamSet::axpy` — the Dense32 codec's
+// bit-identity pin rides on that.
+// ---------------------------------------------------------------------------
+
+/// `dst += w·src` — the dense delta fold, one leaf at a time. Exactly
+/// [`crate::model::ParamSet::axpy`]'s inner loop (same order, same
+/// operation), so folding an encoded dense payload is bit-identical to
+/// folding the `ParamSet` it was copied from.
+pub fn axpy_dense(w: f32, src: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += w * s;
+    }
+}
+
+/// Fused dequantize-and-fold: `dst += w·(scale·q)`, elements ascending.
+pub fn axpy_quant(w: f32, q: &[i16], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(q.len(), dst.len());
+    let ws = w * scale;
+    for (d, &qv) in dst.iter_mut().zip(q) {
+        *d += ws * f32::from(qv);
+    }
+}
+
+/// Fused sparse fold: `dst[idx[j]] += w·vals[j]` — the top-k decode path.
+/// `idx` is ascending (the encoder's canonical order), so the fold order
+/// is fixed and the memory walk is monotone.
+pub fn axpy_sparse(w: f32, idx: &[u32], vals: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    for (&i, &v) in idx.iter().zip(vals) {
+        dst[i as usize] += w * v;
+    }
+}
+
+/// Fused sparse dequantize-and-fold: `dst[idx[j]] += w·(scale·q[j])`.
+pub fn axpy_sparse_quant(w: f32, idx: &[u32], q: &[i16], scale: f32, dst: &mut [f32]) {
+    debug_assert_eq!(idx.len(), q.len());
+    let ws = w * scale;
+    for (&i, &qv) in idx.iter().zip(q) {
+        dst[i as usize] += ws * f32::from(qv);
+    }
+}
+
+/// QSGD-style per-tensor stochastic uniform quantization.
+///
+/// Levels are symmetric signed integers `−L..=L` with
+/// `L = max(1, 2^(qbits−1) − 1)` (so `qbits = 1` degenerates to the
+/// scaled-sign ternary `{−1, 0, 1}`), and `scale = max|src| / L` is the
+/// level step. Each element rounds *stochastically* to one of its two
+/// neighbouring levels with probability proportional to proximity —
+/// unbiased (`E[scale·q] = src`), with per-element error strictly below
+/// one step `scale` (nearest rounding would give `scale/2`, but would be
+/// biased). Randomness comes from the caller's deterministic [`Pcg32`]
+/// stream, so encodes are reproducible. Returns `scale` (0 for an
+/// all-zero tensor).
+pub fn quantize_stochastic(src: &[f32], qbits: u32, rng: &mut Pcg32, q: &mut Vec<i16>) -> f32 {
+    debug_assert!((1..=16).contains(&qbits), "qbits in 1..=16");
+    // A NaN element would quantize to level 0 and poison the caller's
+    // error-feedback residual with NaN — where the dense path would
+    // surface the divergence in the loss. Refuse it loudly in debug
+    // builds rather than silently freezing the model.
+    debug_assert!(
+        src.iter().all(|v| v.is_finite()),
+        "quantize_stochastic: non-finite delta element"
+    );
+    q.clear();
+    let max_abs = src.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        q.resize(src.len(), 0);
+        return 0.0;
+    }
+    let levels = ((1u32 << (qbits - 1)) - 1).max(1) as f32;
+    let scale = max_abs / levels;
+    for &v in src {
+        // Clamp guards the fp corner where v/scale lands an ulp above L.
+        let t = (v / scale).clamp(-levels, levels);
+        let lo = t.floor();
+        let frac = t - lo;
+        let lv = if (rng.uniform() as f32) < frac { lo + 1.0 } else { lo };
+        q.push(lv as i16);
+    }
+    scale
+}
+
+/// Error-feedback residual of a quantized tensor:
+/// `res[i] = src[i] − scale·q[i]` (exactly what
+/// [`axpy_quant`] with `w = 1` would reconstruct, so
+/// `residual + decoded == src` holds to the bit).
+pub fn residual_quant(src: &[f32], q: &[i16], scale: f32, res: &mut [f32]) {
+    debug_assert_eq!(src.len(), q.len());
+    debug_assert_eq!(src.len(), res.len());
+    for ((r, &s), &qv) in res.iter_mut().zip(src).zip(q) {
+        *r = s - scale * f32::from(qv);
+    }
+}
+
+/// Select the `k` largest-magnitude elements of `src` into `idx`
+/// (ascending index order — the canonical sparse wire order).
+///
+/// Selection is `select_nth_unstable_by` — introspective quickselect,
+/// O(len) expected, no full sort (ties break on index, so the selected
+/// *set* is deterministic). Only the k survivors are then index-sorted
+/// (O(k log k), k ≪ len in any useful regime); `k ≥ len` short-circuits
+/// to the identity permutation.
+pub fn select_top_k(src: &[f32], k: usize, idx: &mut Vec<u32>) {
+    idx.clear();
+    if k == 0 {
+        return;
+    }
+    idx.extend(0..src.len() as u32);
+    if k >= src.len() {
+        return;
+    }
+    idx.select_nth_unstable_by(k - 1, |&a, &b| {
+        src[b as usize]
+            .abs()
+            .total_cmp(&src[a as usize].abs())
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.sort_unstable();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,6 +486,125 @@ mod tests {
         matmul_bias(&x, &w, &b, &mut fast, n, d, k);
         matmul_bias_generic(&x, &w, &b, &mut generic, n, d, k);
         assert_eq!(fast, generic);
+    }
+
+    #[test]
+    fn axpy_dense_matches_paramset_axpy_bitwise() {
+        use crate::model::ParamSet;
+        let src: Vec<f32> = (0..97).map(|i| ((i * 31 % 61) as f32 - 30.0) * 0.17).collect();
+        let dst0: Vec<f32> = (0..97).map(|i| ((i * 13 % 41) as f32 - 20.0) * 0.09).collect();
+        let w = 0.37f32;
+        let mut a = ParamSet { leaves: vec![dst0.clone()] };
+        a.axpy(w, &ParamSet { leaves: vec![src.clone()] });
+        let mut b = dst0;
+        axpy_dense(w, &src, &mut b);
+        assert_eq!(a.leaves[0], b);
+    }
+
+    #[test]
+    fn quantize_stochastic_error_below_one_step_and_roundtrips() {
+        prop::check(0xC0DE1, 40, |g| {
+            let n = g.usize_in(1, 200);
+            let qbits = g.usize_in(1, 16) as u32;
+            let src = g.vec_f32(n, -3.0, 3.0);
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let mut q = Vec::new();
+            let scale = quantize_stochastic(&src, qbits, &mut rng, &mut q);
+            if q.len() != n {
+                return Err("length".into());
+            }
+            let levels = ((1u32 << (qbits - 1)) - 1).max(1) as i32;
+            for (&s, &qv) in src.iter().zip(&q) {
+                if i32::from(qv).abs() > levels {
+                    return Err(format!("level {qv} out of ±{levels}"));
+                }
+                // Stochastic rounding: at most one level step of error
+                // (nearest rounding would give scale/2, but is biased).
+                let err = (s - scale * f32::from(qv)).abs();
+                if err > scale * (1.0 + 1e-5) {
+                    return Err(format!("err {err} > step {scale}"));
+                }
+            }
+            // residual + decoded == src, to the bit
+            let mut res = vec![0f32; n];
+            residual_quant(&src, &q, scale, &mut res);
+            let mut dec = res;
+            // dec currently holds the residual; add the decoded values
+            axpy_quant(1.0, &q, scale, &mut dec);
+            for (a, b) in dec.iter().zip(&src) {
+                if (a - b).abs() > 1e-6 {
+                    return Err(format!("{a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_zero_tensor_is_zero_scale() {
+        let mut rng = Pcg32::seeded(1);
+        let mut q = Vec::new();
+        let scale = quantize_stochastic(&[0.0; 8], 8, &mut rng, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn select_top_k_keeps_the_k_largest_magnitudes() {
+        prop::check(0xC0DE2, 40, |g| {
+            let n = g.usize_in(1, 120);
+            let k = g.usize_in(1, n);
+            let src = g.vec_f32(n, -5.0, 5.0);
+            let mut idx = Vec::new();
+            select_top_k(&src, k, &mut idx);
+            if idx.len() != k {
+                return Err(format!("{} selected, wanted {k}", idx.len()));
+            }
+            if !idx.windows(2).all(|w| w[0] < w[1]) {
+                return Err("indices not strictly ascending".into());
+            }
+            // oracle: full sort by (|v|, idx) descending
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_by(|&a, &b| {
+                src[b as usize]
+                    .abs()
+                    .total_cmp(&src[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+            let mut want: Vec<u32> = order[..k].to_vec();
+            want.sort_unstable();
+            if idx != want {
+                return Err(format!("{idx:?} vs oracle {want:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_folds_touch_only_selected_coords() {
+        let idx = [1u32, 4, 7];
+        let vals = [2.0f32, -3.0, 0.5];
+        let mut dst = [1.0f32; 9];
+        axpy_sparse(0.5, &idx, &vals, &mut dst);
+        assert_eq!(dst[1], 1.0 + 0.5 * 2.0);
+        assert_eq!(dst[4], 1.0 + 0.5 * -3.0);
+        assert_eq!(dst[7], 1.0 + 0.5 * 0.5);
+        assert!(dst.iter().enumerate().all(|(i, &v)| idx.contains(&(i as u32)) || v == 1.0));
+
+        let q = [3i16, -2, 1];
+        let mut dst = [0.0f32; 9];
+        axpy_sparse_quant(2.0, &idx, &q, 0.25, &mut dst);
+        assert_eq!(dst[1], 2.0 * 0.25 * 3.0);
+        assert_eq!(dst[4], 2.0 * 0.25 * -2.0);
+        assert_eq!(dst[7], 2.0 * 0.25 * 1.0);
+    }
+
+    #[test]
+    fn axpy_quant_dequantizes_dense() {
+        let q = [1i16, -2, 0, 3];
+        let mut dst = [10.0f32; 4];
+        axpy_quant(1.0, &q, 0.5, &mut dst);
+        assert_eq!(dst, [10.5, 9.0, 10.0, 11.5]);
     }
 
     #[test]

@@ -26,7 +26,9 @@ pub mod registry;
 
 #[cfg(feature = "pjrt")]
 pub mod golden;
-#[cfg(feature = "native")]
+// Kernels are dependency-free and serve two consumers: the native
+// backend's batched steps AND the codec's quantize/sparse-fold path
+// (crate::codec), which every build carries — so no feature gate.
 pub mod kernels;
 #[cfg(feature = "native")]
 pub mod native;

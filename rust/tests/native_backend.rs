@@ -68,6 +68,111 @@ fn fl_loss_decreases_under_all_engines() {
     }
 }
 
+/// Error feedback preserves convergence under lossy update codecs: with
+/// top-k sparsification or stochastic quantization on the uplink, the
+/// training loss still decreases under every round engine (the dropped
+/// mass re-enters through the per-device residuals — DESIGN.md §9).
+#[test]
+fn lossy_codecs_with_error_feedback_still_learn() {
+    use defl::codec::CodecKind;
+    let codecs: [(CodecKind, u32, f64); 3] = [
+        (CodecKind::TopK, 8, 0.25),
+        (CodecKind::Quant, 8, 0.1),
+        (CodecKind::TopKQuant, 8, 0.25),
+    ];
+    for kind in [EngineKind::Sync, EngineKind::Deadline, EngineKind::AsyncBuffered] {
+        for (ckind, qbits, k_ratio) in codecs {
+            let mut cfg = native_cfg(
+                &format!("nb-ef-{}-{}", kind.label(), ckind.label()),
+                Policy::Fixed { batch: 16, local_rounds: 4 },
+            );
+            cfg.engine.kind = kind;
+            cfg.codec.kind = ckind;
+            cfg.codec.qbits = qbits;
+            cfg.codec.k_ratio = k_ratio;
+            cfg.wireless.fast_fading = false;
+            let mut sys = FlSystem::build(cfg).unwrap();
+            let outcome = sys.run().unwrap();
+            assert_eq!(outcome.rounds, 10, "{kind:?}/{ckind:?}");
+            let first = sys.log.rounds.first().unwrap().train_loss;
+            let last = sys.log.rounds.last().unwrap().train_loss;
+            assert!(
+                last < first,
+                "{kind:?}/{ckind:?}: loss did not decrease under EF: {first} -> {last}"
+            );
+            // every aggregating round reports a genuinely compressed wire
+            for r in &sys.log.rounds {
+                if r.participants > 0 {
+                    assert!(r.encoded_bits.is_finite(), "{kind:?}/{ckind:?}");
+                    assert!(
+                        r.compression_ratio > 1.0,
+                        "{kind:?}/{ckind:?}: ratio {} not > 1",
+                        r.compression_ratio
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The codec prices the whole delay pipeline: a top-k run's expected
+/// uplink time (planner meta) and per-round T_cm shrink by exactly the
+/// wire-size ratio relative to dense, on the same frozen channel.
+#[test]
+fn codec_compression_shrinks_uplink_time() {
+    use defl::codec::CodecKind;
+    let build = |ckind: CodecKind| {
+        let mut cfg = native_cfg("nb-bits", Policy::Fixed { batch: 16, local_rounds: 2 });
+        cfg.codec.kind = ckind;
+        cfg.codec.k_ratio = 0.1;
+        cfg.wireless.fast_fading = false; // frozen gains ⇒ exact scaling
+        cfg.max_rounds = 2;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        let meta = |k: &str| sys.log.meta.get(k).and_then(|v| v.as_f64()).unwrap();
+        (
+            meta("update_bits_encoded"),
+            meta("update_bits_dense"),
+            meta("t_cm_expected"),
+            sys.log.rounds.iter().map(|r| r.t_cm).sum::<f64>(),
+        )
+    };
+    let (dense_bits, dense_total, dense_tcm, dense_tcm_sum) = build(CodecKind::Dense);
+    assert_eq!(dense_bits, dense_total, "dense codec is the fp32 wire");
+    let (topk_bits, topk_total, topk_tcm, topk_tcm_sum) = build(CodecKind::TopK);
+    assert_eq!(topk_total, dense_total, "same model");
+    let ratio = dense_bits / topk_bits;
+    assert!(ratio > 1.0, "top-k must shrink the wire ({ratio})");
+    // eq. (6) is linear in s: expected and realized T_cm scale exactly
+    assert!((dense_tcm / topk_tcm - ratio).abs() < 1e-6 * ratio);
+    assert!((dense_tcm_sum / topk_tcm_sum - ratio).abs() < 1e-6 * ratio);
+}
+
+/// Compressed bits feed the DEFL planner: with a much cheaper uplink the
+/// closed form (eq. 29) plans *more* talking — fewer local rounds per
+/// communication (α* ∝ √T_cm) — than the dense plan on the same system.
+#[test]
+fn defl_plan_shifts_toward_talking_under_compression() {
+    use defl::codec::CodecKind;
+    let plan_of = |ckind: CodecKind, k_ratio: f64| {
+        let mut cfg = native_cfg("nb-plan-codec", Policy::Defl);
+        cfg.codec.kind = ckind;
+        cfg.codec.k_ratio = k_ratio;
+        let sys = FlSystem::build(cfg).unwrap();
+        sys.resolved.plan.as_ref().expect("DEFL plans").clone()
+    };
+    let dense = plan_of(CodecKind::Dense, 0.1);
+    let topk = plan_of(CodecKind::TopK, 0.01);
+    assert!(
+        topk.alpha < dense.alpha,
+        "cheaper talk ⇒ smaller α*: {} vs {}",
+        topk.alpha,
+        dense.alpha
+    );
+    assert!(topk.theta > dense.theta, "…i.e. looser local accuracy θ*");
+    assert!(topk.local_rounds <= dense.local_rounds);
+}
+
 /// The native backend opts into the `ParallelStep` fan-out, so a
 /// multi-threaded run must stay bit-identical to the single-threaded one
 /// (per-device training is independent and deterministic; aggregation

@@ -9,10 +9,17 @@ smoke lane runs tiny iteration counts (``DEFL_BENCH_FAST=1``) on shared
 runners, so this is a visibility tool, not a gate — the point is that
 every PR shows its perf trajectory next to its diff.
 
+Degenerate inputs degrade to single informational lines, never to a
+warning wall: a missing/empty/malformed baseline ``results`` array means
+"no trajectory yet" (the fresh numbers are listed once), and an empty
+fresh report means "nothing measured" (no per-benchmark "disappeared"
+annotations).
+
 Refresh the baseline by copying a trusted run's ``BENCH_hotpath.json``
 artifact over the committed file at the repo root.
 
 Usage: bench_diff.py BASELINE FRESH [--warn-pct 25]
+       bench_diff.py --self-test
 """
 
 import argparse
@@ -21,22 +28,143 @@ import sys
 
 
 def load_results(path):
+    """{name: mean_s} from a Suite::to_json report.
+
+    Tolerant by design: a missing file raises (the caller decides how
+    loud to be), but a report whose ``results`` is absent, null, not a
+    list, or populated with malformed entries yields whatever valid
+    entries remain — an empty dict at worst, never an exception.
+    """
     with open(path) as f:
         report = json.load(f)
     out = {}
-    for r in report.get("results", []):
+    results = report.get("results") if isinstance(report, dict) else None
+    if not isinstance(results, list):
+        return out
+    for r in results:
+        if not isinstance(r, dict):
+            continue
+        name = r.get("name")
         mean = r.get("mean_s")
-        if isinstance(mean, (int, float)) and mean > 0:
-            out[r["name"]] = mean
+        if isinstance(name, str) and isinstance(mean, (int, float)) and mean > 0:
+            out[name] = mean
     return out
+
+
+def compare(base, fresh, warn_pct):
+    """Diff two {name: mean_s} maps into (lines, warnings).
+
+    ``lines`` are plain report lines; ``warnings`` are GitHub
+    ``::warning::`` annotation bodies (regressions + disappearances).
+    Pure function — the self-test runs on it directly.
+    """
+    lines, warnings = [], []
+    if not fresh:
+        lines.append("bench_diff: fresh report has no benchmarks — nothing to compare")
+        return lines, warnings
+    if not base:
+        lines.append(
+            f"bench_diff: baseline empty — no comparison; {len(fresh)} fresh benchmarks:"
+        )
+        for name, mean in sorted(fresh.items()):
+            lines.append(f"  {name}: mean {mean:.3e}s")
+        lines.append(
+            "bench_diff: commit a trusted BENCH_hotpath.json to start the trajectory"
+        )
+        return lines, warnings
+
+    for name, mean in sorted(fresh.items()):
+        if name not in base:
+            lines.append(f"  NEW  {name}: mean {mean:.3e}s (no baseline)")
+            continue
+        pct = (mean / base[name] - 1.0) * 100.0
+        marker = " "
+        if pct > warn_pct:
+            marker = "!"
+            warnings.append(
+                f"perf regression: {name} mean {mean:.3e}s vs "
+                f"baseline {base[name]:.3e}s (+{pct:.1f}% > {warn_pct:.0f}%)"
+            )
+        lines.append(f"  {marker}    {name}: {pct:+.1f}% vs baseline")
+    for name in sorted(set(base) - set(fresh)):
+        warnings.append(f"benchmark disappeared from the suite: {name}")
+    n_reg = sum(1 for w in warnings if w.startswith("perf regression"))
+    lines.append(
+        f"bench_diff: {len(fresh)} benchmarks, {n_reg} regression(s) "
+        f"beyond {warn_pct:.0f}% (warn-only)"
+    )
+    return lines, warnings
+
+
+def self_test():
+    """Pytest-free smoke of the load/compare pipeline (CI lint job)."""
+    import os
+    import tempfile
+
+    def write(doc):
+        fd, path = tempfile.mkstemp(suffix=".json")
+        with os.fdopen(fd, "w") as f:
+            f.write(doc if isinstance(doc, str) else json.dumps(doc))
+        return path
+
+    paths = []
+    try:
+        # -- load_results tolerance -----------------------------------
+        ok = write({"results": [{"name": "a", "mean_s": 1.0}, {"name": "z"}]})
+        paths.append(ok)
+        assert load_results(ok) == {"a": 1.0}, "valid entries survive, malformed skipped"
+        for doc in ({}, {"results": None}, {"results": "oops"}, {"results": []}, [1, 2]):
+            p = write(doc)
+            paths.append(p)
+            assert load_results(p) == {}, f"degenerate results must load empty: {doc!r}"
+        bad = write("{not json")
+        paths.append(bad)
+        try:
+            load_results(bad)
+            raise AssertionError("malformed JSON must raise for the caller to report")
+        except ValueError:
+            pass
+
+        # -- compare: degenerate shapes are single lines, not walls ----
+        lines, warns = compare({"a": 1.0, "b": 2.0}, {}, 25.0)
+        assert warns == [], "empty fresh report must not spray 'disappeared' warnings"
+        assert len(lines) == 1 and "nothing to compare" in lines[0]
+        lines, warns = compare({}, {"a": 1.0}, 25.0)
+        assert warns == [], "empty baseline is informational"
+        assert any("baseline empty" in ln for ln in lines)
+
+        # -- compare: the actual diff ---------------------------------
+        base = {"a": 1.0, "b": 1.0, "gone": 1.0}
+        fresh = {"a": 2.0, "b": 1.05, "new": 3.0}
+        lines, warns = compare(base, fresh, 25.0)
+        assert any(w.startswith("perf regression: a ") for w in warns), "a regressed 100%"
+        assert not any("regression: b" in w for w in warns), "b is within threshold"
+        assert any("disappeared" in w and "gone" in w for w in warns)
+        assert any("NEW" in ln and "new" in ln for ln in lines)
+        # improvements never warn
+        _, warns = compare({"a": 2.0}, {"a": 1.0}, 25.0)
+        assert warns == []
+    finally:
+        for p in paths:
+            os.unlink(p)
+    print("bench_diff: self-test OK")
+    return 0
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("baseline")
-    ap.add_argument("fresh")
+    ap.add_argument("baseline", nargs="?")
+    ap.add_argument("fresh", nargs="?")
     ap.add_argument("--warn-pct", type=float, default=25.0)
+    ap.add_argument(
+        "--self-test", action="store_true", help="run the built-in assertions and exit"
+    )
     args = ap.parse_args()
+
+    if args.self_test:
+        return self_test()
+    if not args.baseline or not args.fresh:
+        ap.error("BASELINE and FRESH are required unless --self-test")
 
     try:
         base = load_results(args.baseline)
@@ -49,35 +177,11 @@ def main():
         print(f"::warning::bench_diff: unusable fresh report {args.fresh!r} ({e})")
         return 0
 
-    if not base:
-        print(f"bench_diff: baseline empty — no comparison; {len(fresh)} fresh benchmarks:")
-        for name, mean in sorted(fresh.items()):
-            print(f"  {name}: mean {mean:.3e}s")
-        print("bench_diff: commit a trusted BENCH_hotpath.json to start the trajectory")
-        return 0
-
-    regressions = 0
-    for name, mean in sorted(fresh.items()):
-        if name not in base:
-            print(f"  NEW  {name}: mean {mean:.3e}s (no baseline)")
-            continue
-        pct = (mean / base[name] - 1.0) * 100.0
-        marker = " "
-        if pct > args.warn_pct:
-            regressions += 1
-            marker = "!"
-            print(
-                f"::warning::perf regression: {name} mean {mean:.3e}s vs "
-                f"baseline {base[name]:.3e}s (+{pct:.1f}% > {args.warn_pct:.0f}%)"
-            )
-        print(f"  {marker}    {name}: {pct:+.1f}% vs baseline")
-    for name in sorted(set(base) - set(fresh)):
-        print(f"::warning::benchmark disappeared from the suite: {name}")
-
-    print(
-        f"bench_diff: {len(fresh)} benchmarks, {regressions} regression(s) "
-        f"beyond {args.warn_pct:.0f}% (warn-only)"
-    )
+    lines, warnings = compare(base, fresh, args.warn_pct)
+    for w in warnings:
+        print(f"::warning::{w}")
+    for ln in lines:
+        print(ln)
     return 0
 
 
