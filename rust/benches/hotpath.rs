@@ -17,6 +17,12 @@
 //! `native_round_loop_100dev_b8_topk10` (a whole engine round, dense vs
 //! top-k comparable against `native_round_loop_100dev_b8`).
 //!
+//! The online-planning benches price the per-round controller/drift
+//! additions (DESIGN.md §10): `wireless_drift_step_{10,1000}dev` (walk +
+//! Gilbert–Elliott transitions per device) and `controller_replan_*`
+//! (EWMA observe + eq. 29 closed-form re-solve vs the deadband skip
+//! path — both must stay trivially cheap next to a training round).
+//!
 //! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
 //! count behind the 1000-device fold (64 sets cycled instead of 1000
 //! resident — the fold cost is identical, the setup footprint is not: CI
@@ -27,6 +33,7 @@
 use defl::bench::Suite;
 use defl::codec::{Dense32, EncodedDelta, QuantStochastic, TopK, TopKQuant, UpdateCodec};
 use defl::data::synth::{generate, SynthSpec};
+use defl::defl_opt::{self, Controller, ControllerConfig, PlanInputs, RoundObservation};
 use defl::model::{federated_average, FedAccumulator, ParamSet};
 use defl::util::rng::Pcg32;
 use defl::wireless::{Channel, ChannelConfig};
@@ -154,6 +161,54 @@ fn main() -> anyhow::Result<()> {
     // --- channel sampling --------------------------------------------
     let mut channel = Channel::new(ChannelConfig::default(), 10, 3);
     suite.bench("channel_round_10dev", || channel.round(3.3e6));
+
+    // --- channel drift (the per-round [drift] step) -------------------
+    // Walk + Gilbert–Elliott on, so the bench prices the full step (the
+    // disabled path is a branch and costs nothing).
+    for devices in [10usize, 1000] {
+        let mut cfg = ChannelConfig::default();
+        cfg.drift.walk_db = 1.0;
+        cfg.drift.ge_p_bad = 0.05;
+        cfg.drift.ge_p_good = 0.25;
+        let mut ch = Channel::new(cfg, devices, 9);
+        suite.bench_units(&format!("wireless_drift_step_{devices}dev"), devices as f64, || {
+            ch.step_drift();
+            ch.drift_db(0)
+        });
+    }
+
+    // --- online controller (observe + re-solve eq. 29 per round) ------
+    // A slow geometric drift on the observed T_cm keeps the estimator
+    // moving; deadband 0 forces a closed-form re-solve every call.
+    {
+        let inputs = PlanInputs::default();
+        let plan = defl_opt::closed_form(&inputs);
+        let cfg = ControllerConfig { replan_every: 1, ewma: 0.3, max_step: 1.0, deadband: 0.0 };
+        let mut ctl = Controller::new(cfg, inputs, plan);
+        let mut t = inputs.t_cm;
+        suite.bench("controller_replan_every1", || {
+            t *= 0.999;
+            ctl.observe(&RoundObservation {
+                t_cm: t,
+                t_cp_per_sample: inputs.t_cp_per_sample,
+                train_loss: 1.0,
+            });
+            ctl.maybe_replan().map(|p| p.batch)
+        });
+        // the hysteresis fast path: a wide deadband skips the re-solve
+        let cfg = ControllerConfig { replan_every: 1, ewma: 0.3, max_step: 1.0, deadband: 1e6 };
+        let mut ctl = Controller::new(cfg, inputs, plan);
+        let mut t = inputs.t_cm;
+        suite.bench("controller_replan_deadband_skip", || {
+            t *= 0.999;
+            ctl.observe(&RoundObservation {
+                t_cm: t,
+                t_cp_per_sample: inputs.t_cp_per_sample,
+                train_loss: 1.0,
+            });
+            ctl.maybe_replan().is_none()
+        });
+    }
 
     // --- data synthesis + gather --------------------------------------
     suite.bench("synth_mnist_1k", || generate(&SynthSpec::mnist_like(1000), 7));

@@ -11,13 +11,16 @@ use std::time::Instant;
 /// One benchmark's result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timing summary over the measured iterations.
     pub summary: Summary,
     /// Optional work units per iteration (for throughput lines).
     pub units_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Units per second, when a unit count was declared.
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / self.summary.mean)
     }
@@ -26,7 +29,9 @@ impl BenchResult {
 /// Harness configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchOpts {
+    /// Untimed warmup iterations per benchmark.
     pub warmup_iters: usize,
+    /// Timed iterations per benchmark.
     pub iters: usize,
 }
 
@@ -49,12 +54,15 @@ impl BenchOpts {
 
 /// A suite accumulates results and renders the report.
 pub struct Suite {
+    /// Suite name (report header, artifact filename).
     pub name: String,
+    /// Iteration counts (env-tunable via `DEFL_BENCH_FAST`).
     pub opts: BenchOpts,
     results: Vec<BenchResult>,
 }
 
 impl Suite {
+    /// Empty suite with env-derived options.
     pub fn new(name: &str) -> Self {
         Suite { name: name.into(), opts: BenchOpts::from_env(), results: Vec::new() }
     }
@@ -102,6 +110,7 @@ impl Suite {
         });
     }
 
+    /// Results recorded so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -147,6 +156,7 @@ impl Suite {
         }
     }
 
+    /// The human-readable fixed-width report.
     pub fn render(&self) -> String {
         let mut t = crate::metrics::Table::new(&[
             "benchmark", "n", "mean", "p50", "p95", "max", "throughput",

@@ -1,4 +1,11 @@
-// Throwaway smoke: load mlp train artifact, run one step, compare vs golden.
+//! Minimal PJRT smoke binary (build feature `pjrt`): load the `mlp`
+//! train artifact, execute one SGD step through the PJRT C API, and
+//! compare the loss and the first updated parameter leaf against the
+//! JAX golden vectors recorded at artifact-build time. The smallest
+//! possible end-to-end check that the artifact → compile → execute
+//! round-trip matches JAX numerics — `defl doctor` runs the full
+//! version across every model (DESIGN.md §1).
+
 use anyhow::Result;
 use xla::FromRawBytes;
 

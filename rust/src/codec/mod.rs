@@ -62,13 +62,18 @@ use crate::util::rng::Pcg32;
 /// Which codec encodes updates (`[codec] kind` in the config).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CodecKind {
+    /// fp32 passthrough (lossless, the default).
     Dense,
+    /// QSGD-style per-tensor stochastic uniform quantization.
     Quant,
+    /// Magnitude top-k sparsification as (index, value) pairs.
     TopK,
+    /// Top-k indices with quantized values (the composition).
     TopKQuant,
 }
 
 impl CodecKind {
+    /// Parse a `codec.kind` string (`dense|quant|topk|topk_quant` + aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "dense" | "fp32" => Ok(CodecKind::Dense),
@@ -79,6 +84,7 @@ impl CodecKind {
         }
     }
 
+    /// Canonical config-string name (run metadata, tables).
     pub fn label(&self) -> &'static str {
         match self {
             CodecKind::Dense => "dense",
@@ -92,6 +98,7 @@ impl CodecKind {
 /// `[codec]` configuration section.
 #[derive(Clone, Debug, PartialEq)]
 pub struct CodecConfig {
+    /// Which codec encodes updates.
     pub kind: CodecKind,
     /// Quantization bit width (quant / topk_quant): signed levels
     /// `−L..=L`, `L = max(1, 2^(qbits−1) − 1)`.
@@ -107,6 +114,7 @@ impl Default for CodecConfig {
 }
 
 impl CodecConfig {
+    /// Range-check the codec knobs (`qbits` ∈ 1..=16, `k_ratio` ∈ (0, 1]).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
             (1..=16).contains(&self.qbits),
@@ -142,10 +150,14 @@ impl CodecConfig {
 /// Payload tag of one encoded leaf (the wire-format discriminant).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Payload {
+    /// Dense fp32 values.
     #[default]
     Dense,
+    /// Quantized levels for every element.
     Quant,
+    /// Sparse (index, fp32 value) pairs.
     TopK,
+    /// Sparse indices with quantized values.
     TopKQuant,
 }
 
@@ -153,6 +165,7 @@ pub enum Payload {
 /// (cleared, never shrunk), so a warm encode touches no allocator.
 #[derive(Clone, Debug, Default)]
 pub struct EncodedLeaf {
+    /// Which wire format this leaf carries.
     pub payload: Payload,
     /// Original element count of the leaf.
     pub len: usize,
@@ -177,10 +190,12 @@ pub struct EncodedLeaf {
 /// round over round, mirroring the delta-buffer contract of DESIGN.md §8.
 #[derive(Clone, Debug, Default)]
 pub struct EncodedDelta {
+    /// Per-leaf encoded payloads, in the model's leaf order.
     pub leaves: Vec<EncodedLeaf>,
 }
 
 impl EncodedDelta {
+    /// Empty wire buffers (filled by the first encode).
     pub fn new() -> Self {
         Self::default()
     }
@@ -253,6 +268,7 @@ pub fn k_of(len: usize, k_ratio: f64) -> usize {
 /// thread pool; per-device mutable state (residual, RNG, buffers) lives
 /// in the device, never in the codec.
 pub trait UpdateCodec: Send + Sync {
+    /// Which codec this is (config/metadata label).
     fn kind(&self) -> CodecKind;
 
     /// Whether encoding drops information. Lossy codecs require an
@@ -359,6 +375,7 @@ impl UpdateCodec for Dense32 {
 /// (unbiased) rounding; one fp32 scale per leaf. Wire cost
 /// `qbits·P + 32·leaves` bits.
 pub struct QuantStochastic {
+    /// Quantization bit width (signed levels `−L..=L`).
     pub qbits: u32,
 }
 
@@ -413,6 +430,7 @@ impl UpdateCodec for QuantStochastic {
 /// ascending (index, fp32 value) pairs. Wire cost `64·k` bits; the fused
 /// fold touches k coordinates instead of P.
 pub struct TopK {
+    /// Fraction of each leaf's parameters kept.
     pub k_ratio: f64,
 }
 
@@ -477,7 +495,9 @@ impl UpdateCodec for TopK {
 /// then quantize the kept values per leaf. Wire cost
 /// `(32 + qbits)·k + 32·leaves` bits.
 pub struct TopKQuant {
+    /// Fraction of each leaf's parameters kept.
     pub k_ratio: f64,
+    /// Quantization bit width for the kept values.
     pub qbits: u32,
 }
 

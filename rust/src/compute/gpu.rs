@@ -52,17 +52,22 @@ impl GpuSpec {
 /// Fleet construction parameters.
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
+    /// Fleet size M.
     pub devices: usize,
     /// Paper's cap: every f_m ≤ this (Section VI-A: 2 GHz).
     pub max_freq_hz: f64,
+    /// G_m: cycles per input bit (paper: 30).
     pub cycles_per_bit: f64,
     /// Eq. (3) constants (defaults model an RTX8000-class part where the
     /// cap binds for every device — reproducing the paper's equal 2 GHz).
     pub a_static: f64,
+    /// Core-bound workload share a_c of eq. (3).
     pub a_core: f64,
+    /// Memory-bound workload share a_M of eq. (3).
     pub a_mem: f64,
     /// Nominal core/memory frequencies (Hz).
     pub f_core_hz: f64,
+    /// Nominal memory frequency (Hz).
     pub f_mem_hz: f64,
     /// Per-device multiplicative jitter on f_core/f_mem (0 = homogeneous).
     pub heterogeneity: f64,
@@ -94,10 +99,12 @@ impl Default for FleetConfig {
 /// The device fleet's compute side.
 #[derive(Clone, Debug)]
 pub struct GpuFleet {
+    /// Per-device compute capabilities (index = device id).
     pub specs: Vec<GpuSpec>,
 }
 
 impl GpuFleet {
+    /// Build an M-device fleet (seeded DVFS jitter when heterogeneous).
     pub fn new(cfg: &FleetConfig, seed: u64) -> Self {
         assert!(cfg.devices > 0);
         let mut rng = Pcg32::new(seed, 0x6B0);
@@ -124,6 +131,7 @@ impl GpuFleet {
         GpuFleet { specs }
     }
 
+    /// Fleet size M.
     pub fn num_devices(&self) -> usize {
         self.specs.len()
     }

@@ -20,6 +20,7 @@
 //! (MNIST 28×28×1 vs CIFAR 32×32×3) price differently, exactly as a
 //! cycles/bit model implies.
 
+/// Per-device GPU specs and fleet construction.
 pub mod gpu;
 
 pub use gpu::{GpuSpec, GpuFleet, effective_frequency};

@@ -5,18 +5,24 @@
 //! the in-repo TOML-lite parser ([`toml_lite`]); any value can be
 //! overridden on the command line as `--set section.key=value`.
 
+/// The in-repo TOML-lite parser the config files flow through.
 pub mod toml_lite;
 
 use crate::util::json::Json;
 
+/// Which synthetic dataset (and therefore which model) a run trains on.
 #[derive(Clone, Debug, PartialEq)]
 pub enum DatasetKind {
+    /// 28×28×1, 10 classes — the paper's MNIST setting.
     MnistLike,
+    /// 32×32×3, 10 classes — the paper's CIFAR-10 setting.
     CifarLike,
+    /// 8×8×1, 10 classes — fast test/bench scale.
     Tiny,
 }
 
 impl DatasetKind {
+    /// Parse a `dataset.kind` string (`mnist|cifar|tiny` + aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "mnist" | "mnist_like" => Ok(DatasetKind::MnistLike),
@@ -36,14 +42,19 @@ impl DatasetKind {
     }
 }
 
+/// How the training corpus is partitioned across devices.
 #[derive(Clone, Debug, PartialEq)]
 pub enum PartitionKind {
+    /// Uniform IID split.
     Iid,
+    /// Label-skewed non-IID split (`dataset.dirichlet_alpha`).
     Dirichlet,
+    /// McMahan-style label shards (`dataset.shards_per_device`).
     Shards,
 }
 
 impl PartitionKind {
+    /// Parse a `dataset.partition` string (`iid|dirichlet|shards`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "iid" => Ok(PartitionKind::Iid),
@@ -66,10 +77,17 @@ pub enum Policy {
     /// "Rand." baseline (paper: b=16,V=15 MNIST; b=64,V=30 CIFAR).
     Rand,
     /// Explicit (b, V).
-    Fixed { batch: usize, local_rounds: usize },
+    Fixed {
+        /// Mini-batch size b.
+        batch: usize,
+        /// Local SGD iterations V per communication round.
+        local_rounds: usize,
+    },
 }
 
 impl Policy {
+    /// Parse a `policy.kind` string; `batch`/`local_rounds` seed the
+    /// `fixed` variant.
     pub fn parse(s: &str, batch: usize, local_rounds: usize) -> anyhow::Result<Self> {
         match s {
             "defl" => Ok(Policy::Defl),
@@ -81,6 +99,7 @@ impl Policy {
         }
     }
 
+    /// Human-readable policy name (figure legends, run metadata).
     pub fn label(&self) -> String {
         match self {
             Policy::Defl => "DEFL".into(),
@@ -92,27 +111,41 @@ impl Policy {
     }
 }
 
+/// The fully-typed run configuration every harness and example
+/// consumes (defaults → TOML-lite file → `--set` overrides).
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
+    /// Run name (log/output labels).
     pub name: String,
     // [system]
+    /// Fleet size M.
     pub devices: usize,
+    /// Master seed every stochastic component derives from.
     pub seed: u64,
+    /// Thread-pool width for per-device fan-out (1 = sequential).
     pub threads: usize,
     // [dataset]
+    /// Dataset (and model) the run trains on.
     pub dataset: DatasetKind,
+    /// Training samples per device (D_m under an even split).
     pub train_per_device: usize,
+    /// Held-out evaluation set size.
     pub test_size: usize,
+    /// Federated partitioning scheme.
     pub partition: PartitionKind,
+    /// Dirichlet concentration for the non-IID split.
     pub dirichlet_alpha: f64,
+    /// Label shards per device for the shard split.
     pub shards_per_device: usize,
     /// Override the synthetic generator's pixel-noise std (None = preset).
     pub noise: Option<f64>,
     /// Override the synthetic generator's label-flip rate (None = preset).
     pub label_noise: Option<f64>,
     // [model]
+    /// Local SGD learning rate.
     pub lr: f32,
     // [wireless]
+    /// Uplink channel model (bandwidth, powers, fading, drift).
     pub wireless: crate::wireless::ChannelConfig,
     /// Per-transmission failure probability (0 = reliable, paper default).
     pub outage_prob: f64,
@@ -123,12 +156,23 @@ pub struct ExperimentConfig {
     /// extension). Affects T_cm only; quantization error is not modeled.
     pub compression: f64,
     // [compute]
+    /// Per-device GPU compute model (eq. 3–5).
     pub fleet: crate::compute::gpu::FleetConfig,
     // [opt]
+    /// Target global convergence error ε (paper: 0.01).
     pub epsilon: f64,
+    /// ν — local-convergence constant of Remark 3.
     pub nu: f64,
+    /// c — big-O constant of eq. (12).
     pub c: f64,
+    // [controller]
+    /// Online DEFL re-planning (`controller.replan_every = 0` keeps the
+    /// static round-0 plan — the pre-controller behaviour). Only applies
+    /// to plan-carrying policies (`defl`/`defl_numeric`); fixed baselines
+    /// ignore it with a warning.
+    pub controller: crate::defl_opt::ControllerConfig,
     // [policy]
+    /// How (b, V) are chosen — DEFL or one of the baselines.
     pub policy: Policy,
     // [backend]
     /// Which training substrate executes the hot path: `pjrt` (AOT HLO
@@ -143,14 +187,21 @@ pub struct ExperimentConfig {
     /// per-device error-feedback residuals.
     pub codec: crate::codec::CodecConfig,
     // [engine]
+    /// Round-schedule engine (`sync|deadline|async_buffered`).
     pub engine: crate::coordinator::EngineConfig,
     // [selection]
+    /// Client-selection policy (paper: full participation).
     pub selection: crate::coordinator::Selection,
     // [run]
+    /// Hard round cap.
     pub max_rounds: usize,
+    /// Evaluate the global model every this many rounds.
     pub eval_every: usize,
+    /// Stop once test accuracy reaches this (0 = run to max_rounds).
     pub target_accuracy: f64,
+    /// PJRT artifact directory (`make artifacts` output).
     pub artifacts_dir: String,
+    /// Write the run-log JSON here when set.
     pub out: Option<String>,
 }
 
@@ -189,6 +240,7 @@ impl Default for ExperimentConfig {
             epsilon: 0.01,
             nu: 8.0,
             c: 1.0,
+            controller: crate::defl_opt::ControllerConfig::default(),
             policy: Policy::Defl,
             backend: crate::runtime::BackendKind::default(),
             codec: crate::codec::CodecConfig::default(),
@@ -275,6 +327,20 @@ impl ExperimentConfig {
             get_f64(o, "epsilon", &mut self.epsilon)?;
             get_f64(o, "nu", &mut self.nu)?;
             get_f64(o, "c", &mut self.c)?;
+        }
+        if let Some(d) = j.get("drift") {
+            get_f64(d, "walk_db", &mut self.wireless.drift.walk_db)?;
+            get_f64(d, "trend_db_per_round", &mut self.wireless.drift.trend_db_per_round)?;
+            get_f64(d, "clamp_db", &mut self.wireless.drift.clamp_db)?;
+            get_f64(d, "ge_p_bad", &mut self.wireless.drift.ge_p_bad)?;
+            get_f64(d, "ge_p_good", &mut self.wireless.drift.ge_p_good)?;
+            get_f64(d, "ge_bad_db", &mut self.wireless.drift.ge_bad_db)?;
+        }
+        if let Some(ct) = j.get("controller") {
+            get_usize(ct, "replan_every", &mut self.controller.replan_every)?;
+            get_f64(ct, "ewma", &mut self.controller.ewma)?;
+            get_f64(ct, "max_step", &mut self.controller.max_step)?;
+            get_f64(ct, "deadband", &mut self.controller.deadband)?;
         }
         if let Some(p) = j.get("policy") {
             // seed (batch, V) from the current policy so partial overrides
@@ -373,6 +439,7 @@ impl ExperimentConfig {
         self.apply_json(&j)
     }
 
+    /// Range-check every section; every load/override path ends here.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.devices > 0, "devices must be > 0");
         anyhow::ensure!(self.train_per_device > 0, "train_per_device must be > 0");
@@ -397,6 +464,8 @@ impl ExperimentConfig {
         }
         self.codec.validate()?;
         self.engine.validate()?;
+        self.controller.validate()?;
+        self.wireless.drift.validate()?;
         Ok(())
     }
 }
@@ -473,10 +542,12 @@ pub mod presets {
         Policy::Fixed { batch: 10, local_rounds: 20 }
     }
 
+    /// The paper's "Rand." baseline on MNIST (b=16, V=15).
     pub fn rand_mnist() -> Policy {
         Policy::Fixed { batch: 16, local_rounds: 15 }
     }
 
+    /// The paper's "Rand." baseline on CIFAR (b=64, V=30).
     pub fn rand_cifar() -> Policy {
         Policy::Fixed { batch: 64, local_rounds: 30 }
     }
@@ -630,6 +701,48 @@ mod tests {
         assert!(c.validate().is_ok());
         assert!(c.set_override("engine.kind=psychic").is_err());
         c.engine.deadline_s = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn controller_section_parses_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.controller.replan_every, 0, "static plan is the default");
+        c.set_override("controller.replan_every=2").unwrap();
+        c.set_override("controller.ewma=0.5").unwrap();
+        c.set_override("controller.max_step=3.0").unwrap();
+        c.set_override("controller.deadband=0.1").unwrap();
+        assert_eq!(c.controller.replan_every, 2);
+        assert_eq!(c.controller.ewma, 0.5);
+        assert_eq!(c.controller.max_step, 3.0);
+        assert_eq!(c.controller.deadband, 0.1);
+        assert!(c.validate().is_ok());
+        c.set_override("controller.ewma=1.5").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.set_override("controller.max_step=-1").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn drift_section_parses_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.wireless.drift.enabled(), "drift is off by default");
+        c.set_override("drift.walk_db=2.0").unwrap();
+        c.set_override("drift.trend_db_per_round=-0.5").unwrap();
+        c.set_override("drift.clamp_db=40").unwrap();
+        c.set_override("drift.ge_p_bad=0.1").unwrap();
+        c.set_override("drift.ge_p_good=0.4").unwrap();
+        c.set_override("drift.ge_bad_db=12").unwrap();
+        assert!(c.wireless.drift.enabled());
+        assert_eq!(c.wireless.drift.walk_db, 2.0);
+        assert_eq!(c.wireless.drift.trend_db_per_round, -0.5);
+        assert_eq!(c.wireless.drift.ge_bad_db, 12.0);
+        assert!(c.validate().is_ok());
+        c.set_override("drift.ge_p_good=0").unwrap();
+        assert!(c.validate().is_err(), "inescapable bad state must not validate");
+        let mut c = ExperimentConfig::default();
+        c.set_override("drift.walk_db=-3").unwrap();
         assert!(c.validate().is_err());
     }
 

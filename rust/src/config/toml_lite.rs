@@ -9,9 +9,12 @@
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 
+/// Parse error with line number.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line the parser stopped at.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -68,6 +71,7 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
     Ok(Json::Obj(root))
 }
 
+/// Parse a TOML-lite file into the nested JSON shape.
 pub fn parse_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Json> {
     let text = std::fs::read_to_string(path.as_ref())?;
     parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))

@@ -24,6 +24,7 @@ use std::sync::Arc;
 
 /// One mobile device participating in FL.
 pub struct Device {
+    /// Device index in the fleet (stable across rounds).
     pub id: usize,
     /// Indices into the shared training corpus (this device's 𝒟_m).
     pub shard: Vec<usize>,
@@ -59,6 +60,8 @@ pub struct Device {
 }
 
 impl Device {
+    /// A device over its shard of the shared corpus, with a private
+    /// batching RNG derived from `seed`.
     pub fn new(id: usize, shard: Vec<usize>, data: Arc<Dataset>, seed: u64) -> Self {
         assert!(!shard.is_empty(), "device {id} got an empty shard");
         let order = shard.clone();

@@ -64,6 +64,7 @@ pub struct AsyncBuffered {
 }
 
 impl AsyncBuffered {
+    /// Engine aggregating the `buffer_k` earliest arrivals per step.
     pub fn new(buffer_k: usize, staleness_exponent: f64) -> Self {
         assert!(buffer_k >= 1);
         AsyncBuffered { buffer_k, staleness_exponent, in_flight: Vec::new(), aggregations: 0 }
@@ -153,6 +154,9 @@ impl RoundEngine for AsyncBuffered {
                 mean_staleness: 0.0,
                 encoded_bits: f64::NAN,
                 compression_ratio: f64::NAN,
+                plan_b: sys.batch,
+                plan_theta: sys.current_theta(),
+                est_t_cm: f64::NAN, // filled by the coordinator's controller hook
             });
         }
 
@@ -228,6 +232,9 @@ impl RoundEngine for AsyncBuffered {
             mean_staleness,
             encoded_bits,
             compression_ratio,
+            plan_b: sys.batch,
+            plan_theta: sys.current_theta(),
+            est_t_cm: f64::NAN, // filled by the coordinator's controller hook
         })
     }
 }

@@ -27,6 +27,12 @@ use std::time::Instant;
 pub struct DeadlineSync {
     /// The per-round deadline `T_dl` in seconds (resolved — never 0).
     pub deadline_s: f64,
+    /// Whether `deadline_s` was auto-derived (config 0 ⇒ 2× the expected
+    /// round). Auto deadlines re-derive on every controller re-plan
+    /// ([`RoundEngine::on_replan`]) so a drifting channel can't strand
+    /// the fleet behind a stale round-0 deadline; explicit deadlines are
+    /// the operator's to keep.
+    pub auto: bool,
 }
 
 impl DeadlineSync {
@@ -53,6 +59,12 @@ impl DeadlineSync {
 impl RoundEngine for DeadlineSync {
     fn kind(&self) -> EngineKind {
         EngineKind::Deadline
+    }
+
+    fn on_replan(&mut self, expected_round_s: f64) {
+        if self.auto && expected_round_s.is_finite() && expected_round_s > 0.0 {
+            self.deadline_s = 2.0 * expected_round_s;
+        }
     }
 
     fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord> {
@@ -139,6 +151,9 @@ impl RoundEngine for DeadlineSync {
             mean_staleness: 0.0,
             encoded_bits,
             compression_ratio,
+            plan_b: sys.batch,
+            plan_theta: sys.current_theta(),
+            est_t_cm: f64::NAN, // filled by the coordinator's controller hook
         })
     }
 }
@@ -150,7 +165,7 @@ mod tests {
 
     #[test]
     fn finite_times_survive_or_miss_exactly_at_deadline() {
-        let e = DeadlineSync { deadline_s: 10.0 };
+        let e = DeadlineSync { deadline_s: 10.0, auto: false };
         assert!(e.survives(4, 1.0, 6.0)); // 4·1 + 6 = 10 ≤ 10
         assert!(!e.survives(4, 1.0, 6.1)); // 10.1 > 10
         assert!(e.survives(1, 0.0, 0.0));
@@ -162,12 +177,12 @@ mod tests {
     /// a finite `T_dl`.
     #[test]
     fn infinite_uplink_is_dropped_and_round_stays_finite() {
-        let e = DeadlineSync { deadline_s: 5.0 };
+        let e = DeadlineSync { deadline_s: 5.0, auto: false };
         let dead_uplink = uplink_time(1e6, 0.0);
         assert!(dead_uplink.is_infinite());
         assert!(!e.survives(3, 1e-3, dead_uplink));
         // ...even with an enormous (but finite) deadline
-        let generous = DeadlineSync { deadline_s: 1e12 };
+        let generous = DeadlineSync { deadline_s: 1e12, auto: false };
         assert!(!generous.survives(3, 1e-3, dead_uplink));
         // the round itself closes at the deadline, not at +∞
         let wall = e.round_wall(3.0 * 1e-3 + dead_uplink, true);
@@ -175,9 +190,25 @@ mod tests {
         assert!(wall.is_finite());
     }
 
+    /// Auto-derived deadlines follow the controller's re-plans; explicit
+    /// ones are the operator's and must never move.
+    #[test]
+    fn on_replan_rederives_auto_deadlines_only() {
+        let mut auto = DeadlineSync { deadline_s: 2.0, auto: true };
+        auto.on_replan(5.0);
+        assert_eq!(auto.deadline_s, 10.0, "auto = 2× the new expected round");
+        auto.on_replan(f64::INFINITY); // degenerate estimate: keep the old deadline
+        assert_eq!(auto.deadline_s, 10.0);
+        auto.on_replan(0.0);
+        assert_eq!(auto.deadline_s, 10.0);
+        let mut fixed = DeadlineSync { deadline_s: 2.0, auto: false };
+        fixed.on_replan(5.0);
+        assert_eq!(fixed.deadline_s, 2.0, "explicit deadlines never move");
+    }
+
     #[test]
     fn round_wall_without_stragglers_is_the_slowest_device() {
-        let e = DeadlineSync { deadline_s: 10.0 };
+        let e = DeadlineSync { deadline_s: 10.0, auto: false };
         assert_eq!(e.round_wall(7.5, false), 7.5);
         // a missed deadline caps the wall even if the slowest was slower
         assert_eq!(e.round_wall(12.0, true), 10.0);

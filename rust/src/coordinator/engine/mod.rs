@@ -27,8 +27,11 @@
 //! virtual time: every engine prices its round as one
 //! [`crate::simclock::RoundDelay`] advance.
 
+/// FedBuff-style buffered asynchrony.
 pub mod async_buffered;
+/// Deadline-bounded synchronous rounds (straggler dropping).
 pub mod deadline;
+/// The paper's synchronous FedAvg round.
 pub mod sync;
 
 pub use async_buffered::AsyncBuffered;
@@ -43,12 +46,16 @@ use crate::wireless::dbm_to_watt;
 /// Which round engine drives the run (`[engine] kind` in the config).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EngineKind {
+    /// The paper's Algorithm 1 barrier.
     Sync,
+    /// Synchronous with a per-round deadline.
     Deadline,
+    /// FedBuff-style buffered asynchrony.
     AsyncBuffered,
 }
 
 impl EngineKind {
+    /// Parse an `engine.kind` string (`sync|deadline|async_buffered` + aliases).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "sync" | "fedavg" => Ok(EngineKind::Sync),
@@ -58,6 +65,7 @@ impl EngineKind {
         }
     }
 
+    /// Canonical config-string name (run metadata).
     pub fn label(&self) -> &'static str {
         match self {
             EngineKind::Sync => "sync",
@@ -70,10 +78,12 @@ impl EngineKind {
 /// `[engine]` configuration section.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Which engine schedules the rounds.
     pub kind: EngineKind,
     /// DeadlineSync: per-round deadline `T_dl` in seconds. 0 = auto
     /// (2× the expected synchronous round time, so only genuine
-    /// stragglers/deep fades get dropped).
+    /// stragglers/deep fades get dropped; re-derived from the online
+    /// controller's estimate on every re-plan — DESIGN.md §10).
     pub deadline_s: f64,
     /// AsyncBuffered: aggregate once this many updates are buffered.
     /// 0 = auto (⌈M/2⌉).
@@ -95,6 +105,7 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
+    /// Range-check the engine knobs.
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.deadline_s >= 0.0, "engine.deadline_s must be ≥ 0");
         anyhow::ensure!(
@@ -110,11 +121,22 @@ impl EngineConfig {
 /// everything else (model, devices, channel, clock, log) lives in
 /// [`FlSystem`] and is threaded through by reference.
 pub trait RoundEngine {
+    /// Which engine this is (run metadata).
     fn kind(&self) -> EngineKind;
 
     /// Execute one aggregation step: schedule device work, aggregate, and
     /// advance the virtual clock by exactly this step's delay.
     fn round(&mut self, sys: &mut FlSystem) -> anyhow::Result<RoundRecord>;
+
+    /// The online controller adopted a new plan; `expected_round_s` is
+    /// the re-estimated synchronous round time (est T_cm + V·T_cp(b)).
+    /// Engines whose knobs were *derived* from the build-time expectation
+    /// re-derive them here ([`DeadlineSync`]'s auto deadline — a frozen
+    /// round-0 deadline under a drifting channel would eventually drop
+    /// every device, every round). Default: nothing to re-derive.
+    fn on_replan(&mut self, expected_round_s: f64) {
+        let _ = expected_round_s;
+    }
 }
 
 /// Build the engine a config asks for. `devices` resolves `buffer_k`'s
@@ -124,12 +146,9 @@ pub fn build(cfg: &EngineConfig, devices: usize, expected_round_s: f64) -> Box<d
     match cfg.kind {
         EngineKind::Sync => Box::new(SyncFedAvg),
         EngineKind::Deadline => {
-            let deadline_s = if cfg.deadline_s > 0.0 {
-                cfg.deadline_s
-            } else {
-                2.0 * expected_round_s
-            };
-            Box::new(DeadlineSync { deadline_s })
+            let auto = cfg.deadline_s <= 0.0;
+            let deadline_s = if auto { 2.0 * expected_round_s } else { cfg.deadline_s };
+            Box::new(DeadlineSync { deadline_s, auto })
         }
         EngineKind::AsyncBuffered => {
             let buffer_k = if cfg.buffer_k > 0 { cfg.buffer_k } else { (devices + 1) / 2 };
@@ -149,6 +168,7 @@ pub fn build(cfg: &EngineConfig, devices: usize, expected_round_s: f64) -> Box<d
 /// codec's fused decode path instead of copying K full models per round
 /// (DESIGN.md §8–9).
 pub(crate) struct LocalUpdate {
+    /// Producing device's fleet index.
     pub device: usize,
     /// FedAvg weight `D_m` (eq. 2).
     pub weight: f64,
@@ -293,18 +313,27 @@ pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
 /// transmitted size is the *codec's* wire size (`nominal_bits`, exact for
 /// every built-in codec — DESIGN.md §9), times the legacy abstract
 /// `wireless.compression` multiplier.
+///
+/// Two per-round side effects live here because this is the one choke
+/// point every engine's uplink goes through (DESIGN.md §10): the channel
+/// *drifts* one step before the draw, and the realized fleet-max uplink
+/// time (retries included) is recorded into `FlSystem::obs_t_cm` — the
+/// measurement the online controller folds into its T_cm estimator.
 pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
+    sys.channel.step_drift();
     let spec_bits = sys.codec.nominal_bits(&sys.spec) * sys.cfg.compression;
-    if sys.cfg.outage_prob > 0.0 {
+    let draw = if sys.cfg.outage_prob > 0.0 {
         let (times, _, delivered) =
             sys.channel
                 .round_with_outage(spec_bits, sys.cfg.outage_prob, sys.cfg.max_retries);
-        Ok(UplinkDraw { times, delivered })
+        UplinkDraw { times, delivered }
     } else {
         let (times, _) = sys.channel.round(spec_bits);
         let n = times.len();
-        Ok(UplinkDraw { times, delivered: vec![true; n] })
-    }
+        UplinkDraw { times, delivered: vec![true; n] }
+    };
+    sys.obs_t_cm = draw.times.iter().copied().fold(0.0, f64::max);
+    Ok(draw)
 }
 
 /// Energy ledger entry for every device that worked this round

@@ -100,6 +100,9 @@ impl RoundEngine for SyncFedAvg {
             mean_staleness: 0.0,
             encoded_bits,
             compression_ratio,
+            plan_b: sys.batch,
+            plan_theta: sys.current_theta(),
+            est_t_cm: f64::NAN, // filled by the coordinator's controller hook
         })
     }
 }

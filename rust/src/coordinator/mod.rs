@@ -20,10 +20,21 @@
 //!    the synchronous engines, per-arrival for the async one).
 //!
 //! The operating point (b, V) comes from [`crate::baselines::resolve`] —
-//! DEFL's closed form or one of the paper's baselines.
+//! DEFL's closed form or one of the paper's baselines. With
+//! `[controller] replan_every > 0` (and a plan-carrying policy) the
+//! operating point is *re-planned online*: after every round the
+//! coordinator feeds the realized delays and the loss into the
+//! [`crate::defl_opt::Controller`]'s EWMA estimators, and at the
+//! configured cadence adopts a fresh eq. (29) solution for the *next*
+//! round — the loop that keeps (b*, θ*) honest while the channel drifts
+//! (`[drift]` — DESIGN.md §10). `replan_every = 0` (default) keeps the
+//! static round-0 plan, byte-identical to the pre-controller system.
 
+/// One simulated edge device (shard, batching RNG, local SGD).
 pub mod device;
+/// Pluggable round engines (DESIGN.md §5).
 pub mod engine;
+/// Partial-participation client-selection policies.
 pub mod selection;
 
 pub use device::Device;
@@ -46,7 +57,9 @@ use std::time::Instant;
 
 /// A fully wired FL system ready to run rounds.
 pub struct FlSystem {
+    /// The configuration the system was built from.
     pub cfg: ExperimentConfig,
+    /// Model name the dataset binds to (`mlp`/`mnist_cnn`/`cifar_cnn`).
     pub model: String,
     /// The model's parameter layout (cached from the backend at build;
     /// its `update_bits` prices every uplink).
@@ -54,10 +67,15 @@ pub struct FlSystem {
     /// The training substrate (`[backend] kind = pjrt|native`) — see
     /// [`crate::runtime::TrainBackend`].
     pub backend: Box<dyn TrainBackend>,
+    /// The wireless uplink model (eq. 6/7 + drift).
     pub channel: Channel,
+    /// The per-device compute model (eq. 3–5).
     pub fleet: GpuFleet,
+    /// The device fleet (index = device id).
     pub devices: Vec<Device>,
+    /// Held-out evaluation set.
     pub test_set: Arc<Dataset>,
+    /// The parameter server's current global model.
     pub global: ParamSet,
     /// Preallocated streaming-aggregation buffer: every engine folds the
     /// round's weighted update deltas into it (`begin → fold × K →
@@ -69,15 +87,37 @@ pub struct FlSystem {
     /// wire size, and the engines fold through its fused decode path
     /// (DESIGN.md §9).
     pub codec: Box<dyn UpdateCodec>,
+    /// The virtual-time ledger (single owner of 𝒯).
     pub clock: SimClock,
+    /// Per-round records + run metadata.
     pub log: RunLog,
+    /// Client-selection state.
     pub selector: Selector,
+    /// Per-device energy accounting.
     pub energy: EnergyLedger,
+    /// The energy pricing constants.
     pub energy_model: EnergyModel,
     /// The resolved operating point (after artifact clamping).
     pub batch: usize,
+    /// Local SGD iterations V per round (currently in force).
     pub local_rounds: usize,
+    /// The policy resolution (plan diagnostics included); updated by
+    /// the online controller when it adopts a re-plan.
     pub resolved: Resolved,
+    /// The online re-planner (`[controller] replan_every > 0` with a
+    /// plan-carrying policy; `None` = static round-0 plan).
+    pub controller: Option<crate::defl_opt::Controller>,
+    /// The realized fleet-max uplink seconds of the round in flight
+    /// (retries included) — written by `engine::uplink_phase`, consumed
+    /// by the controller hook after the round; NaN when no uplink was
+    /// drawn (e.g. an async round with nothing to start).
+    pub(crate) obs_t_cm: f64,
+    /// The *training* set's bits/sample, cached at build — the quantity
+    /// the round-0 plan priced compute with. The controller's per-round
+    /// observations and the re-derived auto deadline read this, so a
+    /// real-data drop-in whose test set has different dims can't skew
+    /// the re-planned operating point.
+    pub(crate) train_bits_per_sample: f64,
     /// The round engine (`Option` only so [`FlSystem::round`] can lend
     /// `self` to it mutably; always `Some` between calls).
     engine: Option<Box<dyn RoundEngine>>,
@@ -86,11 +126,17 @@ pub struct FlSystem {
 /// Outcome snapshot of a completed run.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
+    /// Final virtual time 𝒯.
     pub overall_time: f64,
+    /// Rounds executed.
     pub rounds: usize,
+    /// Training loss of the last round.
     pub final_train_loss: f64,
+    /// Last evaluated test loss.
     pub final_test_loss: f64,
+    /// Last evaluated test accuracy.
     pub final_test_accuracy: f64,
+    /// Measured wall-clock seconds of the whole run.
     pub wall_seconds: f64,
 }
 
@@ -196,10 +242,54 @@ impl FlSystem {
             t_cm + local_rounds as f64 * fleet.round_time(bits_per_sample, batch);
         let engine = engine::build(&cfg.engine, cfg.devices, expected_round_s);
 
+        // --- online controller ----------------------------------------
+        // Only plan-carrying policies can be re-planned; the fixed
+        // baselines (FedAvg, Rand., fixed) have their (b, V) by
+        // definition. `replan_every = 0` is the static degenerate case
+        // and adds nothing — not even metadata — so a controller-free
+        // run stays byte-identical to the pre-controller system.
+        let controller = if cfg.controller.replan_every > 0 {
+            match &resolved.plan {
+                Some(plan) => {
+                    let inputs = crate::defl_opt::PlanInputs {
+                        t_cm,
+                        t_cp_per_sample: t_cps,
+                        m: cfg.devices,
+                        epsilon: cfg.epsilon,
+                        nu: cfg.nu,
+                        c: cfg.c,
+                    };
+                    Some(crate::defl_opt::Controller::new(
+                        cfg.controller.clone(),
+                        inputs,
+                        *plan,
+                    ))
+                }
+                None => {
+                    crate::log_warn!(
+                        "controller.replan_every={} needs a plan-carrying policy \
+                         (defl|defl_numeric); policy {} keeps its fixed (b, V)",
+                        cfg.controller.replan_every,
+                        cfg.policy.label()
+                    );
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
         let mut log = RunLog::new(&cfg.name);
         log.set_meta("backend", Json::str(backend.kind().label()));
         log.set_meta("engine", Json::str(engine.kind().label()));
         log.set_meta("codec", Json::str(codec.kind().label()));
+        if controller.is_some() {
+            log.set_meta("controller_replan_every", Json::Num(cfg.controller.replan_every as f64));
+            log.set_meta("controller_ewma", Json::Num(cfg.controller.ewma));
+        }
+        if cfg.wireless.drift.enabled() {
+            log.set_meta("drift_enabled", Json::Bool(true));
+        }
         log.set_meta("update_bits_dense", Json::Num(spec.update_bits()));
         log.set_meta("update_bits_encoded", Json::Num(update_bits));
         log.set_meta("policy", Json::str(cfg.policy.label()));
@@ -244,6 +334,9 @@ impl FlSystem {
             batch,
             local_rounds,
             resolved,
+            controller,
+            obs_t_cm: f64::NAN,
+            train_bits_per_sample: bits_per_sample,
             engine: Some(engine),
         })
     }
@@ -253,14 +346,78 @@ impl FlSystem {
         self.engine.as_ref().expect("engine present between rounds").kind()
     }
 
+    /// The local accuracy θ* currently in force (NaN for plan-less
+    /// policies) — what the engines stamp into each round record.
+    pub fn current_theta(&self) -> f64 {
+        self.resolved.plan.as_ref().map_or(f64::NAN, |p| p.theta)
+    }
+
     /// Execute one aggregation step of the configured [`RoundEngine`]
     /// (one synchronous round for the sync engines, one buffer flush for
-    /// the async one). Returns the record.
+    /// the async one), then run the online-controller hook: fold the
+    /// realized delays into the estimators and, at the configured
+    /// cadence, adopt a re-planned (b*, θ*) for the next round. Returns
+    /// the record.
     pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        self.obs_t_cm = f64::NAN;
         let mut engine = self.engine.take().expect("engine present between rounds");
         let result = engine.round(self);
         self.engine = Some(engine);
-        result
+        let mut rec = result?;
+        self.observe_and_replan(&mut rec)?;
+        Ok(rec)
+    }
+
+    /// The controller hook run after every round (DESIGN.md §10): observe
+    /// (realized fleet-max uplink, fleet bottleneck seconds-per-sample,
+    /// the round's training loss), stamp the estimate into the record,
+    /// and apply any adopted re-plan to the *next* round's operating
+    /// point (re-clamped to the backend's executable batch ladder).
+    fn observe_and_replan(&mut self, rec: &mut RoundRecord) -> anyhow::Result<()> {
+        let Some(ctl) = self.controller.as_mut() else {
+            return Ok(());
+        };
+        let t_cps = self.fleet.bottleneck_seconds_per_sample(self.train_bits_per_sample);
+        ctl.observe(&crate::defl_opt::RoundObservation {
+            t_cm: self.obs_t_cm,
+            t_cp_per_sample: t_cps,
+            train_loss: rec.train_loss,
+        });
+        rec.est_t_cm = ctl.est_t_cm();
+        if let Some(plan) = ctl.maybe_replan() {
+            let batch = self.backend.nearest_train_batch(&self.model, plan.batch)?;
+            let local_rounds = plan.local_rounds.max(1);
+            if batch != self.batch {
+                self.backend.preload(&self.model, &[batch])?;
+            }
+            if batch != self.batch || local_rounds != self.local_rounds {
+                crate::log_debug!(
+                    "round {}: re-planned b {}→{batch} V {}→{local_rounds} \
+                     (est T_cm≈{:.4}s, θ*={:.4})",
+                    rec.round,
+                    self.batch,
+                    self.local_rounds,
+                    rec.est_t_cm,
+                    plan.theta
+                );
+            }
+            self.batch = batch;
+            self.local_rounds = local_rounds;
+            self.resolved.batch = plan.batch;
+            self.resolved.local_rounds = local_rounds;
+            self.resolved.plan = Some(plan);
+            // Knobs derived from the build-time expected round re-derive
+            // from the estimate (DeadlineSync's auto deadline — otherwise
+            // a drifting channel eventually strands the whole fleet
+            // behind the stale round-0 deadline).
+            let expected_round_s = rec.est_t_cm
+                + local_rounds as f64
+                    * self.fleet.round_time(self.train_bits_per_sample, batch);
+            if let Some(engine) = self.engine.as_mut() {
+                engine.on_replan(expected_round_s);
+            }
+        }
+        Ok(())
     }
 
     /// Evaluate the global model on the held-out set.

@@ -16,15 +16,21 @@
 
 use crate::util::rng::Pcg32;
 
+/// Which devices participate each round.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Selection {
+    /// Full participation (the paper's setting).
     All,
+    /// Uniform K of M per round.
     RandomK(usize),
+    /// Greedy K by expected uplink rate.
     FastestK(usize),
+    /// Deterministic K-of-M rotation.
     RoundRobin(usize),
 }
 
 impl Selection {
+    /// Parse a `selection.kind` string; `k` sizes the partial policies.
     pub fn parse(s: &str, k: usize) -> anyhow::Result<Selection> {
         match s {
             "all" => Ok(Selection::All),
@@ -55,6 +61,7 @@ pub struct Selector {
 }
 
 impl Selector {
+    /// Selector with its own seeded RNG stream.
     pub fn new(policy: Selection, seed: u64) -> Self {
         Selector { policy, rng: Pcg32::new(seed, 0x5E1), cursor: 0 }
     }

@@ -13,7 +13,9 @@
 //! shuffle-split (paper's evaluation), Dirichlet(α) label skew and
 //! McMahan-style shard splits for the non-IID extension.
 
+/// Deterministic synthetic dataset generators.
 pub mod synth;
+/// Federated partitioners (IID, Dirichlet, shards).
 pub mod partition;
 
 pub use partition::{partition_iid, partition_dirichlet, partition_shards, Partition};
@@ -22,16 +24,24 @@ pub use synth::{SynthSpec, generate};
 /// A dense image-classification dataset in NHWC f32, labels i32.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Flat NHWC image data.
     pub images: Vec<f32>,
+    /// Class label per sample.
     pub labels: Vec<i32>,
+    /// Sample count.
     pub n: usize,
+    /// Image height.
     pub height: usize,
+    /// Image width.
     pub width: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Distinct class labels.
     pub classes: usize,
 }
 
 impl Dataset {
+    /// f32 elements per sample (H·W·C).
     pub fn sample_elems(&self) -> usize {
         self.height * self.width * self.channels
     }
@@ -79,6 +89,7 @@ impl Dataset {
         counts
     }
 
+    /// Check the buffer lengths against the declared dims.
     pub fn validate(&self) -> anyhow::Result<()> {
         let d = self.sample_elems();
         anyhow::ensure!(self.images.len() == self.n * d, "image buffer size");

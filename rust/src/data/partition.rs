@@ -7,18 +7,22 @@ use crate::util::rng::Pcg32;
 /// Per-device index sets into a parent [`Dataset`].
 #[derive(Clone, Debug)]
 pub struct Partition {
+    /// Per-device sample indices into the shared corpus.
     pub device_indices: Vec<Vec<usize>>,
 }
 
 impl Partition {
+    /// Number of shards (devices).
     pub fn num_devices(&self) -> usize {
         self.device_indices.len()
     }
 
+    /// Shard sizes D_m.
     pub fn sizes(&self) -> Vec<usize> {
         self.device_indices.iter().map(|v| v.len()).collect()
     }
 
+    /// Total assigned samples.
     pub fn total(&self) -> usize {
         self.device_indices.iter().map(|v| v.len()).sum()
     }

@@ -13,12 +13,18 @@
 use super::Dataset;
 use crate::util::rng::Pcg32;
 
+/// Shape + distribution knobs of one synthetic dataset.
 #[derive(Clone, Debug)]
 pub struct SynthSpec {
+    /// Sample count.
     pub n: usize,
+    /// Image height.
     pub height: usize,
+    /// Image width.
     pub width: usize,
+    /// Image channels.
     pub channels: usize,
+    /// Distinct class labels.
     pub classes: usize,
     /// Pixel noise std (in [0,1] intensity units).
     pub noise: f64,

@@ -1,0 +1,434 @@
+//! Online DEFL controller — per-round re-planning of (b*, θ*) under
+//! time-varying channels (DESIGN.md §10).
+//!
+//! Eq. (29) plans from *expected* delays, but the paper's own motivation
+//! — mobile edge devices on unreliable, drifting wireless links — means
+//! those expectations go stale within a few rounds (cf. Lin et al.
+//! arXiv:2008.09323, Nickel et al. arXiv:2112.13926, which both adapt
+//! the computation/communication split online). The [`Controller`]
+//! closes that loop:
+//!
+//! 1. after every round it folds the *observed* outcome — the realized
+//!    fleet-max uplink time, the measured bottleneck seconds-per-sample,
+//!    the training-loss trajectory — into EWMA estimators of
+//!    [`PlanInputs`];
+//! 2. every `replan_every` rounds it re-solves eq. (29) on the estimated
+//!    inputs (closed form on the hot path; the exact discrete search
+//!    cross-checks it under `debug_assertions`);
+//! 3. guardrails keep the trajectory stable: a relative **deadband**
+//!    skips re-plans when the estimates barely moved, a **ladder clamp**
+//!    bounds how many power-of-two rungs b may move per re-plan, and a
+//!    **loss guard** refuses to grow b while the loss EWMA is rising.
+//!
+//! `replan_every = 0` disables the controller entirely: the coordinator
+//! then runs the static round-0 plan, byte-identical to the pre-controller
+//! system (the degenerate case the config defaults to).
+
+use crate::defl_opt::{self, Plan, PlanInputs};
+use crate::util::stats::Ema;
+
+/// `[controller]` configuration section — the online re-planning knobs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ControllerConfig {
+    /// Rounds between re-plans. 0 = static plan (the controller is never
+    /// built); 1 = re-solve eq. (29) after every round.
+    pub replan_every: usize,
+    /// EWMA weight λ ∈ (0, 1] on each new observation:
+    /// `est ← (1−λ)·est + λ·obs`. 1.0 tracks the last round exactly
+    /// (right for fading-free channels); smaller values smooth Rayleigh
+    /// fading noise out of the estimate.
+    pub ewma: f64,
+    /// Max relative step of b per re-plan: b may move at most
+    /// `⌊log2(1 + max_step)⌋` rungs of the power-of-two ladder (1.0 ⇒
+    /// one rung, i.e. at most halve/double; < 1.0 freezes b while θ/V
+    /// keep adapting).
+    pub max_step: f64,
+    /// Relative deadband: skip the re-plan while both estimated inputs
+    /// sit within this fraction of the values the plan in force was
+    /// solved on (hysteresis against plan churn on a stable channel).
+    pub deadband: f64,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig { replan_every: 0, ewma: 0.3, max_step: 1.0, deadband: 0.05 }
+    }
+}
+
+impl ControllerConfig {
+    /// Range checks for the `[controller]` section.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.ewma > 0.0 && self.ewma <= 1.0,
+            "controller.ewma must be in (0, 1] (got {})",
+            self.ewma
+        );
+        anyhow::ensure!(self.max_step >= 0.0, "controller.max_step must be ≥ 0");
+        anyhow::ensure!(self.deadband >= 0.0, "controller.deadband must be ≥ 0");
+        Ok(())
+    }
+
+    /// Power-of-two rungs b may move per re-plan (`⌊log2(1+max_step)⌋`,
+    /// capped at 24 — far beyond any real batch ladder, and shift-safe
+    /// on every target width).
+    pub fn ladder_rungs(&self) -> u32 {
+        ((1.0 + self.max_step).log2().floor().max(0.0) as u32).min(24)
+    }
+}
+
+/// What one finished round teaches the controller. Non-finite components
+/// are skipped (e.g. no uplink was drawn this round).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundObservation {
+    /// Realized fleet-max uplink seconds for the round's wire bits —
+    /// the same quantity `expected_round_time` predicts (eq. 7), time
+    /// spent on retries included.
+    pub t_cm: f64,
+    /// Measured bottleneck `G_m·bits/f_m` seconds-per-sample over the
+    /// fleet (constraint 17's slowest device; tracks post-build faults).
+    pub t_cp_per_sample: f64,
+    /// The round's weighted mean training loss (the loss-trajectory
+    /// input of the guardrails).
+    pub train_loss: f64,
+}
+
+/// The online re-planner: EWMA estimators over [`PlanInputs`] plus the
+/// plan currently in force. Owned by the coordinator; fed once per round.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    cfg: ControllerConfig,
+    /// Static plan inputs (M, ε, ν, c); the delay fields are replaced by
+    /// the estimators below at every re-solve.
+    base: PlanInputs,
+    /// EWMA over realized T_cm, seeded with the build-time expectation.
+    est_t_cm: Ema,
+    /// EWMA over the bottleneck s/sample, seeded the same way.
+    est_t_cp_per_sample: Ema,
+    /// EWMA of the observed training loss (unseeded: no prior exists).
+    loss_ewma: Ema,
+    /// Loss EWMA at the moment the plan in force was adopted.
+    loss_at_plan: f64,
+    /// The operating point currently in force.
+    plan: Plan,
+    /// The (t_cm, t_cp_per_sample) the plan in force was solved on —
+    /// what the deadband measures drift against.
+    planned_t_cm: f64,
+    planned_t_cp: f64,
+    rounds_since_replan: usize,
+    replans: usize,
+}
+
+impl Controller {
+    /// Start from the build-time expectations and the round-0 plan.
+    pub fn new(cfg: ControllerConfig, inputs: PlanInputs, plan: Plan) -> Controller {
+        // Seed the delay estimators with the expectations the plan was
+        // solved on (an Ema's first push is taken verbatim).
+        let mut est_t_cm = Ema::new(cfg.ewma);
+        est_t_cm.push(inputs.t_cm);
+        let mut est_t_cp_per_sample = Ema::new(cfg.ewma);
+        est_t_cp_per_sample.push(inputs.t_cp_per_sample);
+        let loss_ewma = Ema::new(cfg.ewma);
+        Controller {
+            cfg,
+            base: inputs,
+            est_t_cm,
+            est_t_cp_per_sample,
+            loss_ewma,
+            loss_at_plan: f64::NAN,
+            plan,
+            planned_t_cm: inputs.t_cm,
+            planned_t_cp: inputs.t_cp_per_sample,
+            rounds_since_replan: 0,
+            replans: 0,
+        }
+    }
+
+    /// Current EWMA estimate of the synchronous uplink time T_cm.
+    pub fn est_t_cm(&self) -> f64 {
+        self.est_t_cm.value().expect("seeded at construction")
+    }
+
+    /// Current EWMA estimate of the bottleneck seconds-per-sample.
+    pub fn est_t_cp_per_sample(&self) -> f64 {
+        self.est_t_cp_per_sample.value().expect("seeded at construction")
+    }
+
+    /// Current EWMA of the observed training loss (NaN before data).
+    pub fn loss_ewma(&self) -> f64 {
+        self.loss_ewma.value().unwrap_or(f64::NAN)
+    }
+
+    /// The plan currently in force.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// Re-plans adopted so far (deadband skips don't count).
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Fold one round's outcome into the estimators
+    /// ([`crate::util::stats::Ema`] does the recurrence). Non-finite
+    /// components are ignored (e.g. a round that drew no uplink).
+    pub fn observe(&mut self, obs: &RoundObservation) {
+        if obs.t_cm.is_finite() && obs.t_cm > 0.0 {
+            self.est_t_cm.push(obs.t_cm);
+        }
+        if obs.t_cp_per_sample.is_finite() && obs.t_cp_per_sample > 0.0 {
+            self.est_t_cp_per_sample.push(obs.t_cp_per_sample);
+        }
+        if obs.train_loss.is_finite() {
+            self.loss_ewma.push(obs.train_loss);
+        }
+        self.rounds_since_replan += 1;
+    }
+
+    /// Re-solve eq. (29) on the estimated inputs when the cadence and the
+    /// deadband allow it. Returns the (guardrail-clamped) plan to adopt,
+    /// or None when the plan in force stands.
+    pub fn maybe_replan(&mut self) -> Option<Plan> {
+        if self.cfg.replan_every == 0 || self.rounds_since_replan < self.cfg.replan_every {
+            return None;
+        }
+        self.rounds_since_replan = 0;
+        // Hysteresis: a re-plan must be *worth* the operating-point move.
+        // `deadband = 0` disables the check (always re-solve at cadence).
+        if self.cfg.deadband > 0.0 {
+            let moved = |est: f64, planned: f64| (est / planned - 1.0).abs() > self.cfg.deadband;
+            if !moved(self.est_t_cm(), self.planned_t_cm)
+                && !moved(self.est_t_cp_per_sample(), self.planned_t_cp)
+            {
+                return None;
+            }
+        }
+        let inputs = PlanInputs {
+            t_cm: self.est_t_cm(),
+            t_cp_per_sample: self.est_t_cp_per_sample(),
+            ..self.base
+        };
+        let mut plan = defl_opt::closed_form(&inputs);
+        #[cfg(debug_assertions)]
+        {
+            // The exact discrete search over the same feasible
+            // neighbourhood must never beat the adopted point by more
+            // than the known closed-form band (same contract as
+            // `prop_closed_form_within_band_of_numeric`).
+            let nm = defl_opt::numeric(&inputs, plan.batch);
+            debug_assert!(
+                nm.overall_time <= plan.overall_time * (1.0 + 1e-9) + 1e-9,
+                "numeric cross-check beat the closed form the wrong way: {} vs {}",
+                nm.overall_time,
+                plan.overall_time
+            );
+        }
+        // Ladder clamp: b moves at most `ladder_rungs` power-of-two rungs
+        // away from the plan in force.
+        let rungs = self.cfg.ladder_rungs();
+        let prev_b = self.plan.batch;
+        let lo = (prev_b >> rungs).max(1);
+        let hi = prev_b.saturating_mul(1usize << rungs);
+        let mut batch = plan.batch.clamp(lo, hi);
+        // Loss guard: never grow the batch while the loss EWMA is rising
+        // (re-planning must not destabilize a struggling run).
+        if batch > prev_b
+            && self.loss_ewma().is_finite()
+            && self.loss_at_plan.is_finite()
+            && self.loss_ewma() > self.loss_at_plan
+        {
+            batch = prev_b;
+        }
+        if batch != plan.batch {
+            // Re-evaluate θ*/V/H at the clamped batch so the adopted plan
+            // stays internally consistent.
+            plan = defl_opt::evaluate(&inputs, batch, plan.alpha);
+        }
+        self.plan = plan;
+        self.planned_t_cm = self.est_t_cm();
+        self.planned_t_cp = self.est_t_cp_per_sample();
+        self.loss_at_plan = self.loss_ewma();
+        self.replans += 1;
+        Some(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(t_cm: f64, loss: f64) -> RoundObservation {
+        RoundObservation { t_cm, t_cp_per_sample: 3.763e-4, train_loss: loss }
+    }
+
+    fn controller(replan_every: usize, ewma: f64, deadband: f64) -> Controller {
+        let inputs = PlanInputs::default();
+        let plan = defl_opt::closed_form(&inputs);
+        let cfg = ControllerConfig { replan_every, ewma, deadband, ..Default::default() };
+        Controller::new(cfg, inputs, plan)
+    }
+
+    #[test]
+    fn config_validates_and_defaults_static() {
+        let c = ControllerConfig::default();
+        assert_eq!(c.replan_every, 0);
+        assert!(c.validate().is_ok());
+        let bad = ControllerConfig { ewma: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ControllerConfig { ewma: 1.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ControllerConfig { max_step: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ControllerConfig { deadband: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn ladder_rungs_from_max_step() {
+        let rungs = |s: f64| ControllerConfig { max_step: s, ..Default::default() }.ladder_rungs();
+        assert_eq!(rungs(0.0), 0); // b frozen
+        assert_eq!(rungs(0.5), 0); // below one rung
+        assert_eq!(rungs(1.0), 1); // halve/double
+        assert_eq!(rungs(3.0), 2); // two rungs
+    }
+
+    #[test]
+    fn ewma_tracks_constant_observation() {
+        let mut c = controller(1, 0.5, 0.0);
+        let t0 = c.est_t_cm();
+        for _ in 0..40 {
+            c.observe(&obs(2.0 * t0, 1.0));
+        }
+        assert!((c.est_t_cm() / (2.0 * t0) - 1.0).abs() < 1e-6, "{}", c.est_t_cm());
+        // λ = 1 tracks exactly in one step
+        let mut c = controller(1, 1.0, 0.0);
+        c.observe(&obs(0.5, 1.0));
+        assert_eq!(c.est_t_cm(), 0.5);
+    }
+
+    #[test]
+    fn non_finite_observations_are_skipped() {
+        let mut c = controller(1, 1.0, 0.0);
+        let t0 = c.est_t_cm();
+        c.observe(&RoundObservation {
+            t_cm: f64::INFINITY,
+            t_cp_per_sample: f64::NAN,
+            train_loss: f64::NAN,
+        });
+        assert_eq!(c.est_t_cm(), t0);
+        assert!(c.loss_ewma().is_nan());
+    }
+
+    #[test]
+    fn replan_honours_cadence() {
+        let mut c = controller(3, 1.0, 0.0);
+        for round in 1..=7 {
+            c.observe(&obs(0.5, 1.0));
+            let planned = c.maybe_replan().is_some();
+            assert_eq!(planned, round % 3 == 0, "round {round}");
+        }
+        assert_eq!(c.replans(), 2);
+    }
+
+    #[test]
+    fn replan_zero_is_static() {
+        let mut c = controller(0, 1.0, 0.0);
+        for _ in 0..5 {
+            c.observe(&obs(10.0, 1.0));
+            assert!(c.maybe_replan().is_none());
+        }
+        assert_eq!(c.replans(), 0);
+    }
+
+    #[test]
+    fn deadband_skips_small_moves() {
+        let mut c = controller(1, 1.0, 0.1);
+        let t0 = c.est_t_cm();
+        c.observe(&obs(t0 * 1.05, 1.0)); // within the 10% deadband
+        assert!(c.maybe_replan().is_none());
+        c.observe(&obs(t0 * 1.05, 1.0)); // still within
+        assert!(c.maybe_replan().is_none());
+        c.observe(&obs(t0 * 4.0, 1.0)); // way out
+        assert!(c.maybe_replan().is_some());
+    }
+
+    #[test]
+    fn replan_matches_closed_form_when_unclamped() {
+        // A moderate drift the one-rung clamp does not bind on.
+        let mut c = controller(1, 1.0, 0.0);
+        let inputs = PlanInputs { t_cm: PlanInputs::default().t_cm * 2.0, ..Default::default() };
+        c.observe(&obs(inputs.t_cm, 1.0));
+        let plan = c.maybe_replan().expect("cadence 1 re-plans");
+        let want = defl_opt::closed_form(&inputs);
+        assert_eq!(plan.batch, want.batch);
+        assert_eq!(plan.local_rounds, want.local_rounds);
+        assert!((plan.theta - want.theta).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ladder_clamp_bounds_the_batch_step() {
+        // A huge t_cm jump wants a much larger b*; one rung allows at
+        // most a doubling per re-plan, converging over several rounds.
+        let mut c = controller(1, 1.0, 0.0);
+        let b0 = c.plan().batch;
+        c.observe(&obs(PlanInputs::default().t_cm * 256.0, 1.0));
+        let p1 = c.maybe_replan().unwrap();
+        assert_eq!(p1.batch, b0 * 2, "one rung per re-plan");
+        c.observe(&obs(PlanInputs::default().t_cm * 256.0, 1.0));
+        let p2 = c.maybe_replan().unwrap();
+        assert_eq!(p2.batch, b0 * 4, "keeps walking the ladder");
+        // the clamped plan is still internally consistent
+        assert!((p2.theta - (-p2.alpha).exp()).abs() < 1e-12);
+        assert!(p2.overall_time.is_finite() && p2.overall_time > 0.0);
+    }
+
+    #[test]
+    fn max_step_zero_freezes_b_but_not_theta() {
+        let inputs = PlanInputs::default();
+        let plan = defl_opt::closed_form(&inputs);
+        let cfg = ControllerConfig { replan_every: 1, ewma: 1.0, max_step: 0.0, deadband: 0.0 };
+        let mut c = Controller::new(cfg, inputs, plan);
+        c.observe(&obs(inputs.t_cm * 100.0, 1.0));
+        let p = c.maybe_replan().unwrap();
+        assert_eq!(p.batch, plan.batch, "b frozen at zero rungs");
+        assert!(p.alpha > plan.alpha, "θ/V still adapt toward more work");
+    }
+
+    #[test]
+    fn loss_guard_blocks_batch_growth_while_loss_rises() {
+        let mut c = controller(1, 1.0, 0.0);
+        let b0 = c.plan().batch;
+        // establish a loss baseline at the first adopted plan
+        c.observe(&obs(PlanInputs::default().t_cm * 0.5, 1.0));
+        assert!(c.maybe_replan().is_some());
+        let b1 = c.plan().batch;
+        assert!(b1 <= b0);
+        // now the channel degrades hard (wants larger b) while the loss
+        // EWMA rises — the guard holds b, θ/V still move
+        c.observe(&obs(PlanInputs::default().t_cm * 64.0, 5.0));
+        let p = c.maybe_replan().unwrap();
+        assert_eq!(p.batch, b1, "loss guard holds b while loss rises");
+        // loss back below the plan baseline ⇒ growth allowed again
+        c.observe(&obs(PlanInputs::default().t_cm * 64.0, 0.1));
+        c.observe(&obs(PlanInputs::default().t_cm * 64.0, 0.1));
+        let p = c.maybe_replan().unwrap();
+        assert!(p.batch > b1, "guard releases once the loss falls");
+    }
+
+    #[test]
+    fn estimate_tracks_drifting_channel_toward_truth() {
+        // a geometric drift: t_cm shrinks 20%/round; the λ=0.5 estimator
+        // must end far from the round-0 input and close to the endpoint
+        let mut c = controller(1, 0.5, 0.0);
+        let t0 = c.est_t_cm();
+        let mut t = t0;
+        for _ in 0..30 {
+            t *= 0.8;
+            c.observe(&obs(t, 1.0));
+            c.maybe_replan();
+        }
+        assert!(c.est_t_cm() < 0.01 * t0, "est {} vs t0 {t0}", c.est_t_cm());
+        assert!(c.est_t_cm() >= t, "EWMA lags from above on a falling input");
+        // and the plan followed the cheap channel toward more talking
+        assert!(c.plan().alpha < defl_opt::closed_form(&PlanInputs::default()).alpha);
+    }
+}

@@ -20,6 +20,16 @@
 //!
 //! `G_m/f_m` enters as the *bottleneck seconds-per-sample* of the fleet
 //! (constraint 17 makes the slowest device define T_cp).
+//!
+//! Both solvers plan from *expected* delays. When the channel drifts
+//! ([`crate::wireless::DriftConfig`]), the [`controller`] submodule
+//! re-solves eq. (29) online from EWMA estimates of the realized delays
+//! (`[controller] replan_every` — DESIGN.md §10).
+
+/// Online re-planning of (b*, θ*) from observed delays.
+pub mod controller;
+
+pub use controller::{Controller, ControllerConfig, RoundObservation};
 
 use crate::convergence;
 

@@ -12,8 +12,10 @@ use crate::defl_opt::{self, PlanInputs};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
+/// The ε grid the sweep plans at.
 pub const EPSILONS: [f64; 4] = [0.005, 0.01, 0.05, 0.1];
 
+/// Regenerate Fig. 1(a) (`analytic_only` skips the training runs).
 pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
     // Build one system just to extract the calibrated delay inputs.
     let mut probe_cfg = ExperimentConfig::default();

@@ -8,10 +8,12 @@ use crate::config::{ExperimentConfig, Policy};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
+/// The batch sizes Fig. 1(b) compares.
 pub const BATCHES: [usize; 3] = [16, 32, 64];
 /// V matching DEFL's computed θ* ≈ 0.15 at the paper point (V = ν·α ≈ 16).
 pub const LOCAL_ROUNDS: usize = 16;
 
+/// Regenerate Fig. 1(b).
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     let mut table = Table::new(&[
         "batch", "final acc", "best acc", "𝒯→97% (s)", "overall 𝒯 (s)", "rounds",

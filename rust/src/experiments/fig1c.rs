@@ -12,9 +12,12 @@ use crate::convergence;
 use crate::metrics::Table;
 use crate::util::json::Json;
 
+/// The θ grid Fig. 1(c) compares.
 pub const THETAS: [f64; 4] = [0.05, 0.15, 0.5, 0.9];
+/// Fixed batch size of the sweep (the paper's b*).
 pub const BATCH: usize = 32;
 
+/// Regenerate Fig. 1(c).
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     let nu = ExperimentConfig::default().nu;
     let mut table = Table::new(&["theta", "V", "final train loss", "best acc", "overall 𝒯 (s)"]);

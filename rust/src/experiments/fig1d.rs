@@ -13,9 +13,12 @@ use crate::coordinator::FlSystem;
 use crate::metrics::Table;
 use crate::util::json::Json;
 
+/// The θ grid Fig. 1(d) evaluates.
 pub const THETAS: [f64; 5] = [0.05, 0.15, 0.3, 0.5, 0.9];
+/// Fixed batch size of the sweep (the paper's b*).
 pub const BATCH: usize = 32;
 
+/// Regenerate Fig. 1(d).
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     // Delay inputs from a probe system (same calibration as fig1a).
     let mut probe_cfg = ExperimentConfig::default();

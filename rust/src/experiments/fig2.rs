@@ -13,11 +13,14 @@ use crate::util::json::Json;
 /// Which dataset of the figure to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Which {
+    /// The MNIST-shaped comparison.
     Mnist,
+    /// The CIFAR-shaped comparison.
     Cifar,
 }
 
 impl Which {
+    /// Parse a `--dataset` string (`mnist|cifar`).
     pub fn parse(s: &str) -> anyhow::Result<Which> {
         match s {
             "mnist" => Ok(Which::Mnist),
@@ -50,6 +53,7 @@ fn base_config(which: Which, opts: &ExpOpts) -> ExperimentConfig {
     cfg
 }
 
+/// Regenerate the Fig. 2 policy comparison on one dataset.
 pub fn run(opts: &ExpOpts, which: Which) -> anyhow::Result<Json> {
     let mut logs: Vec<(String, RunLog)> = Vec::new();
     for (label, policy) in policies(which) {

@@ -9,11 +9,17 @@
 //! `fast` mode (used by `cargo bench` wrappers and CI) shrinks rounds and
 //! dataset sizes by ~an order of magnitude.
 
+/// Fig. 1(a): the ε sweep.
 pub mod fig1a;
+/// Fig. 1(b): the batch-size sweep.
 pub mod fig1b;
+/// Fig. 1(c): the θ sweep (to talk or to work).
 pub mod fig1c;
+/// Fig. 1(d): rounds H and the comm/comp split.
 pub mod fig1d;
+/// Fig. 2: the headline DEFL-vs-baselines comparison.
 pub mod fig2;
+/// Solver exactness, engines, codecs and the controller sweep.
 pub mod ablation;
 
 use crate::config::ExperimentConfig;
@@ -42,6 +48,12 @@ pub struct ExpOpts {
     /// preset says otherwise); qbits/k_ratio stay at their config values
     /// (`--set codec.qbits=…` to change them).
     pub codec: Option<crate::codec::CodecKind>,
+    /// Online-controller cadence override for every harness run
+    /// (`defl exp --controller N`, `DEFL_CONTROLLER=N`): sets
+    /// `controller.replan_every`. None = the config's value (0 = static
+    /// plan); the remaining knobs stay at their config values
+    /// (`--set controller.ewma=…` to change them).
+    pub controller: Option<usize>,
 }
 
 impl Default for ExpOpts {
@@ -54,16 +66,18 @@ impl Default for ExpOpts {
             artifacts_dir: "artifacts".into(),
             backend: crate::runtime::BackendKind::default(),
             codec: None,
+            controller: None,
         }
     }
 }
 
 impl ExpOpts {
     /// Environment knobs: `DEFL_FAST=1`, `DEFL_BACKEND=pjrt|native`,
-    /// `DEFL_CODEC=dense|quant|topk|topk_quant`. An unparseable
-    /// `DEFL_BACKEND`/`DEFL_CODEC` is a hard error (same contract as
-    /// `defl exp --backend`/`--codec`), so a typo can't silently run the
-    /// wrong substrate or codec.
+    /// `DEFL_CODEC=dense|quant|topk|topk_quant`, `DEFL_CONTROLLER=N`
+    /// (online re-plan cadence in rounds; 0 = static plan). An
+    /// unparseable value is a hard error (same contract as the
+    /// `defl exp --backend`/`--codec`/`--controller` flags), so a typo
+    /// can't silently run the wrong substrate, codec or cadence.
     pub fn from_env() -> anyhow::Result<Self> {
         let mut o = ExpOpts::default();
         if std::env::var("DEFL_FAST").as_deref() == Ok("1") {
@@ -83,6 +97,13 @@ impl ExpOpts {
                 );
             }
         }
+        if let Ok(c) = std::env::var("DEFL_CONTROLLER") {
+            if !c.is_empty() {
+                o.controller = Some(c.parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("DEFL_CONTROLLER: {e} (want a re-plan cadence in rounds)")
+                })?);
+            }
+        }
         Ok(o)
     }
 
@@ -93,6 +114,9 @@ impl ExpOpts {
         cfg.backend = self.backend;
         if let Some(kind) = self.codec {
             cfg.codec.kind = kind;
+        }
+        if let Some(cadence) = self.controller {
+            cfg.controller.replan_every = cadence;
         }
         if let Some(r) = self.rounds {
             cfg.max_rounds = r;
@@ -156,6 +180,20 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         opts.apply(&mut cfg);
         assert_eq!(cfg.backend, BackendKind::Native);
+    }
+
+    #[test]
+    fn apply_threads_controller_through() {
+        let opts = ExpOpts { controller: Some(2), ..Default::default() };
+        let mut cfg = ExperimentConfig::default();
+        opts.apply(&mut cfg);
+        assert_eq!(cfg.controller.replan_every, 2);
+        // None leaves the config's cadence alone
+        let opts = ExpOpts::default();
+        let mut cfg = ExperimentConfig::default();
+        cfg.controller.replan_every = 5;
+        opts.apply(&mut cfg);
+        assert_eq!(cfg.controller.replan_every, 5);
     }
 
     #[test]

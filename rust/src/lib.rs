@@ -28,19 +28,40 @@
 //! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
 
+// CI builds docs with `-D warnings` and clippy denies the warnings
+// group, so every public item in this crate must carry a doc comment.
+#![warn(missing_docs)]
+
+/// From-scratch substrates for the offline environment: PRNG, stats,
+/// JSON, TOML-lite CLI parsing, thread pool, property tests, logging.
 pub mod util;
+/// Typed experiment configuration: defaults → TOML-lite → `--set`.
 pub mod config;
+/// The "talk" half: eq. (6)/(7) uplink delay models + channel drift.
 pub mod wireless;
+/// The "work" half: eq. (3)–(5) GPU computation delay models.
 pub mod compute;
+/// Theorem 1 / eq. (12) convergence closed forms.
 pub mod convergence;
+/// The DEFL optimizer (eq. 29) and its online re-planning controller.
 pub mod defl_opt;
+/// Synthetic datasets and federated partitioners.
 pub mod data;
+/// Parameter sets, FedAvg folds and the streaming accumulator.
 pub mod model;
+/// The virtual-time ledger (eq. 8/13).
 pub mod simclock;
+/// Per-round records, run logs, JSON/CSV output and the energy ledger.
 pub mod metrics;
+/// Pluggable training backends (PJRT artifacts / pure-Rust native).
 pub mod runtime;
+/// Compressed-update codecs with error feedback (DESIGN.md §9).
 pub mod codec;
+/// The FL coordinator: system wiring, devices, selection, round engines.
 pub mod coordinator;
+/// Policy resolution: DEFL and the paper's baselines → concrete (b, V).
 pub mod baselines;
+/// One experiment harness per paper figure.
 pub mod experiments;
+/// Self-driving benchmark harness (no criterion offline).
 pub mod bench;

@@ -14,7 +14,12 @@
 //! substrate: `--set backend.kind=pjrt` (AOT HLO artifacts) or `native`
 //! (pure Rust, no artifacts) — `DESIGN.md` §7. And so is the update
 //! codec: `--set codec.kind=dense|quant|topk|topk_quant` (plus
-//! `codec.qbits`, `codec.k_ratio`) — `DESIGN.md` §9.
+//! `codec.qbits`, `codec.k_ratio`) — `DESIGN.md` §9. The DEFL plan
+//! itself can go *online*: `--set controller.replan_every=1` re-solves
+//! eq. (29) from observed delays every round (plus `controller.ewma`,
+//! `controller.max_step`, `controller.deadband`), which matters once the
+//! channel drifts — `--set drift.trend_db_per_round=…`,
+//! `drift.walk_db=…`, `drift.ge_p_bad=…` — `DESIGN.md` §10.
 
 use defl::config::{ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
@@ -54,11 +59,13 @@ fn usage() -> String {
      \x20 defl train  [--config <toml>] [--set section.key=value ...]\n\
      \x20             (e.g. --set engine.kind=sync|deadline|async_buffered,\n\
      \x20                   --set backend.kind=pjrt|native,\n\
-     \x20                   --set codec.kind=dense|quant|topk|topk_quant)\n\
+     \x20                   --set codec.kind=dense|quant|topk|topk_quant,\n\
+     \x20                   --set controller.replan_every=1 --set drift.walk_db=2)\n\
      \x20 defl plan   [--set section.key=value ...]\n\
      \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
      \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\
      \x20             [--backend pjrt|native] [--codec dense|quant|topk|topk_quant]\n\
+     \x20             [--controller N]  (online re-plan cadence; 0 = static plan)\n\
      \x20 defl doctor [--artifacts <dir>]   (needs the `pjrt` build feature)\n"
         .into()
 }
@@ -141,6 +148,7 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("backend", "", "training backend: pjrt|native (default: build default)")
         .opt("codec", "", "update codec: dense|quant|topk|topk_quant (default: config)")
+        .opt("controller", "", "online re-plan cadence in rounds, 0 = static (default: config)")
         .flag("fast", "smoke-scale run (few rounds, tiny data)")
         .flag("analytic-only", "fig1a: skip training runs");
     let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -163,6 +171,12 @@ fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
     let codec = args.str("codec");
     if !codec.is_empty() {
         opts.codec = Some(defl::codec::CodecKind::parse(&codec)?);
+    }
+    let controller = args.str("controller");
+    if !controller.is_empty() {
+        opts.controller = Some(controller.parse::<usize>().map_err(|e| {
+            anyhow::anyhow!("--controller: {e} (want a re-plan cadence in rounds)")
+        })?);
     }
     let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
     if rounds > 0 {

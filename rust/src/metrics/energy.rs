@@ -29,11 +29,14 @@ impl Default for EnergyModel {
 /// One device's per-round energy split (joules).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct EnergyRecord {
+    /// Joules spent transmitting this round.
     pub comm_j: f64,
+    /// Joules spent computing this round.
     pub comp_j: f64,
 }
 
 impl EnergyRecord {
+    /// Total joules (communication + computation).
     pub fn total(&self) -> f64 {
         self.comm_j + self.comp_j
     }
@@ -82,10 +85,12 @@ impl EnergyModel {
 /// Cumulative fleet ledger.
 #[derive(Clone, Debug, Default)]
 pub struct EnergyLedger {
+    /// One entry per round: the records of every device that worked.
     pub per_round: Vec<Vec<EnergyRecord>>,
 }
 
 impl EnergyLedger {
+    /// Append one round's device records.
     pub fn push_round(&mut self, records: Vec<EnergyRecord>) {
         self.per_round.push(records);
     }

@@ -2,6 +2,7 @@
 //! output, the energy ledger, and the paper-style table printer used by
 //! every experiment.
 
+/// The per-device energy ledger (extension; pure accounting).
 pub mod energy;
 
 pub use energy::{EnergyLedger, EnergyModel, EnergyRecord};
@@ -12,16 +13,21 @@ use std::collections::BTreeMap;
 /// One communication round's record (what every figure is drawn from).
 #[derive(Clone, Debug)]
 pub struct RoundRecord {
+    /// 1-based round index.
     pub round: usize,
     /// Virtual time at the END of this round (eq. 13 cumulative).
     pub virtual_time: f64,
+    /// Communication share of this round's delay (eq. 7).
     pub t_cm: f64,
+    /// Per-iteration computation share (eq. 5).
     pub t_cp: f64,
+    /// Local SGD iterations V this round.
     pub local_rounds: usize,
     /// Mean training loss across devices this round.
     pub train_loss: f64,
     /// Test metrics (only on eval rounds; NaN ⇒ not evaluated).
     pub test_loss: f64,
+    /// Test accuracy (NaN off eval rounds).
     pub test_accuracy: f64,
     /// Wall-clock seconds spent on this round (measured, not modeled).
     pub wall_seconds: f64,
@@ -40,29 +46,45 @@ pub struct RoundRecord {
     /// index overhead dominates (top-k at `k_ratio` near 1 pays 64 bits
     /// per kept parameter).
     pub compression_ratio: f64,
+    /// Mini-batch size in force this round — the round-0 plan's b until
+    /// the online controller re-plans it (DESIGN.md §10).
+    pub plan_b: usize,
+    /// Local accuracy θ* in force this round (NaN when the policy
+    /// carries no DEFL plan, e.g. the fixed baselines).
+    pub plan_theta: f64,
+    /// The online controller's EWMA estimate of T_cm after this round's
+    /// observation (NaN while `controller.replan_every = 0`).
+    pub est_t_cm: f64,
 }
 
 /// A named experiment run: config echo + round records.
 #[derive(Clone, Debug, Default)]
 pub struct RunLog {
+    /// Run name (the config's `name`).
     pub name: String,
+    /// Config echo / planner diagnostics (sorted ⇒ deterministic JSON).
     pub meta: BTreeMap<String, Json>,
+    /// One record per completed round.
     pub rounds: Vec<RoundRecord>,
 }
 
 impl RunLog {
+    /// Empty log for a named run.
     pub fn new(name: &str) -> Self {
         RunLog { name: name.to_string(), ..Default::default() }
     }
 
+    /// Set one metadata key (overwrites).
     pub fn set_meta(&mut self, key: &str, value: Json) {
         self.meta.insert(key.to_string(), value);
     }
 
+    /// Append one round's record.
     pub fn push(&mut self, r: RoundRecord) {
         self.rounds.push(r);
     }
 
+    /// The most recent round record, if any.
     pub fn last(&self) -> Option<&RoundRecord> {
         self.rounds.last()
     }
@@ -98,6 +120,7 @@ impl RunLog {
             .map(|r| r.virtual_time)
     }
 
+    /// The full run log as a JSON document (what `defl train --out` writes).
     pub fn to_json(&self) -> Json {
         let rounds: Vec<Json> = self
             .rounds
@@ -118,6 +141,9 @@ impl RunLog {
                     ("mean_staleness", Json::Num(r.mean_staleness)),
                     ("encoded_bits", Json::Num(r.encoded_bits)),
                     ("compression_ratio", Json::Num(r.compression_ratio)),
+                    ("plan_b", Json::Num(r.plan_b as f64)),
+                    ("plan_theta", Json::Num(r.plan_theta)),
+                    ("est_t_cm", Json::Num(r.est_t_cm)),
                 ])
             })
             .collect();
@@ -131,17 +157,19 @@ impl RunLog {
         Json::obj(obj)
     }
 
+    /// Write [`RunLog::to_json`] to a file.
     pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         self.to_json().write_file(path)
     }
 
+    /// The round records as CSV (one named column per record field).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -155,7 +183,10 @@ impl RunLog {
                 r.dropped,
                 r.mean_staleness,
                 r.encoded_bits,
-                r.compression_ratio
+                r.compression_ratio,
+                r.plan_b,
+                r.plan_theta,
+                r.est_t_cm
             ));
         }
         s
@@ -191,15 +222,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the aligned fixed-width table.
     pub fn render(&self) -> String {
         let cols = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -250,6 +284,9 @@ mod tests {
             mean_staleness: 0.5,
             encoded_bits: 288.0,
             compression_ratio: 1.0,
+            plan_b: 32,
+            plan_theta: 0.15,
+            est_t_cm: 0.094,
         }
     }
 
@@ -326,6 +363,55 @@ mod tests {
         let csv = log.to_csv();
         assert!(csv.starts_with("round,"));
         assert_eq!(csv.lines().count(), 2);
+    }
+
+    /// The per-round plan columns (DESIGN.md §10) survive both export
+    /// paths: JSON carries them per round (NaN → null), and every CSV
+    /// row has exactly as many fields as the header names.
+    #[test]
+    fn plan_columns_roundtrip_json_and_csv() {
+        let mut log = RunLog::new("ctl");
+        let mut a = rec(1, 1.0, 2.0, 0.5);
+        a.plan_b = 32;
+        a.plan_theta = 0.15;
+        a.est_t_cm = 0.094;
+        let mut b = rec(2, 2.0, 1.5, 0.6);
+        // a fixed-policy / controller-off round: NaN sentinels
+        b.plan_b = 10;
+        b.plan_theta = f64::NAN;
+        b.est_t_cm = f64::NAN;
+        log.push(a);
+        log.push(b);
+
+        // JSON round-trip through the writer + parser
+        let parsed = Json::parse(&log.to_json().to_pretty()).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        let r0 = rounds.idx(0).unwrap();
+        assert_eq!(r0.get("plan_b").unwrap().as_f64(), Some(32.0));
+        assert_eq!(r0.get("plan_theta").unwrap().as_f64(), Some(0.15));
+        assert_eq!(r0.get("est_t_cm").unwrap().as_f64(), Some(0.094));
+        let r1 = rounds.idx(1).unwrap();
+        assert_eq!(r1.get("plan_b").unwrap().as_f64(), Some(10.0));
+        assert_eq!(r1.get("plan_theta"), Some(&Json::Null), "NaN exports as null");
+        assert_eq!(r1.get("est_t_cm"), Some(&Json::Null));
+
+        // CSV: the new columns are named, and header/row field counts agree
+        let csv = log.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        for col in ["plan_b", "plan_theta", "est_t_cm"] {
+            assert!(header.split(',').any(|h| h == col), "missing column {col}");
+        }
+        let width = header.split(',').count();
+        for (i, row) in lines.enumerate() {
+            assert_eq!(row.split(',').count(), width, "row {i} width");
+        }
+        // and the values landed in the right cells
+        let cells: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        let idx = |name: &str| header.split(',').position(|h| h == name).unwrap();
+        assert_eq!(cells[idx("plan_b")], "32");
+        assert_eq!(cells[idx("plan_theta")], "0.15");
+        assert_eq!(cells[idx("est_t_cm")], "0.094");
     }
 
     #[test]

@@ -10,11 +10,14 @@ use crate::util::json::Json;
 /// Static description of one parameter leaf.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LeafSpec {
+    /// Leaf name (manifest order key).
     pub name: String,
+    /// Tensor shape (row-major).
     pub shape: Vec<usize>,
 }
 
 impl LeafSpec {
+    /// Element count (product of the shape).
     pub fn elems(&self) -> usize {
         self.shape.iter().product()
     }
@@ -23,15 +26,22 @@ impl LeafSpec {
 /// Ordered leaf specs for a model (the manifest contract).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelSpec {
+    /// Model name (`mlp`, `mnist_cnn`, `cifar_cnn`).
     pub name: String,
+    /// Parameter leaves in manifest order.
     pub leaves: Vec<LeafSpec>,
+    /// Output classes.
     pub classes: usize,
+    /// Input height.
     pub height: usize,
+    /// Input width.
     pub width: usize,
+    /// Input channels.
     pub channels: usize,
 }
 
 impl ModelSpec {
+    /// Total parameter count P.
     pub fn param_count(&self) -> usize {
         self.leaves.iter().map(|l| l.elems()).sum()
     }
@@ -98,10 +108,12 @@ impl ModelSpec {
 /// A concrete set of parameter values (one leaf buffer per spec leaf).
 #[derive(Clone, Debug)]
 pub struct ParamSet {
+    /// Flat f32 storage per leaf, in the spec's leaf order.
     pub leaves: Vec<Vec<f32>>,
 }
 
 impl ParamSet {
+    /// All-zero parameters matching a spec's layout.
     pub fn zeros_like(spec: &ModelSpec) -> ParamSet {
         ParamSet { leaves: spec.leaves.iter().map(|l| vec![0.0; l.elems()]).collect() }
     }
@@ -111,6 +123,7 @@ impl ParamSet {
         ParamSet { leaves: shape.leaves.iter().map(|l| vec![0.0; l.len()]).collect() }
     }
 
+    /// Check the leaf lengths against a spec.
     pub fn validate(&self, spec: &ModelSpec) -> anyhow::Result<()> {
         anyhow::ensure!(self.leaves.len() == spec.leaves.len(), "leaf count");
         for (buf, l) in self.leaves.iter().zip(&spec.leaves) {
@@ -120,6 +133,7 @@ impl ParamSet {
         Ok(())
     }
 
+    /// Total stored parameter count.
     pub fn param_count(&self) -> usize {
         self.leaves.iter().map(|l| l.len()).sum()
     }
@@ -178,6 +192,7 @@ impl ParamSet {
         }
     }
 
+    /// Multiply every parameter by `w` in place.
     pub fn scale(&mut self, w: f32) {
         for leaf in &mut self.leaves {
             for v in leaf.iter_mut() {
@@ -186,6 +201,7 @@ impl ParamSet {
         }
     }
 
+    /// Set every parameter to `v` in place.
     pub fn fill(&mut self, v: f32) {
         for leaf in &mut self.leaves {
             leaf.iter_mut().for_each(|x| *x = v);

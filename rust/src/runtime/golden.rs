@@ -10,10 +10,15 @@ use std::collections::HashMap;
 /// Comparison outcome of one model's golden round-trip.
 #[derive(Clone, Copy, Debug)]
 pub struct GoldenReport {
+    /// |rust − jax| train-step loss difference.
     pub loss_diff: f64,
+    /// Max |rust − jax| over the updated parameters.
     pub max_param_diff: f64,
+    /// |rust − jax| eval loss-sum difference.
     pub eval_loss_diff: f64,
+    /// |rust − jax| eval correct-count difference.
     pub eval_correct_diff: f64,
+    /// Whether every difference sits inside the tolerances.
     pub pass: bool,
 }
 
@@ -22,6 +27,7 @@ pub struct GoldenReport {
 const LOSS_TOL: f64 = 1e-4;
 const PARAM_TOL: f64 = 1e-4;
 
+/// Run the recorded golden step/eval through PJRT and compare.
 pub fn check(rt: &mut Runtime, model: &str, golden: &GoldenInfo) -> anyhow::Result<GoldenReport> {
     use xla::FromRawBytes;
     let arts = rt.registry.model(model)?;

@@ -22,16 +22,21 @@
 //! pricing, FedAvg weighting and the round engines — and that is
 //! backend-independent by construction: engines only see this trait.
 
+/// The artifact-manifest reader (the L2↔L3 contract).
 pub mod registry;
 
+/// Golden round-trip checks pinning PJRT execution to JAX numerics.
 #[cfg(feature = "pjrt")]
 pub mod golden;
 // Kernels are dependency-free and serve two consumers: the native
 // backend's batched steps AND the codec's quantize/sparse-fold path
 // (crate::codec), which every build carries — so no feature gate.
+/// Dependency-free batched CPU kernels (native steps + codec paths).
 pub mod kernels;
+/// The pure-Rust training backend (softmax/MLP, hand-written SGD).
 #[cfg(feature = "native")]
 pub mod native;
+/// The PJRT backend executing the AOT HLO artifacts.
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
@@ -48,14 +53,18 @@ use crate::model::{ModelSpec, ParamSet};
 /// Output of one training step.
 #[derive(Debug)]
 pub struct StepOutput {
+    /// Updated parameters after the step.
     pub params: ParamSet,
+    /// Mean mini-batch loss.
     pub loss: f32,
 }
 
 /// Output of one eval batch.
 #[derive(Debug, Clone, Copy)]
 pub struct EvalOutput {
+    /// Summed loss over the batch.
     pub loss_sum: f32,
+    /// Correct predictions in the batch.
     pub correct: f32,
 }
 
@@ -69,6 +78,7 @@ pub enum BackendKind {
 }
 
 impl BackendKind {
+    /// Parse a `backend.kind` string (`pjrt|native`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         match s {
             "pjrt" | "xla" => Ok(BackendKind::Pjrt),
@@ -77,6 +87,7 @@ impl BackendKind {
         }
     }
 
+    /// Canonical config-string name (run metadata).
     pub fn label(&self) -> &'static str {
         match self {
             BackendKind::Pjrt => "pjrt",
@@ -107,6 +118,7 @@ impl Default for BackendKind {
 /// a foreign scratch. `Send` because devices — and their scratches — fan
 /// out across the thread pool.
 pub trait StepScratch: Send {
+    /// Downcast hook — each backend recovers its concrete scratch.
     fn as_any(&mut self) -> &mut dyn std::any::Any;
 }
 
@@ -162,6 +174,7 @@ pub trait ParallelStep: Sync {
 /// engines need from an execution substrate. One mini-batch SGD step
 /// ([`TrainBackend::train_step`]) is eq. (4)'s priced unit of work.
 pub trait TrainBackend {
+    /// Which backend this is (run metadata).
     fn kind(&self) -> BackendKind;
 
     /// Parameter layout + input dims of `model` (the manifest contract

@@ -19,6 +19,7 @@ use std::collections::HashMap;
 
 /// Marshalling + execution wrapper around the PJRT CPU client.
 pub struct Runtime {
+    /// The artifact manifest this runtime executes from.
     pub registry: ArtifactRegistry,
     client: xla::PjRtClient,
     /// (model, "train"|"eval", batch) → compiled executable
@@ -47,6 +48,7 @@ impl Runtime {
         Ok(())
     }
 
+    /// Parameter layout + input dims of `model` (from the manifest).
     pub fn spec(&self, model: &str) -> anyhow::Result<&ModelSpec> {
         Ok(&self.registry.model(model)?.spec)
     }

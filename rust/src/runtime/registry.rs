@@ -13,30 +13,39 @@ use std::path::{Path, PathBuf};
 /// Everything known about one model's artifacts.
 #[derive(Clone, Debug)]
 pub struct ModelArtifacts {
+    /// Parameter layout + input dims (the manifest entry).
     pub spec: ModelSpec,
     dir: PathBuf,
     train: BTreeMap<usize, String>,
     eval: BTreeMap<usize, String>,
     init: String,
+    /// Golden-vector record, when the artifact build captured one.
     pub golden: Option<GoldenInfo>,
 }
 
+/// Where a model's golden vectors live and how they were produced.
 #[derive(Clone, Debug)]
 pub struct GoldenInfo {
+    /// Golden npz filename (relative to the artifacts dir).
     pub file: String,
+    /// Batch size the golden step was recorded at.
     pub batch: usize,
+    /// Learning rate the golden step was recorded at.
     pub lr: f64,
 }
 
 impl ModelArtifacts {
+    /// Batch sizes with a compiled train artifact (ascending).
     pub fn train_batches(&self) -> Vec<usize> {
         self.train.keys().copied().collect()
     }
 
+    /// Batch sizes with a compiled eval artifact (ascending).
     pub fn eval_batches(&self) -> Vec<usize> {
         self.eval.keys().copied().collect()
     }
 
+    /// Path of the train artifact for `batch`.
     pub fn train_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
         self.train
             .get(&batch)
@@ -50,6 +59,7 @@ impl ModelArtifacts {
             })
     }
 
+    /// Path of the eval artifact for `batch`.
     pub fn eval_path(&self, batch: usize) -> anyhow::Result<PathBuf> {
         self.eval
             .get(&batch)
@@ -59,10 +69,12 @@ impl ModelArtifacts {
             })
     }
 
+    /// Path of the seeded initial-parameters npz.
     pub fn init_path(&self) -> PathBuf {
         self.dir.join(&self.init)
     }
 
+    /// Path of the golden npz, when recorded.
     pub fn golden_path(&self) -> Option<PathBuf> {
         self.golden.as_ref().map(|g| self.dir.join(&g.file))
     }
@@ -125,11 +137,13 @@ pub fn load_params_npz(path: &Path, spec: &ModelSpec) -> anyhow::Result<ParamSet
 /// The manifest reader.
 #[derive(Clone, Debug)]
 pub struct ArtifactRegistry {
+    /// The artifacts directory the manifest was read from.
     pub dir: PathBuf,
     models: BTreeMap<String, ModelArtifacts>,
 }
 
 impl ArtifactRegistry {
+    /// Read and validate `manifest.json` from an artifacts directory.
     pub fn open(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
@@ -211,6 +225,7 @@ impl ArtifactRegistry {
         Ok(ArtifactRegistry { dir, models })
     }
 
+    /// One model's artifact record, by name.
     pub fn model(&self, name: &str) -> anyhow::Result<&ModelArtifacts> {
         self.models.get(name).ok_or_else(|| {
             anyhow::anyhow!(
@@ -220,6 +235,7 @@ impl ArtifactRegistry {
         })
     }
 
+    /// Every model the manifest declares (sorted).
     pub fn model_names(&self) -> Vec<&str> {
         self.models.keys().map(|s| s.as_str()).collect()
     }

@@ -58,6 +58,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// Clock at 𝒯 = 0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -76,10 +77,12 @@ impl SimClock {
         self.now
     }
 
+    /// Rounds priced so far.
     pub fn rounds_elapsed(&self) -> usize {
         self.rounds.len()
     }
 
+    /// Every priced round, in order.
     pub fn history(&self) -> &[RoundDelay] {
         &self.rounds
     }

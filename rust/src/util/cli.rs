@@ -22,7 +22,9 @@ struct Opt {
 /// Builder for one (sub)command's options.
 #[derive(Clone, Debug, Default)]
 pub struct Cli {
+    /// Binary name shown in usage/help.
     pub bin: String,
+    /// One-line description shown in help.
     pub about: String,
     opts: Vec<Opt>,
     positional: Vec<(String, String)>, // (name, help)
@@ -33,9 +35,11 @@ pub struct Cli {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: BTreeMap<String, bool>,
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
 }
 
+/// Argument-parsing error (message already user-readable).
 #[derive(Debug)]
 pub struct CliError(pub String);
 
@@ -48,6 +52,7 @@ impl std::fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 impl Cli {
+    /// Declare a command (options/flags are chained on).
     pub fn new(bin: &str, about: &str) -> Self {
         Cli { bin: bin.into(), about: about.into(), ..Default::default() }
     }
@@ -87,6 +92,7 @@ impl Cli {
         self
     }
 
+    /// Rendered `--help` text.
     pub fn help_text(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.bin, self.about, self.bin);
         for (p, _) in &self.positional {
@@ -179,28 +185,34 @@ impl Cli {
 }
 
 impl Args {
+    /// Raw option value, if the option exists.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Option value as an owned string (empty when absent).
     pub fn str(&self, name: &str) -> String {
         self.values.get(name).cloned().unwrap_or_default()
     }
 
+    /// Whether a boolean flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
 
+    /// Option value parsed as u64.
     pub fn u64(&self, name: &str) -> Result<u64, CliError> {
         self.str(name)
             .parse()
             .map_err(|_| CliError(format!("--{name}: expected integer, got {:?}", self.str(name))))
     }
 
+    /// Option value parsed as usize.
     pub fn usize(&self, name: &str) -> Result<usize, CliError> {
         Ok(self.u64(name)? as usize)
     }
 
+    /// Option value parsed as f64.
     pub fn f64(&self, name: &str) -> Result<f64, CliError> {
         self.str(name)
             .parse()

@@ -11,17 +11,26 @@ use std::fmt::Write as _;
 /// A JSON value. Objects use `BTreeMap` for deterministic output ordering.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (f64; NaN/Inf serialize as `null`).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (sorted keys ⇒ deterministic output).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse error with byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -36,6 +45,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---------------------------------------------------------- accessors
 
+    /// Number value, if this is a `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -43,6 +53,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if this is an integral `Num`.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -50,6 +61,7 @@ impl Json {
         }
     }
 
+    /// String value, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -57,6 +69,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -64,6 +77,7 @@ impl Json {
         }
     }
 
+    /// Array view, if this is an `Arr`.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -71,6 +85,7 @@ impl Json {
         }
     }
 
+    /// Object view, if this is an `Obj`.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -83,26 +98,31 @@ impl Json {
         self.as_obj().and_then(|o| o.get(key))
     }
 
+    /// Array element `i`, if this is an `Arr` that long.
     pub fn idx(&self, i: usize) -> Option<&Json> {
         self.as_arr().and_then(|a| a.get(i))
     }
 
     // -------------------------------------------------------- constructors
 
+    /// Build an object from key/value pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a number array from a slice.
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
 
     // -------------------------------------------------------------- parse
 
+    /// Parse a JSON document from text.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.skip_ws();
@@ -114,6 +134,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON document from a file.
     pub fn parse_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path.as_ref())?;
         Ok(Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.as_ref().display()))?)
@@ -136,6 +157,7 @@ impl Json {
         s
     }
 
+    /// Pretty-print to a file, creating parent directories.
     pub fn write_file(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
         if let Some(parent) = path.as_ref().parent() {
             std::fs::create_dir_all(parent)?;

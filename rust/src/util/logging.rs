@@ -6,6 +6,7 @@ use std::io::Write;
 use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
 use std::time::Instant;
 
+/// Log severity (ordered: Error < Warn < Info < Debug).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
     Error = 0,
@@ -47,10 +48,12 @@ fn start() -> Instant {
     *START.get_or_init(Instant::now)
 }
 
+/// Set the global log threshold.
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
+/// Current global log threshold.
 pub fn level() -> Level {
     let raw = LEVEL.load(Ordering::Relaxed);
     if raw == u8::MAX {
@@ -72,6 +75,7 @@ pub fn set_virtual_time(seconds: f64) {
     VIRT_US.store((seconds * 1e6) as u64, Ordering::Relaxed);
 }
 
+/// Emit one line (the `log_*!` macros route here).
 pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if l > level() {
         return;
@@ -82,12 +86,16 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     let _ = writeln!(err, "[{wall:9.3}s|vt {virt:10.3}s] {} {args}", l.tag());
 }
 
+/// Log at [`util::logging::Level::Error`](crate::util::logging::Level) (format_args syntax).
 #[macro_export]
 macro_rules! log_error { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($t)*)) } }
+/// Log at [`util::logging::Level::Warn`](crate::util::logging::Level) (format_args syntax).
 #[macro_export]
 macro_rules! log_warn { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($t)*)) } }
+/// Log at [`util::logging::Level::Info`](crate::util::logging::Level) (format_args syntax).
 #[macro_export]
 macro_rules! log_info { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($t)*)) } }
+/// Log at [`util::logging::Level::Debug`](crate::util::logging::Level) (format_args syntax).
 #[macro_export]
 macro_rules! log_debug { ($($t:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($t)*)) } }
 

@@ -2,10 +2,17 @@
 //! PRNG, statistics, JSON, CLI parsing, thread pool, property testing,
 //! logging. See DESIGN.md §3 for the substitution table.
 
+/// Declarative argument parsing for the binaries/examples.
 pub mod cli;
+/// JSON value type, parser and writer.
 pub mod json;
+/// Leveled stderr logging with virtual-time stamps.
 pub mod logging;
+/// Minimal property-testing harness.
 pub mod prop;
+/// PCG32 PRNG + distributions (the only randomness source).
 pub mod rng;
+/// Descriptive statistics.
 pub mod stats;
+/// Fixed thread pool + `parallel_map`.
 pub mod threadpool;

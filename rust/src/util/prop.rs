@@ -16,15 +16,18 @@ use super::rng::Pcg32;
 
 /// Generator handle passed to properties.
 pub struct Gen {
+    /// The case's RNG (derive further draws from it directly).
     pub rng: Pcg32,
 }
 
 impl Gen {
+    /// Uniform integer in `[lo, hi]`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(lo <= hi);
         lo + self.rng.below((hi - lo + 1) as u32) as usize
     }
 
+    /// Uniform f64 in `[lo, hi)`.
     pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
         self.rng.uniform_in(lo, hi)
     }
@@ -35,20 +38,24 @@ impl Gen {
         (self.rng.uniform_in(lo.ln(), hi.ln())).exp()
     }
 
+    /// Fair coin.
     pub fn bool(&mut self) -> bool {
         self.rng.next_u32() & 1 == 1
     }
 
+    /// Vector of uniform f64 draws.
     pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
         (0..len).map(|_| self.f64_in(lo, hi)).collect()
     }
 
+    /// Vector of uniform f32 draws.
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len)
             .map(|_| self.rng.uniform_in(lo as f64, hi as f64) as f32)
             .collect()
     }
 
+    /// Uniformly pick one element.
     pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.rng.below(xs.len() as u32) as usize]
     }

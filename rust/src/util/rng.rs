@@ -48,6 +48,7 @@ impl Pcg32 {
         Self::new(seed, stream)
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -57,6 +58,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         (u64::from(self.next_u32()) << 32) | u64::from(self.next_u32())

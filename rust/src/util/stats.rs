@@ -18,6 +18,7 @@ pub fn variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
 }
 
+/// Population standard deviation; 0.0 for fewer than 2 samples.
 pub fn std_dev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
@@ -49,10 +50,12 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Minimum; +∞ (the fold identity) for the empty slice.
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Maximum; −∞ (the fold identity) for the empty slice.
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -67,10 +70,12 @@ pub struct Welford {
 }
 
 impl Welford {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Fold one sample in.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let delta = x - self.mean;
@@ -78,14 +83,17 @@ impl Welford {
         self.m2 += delta * (x - self.mean);
     }
 
+    /// Samples folded so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Running population variance; 0.0 below 2 samples.
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -94,6 +102,7 @@ impl Welford {
         }
     }
 
+    /// Running standard deviation.
     pub fn std_dev(&self) -> f64 {
         self.variance().sqrt()
     }
@@ -107,11 +116,13 @@ pub struct Ema {
 }
 
 impl Ema {
+    /// EMA with smoothing weight `alpha` ∈ [0, 1] on new samples.
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         Self { alpha, value: None }
     }
 
+    /// Fold one sample; returns the updated average.
     pub fn push(&mut self, x: f64) -> f64 {
         let v = match self.value {
             None => x,
@@ -121,6 +132,7 @@ impl Ema {
         v
     }
 
+    /// Current average (None before any sample).
     pub fn value(&self) -> Option<f64> {
         self.value
     }
@@ -152,17 +164,26 @@ pub fn linreg(xs: &[f64], ys: &[f64]) -> (f64, f64) {
 /// Summary bundle for a sample (bench harness output).
 #[derive(Clone, Debug)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std_dev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
+    /// Largest sample.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample slice (sorts a copy for the percentiles).
     pub fn of(xs: &[f64]) -> Self {
         let mut sorted = xs.to_vec();
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());

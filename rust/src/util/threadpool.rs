@@ -20,6 +20,7 @@ pub struct ThreadPool {
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
 impl ThreadPool {
+    /// Pool with `threads` workers (min 1).
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -51,6 +52,7 @@ impl ThreadPool {
         ThreadPool { tx: Some(tx), workers, pending }
     }
 
+    /// Queue one job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         let (lock, _) = &*self.pending;
         *lock.lock().unwrap() += 1;

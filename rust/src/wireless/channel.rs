@@ -11,10 +11,23 @@
 //! paper's synchronous max in eq. (7) implicitly assumes devices don't
 //! contend); `Ofdma` splits `B` equally across the M participants — kept
 //! as an ablation (`defl exp fig1a --ofdma`-style flags).
+//!
+//! **Drift** ([`DriftConfig`], the `[drift]` config section): on top of
+//! the frozen placement, the channel can *drift* round over round — a
+//! seeded Gaussian random walk plus a deterministic trend on each
+//! device's shadowing (dB), and an optional Gilbert–Elliott two-state
+//! burst process that attenuates a device while it sits in the bad
+//! state. Drift is what makes the round-0 delay expectations go stale,
+//! i.e. what the online DEFL controller
+//! ([`crate::defl_opt::controller`]) exists to chase — DESIGN.md §10.
+//! All drift knobs default to off, and the drift state consumes a
+//! *separate* RNG stream, so a drift-free run is bit-identical to the
+//! pre-drift channel.
 
 use crate::util::rng::Pcg32;
 use super::{dbm_to_watt, db_to_linear, shannon_rate, uplink_time};
 
+/// How the uplink band B is shared across the fleet.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BandwidthPolicy {
     /// Every device transmits over the full band (paper default).
@@ -23,6 +36,7 @@ pub enum BandwidthPolicy {
     Ofdma,
 }
 
+/// `[wireless]` configuration: band, powers, placement, fading, drift.
 #[derive(Clone, Debug)]
 pub struct ChannelConfig {
     /// Uplink bandwidth `B` in Hz (paper: 20 MHz).
@@ -33,6 +47,7 @@ pub struct ChannelConfig {
     pub tx_power_dbm: f64,
     /// Cell radius bounds for device placement, meters.
     pub min_radius_m: f64,
+    /// Outer placement radius (meters).
     pub max_radius_m: f64,
     /// Log-normal shadowing std in dB (0 disables). The paper's setting
     /// specifies no shadowing, so the default is 0; the heterogeneity
@@ -40,7 +55,72 @@ pub struct ChannelConfig {
     pub shadowing_db: f64,
     /// Redraw Rayleigh fading each round (true) or freeze it (false).
     pub fast_fading: bool,
+    /// Bandwidth sharing across the fleet (dedicated vs OFDMA split).
     pub policy: BandwidthPolicy,
+    /// Time-varying channel state (`[drift]` section; defaults off).
+    pub drift: DriftConfig,
+}
+
+/// `[drift]` — per-round evolution of the channel state (DESIGN.md §10).
+/// Every knob defaults to "off", reproducing the frozen-placement
+/// channel bit for bit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftConfig {
+    /// Std (dB) of the per-round Gaussian random-walk step on each
+    /// device's shadowing excursion. 0 disables the walk.
+    pub walk_db: f64,
+    /// Deterministic per-round trend (dB/round) added to every device's
+    /// excursion: > 0 degrades the channel (devices drifting away from
+    /// the cell), < 0 improves it. 0 disables the trend.
+    pub trend_db_per_round: f64,
+    /// Hard bound (dB) on the total excursion (walk + trend), so the
+    /// drift can neither diverge nor push the SNR into absurdity.
+    pub clamp_db: f64,
+    /// Gilbert–Elliott burst process: P\[good→bad\] per round. 0
+    /// disables the burst states entirely.
+    pub ge_p_bad: f64,
+    /// Gilbert–Elliott: P\[bad→good\] per round (must be > 0 whenever
+    /// `ge_p_bad` > 0 — a bad state must be escapable).
+    pub ge_p_good: f64,
+    /// Extra attenuation (dB) while a device sits in the bad state.
+    pub ge_bad_db: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig {
+            walk_db: 0.0,
+            trend_db_per_round: 0.0,
+            clamp_db: 30.0,
+            ge_p_bad: 0.0,
+            ge_p_good: 0.25,
+            ge_bad_db: 15.0,
+        }
+    }
+}
+
+impl DriftConfig {
+    /// Whether any drift process is active.
+    pub fn enabled(&self) -> bool {
+        self.walk_db > 0.0 || self.trend_db_per_round != 0.0 || self.ge_p_bad > 0.0
+    }
+
+    /// Range checks for the `[drift]` section.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.walk_db >= 0.0, "drift.walk_db must be ≥ 0");
+        anyhow::ensure!(self.clamp_db > 0.0, "drift.clamp_db must be > 0");
+        anyhow::ensure!(self.trend_db_per_round.is_finite(), "drift.trend_db_per_round: finite");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.ge_p_bad) && (0.0..=1.0).contains(&self.ge_p_good),
+            "drift.ge_p_bad/ge_p_good must be probabilities"
+        );
+        anyhow::ensure!(self.ge_bad_db >= 0.0, "drift.ge_bad_db must be ≥ 0");
+        anyhow::ensure!(
+            self.ge_p_bad == 0.0 || self.ge_p_good > 0.0,
+            "drift.ge_p_good must be > 0 when ge_p_bad > 0 (bad states must be escapable)"
+        );
+        Ok(())
+    }
 }
 
 impl Default for ChannelConfig {
@@ -54,6 +134,7 @@ impl Default for ChannelConfig {
             shadowing_db: 0.0,
             fast_fading: true,
             policy: BandwidthPolicy::Dedicated,
+            drift: DriftConfig::default(),
         }
     }
 }
@@ -62,8 +143,11 @@ impl Default for ChannelConfig {
 /// fading is redrawn per round when `fast_fading`).
 #[derive(Clone, Debug)]
 pub struct DeviceLink {
+    /// Distance from the base station (meters).
     pub distance_m: f64,
+    /// Log-distance path loss (dB).
     pub path_loss_db: f64,
+    /// Frozen log-normal shadowing draw (dB).
     pub shadowing_db: f64,
 }
 
@@ -83,14 +167,26 @@ pub fn path_loss_db(distance_m: f64) -> f64 {
 /// The channel substrate: owns per-device links and draws per-round gains.
 #[derive(Clone, Debug)]
 pub struct Channel {
+    /// The configuration the channel was built from.
     pub cfg: ChannelConfig,
+    /// Frozen per-device link state (placement + shadowing).
     pub links: Vec<DeviceLink>,
     rng: Pcg32,
     /// Fading-free per-device uplink rates, computed once at placement —
     /// placement and shadowing are frozen per run, so these never change.
     /// Client selection and the DEFL planner read this instead of
-    /// recomputing two fleet-sized vectors every round.
+    /// recomputing two fleet-sized vectors every round. Under drift these
+    /// stay the *round-0* rates: the planner's build-time expectation and
+    /// the selector's ranking deliberately do not see the drift (the
+    /// online controller is the component that chases it).
     mean_rates: Vec<f64>,
+    /// Per-device drift excursion (dB, clamped to ±`drift.clamp_db`).
+    excursion: Vec<f64>,
+    /// Per-device Gilbert–Elliott state (true = bad/burst).
+    ge_bad: Vec<bool>,
+    /// Private RNG for the drift processes — a separate stream so that
+    /// enabling drift never perturbs the fading/outage draws.
+    drift_rng: Pcg32,
 }
 
 impl Channel {
@@ -118,10 +214,53 @@ impl Channel {
                 }
             })
             .collect();
-        let mut ch = Channel { cfg, links, rng, mean_rates: Vec::new() };
+        let drift_rng = Pcg32::new(seed ^ 0xD21F7, 0xD21F7);
+        let mut ch = Channel {
+            cfg,
+            links,
+            rng,
+            mean_rates: Vec::new(),
+            excursion: vec![0.0; m],
+            ge_bad: vec![false; m],
+            drift_rng,
+        };
         let mean_gains: Vec<f64> = ch.links.iter().map(|l| l.mean_gain()).collect();
         ch.mean_rates = ch.rates(&mean_gains);
         ch
+    }
+
+    /// Advance the drift processes by one round: walk + trend on every
+    /// device's excursion (clamped) and the Gilbert–Elliott transitions.
+    /// A no-op when `[drift]` is fully off. Called once per uplink draw
+    /// by the round engines (`engine::uplink_phase`).
+    pub fn step_drift(&mut self) {
+        let d = self.cfg.drift.clone();
+        if !d.enabled() {
+            return;
+        }
+        for i in 0..self.links.len() {
+            let mut e = self.excursion[i] + d.trend_db_per_round;
+            if d.walk_db > 0.0 {
+                e += self.drift_rng.normal_ms(0.0, d.walk_db);
+            }
+            self.excursion[i] = e.clamp(-d.clamp_db, d.clamp_db);
+            if d.ge_p_bad > 0.0 {
+                let u = self.drift_rng.uniform();
+                self.ge_bad[i] =
+                    if self.ge_bad[i] { u >= d.ge_p_good } else { u < d.ge_p_bad };
+            }
+        }
+    }
+
+    /// Current drift attenuation of one device in dB (excursion plus the
+    /// Gilbert–Elliott burst penalty while bad). Positive = worse link.
+    pub fn drift_db(&self, device: usize) -> f64 {
+        self.excursion[device] + if self.ge_bad[device] { self.cfg.drift.ge_bad_db } else { 0.0 }
+    }
+
+    /// Whether `device` currently sits in the Gilbert–Elliott bad state.
+    pub fn in_burst(&self, device: usize) -> bool {
+        self.ge_bad[device]
     }
 
     /// The cached fading-free per-device rates (static per run).
@@ -129,6 +268,7 @@ impl Channel {
         &self.mean_rates
     }
 
+    /// Fleet size M.
     pub fn num_devices(&self) -> usize {
         self.links.len()
     }
@@ -142,14 +282,25 @@ impl Channel {
 
     /// Draw this round's linear gains (Rayleigh power fading on top of the
     /// frozen mean gain). With `fast_fading=false` the mean gain is used.
+    /// Under an active `[drift]` the *current* drift attenuation
+    /// multiplies in; the drift-free path is untouched bit for bit.
     pub fn draw_gains(&mut self) -> Vec<f64> {
         let fast = self.cfg.fast_fading;
+        let drifting = self.cfg.drift.enabled();
+        let ge_bad_db = self.cfg.drift.ge_bad_db;
+        let (excursion, ge_bad) = (&self.excursion, &self.ge_bad);
         let rng = &mut self.rng;
         self.links
             .iter()
-            .map(|l| {
+            .enumerate()
+            .map(|(i, l)| {
                 let fade = if fast { rng.exponential(1.0) } else { 1.0 };
-                l.mean_gain() * fade
+                let mut g = l.mean_gain() * fade;
+                if drifting {
+                    let att = excursion[i] + if ge_bad[i] { ge_bad_db } else { 0.0 };
+                    g *= db_to_linear(-att);
+                }
+                g
             })
             .collect()
     }
@@ -220,9 +371,29 @@ impl Channel {
 
     /// Expected (fading-free) synchronous communication time — used by the
     /// DEFL optimizer, which plans on expectations (eq. 29 takes T_cm as a
-    /// known quantity). Reads the cached [`Channel::mean_rates`].
+    /// known quantity). Reads the cached [`Channel::mean_rates`], i.e. the
+    /// *round-0* channel; see [`Channel::expected_round_time_now`] for the
+    /// drifted value.
     pub fn expected_round_time(&self, update_bits: f64) -> f64 {
         let slowest = self.mean_rates.iter().fold(f64::INFINITY, |m, &r| m.min(r));
+        uplink_time(update_bits, slowest)
+    }
+
+    /// Fading-free synchronous communication time at the *current* drift
+    /// state — what [`Channel::expected_round_time`] would read if it were
+    /// recomputed this round. Equal to it while drift is off; the online
+    /// controller's estimate is pinned against this in tests.
+    pub fn expected_round_time_now(&self, update_bits: f64) -> f64 {
+        if !self.cfg.drift.enabled() {
+            return self.expected_round_time(update_bits);
+        }
+        let gains: Vec<f64> = self
+            .links
+            .iter()
+            .enumerate()
+            .map(|(i, l)| l.mean_gain() * db_to_linear(-self.drift_db(i)))
+            .collect();
+        let slowest = self.rates(&gains).into_iter().fold(f64::INFINITY, f64::min);
         uplink_time(update_bits, slowest)
     }
 }
@@ -350,6 +521,134 @@ mod tests {
         let (_, t_clean) = ch2.round(1e6);
         // retransmissions can only slow the synchronous round
         assert!(t_out >= t_clean * 0.99, "{t_out} vs {t_clean}");
+    }
+
+    #[test]
+    fn drift_disabled_is_bit_identical_and_free() {
+        // same seed, drift knobs at default (off): gains, round times and
+        // the expected-time pair are unchanged bit for bit
+        let mut plain = Channel::new(ChannelConfig::default(), 8, 21);
+        let mut with_field = Channel::new(ChannelConfig::default(), 8, 21);
+        with_field.step_drift(); // no-op while disabled
+        assert_eq!(plain.draw_gains(), with_field.draw_gains());
+        assert_eq!(
+            plain.expected_round_time(1e6),
+            with_field.expected_round_time_now(1e6)
+        );
+        let (ta, _) = plain.round(2e6);
+        let (tb, _) = with_field.round(2e6);
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn drift_trend_degrades_and_improves_monotonically() {
+        let mut cfg = ChannelConfig::default();
+        cfg.fast_fading = false;
+        cfg.drift.trend_db_per_round = 1.0;
+        cfg.drift.clamp_db = 50.0;
+        let mut ch = Channel::new(cfg.clone(), 6, 4);
+        let t0 = ch.expected_round_time_now(1e6);
+        assert_eq!(t0, ch.expected_round_time(1e6), "no drift stepped yet");
+        let mut prev = t0;
+        for _ in 0..10 {
+            ch.step_drift();
+            let t = ch.expected_round_time_now(1e6);
+            assert!(t > prev, "degrading trend must slow the round: {t} vs {prev}");
+            prev = t;
+        }
+        // improving direction
+        cfg.drift.trend_db_per_round = -1.0;
+        let mut ch = Channel::new(cfg, 6, 4);
+        let mut prev = ch.expected_round_time_now(1e6);
+        for _ in 0..10 {
+            ch.step_drift();
+            let t = ch.expected_round_time_now(1e6);
+            assert!(t < prev, "improving trend must speed the round");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn drift_excursion_respects_clamp() {
+        let mut cfg = ChannelConfig::default();
+        cfg.drift.walk_db = 4.0;
+        cfg.drift.trend_db_per_round = 2.0;
+        cfg.drift.clamp_db = 10.0;
+        let mut ch = Channel::new(cfg, 8, 9);
+        for _ in 0..200 {
+            ch.step_drift();
+            for i in 0..8 {
+                assert!(ch.drift_db(i).abs() <= 10.0 + 1e-12, "{}", ch.drift_db(i));
+            }
+        }
+        // the walk actually moved somebody
+        assert!((0..8).any(|i| ch.drift_db(i) != 0.0));
+    }
+
+    #[test]
+    fn drift_realized_round_matches_expected_now_when_fading_frozen() {
+        let mut cfg = ChannelConfig::default();
+        cfg.fast_fading = false;
+        cfg.drift.walk_db = 2.0;
+        let mut ch = Channel::new(cfg, 5, 13);
+        for _ in 0..5 {
+            ch.step_drift();
+            let (_, t) = ch.round(1.5e6);
+            assert_eq!(t, ch.expected_round_time_now(1.5e6));
+        }
+    }
+
+    #[test]
+    fn gilbert_elliott_bursts_attenuate_and_recover() {
+        let mut cfg = ChannelConfig::default();
+        cfg.fast_fading = false;
+        cfg.drift.ge_p_bad = 0.5;
+        cfg.drift.ge_p_good = 0.5;
+        cfg.drift.ge_bad_db = 20.0;
+        let mut ch = Channel::new(cfg, 16, 3);
+        let clean = ch.expected_round_time_now(1e6);
+        let mut saw_bad = false;
+        let mut saw_recovery = false;
+        let mut was_bad = vec![false; 16];
+        for _ in 0..50 {
+            ch.step_drift();
+            for i in 0..16 {
+                if ch.in_burst(i) {
+                    saw_bad = true;
+                    assert_eq!(ch.drift_db(i), 20.0, "burst bills exactly ge_bad_db");
+                } else if was_bad[i] {
+                    saw_recovery = true;
+                }
+                was_bad[i] = ch.in_burst(i);
+            }
+            if ch.links.len() == 16 && (0..16).any(|i| ch.in_burst(i)) {
+                assert!(ch.expected_round_time_now(1e6) > clean, "a burst slows the round");
+            }
+        }
+        assert!(saw_bad && saw_recovery, "chain must enter and leave the bad state");
+    }
+
+    #[test]
+    fn drift_config_validation() {
+        let ok = DriftConfig::default();
+        assert!(!ok.enabled());
+        assert!(ok.validate().is_ok());
+        let mut on = DriftConfig::default();
+        on.trend_db_per_round = -0.5;
+        assert!(on.enabled());
+        let mut bad = DriftConfig::default();
+        bad.walk_db = -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = DriftConfig::default();
+        bad.ge_p_bad = 1.5;
+        assert!(bad.validate().is_err());
+        let mut bad = DriftConfig::default();
+        bad.ge_p_bad = 0.2;
+        bad.ge_p_good = 0.0;
+        assert!(bad.validate().is_err(), "inescapable bad state");
+        let mut bad = DriftConfig::default();
+        bad.clamp_db = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

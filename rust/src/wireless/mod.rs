@@ -15,9 +15,10 @@
 //! The paper treats only the uplink (downlink broadcast is assumed fast,
 //! Section II-C) — so does this module.
 
+/// The cellular channel substrate (placement, fading, drift).
 pub mod channel;
 
-pub use channel::{Channel, ChannelConfig, DeviceLink};
+pub use channel::{Channel, ChannelConfig, DeviceLink, DriftConfig};
 
 /// Convert dBm to watts.
 pub fn dbm_to_watt(dbm: f64) -> f64 {
