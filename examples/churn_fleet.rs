@@ -1,0 +1,124 @@
+//! Fleet-scale open-world churn smoke (DESIGN.md §11) — the CI scenario.
+//!
+//! A 1000-device fleet lives through everything the `[churn]` model can
+//! throw at it, under all three round engines on the native backend:
+//! 60% of the fleet is up at 𝒯 = 0, a flash crowd brings everyone else
+//! at churn step 2, Poisson drops kill devices *mid-round* (their uplinks
+//! are lost through the engines' outage paths), and dropped devices
+//! rejoin — recovering their seed-derived shards, because the `Device`
+//! objects persist. The run must still converge: final train loss below
+//! first, under every engine, or the process exits non-zero.
+//!
+//! ```sh
+//! cargo run --release --example churn_fleet -- \
+//!     [--devices 1000] [--rounds 6] [--threads 4] [--out churn_fleet_metrics.json]
+//! ```
+//!
+//! Writes the three engines' full metrics logs (phase / fleet_size /
+//! joins / drops columns included) to `--out` — the artifact CI uploads.
+
+use defl::config::{DatasetKind, ExperimentConfig, Policy};
+use defl::coordinator::{ChurnEventKind, ChurnKind, EngineKind, FlSystem};
+use defl::metrics::Table;
+use defl::util::cli::Cli;
+use defl::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let cli = Cli::new("churn_fleet", "1000-device open-world churn smoke, all three engines")
+        .opt("devices", "1000", "fleet size M")
+        .opt("rounds", "6", "rounds per engine")
+        .opt("threads", "4", "thread-pool size for the training fan-out")
+        .opt("seed", "7", "base seed")
+        .opt("out", "churn_fleet_metrics.json", "metrics JSON path (CI artifact)");
+    let args = cli
+        .parse(&std::env::args().skip(1).collect::<Vec<_>>())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let devices = args.usize("devices").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let rounds = args.usize("rounds").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let threads = args.usize("threads").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let seed = args.u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let out = args.str("out");
+
+    let mut table = Table::new(&[
+        "engine", "loss first→last", "fleet min→max", "joins", "mid-round deaths", "waited 𝒯 (s)",
+    ]);
+    let mut logs: Vec<(&'static str, Json)> = Vec::new();
+    for kind in [EngineKind::Sync, EngineKind::Deadline, EngineKind::AsyncBuffered] {
+        let mut cfg = ExperimentConfig::default();
+        cfg.name = format!("churn-fleet-{}", kind.label());
+        cfg.dataset = DatasetKind::Tiny;
+        cfg.devices = devices;
+        cfg.train_per_device = 8;
+        cfg.test_size = 256;
+        cfg.threads = threads;
+        cfg.seed = seed;
+        cfg.policy = Policy::Fixed { batch: 8, local_rounds: 2 };
+        cfg.lr = 0.05;
+        cfg.backend = defl::runtime::BackendKind::Native;
+        cfg.engine.kind = kind;
+        cfg.max_rounds = rounds;
+        cfg.eval_every = rounds;
+        // the open world: 60% up at 𝒯=0, a flash crowd at churn step 2,
+        // steady Poisson departures (mid-round deaths) and rejoins
+        cfg.churn.kind = ChurnKind::FlashCrowd;
+        cfg.churn.initial_active = 0.6;
+        cfg.churn.min_clients = (devices / 5).max(1);
+        cfg.churn.flash_step = 2;
+        cfg.churn.flash_size = 0; // the flash brings everyone still out
+        cfg.churn.join_rate = 0.3;
+        cfg.churn.drop_rate = 0.15;
+
+        let mut sys = FlSystem::build(cfg)?;
+        let born: Vec<Vec<usize>> = sys.devices.iter().map(|d| d.shard.clone()).collect();
+        sys.run()?;
+
+        let first = sys.log.rounds.first().expect("ran").train_loss;
+        let last = sys.log.rounds.last().expect("ran").train_loss;
+        anyhow::ensure!(
+            last < first,
+            "{}: churned fleet failed to converge: {first:.4} -> {last:.4}",
+            kind.label()
+        );
+        let fleet_min = sys.log.rounds.iter().map(|r| r.fleet_size).min().expect("ran");
+        let fleet_max = sys.log.rounds.iter().map(|r| r.fleet_size).max().expect("ran");
+        let joins: usize = sys.log.rounds.iter().map(|r| r.joins).sum();
+        let deaths: usize = sys.log.rounds.iter().map(|r| r.drops).sum();
+        anyhow::ensure!(
+            fleet_max == devices,
+            "{}: the flash crowd must fill the fleet",
+            kind.label()
+        );
+        anyhow::ensure!(deaths > 0, "{}: this schedule kills someone mid-round", kind.label());
+        // rejoin-recovers-shard: someone went Drop → Join, and every
+        // device still holds the exact shard it was born with
+        let mut dropped_once = vec![false; devices];
+        let mut rejoined = false;
+        for e in sys.membership.events() {
+            match e.kind {
+                ChurnEventKind::Drop => dropped_once[e.device] = true,
+                ChurnEventKind::Join if dropped_once[e.device] => rejoined = true,
+                ChurnEventKind::Join => {}
+            }
+        }
+        anyhow::ensure!(rejoined, "{}: no device rejoined", kind.label());
+        for (d, b) in sys.devices.iter().zip(&born) {
+            anyhow::ensure!(&d.shard == b, "device {} lost its shard", d.id);
+        }
+
+        table.row(&[
+            kind.label().into(),
+            format!("{first:.4}→{last:.4}"),
+            format!("{fleet_min}→{fleet_max}"),
+            format!("{joins}"),
+            format!("{deaths}"),
+            format!("{:.2}", sys.clock.waited()),
+        ]);
+        logs.push((kind.label(), sys.log.to_json()));
+    }
+
+    println!("open-world churn, M={devices}, {rounds} rounds/engine:");
+    println!("{}", table.render());
+    Json::obj(logs).write_file(&out)?;
+    println!("wrote {out}");
+    Ok(())
+}

@@ -22,6 +22,10 @@
 //! Gilbert–Elliott transitions per device) and `controller_replan_*`
 //! (EWMA observe + eq. 29 closed-form re-solve vs the deadband skip
 //! path — both must stay trivially cheap next to a training round).
+//! `coordinator_tick_{100,1000}dev` runs one full churned tick (gate,
+//! membership step, engine round, commit — DESIGN.md §11); its delta
+//! against `native_round_loop_*dev_b8` is the open-world bookkeeping
+//! cost per round.
 //!
 //! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
 //! count behind the 1000-device fold (64 sets cycled instead of 1000
@@ -306,6 +310,26 @@ fn native_benches(suite: &mut Suite) -> anyhow::Result<()> {
         cfg.codec.k_ratio = 0.1;
         let mut sys = FlSystem::build(cfg)?;
         suite.bench_units("native_round_loop_100dev_b8_topk10", 100.0, || sys.round().unwrap());
+    }
+
+    // Tick-machine overhead under churn (DESIGN.md §11): one full tick —
+    // gate check, round-start churn step, engine round over the live
+    // view, aggregate commit — on an open-world fleet. Comparable against
+    // native_round_loop_*dev_b8 above: the delta is what membership
+    // bookkeeping costs per round.
+    for devices in [100usize, 1000] {
+        use defl::coordinator::ChurnKind;
+        let mut cfg = round_cfg(devices);
+        cfg.name = format!("bench-tick-{devices}");
+        cfg.churn.kind = ChurnKind::Poisson;
+        cfg.churn.initial_active = 0.8;
+        cfg.churn.join_rate = 0.3;
+        cfg.churn.drop_rate = 0.3;
+        cfg.churn.min_clients = 1;
+        let mut sys = FlSystem::build(cfg)?;
+        suite.bench_units(&format!("coordinator_tick_{devices}dev"), devices as f64, || {
+            sys.tick().unwrap().record.is_some()
+        });
     }
     Ok(())
 }

@@ -164,6 +164,16 @@ impl GpuFleet {
             .map(|s| s.cycles_per_bit * bits_per_sample / s.freq_hz)
             .fold(0.0, f64::max)
     }
+
+    /// [`Self::bottleneck_seconds_per_sample`] restricted to a live
+    /// membership view (absolute device ids) — under churn the DEFL
+    /// controller re-plans against the *active* fleet's straggler, not a
+    /// device that left. Identical fold when `ids` is the whole fleet.
+    pub fn bottleneck_seconds_per_sample_of(&self, ids: &[usize], bits_per_sample: f64) -> f64 {
+        ids.iter()
+            .map(|&i| self.specs[i].cycles_per_bit * bits_per_sample / self.specs[i].freq_hz)
+            .fold(0.0, f64::max)
+    }
 }
 
 #[cfg(test)]

@@ -192,6 +192,10 @@ pub struct ExperimentConfig {
     // [selection]
     /// Client-selection policy (paper: full participation).
     pub selection: crate::coordinator::Selection,
+    // [churn]
+    /// Open-world membership schedule (`churn.kind = none` keeps the
+    /// closed-world fleet — byte-identical to the pre-churn coordinator).
+    pub churn: crate::coordinator::ChurnConfig,
     // [run]
     /// Hard round cap.
     pub max_rounds: usize,
@@ -246,6 +250,7 @@ impl Default for ExperimentConfig {
             codec: crate::codec::CodecConfig::default(),
             engine: crate::coordinator::EngineConfig::default(),
             selection: crate::coordinator::Selection::All,
+            churn: crate::coordinator::ChurnConfig::default(),
             max_rounds: 60,
             eval_every: 5,
             target_accuracy: 0.0,
@@ -399,6 +404,21 @@ impl ExperimentConfig {
                 self.selection = crate::coordinator::Selection::parse(kind, k)?;
             }
         }
+        if let Some(ch) = j.get("churn") {
+            if let Some(kind) = ch.get("kind").and_then(|x| x.as_str()) {
+                self.churn.kind = crate::coordinator::ChurnKind::parse(kind)?;
+            }
+            get_usize(ch, "min_clients", &mut self.churn.min_clients)?;
+            get_f64(ch, "warmup_s", &mut self.churn.warmup_s)?;
+            get_f64(ch, "wait_s", &mut self.churn.wait_s)?;
+            get_f64(ch, "join_rate", &mut self.churn.join_rate)?;
+            get_f64(ch, "drop_rate", &mut self.churn.drop_rate)?;
+            get_f64(ch, "initial_active", &mut self.churn.initial_active)?;
+            get_usize(ch, "flash_step", &mut self.churn.flash_step)?;
+            get_usize(ch, "flash_size", &mut self.churn.flash_size)?;
+            get_f64(ch, "period", &mut self.churn.period)?;
+            get_f64(ch, "amplitude", &mut self.churn.amplitude)?;
+        }
         if let Some(r) = j.get("run") {
             get_usize(r, "max_rounds", &mut self.max_rounds)?;
             get_usize(r, "eval_every", &mut self.eval_every)?;
@@ -466,6 +486,13 @@ impl ExperimentConfig {
         self.engine.validate()?;
         self.controller.validate()?;
         self.wireless.drift.validate()?;
+        self.churn.validate()?;
+        anyhow::ensure!(
+            self.churn.min_clients <= self.devices,
+            "churn.min_clients ({}) exceeds the fleet size ({})",
+            self.churn.min_clients,
+            self.devices
+        );
         Ok(())
     }
 }
@@ -743,6 +770,48 @@ mod tests {
         assert!(c.validate().is_err(), "inescapable bad state must not validate");
         let mut c = ExperimentConfig::default();
         c.set_override("drift.walk_db=-3").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn churn_section_parses_and_validates() {
+        use crate::coordinator::ChurnKind;
+        let mut c = ExperimentConfig::default();
+        assert!(!c.churn.enabled(), "closed world is the default");
+        c.set_override("churn.kind=poisson").unwrap();
+        c.set_override("churn.min_clients=3").unwrap();
+        c.set_override("churn.warmup_s=2.5").unwrap();
+        c.set_override("churn.wait_s=0.5").unwrap();
+        c.set_override("churn.join_rate=0.3").unwrap();
+        c.set_override("churn.drop_rate=0.1").unwrap();
+        c.set_override("churn.initial_active=0.6").unwrap();
+        assert!(c.churn.enabled());
+        assert_eq!(c.churn.kind, ChurnKind::Poisson);
+        assert_eq!(c.churn.min_clients, 3);
+        assert_eq!(c.churn.warmup_s, 2.5);
+        assert_eq!(c.churn.wait_s, 0.5);
+        assert_eq!(c.churn.join_rate, 0.3);
+        assert_eq!(c.churn.initial_active, 0.6);
+        assert!(c.validate().is_ok());
+        c.set_override("churn.kind=flash_crowd").unwrap();
+        c.set_override("churn.flash_step=5").unwrap();
+        c.set_override("churn.flash_size=4").unwrap();
+        assert_eq!(c.churn.kind, ChurnKind::FlashCrowd);
+        assert_eq!(c.churn.flash_step, 5);
+        assert!(c.validate().is_ok());
+        c.set_override("churn.kind=diurnal").unwrap();
+        c.set_override("churn.period=12").unwrap();
+        c.set_override("churn.amplitude=0.5").unwrap();
+        assert!(c.validate().is_ok());
+        assert!(c.set_override("churn.kind=psychic").is_err());
+        // min_clients is cross-checked against the fleet size
+        c.set_override("churn.min_clients=11").unwrap();
+        assert!(c.validate().is_err(), "min_clients > devices must not validate");
+        let mut c = ExperimentConfig::default();
+        c.set_override("churn.wait_s=0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.set_override("churn.initial_active=1.5").unwrap();
         assert!(c.validate().is_err());
     }
 

@@ -1,0 +1,707 @@
+//! Open-world fleet membership — the coordinator's churn model
+//! (DESIGN.md §11).
+//!
+//! Real mobile edge fleets are not closed worlds: devices die mid-round,
+//! rejoin later, and arrive in flash crowds — exactly the unreliable-
+//! connectivity regime the paper motivates DEFL with. This module gives
+//! the coordinator an explicit [`Phase`] state machine
+//! (`WaitingForMembers → Warmup → RoundTrain → Aggregate`, ticked by
+//! [`crate::simclock::SimClock`]) and a seeded [`Membership`] view the
+//! round engines consume instead of a fixed fleet:
+//!
+//! * **Devices persist.** All `M` [`crate::coordinator::Device`]s are
+//!   built once, with seed-derived shards; churn toggles their *active*
+//!   status. A rejoining device is the same object, so it deterministically
+//!   recovers its shard, its batching RNG stream, and its error-feedback
+//!   residual — no re-assignment, no resync protocol to model.
+//! * **Joins land at round start**, so a flash crowd participates in the
+//!   round that sees it arrive. **Drops drawn during a round are
+//!   mid-round deaths**: the device is still in the cohort (it burns
+//!   compute and energy) but its uplink never completes, so the existing
+//!   straggler-drop/outage paths absorb the event — the engines need no
+//!   churn-specific aggregation logic.
+//! * **Determinism.** All membership draws come from one private
+//!   [`Pcg32`] stream, stepped in device-index order, one churn step per
+//!   waiting tick or round. Same seed + same `[churn]` config ⇒ the same
+//!   trace at any thread count. `kind = "none"` never touches the stream
+//!   (or the clock), so a churn-off run is byte-identical to the
+//!   closed-world system.
+
+use crate::util::rng::Pcg32;
+
+/// The coordinator state machine's phase (DESIGN.md §11).
+///
+/// A [`crate::coordinator::FlSystem::tick`] moves through these in order;
+/// `Aggregate` completes within the tick that ran `RoundTrain` (server
+/// work costs no modeled time), then hands back to `RoundTrain` — or to
+/// `WaitingForMembers` when churn pulled the fleet below `min_clients`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Gate: fewer than `min_clients` devices are active; the clock
+    /// waits `wait_s` per tick while the churn schedule runs.
+    WaitingForMembers,
+    /// The gate passed; model/config distribution costs `warmup_s` of
+    /// virtual time (0 = skipped entirely).
+    Warmup,
+    /// One engine round over the live membership view.
+    RoundTrain,
+    /// Controller hook + membership commit; always completes in-tick.
+    Aggregate,
+}
+
+impl Phase {
+    /// Canonical snake_case name (the per-round `phase` metrics column).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::WaitingForMembers => "waiting_for_members",
+            Phase::Warmup => "warmup",
+            Phase::RoundTrain => "round_train",
+            Phase::Aggregate => "aggregate",
+        }
+    }
+}
+
+/// Which churn schedule drives membership (`[churn] kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Closed world: every device active forever (the default; byte-
+    /// identical to the pre-churn coordinator).
+    None,
+    /// Memoryless joins/drops: per step, each inactive device joins
+    /// w.p. `1 − e^(−join_rate)` and each active one drops w.p.
+    /// `1 − e^(−drop_rate)` (per-unit-interval Poisson thinning).
+    Poisson,
+    /// The Poisson baseline plus a scripted burst: at churn step
+    /// `flash_step`, `flash_size` inactive devices (0 = all of them)
+    /// join at once.
+    FlashCrowd,
+    /// A deterministic sinusoidal availability target
+    /// `initial_active + amplitude·sin(2π·step/period)`, tracked by
+    /// seeded picks of which devices join/drop.
+    Diurnal,
+}
+
+impl ChurnKind {
+    /// Parse a `churn.kind` string (`none|poisson|flash_crowd|diurnal`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" | "off" => Ok(ChurnKind::None),
+            "poisson" => Ok(ChurnKind::Poisson),
+            "flash_crowd" | "flash" => Ok(ChurnKind::FlashCrowd),
+            "diurnal" => Ok(ChurnKind::Diurnal),
+            other => anyhow::bail!("unknown churn {other:?} (none|poisson|flash_crowd|diurnal)"),
+        }
+    }
+
+    /// Canonical config-string name (run metadata).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnKind::None => "none",
+            ChurnKind::Poisson => "poisson",
+            ChurnKind::FlashCrowd => "flash_crowd",
+            ChurnKind::Diurnal => "diurnal",
+        }
+    }
+}
+
+/// `[churn]` configuration section — the open-world membership knobs.
+/// With `kind = "none"` every knob except `min_clients` is inert.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChurnConfig {
+    /// Which schedule drives joins/drops.
+    pub kind: ChurnKind,
+    /// A round may only start with at least this many active devices;
+    /// below it the coordinator sits in [`Phase::WaitingForMembers`].
+    pub min_clients: usize,
+    /// Virtual seconds of model/config distribution between the gate
+    /// passing and the first round (0 = skip the Warmup phase).
+    pub warmup_s: f64,
+    /// Virtual seconds one `WaitingForMembers` tick costs (also the
+    /// churn-step interval while waiting).
+    pub wait_s: f64,
+    /// Poisson intensity of joins per inactive device per churn step.
+    pub join_rate: f64,
+    /// Poisson intensity of drops per active device per churn step.
+    pub drop_rate: f64,
+    /// Fraction of the fleet active at 𝒯 = 0 (also the diurnal mean).
+    pub initial_active: f64,
+    /// FlashCrowd: the churn step (waiting ticks + rounds, in order) at
+    /// which the flash crowd arrives.
+    pub flash_step: usize,
+    /// FlashCrowd: how many devices the flash brings (0 = every device
+    /// inactive at that step).
+    pub flash_size: usize,
+    /// Diurnal: period of the availability sinusoid, in churn steps.
+    pub period: f64,
+    /// Diurnal: amplitude of the availability sinusoid (fleet fraction).
+    pub amplitude: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            kind: ChurnKind::None,
+            min_clients: 1,
+            warmup_s: 0.0,
+            wait_s: 1.0,
+            join_rate: 0.2,
+            drop_rate: 0.05,
+            initial_active: 1.0,
+            flash_step: 3,
+            flash_size: 0,
+            period: 20.0,
+            amplitude: 0.4,
+        }
+    }
+}
+
+impl ChurnConfig {
+    /// Is the open-world schedule on? (`kind != "none"`.)
+    pub fn enabled(&self) -> bool {
+        self.kind != ChurnKind::None
+    }
+
+    /// Range-check the `[churn]` knobs (the `min_clients ≤ devices`
+    /// cross-check lives in [`crate::config::ExperimentConfig::validate`]
+    /// where both are known).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.min_clients >= 1, "churn.min_clients must be ≥ 1");
+        anyhow::ensure!(
+            self.warmup_s.is_finite() && self.warmup_s >= 0.0,
+            "churn.warmup_s must be finite and ≥ 0"
+        );
+        anyhow::ensure!(
+            self.wait_s.is_finite() && self.wait_s > 0.0,
+            "churn.wait_s must be finite and > 0"
+        );
+        anyhow::ensure!(
+            self.join_rate.is_finite() && self.join_rate >= 0.0,
+            "churn.join_rate must be finite and ≥ 0"
+        );
+        anyhow::ensure!(
+            self.drop_rate.is_finite() && self.drop_rate >= 0.0,
+            "churn.drop_rate must be finite and ≥ 0"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.initial_active),
+            "churn.initial_active must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.period.is_finite() && self.period >= 2.0,
+            "churn.period must be finite and ≥ 2 steps"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.amplitude),
+            "churn.amplitude must be in [0, 1]"
+        );
+        Ok(())
+    }
+}
+
+/// One membership lifecycle transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnEventKind {
+    /// The device became active (initial activation, arrival, rejoin).
+    Join,
+    /// The device went inactive (mid-round death or idle departure).
+    Drop,
+}
+
+/// One recorded lifecycle event — the property-test surface pinning that
+/// every device's history is a legal `Join → (Drop → Join)*…` sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChurnEvent {
+    /// Churn step (waiting ticks + rounds, in order) the event fired at;
+    /// 0 = initial activation.
+    pub step: usize,
+    /// Device id.
+    pub device: usize,
+    /// Join or Drop.
+    pub kind: ChurnEventKind,
+}
+
+/// The live membership view: which of the `M` persistent devices are
+/// currently active, plus the seeded churn schedule that evolves it.
+/// One churn step is drawn per waiting tick ([`Membership::step_wait`])
+/// and per round ([`Membership::begin_round`]); drops drawn at round
+/// start are committed only at [`Membership::finalize_round`], so the
+/// dying device still trains (and loses its uplink) that round.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    cfg: ChurnConfig,
+    rng: Pcg32,
+    active: Vec<bool>,
+    /// Sorted cache of the active device ids (what the engines consume).
+    active_ids: Vec<usize>,
+    /// Sorted ids drawn to die mid-round (active until finalize).
+    pending_drop: Vec<usize>,
+    steps: usize,
+    round_joins: usize,
+    round_drops: usize,
+    events: Vec<ChurnEvent>,
+}
+
+impl Membership {
+    /// Membership over a fleet of `m` devices. With churn enabled the
+    /// initial active set is a seeded `⌊initial_active·m⌉`-subset
+    /// (recorded as step-0 joins); disabled, everyone is active and the
+    /// private RNG stream is never stepped.
+    pub fn new(cfg: ChurnConfig, m: usize, seed: u64) -> Membership {
+        assert!(m > 0, "empty fleet");
+        let enabled = cfg.enabled();
+        let mut mem = Membership {
+            cfg,
+            rng: Pcg32::new(seed, 0xF1EE7),
+            active: vec![!enabled; m],
+            active_ids: if enabled { Vec::new() } else { (0..m).collect() },
+            pending_drop: Vec::new(),
+            steps: 0,
+            round_joins: 0,
+            round_drops: 0,
+            events: Vec::new(),
+        };
+        if enabled {
+            let n0 = ((mem.cfg.initial_active * m as f64).round() as usize).min(m);
+            let mut init = mem.rng.sample_indices(m, n0);
+            init.sort_unstable();
+            for &i in &init {
+                mem.active[i] = true;
+                mem.events.push(ChurnEvent { step: 0, device: i, kind: ChurnEventKind::Join });
+            }
+            mem.rebuild_active_ids();
+        }
+        mem
+    }
+
+    /// Is the open-world schedule on?
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// The `[churn]` knobs in force.
+    pub fn config(&self) -> &ChurnConfig {
+        &self.cfg
+    }
+
+    /// Fleet size M (active or not — devices persist).
+    pub fn total(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Active device count (mid-round droppers still count until
+    /// [`Membership::finalize_round`]).
+    pub fn active_count(&self) -> usize {
+        self.active_ids.len()
+    }
+
+    /// Sorted active device ids — the live fleet view every engine's
+    /// cohort selection runs over.
+    pub fn active_ids(&self) -> &[usize] {
+        &self.active_ids
+    }
+
+    /// Is device `i` currently active?
+    pub fn is_active(&self, i: usize) -> bool {
+        self.active[i]
+    }
+
+    /// Was device `i` drawn to die during the round in flight? (Its
+    /// uplink never completes; the engines' outage path drops it.)
+    pub fn dropping_mid_round(&self, i: usize) -> bool {
+        self.pending_drop.binary_search(&i).is_ok()
+    }
+
+    /// The round-start gate (`[churn] min_clients`).
+    pub fn min_clients(&self) -> usize {
+        self.cfg.min_clients
+    }
+
+    /// Churn steps taken so far (waiting ticks + rounds).
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Joins applied at the current/most recent round's start.
+    pub fn round_joins(&self) -> usize {
+        self.round_joins
+    }
+
+    /// Mid-round drops drawn at the current/most recent round's start.
+    pub fn round_drops(&self) -> usize {
+        self.round_drops
+    }
+
+    /// Every lifecycle event so far, in draw order (test surface).
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    /// Can the schedule ever produce another join? `false` means a
+    /// coordinator below `min_clients` is wedged for good and should
+    /// error out instead of waiting forever. Optimistic for the diurnal
+    /// schedule (discrete steps may never hit the sinusoid's peak);
+    /// [`crate::coordinator::FlSystem::round`]'s tick cap backstops it.
+    pub fn can_grow(&self) -> bool {
+        if self.active_ids.len() >= self.active.len() {
+            return false;
+        }
+        match self.cfg.kind {
+            ChurnKind::None => false,
+            ChurnKind::Poisson => self.cfg.join_rate > 0.0,
+            ChurnKind::FlashCrowd => self.cfg.join_rate > 0.0 || self.steps < self.cfg.flash_step,
+            ChurnKind::Diurnal => {
+                let peak = (self.cfg.initial_active + self.cfg.amplitude).clamp(0.0, 1.0);
+                (peak * self.total() as f64).round() as usize > self.active_count()
+            }
+        }
+    }
+
+    /// One churn step while no round is in flight (waiting/warmup):
+    /// joins and drops both apply immediately.
+    pub fn step_wait(&mut self) {
+        if !self.enabled() {
+            return;
+        }
+        let (joins, drops) = self.draw_step();
+        self.apply_joins(&joins);
+        for &i in &drops {
+            self.active[i] = false;
+            self.events.push(ChurnEvent {
+                step: self.steps,
+                device: i,
+                kind: ChurnEventKind::Drop,
+            });
+        }
+        self.rebuild_active_ids();
+    }
+
+    /// One churn step at round start: joins apply now (the arrivals
+    /// participate in this round), drops are *mid-round deaths* — marked
+    /// pending, committed by [`Membership::finalize_round`]. Resets the
+    /// per-round join/drop counters.
+    pub fn begin_round(&mut self) {
+        self.round_joins = 0;
+        self.round_drops = 0;
+        self.pending_drop.clear();
+        if !self.enabled() {
+            return;
+        }
+        let (joins, mut drops) = self.draw_step();
+        self.apply_joins(&joins);
+        drops.sort_unstable();
+        for &i in &drops {
+            self.events.push(ChurnEvent {
+                step: self.steps,
+                device: i,
+                kind: ChurnEventKind::Drop,
+            });
+        }
+        self.round_joins = joins.len();
+        self.round_drops = drops.len();
+        self.pending_drop = drops;
+        self.rebuild_active_ids();
+    }
+
+    /// Commit the round's mid-round deaths (the dying devices leave the
+    /// active set; their next join is a rejoin).
+    pub fn finalize_round(&mut self) {
+        if self.pending_drop.is_empty() {
+            return;
+        }
+        for &i in &std::mem::take(&mut self.pending_drop) {
+            self.active[i] = false;
+        }
+        self.rebuild_active_ids();
+    }
+
+    /// Advance the schedule one step and draw (joins, drops) — device-
+    /// index-ordered Bernoulli thinning for the Poisson kinds, target
+    /// tracking for the diurnal one. Pure RNG + state; application is
+    /// the caller's (wait vs round semantics differ on drops).
+    fn draw_step(&mut self) -> (Vec<usize>, Vec<usize>) {
+        self.steps += 1;
+        let m = self.total();
+        match self.cfg.kind {
+            ChurnKind::None => (Vec::new(), Vec::new()),
+            ChurnKind::Poisson | ChurnKind::FlashCrowd => {
+                let p_join = 1.0 - (-self.cfg.join_rate).exp();
+                let p_drop = 1.0 - (-self.cfg.drop_rate).exp();
+                let mut joins = Vec::new();
+                let mut drops = Vec::new();
+                for i in 0..m {
+                    if self.active[i] {
+                        if self.rng.uniform() < p_drop {
+                            drops.push(i);
+                        }
+                    } else if self.rng.uniform() < p_join {
+                        joins.push(i);
+                    }
+                }
+                if self.cfg.kind == ChurnKind::FlashCrowd && self.steps == self.cfg.flash_step {
+                    let pool: Vec<usize> = (0..m)
+                        .filter(|&i| !self.active[i] && !joins.contains(&i))
+                        .collect();
+                    let k = if self.cfg.flash_size == 0 {
+                        pool.len()
+                    } else {
+                        self.cfg.flash_size.min(pool.len())
+                    };
+                    let mut flash: Vec<usize> = if k == pool.len() {
+                        pool
+                    } else {
+                        self.rng.sample_indices(pool.len(), k).iter().map(|&p| pool[p]).collect()
+                    };
+                    flash.sort_unstable();
+                    joins.extend(flash);
+                }
+                (joins, drops)
+            }
+            ChurnKind::Diurnal => {
+                let phase = 2.0 * std::f64::consts::PI * self.steps as f64 / self.cfg.period;
+                let frac = (self.cfg.initial_active + self.cfg.amplitude * phase.sin())
+                    .clamp(0.0, 1.0);
+                let target = ((frac * m as f64).round() as usize).min(m);
+                let cur = self.active_count();
+                if target > cur {
+                    let pool: Vec<usize> = (0..m).filter(|&i| !self.active[i]).collect();
+                    let k = (target - cur).min(pool.len());
+                    let mut joins: Vec<usize> =
+                        self.rng.sample_indices(pool.len(), k).iter().map(|&p| pool[p]).collect();
+                    joins.sort_unstable();
+                    (joins, Vec::new())
+                } else if target < cur {
+                    let k = cur - target;
+                    let mut drops: Vec<usize> = self
+                        .rng
+                        .sample_indices(self.active_ids.len(), k)
+                        .iter()
+                        .map(|&p| self.active_ids[p])
+                        .collect();
+                    drops.sort_unstable();
+                    (Vec::new(), drops)
+                } else {
+                    (Vec::new(), Vec::new())
+                }
+            }
+        }
+    }
+
+    fn apply_joins(&mut self, joins: &[usize]) {
+        for &i in joins {
+            self.active[i] = true;
+            self.events.push(ChurnEvent {
+                step: self.steps,
+                device: i,
+                kind: ChurnEventKind::Join,
+            });
+        }
+    }
+
+    fn rebuild_active_ids(&mut self) {
+        self.active_ids.clear();
+        self.active_ids.extend((0..self.active.len()).filter(|&i| self.active[i]));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poisson_cfg() -> ChurnConfig {
+        ChurnConfig {
+            kind: ChurnKind::Poisson,
+            initial_active: 0.5,
+            join_rate: 0.3,
+            drop_rate: 0.2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn disabled_is_inert_full_fleet() {
+        let mut mem = Membership::new(ChurnConfig::default(), 8, 1);
+        assert!(!mem.enabled());
+        assert_eq!(mem.active_ids(), (0..8).collect::<Vec<_>>());
+        mem.step_wait();
+        mem.begin_round();
+        mem.finalize_round();
+        assert_eq!(mem.active_count(), 8);
+        assert!(mem.events().is_empty(), "no lifecycle events without churn");
+        assert_eq!(mem.steps(), 0, "the schedule never advances");
+        assert!(!mem.can_grow());
+    }
+
+    #[test]
+    fn seeded_traces_are_reproducible() {
+        let trace = |seed: u64| {
+            let mut mem = Membership::new(poisson_cfg(), 20, seed);
+            let mut counts = Vec::new();
+            for r in 0..30 {
+                if r % 3 == 0 {
+                    mem.step_wait();
+                } else {
+                    mem.begin_round();
+                    mem.finalize_round();
+                }
+                counts.push(mem.active_count());
+            }
+            (counts, mem.events().to_vec())
+        };
+        assert_eq!(trace(7), trace(7));
+        assert_ne!(trace(7).0, trace(8).0, "different seeds give different traces");
+    }
+
+    #[test]
+    fn mid_round_drops_commit_at_finalize() {
+        let mut cfg = poisson_cfg();
+        cfg.initial_active = 1.0;
+        cfg.join_rate = 0.0;
+        cfg.drop_rate = 3.0; // p ≈ 0.95: someone dies round 1
+        let mut mem = Membership::new(cfg, 16, 3);
+        mem.begin_round();
+        let dying: Vec<usize> = (0..16).filter(|&i| mem.dropping_mid_round(i)).collect();
+        assert!(!dying.is_empty());
+        for &i in &dying {
+            assert!(mem.is_active(i), "mid-round droppers stay active until finalize");
+        }
+        assert_eq!(mem.round_drops(), dying.len());
+        let before = mem.active_count();
+        mem.finalize_round();
+        assert_eq!(mem.active_count(), before - dying.len());
+        for &i in &dying {
+            assert!(!mem.is_active(i));
+        }
+    }
+
+    #[test]
+    fn flash_crowd_arrives_at_flash_step() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::FlashCrowd,
+            initial_active: 0.25,
+            join_rate: 0.0,
+            drop_rate: 0.0,
+            flash_step: 3,
+            flash_size: 0,
+            ..Default::default()
+        };
+        let mut mem = Membership::new(cfg, 40, 5);
+        assert_eq!(mem.active_count(), 10);
+        mem.step_wait();
+        mem.step_wait();
+        assert_eq!(mem.active_count(), 10, "nothing before the flash");
+        assert!(mem.can_grow(), "the flash is still ahead");
+        mem.step_wait(); // step 3: the flash
+        assert_eq!(mem.active_count(), 40, "flash_size=0 brings everyone");
+        assert!(!mem.can_grow(), "fleet full");
+    }
+
+    #[test]
+    fn flash_size_caps_the_burst() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::FlashCrowd,
+            initial_active: 0.0,
+            join_rate: 0.0,
+            drop_rate: 0.0,
+            flash_step: 1,
+            flash_size: 5,
+            ..Default::default()
+        };
+        let mut mem = Membership::new(cfg, 12, 9);
+        assert_eq!(mem.active_count(), 0);
+        mem.step_wait();
+        assert_eq!(mem.active_count(), 5);
+    }
+
+    #[test]
+    fn diurnal_tracks_the_sinusoid_target() {
+        let cfg = ChurnConfig {
+            kind: ChurnKind::Diurnal,
+            initial_active: 0.5,
+            period: 8.0,
+            amplitude: 0.5,
+            ..Default::default()
+        };
+        let mut mem = Membership::new(cfg, 40, 11);
+        let mut counts = Vec::new();
+        for _ in 0..8 {
+            mem.step_wait();
+            counts.push(mem.active_count());
+        }
+        // step 2 is the peak (sin = 1), step 6 the trough (sin = -1)
+        assert_eq!(counts[1], 40, "peak: initial 0.5 + amplitude 0.5");
+        assert_eq!(counts[5], 0, "trough: 0.5 - 0.5");
+        assert_eq!(counts[7], 20, "full period returns to the mean");
+        assert!(mem.can_grow(), "the next peak refills the fleet");
+    }
+
+    #[test]
+    fn lifecycle_events_alternate_per_device() {
+        let mut mem = Membership::new(poisson_cfg(), 12, 13);
+        for _ in 0..50 {
+            mem.begin_round();
+            mem.finalize_round();
+        }
+        let mut state: Vec<Option<ChurnEventKind>> = vec![None; 12];
+        for e in mem.events() {
+            match (state[e.device], e.kind) {
+                (None, ChurnEventKind::Join) => {}
+                (Some(ChurnEventKind::Join), ChurnEventKind::Drop) => {}
+                (Some(ChurnEventKind::Drop), ChurnEventKind::Join) => {}
+                (prev, kind) => panic!("illegal lifecycle for {}: {prev:?} → {kind:?}", e.device),
+            }
+            state[e.device] = Some(e.kind);
+        }
+        // the final event state must agree with the active flags
+        for i in 0..12 {
+            let active_by_events = state[i] == Some(ChurnEventKind::Join);
+            assert_eq!(active_by_events, mem.is_active(i), "device {i}");
+        }
+    }
+
+    #[test]
+    fn can_grow_reports_wedged_schedules() {
+        let mut cfg = poisson_cfg();
+        cfg.join_rate = 0.0;
+        let mem = Membership::new(cfg, 10, 1);
+        assert!(!mem.can_grow(), "no joins can ever come");
+        let mut cfg = poisson_cfg();
+        cfg.initial_active = 1.0;
+        let mem = Membership::new(cfg, 10, 1);
+        assert!(!mem.can_grow(), "full fleet has no room");
+    }
+
+    #[test]
+    fn config_validates() {
+        assert!(ChurnConfig::default().validate().is_ok());
+        let bad = ChurnConfig { min_clients: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig { wait_s: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig { join_rate: -1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig { initial_active: 1.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig { amplitude: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = ChurnConfig { period: 1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn kind_labels_roundtrip_through_parse() {
+        for k in
+            [ChurnKind::None, ChurnKind::Poisson, ChurnKind::FlashCrowd, ChurnKind::Diurnal]
+        {
+            assert_eq!(ChurnKind::parse(k.label()).unwrap(), k);
+        }
+        assert!(ChurnKind::parse("psychic").is_err());
+    }
+
+    #[test]
+    fn phase_labels_are_snake_case() {
+        assert_eq!(Phase::WaitingForMembers.label(), "waiting_for_members");
+        assert_eq!(Phase::Warmup.label(), "warmup");
+        assert_eq!(Phase::RoundTrain.label(), "round_train");
+        assert_eq!(Phase::Aggregate.label(), "aggregate");
+    }
+}

@@ -23,6 +23,13 @@ use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
 /// One mobile device participating in FL.
+///
+/// Devices persist for the lifetime of the system even when churn
+/// ([`crate::coordinator::Membership`]) marks them inactive: a dropped
+/// device keeps this exact object — its shard, its batch-RNG cursor, its
+/// codec residual — so a later rejoin deterministically resumes where the
+/// device left off (the "rejoin recovers its shard" contract of
+/// DESIGN.md §11). Membership gates *selection*, not existence.
 pub struct Device {
     /// Device index in the fleet (stable across rounds).
     pub id: usize,

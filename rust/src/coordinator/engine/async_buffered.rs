@@ -28,8 +28,8 @@
 //! devices still in flight keep their (now stale) update in the buffer.
 
 use super::{
-    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
-    wire_metrics, EngineKind, RoundEngine,
+    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
+    weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -139,6 +139,7 @@ impl RoundEngine for AsyncBuffered {
             let delay = RoundDelay::from_total(started_r_max, started_tcp_max, v);
             let (t_cm, t_cp) = (delay.t_cm, delay.t_cp);
             let vt = sys.clock.advance(delay);
+            let (phase, fleet_size, joins, drops) = churn_columns(sys);
             return Ok(RoundRecord {
                 round: round_no,
                 virtual_time: vt,
@@ -157,6 +158,10 @@ impl RoundEngine for AsyncBuffered {
                 plan_b: sys.batch,
                 plan_theta: sys.current_theta(),
                 est_t_cm: f64::NAN, // filled by the coordinator's controller hook
+                phase,
+                fleet_size,
+                joins,
+                drops,
             });
         }
 
@@ -217,6 +222,7 @@ impl RoundEngine for AsyncBuffered {
             taken.len(),
         );
 
+        let (phase, fleet_size, joins, drops) = churn_columns(sys);
         Ok(RoundRecord {
             round: round_no,
             virtual_time: vt,
@@ -235,6 +241,10 @@ impl RoundEngine for AsyncBuffered {
             plan_b: sys.batch,
             plan_theta: sys.current_theta(),
             est_t_cm: f64::NAN, // filled by the coordinator's controller hook
+            phase,
+            fleet_size,
+            joins,
+            drops,
         })
     }
 }

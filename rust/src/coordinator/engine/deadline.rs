@@ -15,8 +15,8 @@
 //! by `rust/tests/integration.rs::engine_parity_deadline_generous`).
 
 use super::{
-    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
-    wire_metrics, EngineKind, RoundEngine,
+    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
+    weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -136,6 +136,7 @@ impl RoundEngine for DeadlineSync {
 
         push_energy(sys, &cohort, &up.times, bits_per_sample);
 
+        let (phase, fleet_size, joins, drops) = churn_columns(sys);
         Ok(RoundRecord {
             round: round_no,
             virtual_time: vt,
@@ -154,6 +155,10 @@ impl RoundEngine for DeadlineSync {
             plan_b: sys.batch,
             plan_theta: sys.current_theta(),
             est_t_cm: f64::NAN, // filled by the coordinator's controller hook
+            phase,
+            fleet_size,
+            joins,
+            drops,
         })
     }
 }

@@ -189,13 +189,32 @@ pub(crate) struct UplinkDraw {
     pub delivered: Vec<bool>,
 }
 
-/// Client selection (paper: full participation = `Selection::All`). Link
-/// mean gains are frozen per run, so the fading-free rates the selector
-/// ranks by come from [`crate::wireless::Channel`]'s cache — no
-/// fleet-sized allocation per round.
+/// Client selection (paper: full participation = `Selection::All`) over
+/// the *live* membership view — a dropped device cannot be drafted until
+/// it rejoins; a device drawn to die mid-round is still in the view (it
+/// starts the round, then loses its uplink). Link mean gains are frozen
+/// per run, so the fading-free rates the selector ranks by come from
+/// [`crate::wireless::Channel`]'s cache — no fleet-sized allocation per
+/// round.
 pub(crate) fn pick_cohort(sys: &mut FlSystem) -> Vec<usize> {
-    let FlSystem { selector, channel, devices, .. } = sys;
-    selector.pick(devices.len(), channel.mean_rates())
+    let FlSystem { selector, channel, membership, .. } = sys;
+    selector.pick_active(membership.active_ids(), channel.mean_rates())
+}
+
+/// The per-round churn columns every engine stamps into its record
+/// (DESIGN.md §11): the membership view's size at round start (mid-round
+/// deaths still counted — they worked), this round's joins, and its
+/// mid-round deaths. The `phase` placeholder is `"round_train"`; the
+/// coordinator's `Aggregate` arm overwrites it with the phase the tick
+/// actually entered at (visible re-gating). One shared definition so the
+/// three engines cannot drift on the semantics.
+pub(crate) fn churn_columns(sys: &FlSystem) -> (&'static str, usize, usize, usize) {
+    (
+        crate::coordinator::Phase::RoundTrain.label(),
+        sys.membership.active_count(),
+        sys.membership.round_joins(),
+        sys.membership.round_drops(),
+    )
 }
 
 /// Local computation over a cohort (Algorithm 1 step 3). When the
@@ -322,7 +341,7 @@ pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
 pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
     sys.channel.step_drift();
     let spec_bits = sys.codec.nominal_bits(&sys.spec) * sys.cfg.compression;
-    let draw = if sys.cfg.outage_prob > 0.0 {
+    let mut draw = if sys.cfg.outage_prob > 0.0 {
         let (times, _, delivered) =
             sys.channel
                 .round_with_outage(spec_bits, sys.cfg.outage_prob, sys.cfg.max_retries);
@@ -332,7 +351,21 @@ pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
         let n = times.len();
         UplinkDraw { times, delivered: vec![true; n] }
     };
-    sys.obs_t_cm = draw.times.iter().copied().fold(0.0, f64::max);
+    // Mid-round deaths (DESIGN.md §11): the dying device trained and
+    // transmitted, but its update never lands — same downstream path as
+    // an outage. The draw itself is untouched, so the channel's RNG
+    // stream is identical with and without churn.
+    if sys.membership.enabled() {
+        for (i, d) in draw.delivered.iter_mut().enumerate() {
+            if sys.membership.dropping_mid_round(i) {
+                *d = false;
+            }
+        }
+    }
+    // Realized uplink max over the *live* fleet (the whole fleet when
+    // churn is off — identical fold to the pre-churn coordinator).
+    sys.obs_t_cm =
+        sys.membership.active_ids().iter().map(|&i| draw.times[i]).fold(0.0, f64::max);
     Ok(draw)
 }
 

@@ -9,8 +9,8 @@
 //! `rust/tests/native_backend.rs::parallel_fanout_is_bit_identical_to_sequential`).
 
 use super::{
-    fold_update, local_computation, pick_cohort, push_energy, uplink_phase, weighted_loss,
-    wire_metrics, EngineKind, RoundEngine,
+    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
+    weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -85,6 +85,7 @@ impl RoundEngine for SyncFedAvg {
         // 5. energy ledger (extension; pure accounting).
         push_energy(sys, &cohort, &up.times, bits_per_sample);
 
+        let (phase, fleet_size, joins, drops) = churn_columns(sys);
         Ok(RoundRecord {
             round: round_no,
             virtual_time: vt,
@@ -103,6 +104,10 @@ impl RoundEngine for SyncFedAvg {
             plan_b: sys.batch,
             plan_theta: sys.current_theta(),
             est_t_cm: f64::NAN, // filled by the coordinator's controller hook
+            phase,
+            fleet_size,
+            joins,
+            drops,
         })
     }
 }

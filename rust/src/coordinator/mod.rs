@@ -29,7 +29,16 @@
 //! round — the loop that keeps (b*, θ*) honest while the channel drifts
 //! (`[drift]` — DESIGN.md §10). `replan_every = 0` (default) keeps the
 //! static round-0 plan, byte-identical to the pre-controller system.
+//!
+//! The coordinator itself is a tick-driven phase machine over an
+//! *open-world* fleet (`[churn]` — DESIGN.md §11):
+//! `WaitingForMembers → Warmup → RoundTrain → Aggregate`, with a seeded
+//! [`Membership`] view devices join, drop, and rejoin through. Every
+//! engine consumes the live view; `churn.kind = none` (default) keeps
+//! the closed world, byte-identical to the pre-churn system.
 
+/// Open-world membership: the phase machine's churn schedule.
+pub mod churn;
 /// One simulated edge device (shard, batching RNG, local SGD).
 pub mod device;
 /// Pluggable round engines (DESIGN.md §5).
@@ -37,6 +46,7 @@ pub mod engine;
 /// Partial-participation client-selection policies.
 pub mod selection;
 
+pub use churn::{ChurnConfig, ChurnEvent, ChurnEventKind, ChurnKind, Membership, Phase};
 pub use device::Device;
 pub use engine::{EngineConfig, EngineKind, RoundEngine};
 pub use selection::{Selection, Selector};
@@ -118,9 +128,33 @@ pub struct FlSystem {
     /// real-data drop-in whose test set has different dims can't skew
     /// the re-planned operating point.
     pub(crate) train_bits_per_sample: f64,
+    /// The live membership view the engines select cohorts from
+    /// (`[churn]`; with `churn.kind = none` every device is active
+    /// forever and the view is inert).
+    pub membership: Membership,
+    /// The phase the next [`FlSystem::tick`] enters at. Starts at
+    /// `WaitingForMembers` under churn (the gate is real) and at
+    /// `RoundTrain` in the closed world (the gate is statically
+    /// satisfied — and round records keep their `"round_train"` label).
+    phase: Phase,
     /// The round engine (`Option` only so [`FlSystem::round`] can lend
     /// `self` to it mutably; always `Some` between calls).
     engine: Option<Box<dyn RoundEngine>>,
+}
+
+/// What one [`FlSystem::tick`] did (DESIGN.md §11). A tick always makes
+/// progress: it either produced a round record or advanced virtual time
+/// waiting for the fleet — never neither.
+#[derive(Clone, Debug)]
+pub struct TickOutcome {
+    /// The phase the tick entered at. A record produced by a tick that
+    /// entered at `WaitingForMembers`/`Warmup` is a round that had to
+    /// re-gate first (the record's `phase` column says so).
+    pub phase_entered: Phase,
+    /// The completed round's record, when the tick reached `Aggregate`.
+    pub record: Option<RoundRecord>,
+    /// Virtual seconds spent waiting (gate + warmup) during this tick.
+    pub waited_s: f64,
 }
 
 /// Outcome snapshot of a completed run.
@@ -290,6 +324,12 @@ impl FlSystem {
         if cfg.wireless.drift.enabled() {
             log.set_meta("drift_enabled", Json::Bool(true));
         }
+        // Churn-off runs carry no churn metadata at all, mirroring the
+        // controller convention: absence of keys pins the no-op refactor.
+        if cfg.churn.enabled() {
+            log.set_meta("churn_kind", Json::str(cfg.churn.kind.label()));
+            log.set_meta("churn_min_clients", Json::Num(cfg.churn.min_clients as f64));
+        }
         log.set_meta("update_bits_dense", Json::Num(spec.update_bits()));
         log.set_meta("update_bits_encoded", Json::Num(update_bits));
         log.set_meta("policy", Json::str(cfg.policy.label()));
@@ -313,6 +353,9 @@ impl FlSystem {
         );
 
         let selector = Selector::new(cfg.selection.clone(), cfg.seed ^ 0x5E1);
+        let membership = Membership::new(cfg.churn.clone(), cfg.devices, cfg.seed ^ 0xC42B);
+        let phase =
+            if membership.enabled() { Phase::WaitingForMembers } else { Phase::RoundTrain };
         let agg = FedAccumulator::zeros_like(&global);
         Ok(FlSystem {
             cfg,
@@ -337,6 +380,8 @@ impl FlSystem {
             controller,
             obs_t_cm: f64::NAN,
             train_bits_per_sample: bits_per_sample,
+            membership,
+            phase,
             engine: Some(engine),
         })
     }
@@ -352,20 +397,125 @@ impl FlSystem {
         self.resolved.plan.as_ref().map_or(f64::NAN, |p| p.theta)
     }
 
-    /// Execute one aggregation step of the configured [`RoundEngine`]
-    /// (one synchronous round for the sync engines, one buffer flush for
-    /// the async one), then run the online-controller hook: fold the
-    /// realized delays into the estimators and, at the configured
-    /// cadence, adopt a re-planned (b*, θ*) for the next round. Returns
-    /// the record.
+    /// The phase the next [`FlSystem::tick`] enters at.
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Advance the coordinator's phase machine by one tick (DESIGN.md
+    /// §11). Exactly one of two things happens:
+    ///
+    /// * **A round completes** — the tick reached `RoundTrain`, ran one
+    ///   aggregation step of the configured [`RoundEngine`] over the live
+    ///   membership view, then did `Aggregate` work in-tick (controller
+    ///   hook, mid-round-death commit, re-gate check). `record` is `Some`.
+    /// * **The fleet isn't ready** — below `min_clients` (or paying
+    ///   `warmup_s` that churn then undid): the clock waits `wait_s` (or
+    ///   `warmup_s`), one churn step runs, and `record` is `None`.
+    ///
+    /// Either way virtual time or the training state advances, so the
+    /// machine cannot wedge silently; a schedule that can never reach
+    /// `min_clients` again is an error, not a hang.
+    pub fn tick(&mut self) -> anyhow::Result<TickOutcome> {
+        let entered = self.phase;
+        let mut waited_s = 0.0;
+        let mut pending: Option<RoundRecord> = None;
+        loop {
+            match self.phase {
+                Phase::WaitingForMembers => {
+                    if self.membership.active_count() >= self.membership.min_clients() {
+                        self.phase = Phase::Warmup;
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        self.membership.can_grow(),
+                        "coordinator wedged: {} active < min_clients {} and the {} churn \
+                         schedule can produce no further joins",
+                        self.membership.active_count(),
+                        self.membership.min_clients(),
+                        self.membership.config().kind.label()
+                    );
+                    let w = self.membership.config().wait_s;
+                    self.clock.wait(w);
+                    waited_s += w;
+                    self.membership.step_wait();
+                    return Ok(TickOutcome { phase_entered: entered, record: None, waited_s });
+                }
+                Phase::Warmup => {
+                    let w = self.membership.config().warmup_s;
+                    if w > 0.0 {
+                        self.clock.wait(w);
+                        waited_s += w;
+                        self.membership.step_wait();
+                        if self.membership.active_count() < self.membership.min_clients() {
+                            // churn during warmup pulled the gate back open
+                            self.phase = Phase::WaitingForMembers;
+                            return Ok(TickOutcome {
+                                phase_entered: entered,
+                                record: None,
+                                waited_s,
+                            });
+                        }
+                    }
+                    self.phase = Phase::RoundTrain;
+                }
+                Phase::RoundTrain => {
+                    // Round-start churn step: joins land now (arrivals
+                    // participate immediately), drops become mid-round
+                    // deaths the engines turn into lost uplinks.
+                    self.membership.begin_round();
+                    self.obs_t_cm = f64::NAN;
+                    let mut engine = self.engine.take().expect("engine present between rounds");
+                    let result = engine.round(self);
+                    self.engine = Some(engine);
+                    pending = Some(result?);
+                    self.phase = Phase::Aggregate;
+                }
+                Phase::Aggregate => {
+                    let mut rec = pending.take().expect("Aggregate follows RoundTrain in-tick");
+                    self.observe_and_replan(&mut rec)?;
+                    rec.phase = entered.label();
+                    self.membership.finalize_round();
+                    self.phase =
+                        if self.membership.active_count() >= self.membership.min_clients() {
+                            Phase::RoundTrain
+                        } else {
+                            Phase::WaitingForMembers
+                        };
+                    return Ok(TickOutcome {
+                        phase_entered: entered,
+                        record: Some(rec),
+                        waited_s,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Tick the phase machine until one round completes (one synchronous
+    /// round for the sync engines, one buffer flush for the async one) —
+    /// gate/warmup waits included — then return its record. With churn
+    /// off this is exactly one engine round plus the controller hook,
+    /// byte-identical to the pre-churn coordinator.
     pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
-        self.obs_t_cm = f64::NAN;
-        let mut engine = self.engine.take().expect("engine present between rounds");
-        let result = engine.round(self);
-        self.engine = Some(engine);
-        let mut rec = result?;
-        self.observe_and_replan(&mut rec)?;
-        Ok(rec)
+        // Generous backstop for pathological-but-growable schedules (the
+        // property tests tick through deep troughs); a healthy gate
+        // clears in a handful of waits.
+        const MAX_RECORDLESS_TICKS: usize = 100_000;
+        let mut recordless = 0usize;
+        loop {
+            let out = self.tick()?;
+            if let Some(rec) = out.record {
+                return Ok(rec);
+            }
+            recordless += 1;
+            anyhow::ensure!(
+                recordless < MAX_RECORDLESS_TICKS,
+                "no round after {recordless} gate/warmup ticks ({} active, min_clients {})",
+                self.membership.active_count(),
+                self.membership.min_clients()
+            );
+        }
     }
 
     /// The controller hook run after every round (DESIGN.md §10): observe
@@ -377,7 +527,13 @@ impl FlSystem {
         let Some(ctl) = self.controller.as_mut() else {
             return Ok(());
         };
-        let t_cps = self.fleet.bottleneck_seconds_per_sample(self.train_bits_per_sample);
+        // The estimators track the *live* fleet: the bottleneck over the
+        // currently-active devices and their count M. Identical to the
+        // whole-fleet quantities whenever churn is off.
+        let active = self.membership.active_ids();
+        let t_cps =
+            self.fleet.bottleneck_seconds_per_sample_of(active, self.train_bits_per_sample);
+        ctl.set_fleet_size(active.len());
         ctl.observe(&crate::defl_opt::RoundObservation {
             t_cm: self.obs_t_cm,
             t_cp_per_sample: t_cps,

@@ -66,27 +66,48 @@ impl Selector {
         Selector { policy, rng: Pcg32::new(seed, 0x5E1), cursor: 0 }
     }
 
-    /// Pick this round's cohort (sorted device indices).
+    /// Pick this round's cohort (sorted device indices) from a closed
+    /// fleet of `m` devices — shorthand for [`Self::pick_active`] over
+    /// `0..m`.
     ///
     /// `mean_rates` are the devices' expected uplink rates (used by
     /// FastestK; ignored otherwise). Length = M.
     pub fn pick(&mut self, m: usize, mean_rates: &[f64]) -> Vec<usize> {
         assert!(m > 0);
-        let k = self.policy.cohort_size(m);
+        let everyone: Vec<usize> = (0..m).collect();
+        self.pick_active(&everyone, mean_rates)
+    }
+
+    /// Pick this round's cohort (sorted device ids) from the live
+    /// membership view `active` (sorted absolute device ids — what
+    /// `Membership::active_ids` yields). `mean_rates` is indexed by
+    /// absolute device id (fleet-sized, as `Channel::mean_rates`
+    /// returns it). When `active` is the whole fleet this consumes the
+    /// RNG/cursor identically to the closed-world [`Self::pick`], so
+    /// churn-off runs are byte-identical.
+    pub fn pick_active(&mut self, active: &[usize], mean_rates: &[f64]) -> Vec<usize> {
+        assert!(!active.is_empty(), "cohort selection over an empty fleet");
+        let a = active.len();
+        let k = self.policy.cohort_size(a);
         let mut cohort = match &self.policy {
-            Selection::All => (0..m).collect::<Vec<_>>(),
-            Selection::RandomK(_) => self.rng.sample_indices(m, k),
+            Selection::All => active.to_vec(),
+            Selection::RandomK(_) => {
+                self.rng.sample_indices(a, k).iter().map(|&p| active[p]).collect()
+            }
             Selection::FastestK(_) => {
-                assert_eq!(mean_rates.len(), m, "rates required for FastestK");
-                let mut idx: Vec<usize> = (0..m).collect();
+                let max_id = *active.iter().max().unwrap();
+                assert!(max_id < mean_rates.len(), "rates required for FastestK");
+                let mut idx: Vec<usize> = active.to_vec();
                 idx.sort_by(|&a, &b| mean_rates[b].partial_cmp(&mean_rates[a]).unwrap());
                 idx.truncate(k);
                 idx
             }
             Selection::RoundRobin(_) => {
-                let start = self.cursor;
-                self.cursor = (self.cursor + k) % m;
-                (0..k).map(|i| (start + i) % m).collect()
+                // the cursor survives fleet-size changes: re-anchor it
+                // into the live view, then rotate as before
+                let start = self.cursor % a;
+                self.cursor = (start + k) % a;
+                (0..k).map(|i| active[(start + i) % a]).collect()
             }
         };
         cohort.sort_unstable();
@@ -156,6 +177,72 @@ mod tests {
         assert_eq!(Selection::parse("all", 0).unwrap(), Selection::All);
         assert_eq!(Selection::parse("random", 3).unwrap(), Selection::RandomK(3));
         assert!(Selection::parse("psychic", 3).is_err());
+    }
+
+    #[test]
+    fn pick_is_pick_active_over_everyone() {
+        for policy in [
+            Selection::All,
+            Selection::RandomK(3),
+            Selection::FastestK(3),
+            Selection::RoundRobin(3),
+        ] {
+            let rates: Vec<f64> = (0..8).map(|i| (i * 7 % 5) as f64 + 1.0).collect();
+            let mut closed = Selector::new(policy.clone(), 42);
+            let mut open = Selector::new(policy, 42);
+            let everyone: Vec<usize> = (0..8).collect();
+            for _ in 0..6 {
+                assert_eq!(closed.pick(8, &rates), open.pick_active(&everyone, &rates));
+            }
+        }
+    }
+
+    #[test]
+    fn pick_active_stays_inside_the_active_set() {
+        let active = vec![1, 4, 5, 9];
+        let rates: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        for policy in [
+            Selection::All,
+            Selection::RandomK(2),
+            Selection::FastestK(2),
+            Selection::RoundRobin(2),
+        ] {
+            let mut s = Selector::new(policy, 7);
+            for _ in 0..8 {
+                let c = s.pick_active(&active, &rates);
+                assert!(!c.is_empty());
+                assert!(c.iter().all(|i| active.contains(i)), "{c:?}");
+                assert!(c.windows(2).all(|w| w[0] < w[1]), "sorted, distinct: {c:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fastest_k_on_active_view_uses_absolute_rates() {
+        let mut s = Selector::new(Selection::FastestK(2), 3);
+        // device 1 is fastest overall but inactive; 9 and 4 lead the rest
+        let rates = [1.0, 99.0, 2.0, 3.0, 8.0, 5.0, 1.0, 1.0, 1.0, 9.0];
+        assert_eq!(s.pick_active(&[0, 4, 5, 9], &rates), vec![4, 9]);
+    }
+
+    #[test]
+    fn round_robin_survives_fleet_shrink() {
+        let mut s = Selector::new(Selection::RoundRobin(2), 4);
+        let full: Vec<usize> = (0..6).collect();
+        s.pick_active(&full, &[]); // cursor -> 2
+        s.pick_active(&full, &[]); // cursor -> 4
+        // fleet shrinks to 3: the cursor re-anchors instead of indexing
+        // out of range, and coverage keeps rotating
+        let small = vec![0, 2, 5];
+        let c = s.pick_active(&small, &[]);
+        assert_eq!(c, vec![2, 5], "cursor 4 % 3 = 1 -> members 2, 5, sorted");
+        let mut seen: Vec<usize> = c;
+        for _ in 0..2 {
+            seen.extend(s.pick_active(&small, &[]));
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, small, "rotation still covers the active set");
     }
 
     #[test]

@@ -85,7 +85,9 @@ pub struct RoundObservation {
     /// spent on retries included.
     pub t_cm: f64,
     /// Measured bottleneck `G_m·bits/f_m` seconds-per-sample over the
-    /// fleet (constraint 17's slowest device; tracks post-build faults).
+    /// *live* fleet — under churn, the slowest currently-active device
+    /// (constraint 17), so the estimators track the devices that will
+    /// actually work next round.
     pub t_cp_per_sample: f64,
     /// The round's weighted mean training loss (the loss-trajectory
     /// input of the guardrails).
@@ -161,6 +163,16 @@ impl Controller {
     /// The plan currently in force.
     pub fn plan(&self) -> &Plan {
         &self.plan
+    }
+
+    /// Point the re-planner at the live (churned) fleet size: eq. (29)'s
+    /// M is the count of devices that will actually talk and work next
+    /// round, not the build-time fleet. A no-op while M is unchanged —
+    /// in particular on every churn-off run.
+    pub fn set_fleet_size(&mut self, m: usize) {
+        if m > 0 {
+            self.base.m = m;
+        }
     }
 
     /// Re-plans adopted so far (deadband skips don't count).

@@ -2,9 +2,10 @@
 //! discrete search over the same feasible set, the round-engine
 //! comparison (sync vs deadline vs async-buffered on one straggling
 //! fleet), the compression sweep (update codecs at qbits ∈ {4, 8},
-//! k_ratio ∈ {0.01, 0.1, 1.0}), and the static-vs-adaptive controller
-//! sweep under channel drift — DESIGN.md §6/§9/§10, EXPERIMENTS.md
-//! §ablation/§codec/§controller.
+//! k_ratio ∈ {0.01, 0.1, 1.0}), the static-vs-adaptive controller
+//! sweep under channel drift, and the open-world churn sweep (closed
+//! world vs each `[churn]` schedule on the same seed) — DESIGN.md
+//! §6/§9/§10/§11, EXPERIMENTS.md §ablation/§codec/§controller/§churn.
 //!
 //! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
 //! point of the relaxed objective (18); the exact search improves the
@@ -24,7 +25,7 @@ use crate::util::json::Json;
 /// bound the relaxation is missing).
 pub const CAPS: [usize; 3] = [32, 64, 256];
 
-/// Run all four ablation parts and write `results/ablation.json`.
+/// Run all five ablation parts and write `results/ablation.json`.
 pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     let mut probe_cfg = ExperimentConfig::default();
     opts.apply(&mut probe_cfg);
@@ -108,6 +109,13 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     );
     println!("{}", ctl_table.render());
 
+    let (churn_table, churn_rows, churn_delta_pct) = churn_sweep(opts)?;
+    println!(
+        "Ablation — closed world vs open-world churn schedules \
+         (the closed world saves {churn_delta_pct:.1}% overall time vs Poisson churn)"
+    );
+    println!("{}", churn_table.render());
+
     let doc = Json::obj(vec![
         ("figure", Json::str("ablation")),
         ("t_cm", Json::Num(t_cm)),
@@ -118,6 +126,8 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
         ("codecs", Json::Arr(codec_rows)),
         ("controller", Json::Arr(ctl_rows)),
         ("controller_delta_pct", Json::Num(ctl_delta_pct)),
+        ("churn", Json::Arr(churn_rows)),
+        ("churn_delta_pct", Json::Num(churn_delta_pct)),
     ]);
     let path = write_result(opts, "ablation", &doc)?;
     println!("wrote {path}");
@@ -373,4 +383,125 @@ fn controller_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
         ]));
     }
     Ok((table, rows, reduction_pct(totals[1], totals[0])))
+}
+
+/// The shared open-world knobs every churned arm of the sweep uses, so
+/// the schedules differ only in `kind`.
+fn churn_knobs(cfg: &mut ExperimentConfig) {
+    cfg.churn.initial_active = 0.7;
+    cfg.churn.min_clients = 2;
+    cfg.churn.join_rate = 0.4;
+    cfg.churn.drop_rate = 0.2;
+    cfg.churn.flash_step = 2;
+    cfg.churn.period = 6.0;
+    cfg.churn.amplitude = 0.3;
+}
+
+/// Closed world vs each `[churn]` schedule on the same seed and the same
+/// straggling fleet, then static vs adaptive controller on a churning
+/// drift scenario (DESIGN.md §11, EXPERIMENTS.md §churn). The sync
+/// engine is the schedule arm: its barrier makes mid-round deaths
+/// visible as lost uplinks (`participants = fleet_size − drops`), and
+/// the gate's `clock.wait` calls show up as "waited 𝒯" — open-world
+/// bookkeeping the closed world never pays. The controller pair reruns
+/// the §10 drift scenario under Poisson churn, so the EWMA estimators
+/// observe a fleet that is genuinely non-stationary in *membership*,
+/// not just in channel. Returns the table, the JSON rows, and the
+/// closed-world-vs-Poisson overall-time reduction percentage.
+fn churn_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
+    use crate::coordinator::ChurnKind;
+    let mut table = Table::new(&[
+        "arm", "rounds", "total 𝒯 (s)", "waited 𝒯 (s)", "mean fleet", "joins",
+        "mid-round deaths", "final loss",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut totals = [0f64; 2];
+
+    let record = |table: &mut Table,
+                  rows: &mut Vec<Json>,
+                  arm: String,
+                  extra: Vec<(&'static str, Json)>,
+                  sys: &FlSystem|
+     -> f64 {
+        let log = &sys.log;
+        let n = log.rounds.len().max(1) as f64;
+        let mean_fleet = log.rounds.iter().map(|r| r.fleet_size as f64).sum::<f64>() / n;
+        let joins: usize = log.rounds.iter().map(|r| r.joins).sum();
+        let deaths: usize = log.rounds.iter().map(|r| r.drops).sum();
+        let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
+        table.row(&[
+            arm.clone(),
+            log.rounds.len().to_string(),
+            format!("{:.2}", log.overall_time()),
+            format!("{:.2}", sys.clock.waited()),
+            format!("{mean_fleet:.2}"),
+            joins.to_string(),
+            deaths.to_string(),
+            format!("{final_loss:.4}"),
+        ]);
+        let mut row = vec![
+            ("arm", Json::str(&arm)),
+            ("rounds", Json::Num(log.rounds.len() as f64)),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("waited_time", Json::Num(sys.clock.waited())),
+            ("mean_fleet_size", Json::Num(mean_fleet)),
+            ("joins", Json::Num(joins as f64)),
+            ("mid_round_deaths", Json::Num(deaths as f64)),
+            ("final_train_loss", Json::Num(final_loss)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+        ];
+        row.extend(extra);
+        rows.push(Json::obj(row));
+        log.overall_time()
+    };
+
+    // part 5a: one closed-world baseline, three open-world schedules.
+    for kind in [ChurnKind::None, ChurnKind::Poisson, ChurnKind::FlashCrowd, ChurnKind::Diurnal] {
+        let mut cfg = engine_cfg(opts, EngineKind::Sync);
+        cfg.name = format!("ablation-churn-{}", kind.label());
+        cfg.churn.kind = kind;
+        if kind != ChurnKind::None {
+            churn_knobs(&mut cfg);
+        }
+        let mut sys = FlSystem::build(cfg)?;
+        sys.run()?;
+        let total = record(
+            &mut table,
+            &mut rows,
+            kind.label().into(),
+            vec![("churn", Json::str(kind.label()))],
+            &sys,
+        );
+        match kind {
+            ChurnKind::None => totals[0] = total,
+            ChurnKind::Poisson => totals[1] = total,
+            _ => {}
+        }
+    }
+
+    // part 5b: the §10 static-vs-adaptive drift pair, rerun on a fleet
+    // that churns while the channel drifts (the "controller under
+    // churn" arm). Same per-arm cadence rules as controller_sweep.
+    let adaptive_cadence = opts.controller.unwrap_or(1).max(1);
+    for (mode, replan_every) in [("static", 0usize), ("adaptive", adaptive_cadence)] {
+        let mut cfg = controller_cfg(opts, replan_every);
+        cfg.name = format!("ablation-churn-ctl-{mode}");
+        cfg.churn.kind = ChurnKind::Poisson;
+        churn_knobs(&mut cfg);
+        let mut sys = FlSystem::build(cfg)?;
+        sys.run()?;
+        record(
+            &mut table,
+            &mut rows,
+            format!("poisson ctl/{mode}"),
+            vec![
+                ("churn", Json::str("poisson")),
+                ("controller", Json::str(mode)),
+                ("replan_every", Json::Num(replan_every as f64)),
+            ],
+            &sys,
+        );
+    }
+
+    Ok((table, rows, reduction_pct(totals[0], totals[1])))
 }

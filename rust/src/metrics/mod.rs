@@ -55,6 +55,17 @@ pub struct RoundRecord {
     /// The online controller's EWMA estimate of T_cm after this round's
     /// observation (NaN while `controller.replan_every = 0`).
     pub est_t_cm: f64,
+    /// Coordinator phase this record was produced from (DESIGN.md §11) —
+    /// `"round_train"` for a round entered directly, `"waiting_for_members"`
+    /// or `"warmup"` when the round had to re-gate first.
+    pub phase: &'static str,
+    /// Active devices at the round's start (mid-round deaths included;
+    /// fleet M with churn off).
+    pub fleet_size: usize,
+    /// Devices that joined (or rejoined) at this round's start.
+    pub joins: usize,
+    /// Devices drawn to die mid-round (they train, their uplink is lost).
+    pub drops: usize,
 }
 
 /// A named experiment run: config echo + round records.
@@ -144,6 +155,10 @@ impl RunLog {
                     ("plan_b", Json::Num(r.plan_b as f64)),
                     ("plan_theta", Json::Num(r.plan_theta)),
                     ("est_t_cm", Json::Num(r.est_t_cm)),
+                    ("phase", Json::str(r.phase)),
+                    ("fleet_size", Json::Num(r.fleet_size as f64)),
+                    ("joins", Json::Num(r.joins as f64)),
+                    ("drops", Json::Num(r.drops as f64)),
                 ])
             })
             .collect();
@@ -165,11 +180,11 @@ impl RunLog {
     /// The round records as CSV (one named column per record field).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm,phase,fleet_size,joins,drops\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -186,7 +201,11 @@ impl RunLog {
                 r.compression_ratio,
                 r.plan_b,
                 r.plan_theta,
-                r.est_t_cm
+                r.est_t_cm,
+                r.phase,
+                r.fleet_size,
+                r.joins,
+                r.drops
             ));
         }
         s
@@ -287,6 +306,10 @@ mod tests {
             plan_b: 32,
             plan_theta: 0.15,
             est_t_cm: 0.094,
+            phase: "round_train",
+            fleet_size: 5,
+            joins: 0,
+            drops: 0,
         }
     }
 
@@ -412,6 +435,48 @@ mod tests {
         assert_eq!(cells[idx("plan_b")], "32");
         assert_eq!(cells[idx("plan_theta")], "0.15");
         assert_eq!(cells[idx("est_t_cm")], "0.094");
+    }
+
+    /// The per-round churn columns (DESIGN.md §11) survive both export
+    /// paths: JSON carries `phase` as a string and the counts as numbers,
+    /// and every CSV row still matches the header width.
+    #[test]
+    fn churn_columns_roundtrip_json_and_csv() {
+        let mut log = RunLog::new("churn");
+        let mut a = rec(1, 1.0, 2.0, 0.5);
+        a.phase = "waiting_for_members";
+        a.fleet_size = 7;
+        a.joins = 3;
+        a.drops = 1;
+        log.push(a);
+        log.push(rec(2, 2.0, 1.5, 0.6)); // closed-world defaults
+
+        let parsed = Json::parse(&log.to_json().to_pretty()).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        let r0 = rounds.idx(0).unwrap();
+        assert_eq!(r0.get("phase").unwrap().as_str(), Some("waiting_for_members"));
+        assert_eq!(r0.get("fleet_size").unwrap().as_f64(), Some(7.0));
+        assert_eq!(r0.get("joins").unwrap().as_f64(), Some(3.0));
+        assert_eq!(r0.get("drops").unwrap().as_f64(), Some(1.0));
+        let r1 = rounds.idx(1).unwrap();
+        assert_eq!(r1.get("phase").unwrap().as_str(), Some("round_train"));
+
+        let csv = log.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        for col in ["phase", "fleet_size", "joins", "drops"] {
+            assert!(header.split(',').any(|h| h == col), "missing column {col}");
+        }
+        let width = header.split(',').count();
+        for (i, row) in lines.enumerate() {
+            assert_eq!(row.split(',').count(), width, "row {i} width");
+        }
+        let cells: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        let idx = |name: &str| header.split(',').position(|h| h == name).unwrap();
+        assert_eq!(cells[idx("phase")], "waiting_for_members");
+        assert_eq!(cells[idx("fleet_size")], "7");
+        assert_eq!(cells[idx("joins")], "3");
+        assert_eq!(cells[idx("drops")], "1");
     }
 
     #[test]

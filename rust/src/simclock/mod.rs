@@ -55,6 +55,7 @@ impl RoundDelay {
 pub struct SimClock {
     now: f64,
     rounds: Vec<RoundDelay>,
+    waited: f64,
 }
 
 impl SimClock {
@@ -72,9 +73,28 @@ impl SimClock {
         self.now
     }
 
+    /// Advance virtual time without pricing a round — the coordinator's
+    /// `WaitingForMembers`/`Warmup` phases (DESIGN.md §11) cost wall time
+    /// on the fleet but are neither communication nor computation, so
+    /// they must not perturb round numbering ([`Self::rounds_elapsed`])
+    /// or the comm/comp [`Self::split`]. Returns the new virtual now.
+    pub fn wait(&mut self, seconds: f64) -> f64 {
+        assert!(seconds.is_finite() && seconds >= 0.0, "bad wait {seconds}");
+        self.now += seconds;
+        self.waited += seconds;
+        crate::util::logging::set_virtual_time(self.now);
+        self.now
+    }
+
     /// Current virtual time 𝒯 so far.
     pub fn now(&self) -> f64 {
         self.now
+    }
+
+    /// Total virtual time spent waiting (gate/warmup), outside any round.
+    /// Invariant: `split().0 + split().1 + waited() == now()`.
+    pub fn waited(&self) -> f64 {
+        self.waited
     }
 
     /// Rounds priced so far.
@@ -157,6 +177,24 @@ mod tests {
         let (cm, cp) = c.split();
         assert!((cm - 1.0).abs() < 1e-12);
         assert!((cm + cp - c.now()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_advances_now_but_not_rounds() {
+        let mut c = SimClock::new();
+        assert_eq!(c.wait(2.5), 2.5);
+        c.advance(RoundDelay { t_cm: 1.0, t_cp: 0.5, local_rounds: 2 });
+        assert_eq!(c.wait(0.5), 5.0);
+        assert_eq!(c.rounds_elapsed(), 1, "waits price no rounds");
+        assert_eq!(c.waited(), 3.0);
+        let (cm, cp) = c.split();
+        assert!((cm + cp + c.waited() - c.now()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad wait")]
+    fn wait_rejects_negative() {
+        SimClock::new().wait(-1.0);
     }
 
     #[test]

@@ -198,6 +198,36 @@ fn parallel_fanout_is_bit_identical_to_sequential() {
     }
 }
 
+/// The churned twin of the parity test above: membership draws come from
+/// one private stream stepped on the coordinator thread, so an open-world
+/// run is as thread-invariant as a closed one (the full-log version lives
+/// in `rust/tests/churn.rs`).
+#[test]
+fn parallel_fanout_stays_bit_identical_under_churn() {
+    let run = |threads: usize| {
+        let mut cfg = native_cfg("nb-par-churn", Policy::Fixed { batch: 16, local_rounds: 3 });
+        cfg.threads = threads;
+        cfg.max_rounds = 4;
+        cfg.set_override("churn.kind=poisson").unwrap();
+        cfg.set_override("churn.initial_active=0.75").unwrap();
+        cfg.set_override("churn.join_rate=0.5").unwrap();
+        cfg.set_override("churn.drop_rate=0.3").unwrap();
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        sys.log.clone()
+    };
+    let seq = run(1);
+    let par = run(4);
+    assert_eq!(seq.rounds.len(), par.rounds.len());
+    for (a, b) in seq.rounds.iter().zip(&par.rounds) {
+        assert_eq!(a.train_loss, b.train_loss, "round {}", a.round);
+        assert_eq!(a.virtual_time, b.virtual_time, "round {}", a.round);
+        assert_eq!(a.fleet_size, b.fleet_size, "round {}", a.round);
+        assert_eq!((a.joins, a.drops), (b.joins, b.drops), "round {}", a.round);
+        assert_eq!(a.phase, b.phase);
+    }
+}
+
 /// DEFL's closed-form plan (b*, θ*) drives a native run: the plan exists,
 /// is feasible, and — native executing any batch size — the system runs
 /// the planned b* exactly (no artifact-ladder clamping).

@@ -4,16 +4,21 @@
 Compares a fresh bench run (``Suite::to_json`` output, uploaded by CI as
 the BENCH_hotpath artifact) against the committed baseline and prints
 GitHub workflow annotations for per-benchmark mean-time regressions
-beyond a threshold. It never fails the build (always exits 0): the CI
+beyond a threshold. It never fails the build on a *comparison*: the CI
 smoke lane runs tiny iteration counts (``DEFL_BENCH_FAST=1``) on shared
 runners, so this is a visibility tool, not a gate — the point is that
 every PR shows its perf trajectory next to its diff.
 
-Degenerate inputs degrade to single informational lines, never to a
-warning wall: a missing/empty/malformed baseline ``results`` array means
-"no trajectory yet" (the fresh numbers are listed once), and an empty
-fresh report means "nothing measured" (no per-benchmark "disappeared"
-annotations).
+Exit codes: 0 means a comparison happened (or there was nothing to
+measure); ``EXIT_NO_BASELINE`` (3) means the fresh report was fine but
+the baseline was missing/empty, so *no comparison happened at all* — a
+distinct code so CI can record the state honestly instead of a green
+check pretending a diff ran. The NO BASELINE path prints a banner and
+the fresh numbers once.
+
+Other degenerate inputs degrade to single informational lines, never to
+a warning wall: an empty fresh report means "nothing measured" (no
+per-benchmark "disappeared" annotations).
 
 Refresh the baseline by copying a trusted run's ``BENCH_hotpath.json``
 artifact over the committed file at the repo root.
@@ -25,6 +30,11 @@ Usage: bench_diff.py BASELINE FRESH [--warn-pct 25]
 import argparse
 import json
 import sys
+
+# The fresh report measured fine but there was no baseline to diff
+# against — no comparison happened. Distinct from 0 so CI can tell
+# "trajectory recorded" apart from "trajectory not started yet".
+EXIT_NO_BASELINE = 3
 
 
 def load_results(path):
@@ -64,12 +74,13 @@ def compare(base, fresh, warn_pct):
         return lines, warnings
     if not base:
         lines.append(
-            f"bench_diff: baseline empty — no comparison; {len(fresh)} fresh benchmarks:"
+            f"bench_diff: NO BASELINE — no comparison ran; {len(fresh)} fresh benchmarks:"
         )
         for name, mean in sorted(fresh.items()):
             lines.append(f"  {name}: mean {mean:.3e}s")
         lines.append(
             "bench_diff: commit a trusted BENCH_hotpath.json to start the trajectory"
+            f" (exit {EXIT_NO_BASELINE})"
         )
         return lines, warnings
 
@@ -94,6 +105,15 @@ def compare(base, fresh, warn_pct):
         f"beyond {warn_pct:.0f}% (warn-only)"
     )
     return lines, warnings
+
+
+def exit_code(base, fresh):
+    """0 when a comparison ran (or nothing was measured), else NO BASELINE.
+
+    Pure companion to ``compare`` — the self-test pins the exit contract
+    without shelling out.
+    """
+    return EXIT_NO_BASELINE if fresh and not base else 0
 
 
 def self_test():
@@ -131,7 +151,14 @@ def self_test():
         assert len(lines) == 1 and "nothing to compare" in lines[0]
         lines, warns = compare({}, {"a": 1.0}, 25.0)
         assert warns == [], "empty baseline is informational"
-        assert any("baseline empty" in ln for ln in lines)
+        assert lines[0].startswith("bench_diff: NO BASELINE"), "banner leads the report"
+        assert any("a: mean" in ln for ln in lines), "fresh numbers still listed once"
+        # the no-baseline state gets its own exit code, distinct from both
+        # success (0) and argparse/IO failure, so CI can record it honestly
+        assert EXIT_NO_BASELINE not in (0, 1, 2)
+        assert exit_code({}, {"a": 1.0}) == EXIT_NO_BASELINE
+        assert exit_code({"a": 1.0}, {"a": 1.0}) == 0, "a real comparison exits 0"
+        assert exit_code({}, {}) == 0, "nothing measured is not the no-baseline state"
 
         # -- compare: the actual diff ---------------------------------
         base = {"a": 1.0, "b": 1.0, "gone": 1.0}
@@ -182,7 +209,7 @@ def main():
         print(f"::warning::{w}")
     for ln in lines:
         print(ln)
-    return 0
+    return exit_code(base, fresh)
 
 
 if __name__ == "__main__":
