@@ -1,18 +1,21 @@
 //! Bench/regeneration target for Fig. 1(a): the ε sweep.
 //!
 //! Prints the paper-style table (analytic closed-form plans; training runs
-//! are exercised by `defl exp fig1a`) and benches the optimizer itself.
+//! are exercised by `defl run --spec specs/fig1a.toml`) and benches the
+//! optimizer itself.
 
 use defl::bench::Suite;
 use defl::defl_opt::{self, PlanInputs};
-use defl::experiments::{fig1a, ExpOpts};
+use defl::experiments::fig1a;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
     // regenerate the figure's series (analytic mode: no training)
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true;
-    opts.out_dir = "results/bench".into();
-    fig1a::run(&opts, true)?;
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true;
+    opts.exp.out_dir = "results/bench".into();
+    opts.analytic_only = true;
+    fig1a::render(&specs::load("fig1a")?, &opts)?;
 
     // bench the solvers the figure is built from
     let mut suite = Suite::new("fig1a: eq.(29) + exact search");

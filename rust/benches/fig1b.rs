@@ -1,14 +1,15 @@
 //! Bench/regeneration target for Fig. 1(b): batch-size sweep (scaled-down
-//! training runs; the full figure comes from `defl exp fig1b`).
+//! training runs; the full figure comes from `defl run --spec specs/fig1b.toml`).
 
-use defl::experiments::{fig1b, ExpOpts};
+use defl::experiments::fig1b;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true; // bench context: smoke scale
-    opts.out_dir = "results/bench".into();
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true; // bench context: smoke scale
+    opts.exp.out_dir = "results/bench".into();
     let t0 = std::time::Instant::now();
-    fig1b::run(&opts)?;
+    fig1b::render(&specs::load("fig1b")?, &opts)?;
     println!("fig1b (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

@@ -1,14 +1,15 @@
 //! Bench/regeneration target for Fig. 1(c): θ sweep (scaled-down training
-//! runs; the full figure comes from `defl exp fig1c`).
+//! runs; the full figure comes from `defl run --spec specs/fig1c.toml`).
 
-use defl::experiments::{fig1c, ExpOpts};
+use defl::experiments::fig1c;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true;
-    opts.out_dir = "results/bench".into();
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true;
+    opts.exp.out_dir = "results/bench".into();
     let t0 = std::time::Instant::now();
-    fig1c::run(&opts)?;
+    fig1c::render(&specs::load("fig1c")?, &opts)?;
     println!("fig1c (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

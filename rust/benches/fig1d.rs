@@ -1,12 +1,13 @@
 //! Bench/regeneration target for Fig. 1(d): rounds H and the
 //! compute/communication split vs θ (fully analytic — fast).
 
-use defl::experiments::{fig1d, ExpOpts};
+use defl::experiments::fig1d;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true;
-    opts.out_dir = "results/bench".into();
-    fig1d::run(&opts)?;
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true;
+    opts.exp.out_dir = "results/bench".into();
+    fig1d::render(&specs::load("fig1d")?, &opts)?;
     Ok(())
 }

@@ -1,14 +1,15 @@
 //! Bench/regeneration target for Fig. 2 (CIFAR-10): DEFL vs FedAvg vs
-//! Rand. Scaled-down; full run: `defl exp fig2 --dataset cifar`.
+//! Rand. Scaled-down; full run: `defl run --spec specs/fig2_cifar.toml`.
 
-use defl::experiments::{fig2, ExpOpts};
+use defl::experiments::fig2;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true;
-    opts.out_dir = "results/bench".into();
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true;
+    opts.exp.out_dir = "results/bench".into();
     let t0 = std::time::Instant::now();
-    fig2::run(&opts, fig2::Which::Cifar)?;
+    fig2::render(&specs::load("fig2_cifar")?, &opts)?;
     println!("fig2-cifar (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

@@ -1,14 +1,16 @@
 //! Bench/regeneration target for Fig. 2 (MNIST): DEFL vs FedAvg vs Rand.
-//! Scaled-down here; the full comparison is `defl exp fig2 --dataset mnist`.
+//! Scaled-down here; the full comparison is
+//! `defl run --spec specs/fig2_mnist.toml`.
 
-use defl::experiments::{fig2, ExpOpts};
+use defl::experiments::fig2;
+use defl::harness::{specs, RunnerOpts};
 
 fn main() -> anyhow::Result<()> {
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = true;
-    opts.out_dir = "results/bench".into();
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = true;
+    opts.exp.out_dir = "results/bench".into();
     let t0 = std::time::Instant::now();
-    fig2::run(&opts, fig2::Which::Mnist)?;
+    fig2::render(&specs::load("fig2_mnist")?, &opts)?;
     println!("fig2-mnist (fast) regenerated in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }

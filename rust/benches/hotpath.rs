@@ -220,6 +220,14 @@ fn main() -> anyhow::Result<()> {
     let idx: Vec<usize> = (0..64).collect();
     suite.bench_units("gather_b64", 64.0, || ds.gather(&idx));
 
+    // --- trial runner (DESIGN.md §12) ----------------------------------
+    // Grid expansion must stay negligible next to the trials it feeds:
+    // ci_matrix is the largest committed spec (36 variants × 6 seeds).
+    let matrix = defl::harness::specs::load("ci_matrix")?;
+    suite.bench_units("trial_runner_expand", 216.0, || matrix.expand(42).unwrap());
+    #[cfg(feature = "native")]
+    trial_runner_benches(&mut suite)?;
+
     // --- native backend steps + whole-round loop (no artifacts needed) --
     #[cfg(feature = "native")]
     native_benches(&mut suite)?;
@@ -232,6 +240,50 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = suite.write_json_env()? {
         eprintln!("wrote {path}");
     }
+    Ok(())
+}
+
+/// One `run_spec` sweep of 100 seeded smoke-scale trials through the
+/// thread pool — the end-to-end cost of `defl run` minus the figure
+/// formatting, sized so per-trial runner overhead (config build, seed
+/// derivation, result marshalling) would show up against the training.
+#[cfg(feature = "native")]
+fn trial_runner_benches(suite: &mut Suite) -> anyhow::Result<()> {
+    use defl::harness::{run_spec, ExperimentSpec, RunnerOpts};
+
+    let spec = ExperimentSpec::from_toml_text(
+        r#"
+name = "bench-100"
+output = "bench_100"
+
+[trials]
+seeds = 50
+base_seed = 7
+
+[base]
+backend.kind = "native"
+dataset.kind = "tiny"
+dataset.train_per_device = 16
+dataset.test_size = 32
+system.devices = 2
+run.max_rounds = 2
+run.eval_every = 2
+policy.kind = "fixed"
+policy.batch = 8
+policy.local_rounds = 2
+
+[[variants]]
+name = "sync"
+engine.kind = "sync"
+
+[[variants]]
+name = "async"
+engine.kind = "async_buffered"
+"#,
+    )?;
+    let mut opts = RunnerOpts::default();
+    opts.write_trials = false; // time the runner, not the filesystem
+    suite.bench_units("trial_runner_100trials", 100.0, || run_spec(&spec, &opts).unwrap());
     Ok(())
 }
 

@@ -1,10 +1,14 @@
 //! TOML-subset parser (substrate; no `serde`/`toml` offline).
 //!
 //! Supports the subset the config system needs: `[section]` /
-//! `[nested.section]` headers, `key = value` with string, integer, float,
-//! boolean and flat-array values, `#` comments, and blank lines. Values
-//! land in the same [`Json`] value model the rest of the system uses, as
-//! one nested object.
+//! `[nested.section]` headers, `[[array.of.tables]]` headers (each
+//! occurrence appends one table to a JSON array at that path — the
+//! experiment-spec `[[variants]]` grid), `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments, and
+//! blank lines. Keys inside an array-of-tables element are flat
+//! (`key = value` only; no sub-tables of an element). Values land in the
+//! same [`Json`] value model the rest of the system uses, as one nested
+//! object.
 
 use crate::util::json::Json;
 use std::collections::BTreeMap;
@@ -30,29 +34,53 @@ fn err(line: usize, msg: impl Into<String>) -> TomlError {
     TomlError { line, msg: msg.into() }
 }
 
+/// Where subsequent `key = value` lines land: a plain (possibly nested)
+/// table, or the most recent element of an array of tables.
+enum Cursor {
+    /// `[a.b]` — keys go into the object at this path (empty = root).
+    Table(Vec<String>),
+    /// `[[a.b]]` — keys go into the last element of the array at this path.
+    ArrayElem(Vec<String>),
+}
+
 /// Parse TOML-lite text into a nested JSON object.
 pub fn parse(text: &str) -> Result<Json, TomlError> {
     let mut root: BTreeMap<String, Json> = BTreeMap::new();
-    let mut section: Vec<String> = Vec::new();
+    let mut cursor = Cursor::Table(Vec::new());
     for (lno, raw) in text.lines().enumerate() {
         let lno = lno + 1;
         let line = strip_comment(raw).trim().to_string();
         if line.is_empty() {
             continue;
         }
+        if let Some(inner) = line.strip_prefix("[[") {
+            let inner = inner
+                .strip_suffix("]]")
+                .ok_or_else(|| err(lno, "unterminated array-of-tables header"))?;
+            let path = parse_header_path(inner).map_err(|m| err(lno, m))?;
+            let (last, parent_path) = path.split_last().expect("header path is non-empty");
+            let parent = ensure_path(&mut root, parent_path).map_err(|m| err(lno, m))?;
+            let entry = parent.entry(last.clone()).or_insert_with(|| Json::Arr(Vec::new()));
+            match entry {
+                Json::Arr(a) => a.push(Json::Obj(BTreeMap::new())),
+                _ => {
+                    return Err(err(
+                        lno,
+                        format!("array of tables {last:?} collides with an existing value"),
+                    ))
+                }
+            }
+            cursor = Cursor::ArrayElem(path);
+            continue;
+        }
         if let Some(inner) = line.strip_prefix('[') {
             let inner = inner
                 .strip_suffix(']')
                 .ok_or_else(|| err(lno, "unterminated section header"))?;
-            if inner.is_empty() {
-                return Err(err(lno, "empty section name"));
-            }
-            section = inner.split('.').map(|s| s.trim().to_string()).collect();
-            if section.iter().any(|s| s.is_empty()) {
-                return Err(err(lno, "empty section path component"));
-            }
+            let section = parse_header_path(inner).map_err(|m| err(lno, m))?;
             // materialize the section (so empty sections still exist)
             ensure_path(&mut root, &section).map_err(|m| err(lno, m))?;
+            cursor = Cursor::Table(section);
             continue;
         }
         let (key, val) = line
@@ -63,12 +91,45 @@ pub fn parse(text: &str) -> Result<Json, TomlError> {
             return Err(err(lno, "empty key"));
         }
         let value = parse_value(val.trim()).map_err(|m| err(lno, m))?;
-        let obj = ensure_path(&mut root, &section).map_err(|m| err(lno, m))?;
+        let obj = cursor_obj(&mut root, &cursor).map_err(|m| err(lno, m))?;
         if obj.insert(key.to_string(), value).is_some() {
             return Err(err(lno, format!("duplicate key {key:?}")));
         }
     }
     Ok(Json::Obj(root))
+}
+
+/// Split a `[a.b.c]` / `[[a.b.c]]` header body into path segments.
+fn parse_header_path(inner: &str) -> Result<Vec<String>, String> {
+    if inner.is_empty() {
+        return Err("empty section name".into());
+    }
+    let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+    if path.iter().any(|s| s.is_empty()) {
+        return Err("empty section path component".into());
+    }
+    Ok(path)
+}
+
+/// Resolve the object the current cursor's `key = value` lines land in.
+fn cursor_obj<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    cursor: &Cursor,
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    match cursor {
+        Cursor::Table(path) => ensure_path(root, path),
+        Cursor::ArrayElem(path) => {
+            let (last, parent_path) = path.split_last().expect("array cursor path non-empty");
+            let parent = ensure_path(root, parent_path)?;
+            match parent.get_mut(last) {
+                Some(Json::Arr(a)) => match a.last_mut() {
+                    Some(Json::Obj(o)) => Ok(o),
+                    _ => Err(format!("array of tables {last:?} lost its table element")),
+                },
+                _ => Err(format!("array of tables {last:?} collides with a value")),
+            }
+        }
+    }
 }
 
 /// Parse a TOML-lite file into the nested JSON shape.
@@ -203,5 +264,52 @@ mod tests {
     #[test]
     fn section_value_collision_rejected() {
         assert!(parse("a = 1\n[a]\nb = 2\n").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_appends_elements() {
+        let j = parse(
+            r#"
+            name = "sweep"
+            [[variants]]
+            name = "a"
+            x = 1
+            [[variants]]
+            name = "b"
+            x = 2
+            "#,
+        )
+        .unwrap();
+        let vs = j.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(vs[1].get("x").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn array_of_tables_nested_path_and_interleaving() {
+        let j = parse("[a]\nk = 1\n[[a.items]]\nv = 1\n[b]\nk = 2\n[[a.items]]\nv = 2\n")
+            .unwrap();
+        let items = j.get("a").unwrap().get("items").unwrap().as_arr().unwrap();
+        assert_eq!(items.len(), 2);
+        assert_eq!(items[1].get("v").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("b").unwrap().get("k").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn array_of_tables_collisions_and_errors() {
+        // a scalar or table at the same path cannot become an array
+        assert!(parse("x = 1\n[[x]]\ny = 2\n").is_err());
+        assert!(parse("[x]\na = 1\n[[x]]\ny = 2\n").is_err());
+        // and an array cannot be re-entered as a plain table
+        assert!(parse("[[x]]\na = 1\n[x]\nb = 2\n").is_err());
+        // malformed headers keep their line numbers
+        let e = parse("ok = 1\n[[broken]\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[[]]\n").is_err());
+        // duplicate keys within one element are rejected
+        assert!(parse("[[v]]\na = 1\na = 2\n").is_err());
+        // ...but the same key in different elements is fine
+        assert!(parse("[[v]]\na = 1\n[[v]]\na = 2\n").is_ok());
     }
 }

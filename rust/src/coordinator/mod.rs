@@ -631,6 +631,14 @@ impl FlSystem {
         }
         outcome.overall_time = self.clock.now();
         outcome.wall_seconds = wall_start.elapsed().as_secs_f64();
+        // End-of-run meta for log-only consumers (the trial runner reads
+        // these instead of holding the FlSystem): total gate-wait time,
+        // and — only when the online controller ran, to keep static runs'
+        // meta byte-identical — how many re-plans it adopted.
+        self.log.set_meta("clock_waited", Json::Num(self.clock.waited()));
+        if let Some(ctl) = &self.controller {
+            self.log.set_meta("controller_replans", Json::Num(ctl.replans() as f64));
+        }
         if let Some(out) = &self.cfg.out {
             self.log.write_json(out)?;
             crate::log_info!("wrote {}", out);

@@ -7,17 +7,27 @@
 //! world vs each `[churn]` schedule on the same seed) — DESIGN.md
 //! §6/§9/§10/§11, EXPERIMENTS.md §ablation/§codec/§controller/§churn.
 //!
+//! Since PR 7 each trained part is a committed spec
+//! (`specs/ablation_*.toml`) run through the trial runner; this module
+//! keeps the analytics the declarative files can't express — the solver
+//! table (closed form vs numeric, no training), the engine sweep's
+//! derived deadline (90% of the sync arm's median round total), and the
+//! per-arm controller-cadence routing (`--controller N` re-parameterizes
+//! the adaptive arm only). [`run_all`] composes all five parts plus the
+//! solver table into the historical combined `results/ablation.json`.
+//!
 //! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
 //! point of the relaxed objective (18); the exact search improves the
 //! *predicted* overall time, generally by riding the batch cap. The
 //! closed form's value is that it lands in the right neighbourhood
 //! (b*≈32, θ*≈0.15 at the paper's operating point) with O(1) cost.
 
-use super::{reduction_pct, write_result, ExpOpts};
-use crate::codec::CodecKind;
-use crate::config::{DatasetKind, ExperimentConfig, Policy};
-use crate::coordinator::{EngineKind, FlSystem};
+use super::{reduction_pct, stamp, write_result, ExpOpts};
+use crate::config::ExperimentConfig;
+use crate::coordinator::FlSystem;
 use crate::defl_opt::{self, PlanInputs};
+use crate::harness::runner::aggregate;
+use crate::harness::{run_spec, ExperimentSpec, RunnerOpts, SweepResult, TrialOutcome};
 use crate::metrics::{RunLog, Table};
 use crate::util::json::Json;
 
@@ -25,10 +35,59 @@ use crate::util::json::Json;
 /// bound the relaxation is missing).
 pub const CAPS: [usize; 3] = [32, 64, 256];
 
-/// Run all five ablation parts and write `results/ablation.json`.
-pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+/// The bundled specs [`run_all`] composes, in print order.
+pub const PART_SPECS: [&str; 5] = [
+    "ablation_engines",
+    "ablation_codecs",
+    "ablation_controller",
+    "ablation_churn",
+    "ablation_churn_ctl",
+];
+
+/// Run a spec restricted to one variant, with optional extra CLI-level
+/// overrides appended (they apply after the spec's own).
+fn run_only(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+    variant: &str,
+    extra: Option<String>,
+) -> anyhow::Result<SweepResult> {
+    let mut o = opts.clone();
+    o.only = Some(variant.to_string());
+    if let Some(e) = extra {
+        o.exp.overrides.push(e);
+    }
+    run_spec(spec, &o)
+}
+
+/// Split the CLI/env override list into (everything else, the last
+/// `controller.replan_every=N` value if any). The controller sweeps
+/// route that knob per arm: it re-parameterizes the *adaptive* arm only,
+/// so the static baseline stays static no matter what the harness-wide
+/// override says.
+fn split_cadence(exp: &ExpOpts) -> anyhow::Result<(ExpOpts, Option<usize>)> {
+    let mut stripped = exp.clone();
+    let mut cadence = None;
+    let mut kept = Vec::new();
+    for o in &exp.overrides {
+        if let Some(v) = o.strip_prefix("controller.replan_every=") {
+            cadence = Some(v.trim().parse::<usize>().map_err(|e| {
+                anyhow::anyhow!("controller.replan_every override {v:?}: {e}")
+            })?);
+        } else {
+            kept.push(o.clone());
+        }
+    }
+    stripped.overrides = kept;
+    Ok((stripped, cadence))
+}
+
+/// Part 0 (analytics only): eq. (29) closed form vs the exact discrete
+/// search at each batch cap. Returns the table, the JSON rows, and the
+/// probe's calibrated delay inputs.
+fn solver_part(exp: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64, f64)> {
     let mut probe_cfg = ExperimentConfig::default();
-    opts.apply(&mut probe_cfg);
+    exp.apply(&mut probe_cfg)?;
     probe_cfg.name = "ablation-probe".into();
     let probe = FlSystem::build(probe_cfg.clone())?;
     let t_cm = probe.log.meta.get("t_cm_expected").and_then(|v| v.as_f64()).unwrap();
@@ -91,82 +150,27 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
             ("speedup_vs_closed_form", Json::Num(speedup)),
         ]));
     }
-    println!("Ablation — eq. (29) closed form vs exact discrete search");
-    println!("{}", table.render());
-
-    let (engine_table, engine_rows, deadline_s) = engine_sweep(opts)?;
-    println!("Ablation — round engines under a straggling fleet (deadline = {deadline_s:.3}s)");
-    println!("{}", engine_table.render());
-
-    let (codec_table, codec_rows) = codec_sweep(opts)?;
-    println!("Ablation — compression sweep (delay vs rounds at equal seed)");
-    println!("{}", codec_table.render());
-
-    let (ctl_table, ctl_rows, ctl_delta_pct) = controller_sweep(opts)?;
-    println!(
-        "Ablation — static vs adaptive planning under channel drift \
-         (adaptive saves {ctl_delta_pct:.1}% overall time)"
-    );
-    println!("{}", ctl_table.render());
-
-    let (churn_table, churn_rows, churn_delta_pct) = churn_sweep(opts)?;
-    println!(
-        "Ablation — closed world vs open-world churn schedules \
-         (the closed world saves {churn_delta_pct:.1}% overall time vs Poisson churn)"
-    );
-    println!("{}", churn_table.render());
-
-    let doc = Json::obj(vec![
-        ("figure", Json::str("ablation")),
-        ("t_cm", Json::Num(t_cm)),
-        ("t_cp_per_sample", Json::Num(t_cps)),
-        ("series", Json::Arr(rows)),
-        ("engine_deadline_s", Json::Num(deadline_s)),
-        ("engines", Json::Arr(engine_rows)),
-        ("codecs", Json::Arr(codec_rows)),
-        ("controller", Json::Arr(ctl_rows)),
-        ("controller_delta_pct", Json::Num(ctl_delta_pct)),
-        ("churn", Json::Arr(churn_rows)),
-        ("churn_delta_pct", Json::Num(churn_delta_pct)),
-    ]);
-    let path = write_result(opts, "ablation", &doc)?;
-    println!("wrote {path}");
-    Ok(doc)
-}
-
-/// The straggler scenario the engines differ on: a heterogeneous fleet
-/// (DVFS jitter, cap lifted so it shows) under the default fading channel.
-fn engine_cfg(opts: &ExpOpts, kind: EngineKind) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.name = format!("ablation-engine-{}", kind.label());
-    cfg.dataset = DatasetKind::Tiny;
-    cfg.devices = 6;
-    cfg.train_per_device = 96;
-    cfg.test_size = 256;
-    cfg.policy = Policy::Fixed { batch: 16, local_rounds: 4 };
-    cfg.max_rounds = 10;
-    cfg.fleet.heterogeneity = 0.35;
-    cfg.fleet.max_freq_hz = 4e9;
-    cfg.engine.kind = kind;
-    opts.apply(&mut cfg);
-    cfg.eval_every = cfg.max_rounds; // evaluate once, at the end
-    cfg
+    Ok((table, rows, t_cm, t_cps))
 }
 
 /// Same seed, same scenario, three schedules. The deadline is set to 90%
 /// of the sync engine's median round time, so the straggling tail is what
 /// gets cut — the per-engine total-delay numbers are the deliverable.
-fn engine_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
+fn engines_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, f64, Vec<TrialOutcome>)> {
     let mut table = Table::new(&[
         "engine", "rounds", "total 𝒯 (s)", "final loss", "best acc", "mean part.", "dropped",
         "staleness",
     ]);
     let mut rows: Vec<Json> = Vec::new();
+    let mut trials: Vec<TrialOutcome> = Vec::new();
 
-    let record = |table: &mut Table, rows: &mut Vec<Json>, kind: EngineKind, log: &RunLog| {
+    let record = |table: &mut Table, rows: &mut Vec<Json>, label: &str, log: &RunLog| {
         let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
         table.row(&[
-            kind.label().into(),
+            label.into(),
             log.rounds.len().to_string(),
             format!("{:.2}", log.overall_time()),
             format!("{final_loss:.4}"),
@@ -176,7 +180,7 @@ fn engine_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
             format!("{:.2}", log.mean_staleness()),
         ]);
         rows.push(Json::obj(vec![
-            ("engine", Json::str(kind.label())),
+            ("engine", Json::str(label)),
             ("rounds", Json::Num(log.rounds.len() as f64)),
             ("overall_time", Json::Num(log.overall_time())),
             ("final_train_loss", Json::Num(final_loss)),
@@ -188,77 +192,75 @@ fn engine_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
     };
 
     // sync first: its round times anchor the deadline for the other two.
-    let mut sync_sys = FlSystem::build(engine_cfg(opts, EngineKind::Sync))?;
-    sync_sys.run()?;
-    let mut totals: Vec<f64> = sync_sys
-        .log
+    let sync = run_only(spec, opts, "sync", None)?;
+    let sync_log = sync.log("sync")?;
+    let mut totals: Vec<f64> = sync_log
         .rounds
         .iter()
         .map(|r| r.t_cm + r.local_rounds as f64 * r.t_cp)
         .collect();
     totals.sort_by(f64::total_cmp);
+    anyhow::ensure!(!totals.is_empty(), "sync arm produced no rounds");
     let deadline_s = 0.9 * totals[totals.len() / 2];
-    record(&mut table, &mut rows, EngineKind::Sync, &sync_sys.log);
-    drop(sync_sys);
+    record(&mut table, &mut rows, "sync", sync_log);
+    trials.extend(sync.trials);
 
-    let mut cfg = engine_cfg(opts, EngineKind::Deadline);
-    cfg.engine.deadline_s = deadline_s;
-    let mut sys = FlSystem::build(cfg)?;
-    sys.run()?;
-    record(&mut table, &mut rows, EngineKind::Deadline, &sys.log);
-    drop(sys);
+    let deadline =
+        run_only(spec, opts, "deadline", Some(format!("engine.deadline_s={deadline_s}")))?;
+    record(&mut table, &mut rows, "deadline", deadline.log("deadline")?);
+    trials.extend(deadline.trials);
 
-    let mut sys = FlSystem::build(engine_cfg(opts, EngineKind::AsyncBuffered))?;
-    sys.run()?;
-    record(&mut table, &mut rows, EngineKind::AsyncBuffered, &sys.log);
+    let buffered = run_only(spec, opts, "async_buffered", None)?;
+    record(&mut table, &mut rows, "async_buffered", buffered.log("async_buffered")?);
+    trials.extend(buffered.trials);
 
-    Ok((table, rows, deadline_s))
+    Ok((table, rows, deadline_s, trials))
 }
-
-/// Codec points the compression sweep compares: the EXPERIMENTS.md grid
-/// (qbits ∈ {4, 8}, k_ratio ∈ {0.01, 0.1, 1.0}) plus the composition.
-const CODEC_POINTS: [(&str, CodecKind, u32, f64); 8] = [
-    ("dense", CodecKind::Dense, 8, 0.1),
-    ("quant q=4", CodecKind::Quant, 4, 0.1),
-    ("quant q=8", CodecKind::Quant, 8, 0.1),
-    ("topk k=0.01", CodecKind::TopK, 8, 0.01),
-    ("topk k=0.1", CodecKind::TopK, 8, 0.1),
-    ("topk k=1.0", CodecKind::TopK, 8, 1.0),
-    ("topkq k=0.1 q=4", CodecKind::TopKQuant, 4, 0.1),
-    ("topkq k=0.1 q=8", CodecKind::TopKQuant, 8, 0.1),
-];
 
 /// The compression sweep: same seed, same fleet, same (b, V); only the
 /// update codec changes. Deliverables per point: the wire size the
 /// channel priced, the total virtual delay, and whether convergence
 /// survived the lossy encode (error feedback should keep final losses
 /// close to dense — the EXPERIMENTS.md §codec record).
-fn codec_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>)> {
+fn codecs_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, Vec<TrialOutcome>)> {
     let mut table = Table::new(&[
         "codec", "bits/update", "ratio", "rounds", "total 𝒯 (s)", "T_cm share", "final loss",
         "best acc",
     ]);
     let mut rows: Vec<Json> = Vec::new();
-    for (label, kind, qbits, k_ratio) in CODEC_POINTS {
-        let mut cfg = engine_cfg(opts, EngineKind::Sync);
-        cfg.name = format!("ablation-codec-{}", label.replace(' ', "-"));
-        cfg.codec.kind = kind;
-        cfg.codec.qbits = qbits;
-        cfg.codec.k_ratio = k_ratio;
-        let mut sys = FlSystem::build(cfg)?;
-        sys.run()?;
-        let log = &sys.log;
+    let sweep = run_spec(spec, opts)?;
+    for variant in spec.expand_variants()? {
+        // the human label (spaces aren't allowed in variant names)
+        let label = variant
+            .tag
+            .as_ref()
+            .and_then(|t| t.as_str())
+            .unwrap_or(variant.name.as_str())
+            .to_string();
+        let log = sweep.log(&variant.name)?;
         let bits = log
             .meta
             .get("update_bits_encoded")
             .and_then(|v| v.as_f64())
             .unwrap_or(f64::NAN);
-        let dense_bits = sys.spec.update_bits();
+        let dense_bits = log
+            .meta
+            .get("update_bits_dense")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN);
+        let kind_label =
+            log.meta.get("codec").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        // the codec knobs as the trial actually ran them
+        let mut cfg = spec.build_config(&variant)?;
+        opts.exp.apply(&mut cfg)?;
         let t_total = log.overall_time();
         let t_cm_sum: f64 = log.rounds.iter().map(|r| r.t_cm).sum();
         let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
         table.row(&[
-            label.into(),
+            label.clone(),
             format!("{:.0}", bits),
             format!("{:.1}×", dense_bits / bits),
             log.rounds.len().to_string(),
@@ -269,9 +271,9 @@ fn codec_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>)> {
         ]);
         rows.push(Json::obj(vec![
             ("codec", Json::str(label)),
-            ("kind", Json::str(sys.codec.kind().label())),
-            ("qbits", Json::Num(qbits as f64)),
-            ("k_ratio", Json::Num(k_ratio)),
+            ("kind", Json::str(kind_label)),
+            ("qbits", Json::Num(cfg.codec.qbits as f64)),
+            ("k_ratio", Json::Num(cfg.codec.k_ratio)),
             ("encoded_bits", Json::Num(bits)),
             ("compression_ratio", Json::Num(dense_bits / bits)),
             ("rounds", Json::Num(log.rounds.len() as f64)),
@@ -281,70 +283,38 @@ fn codec_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>)> {
             ("best_accuracy", Json::Num(log.best_accuracy())),
         ]));
     }
-    Ok((table, rows))
-}
-
-/// The drift scenario the controller sweep compares on (DESIGN.md §10,
-/// EXPERIMENTS.md §controller): a small fleet at low transmit power whose
-/// channel deterministically *improves* round over round (devices
-/// drifting toward the cell, `drift.trend_db_per_round < 0`). The round-0
-/// plan is therefore solved for expensive talk (large b*, V) and goes
-/// stale immediately; the adaptive run re-solves every round. Fading is
-/// frozen and `compute.parallel_width = 1` (literal eq. 4) so the
-/// planner's objective is exactly the priced round delay — the adaptive
-/// plan can only shrink per-round work, making adaptive ≤ static in total
-/// virtual time *structurally* (the same inequality the native test
-/// suite pins on its smaller-scale variant of this scenario —
-/// `native_backend.rs::drift_cfg`). The honest flip side — under a *degrading* trend the adaptive
-/// plan works more per round and pays more virtual time at a fixed round
-/// count while converging in fewer rounds — is recorded in EXPERIMENTS.md.
-fn controller_cfg(opts: &ExpOpts, replan_every: usize) -> ExperimentConfig {
-    let mut cfg = ExperimentConfig::default();
-    cfg.name = format!("ablation-controller-replan{replan_every}");
-    cfg.dataset = DatasetKind::Tiny;
-    cfg.devices = 4;
-    cfg.train_per_device = 96;
-    cfg.test_size = 256;
-    cfg.policy = Policy::Defl;
-    cfg.max_rounds = 40;
-    cfg.wireless.tx_power_dbm = 0.0; // low power ⇒ low SNR ⇒ talk is dear at round 0
-    cfg.wireless.fast_fading = false; // deterministic: realized == expected T_cm
-    cfg.wireless.drift.trend_db_per_round = -1.5;
-    cfg.wireless.drift.clamp_db = 60.0;
-    cfg.fleet.parallel_width = 1; // price literal eq. (4): planner == simclock
-    cfg.controller.ewma = 1.0; // fading-free channel: track the last round exactly
-    cfg.controller.deadband = 0.0;
-    opts.apply(&mut cfg);
-    // AFTER opts.apply: the sweep's whole point is the per-arm cadence,
-    // so the global --controller/DEFL_CONTROLLER override must not
-    // clobber it (it re-parameterizes the adaptive arm instead — see
-    // `controller_sweep`). In particular the static baseline stays
-    // static no matter what the harness-wide override says.
-    cfg.controller.replan_every = replan_every;
-    cfg.eval_every = cfg.max_rounds; // evaluate once, at the end
-    cfg
+    Ok((table, rows, sweep.trials))
 }
 
 /// Static (replan_every = 0) vs adaptive on the same seed and the same
-/// drifting channel. The adaptive arm's cadence defaults to 1 and is
-/// re-parameterized by `--controller N`/`DEFL_CONTROLLER=N` (a 0
-/// override is meaningless for the *adaptive* arm and is lifted to 1);
-/// the static arm is always 0. Returns the table, the JSON rows, and
-/// the adaptive-vs-static overall-time reduction percentage.
-fn controller_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
+/// drifting channel (`specs/ablation_controller.toml`). The adaptive
+/// arm's cadence defaults to 1 and is re-parameterized by
+/// `--controller N`/`DEFL_CONTROLLER=N` (a 0 override is meaningless for
+/// the *adaptive* arm and is lifted to 1); the static arm is always 0.
+/// Returns the table, the JSON rows, the adaptive-vs-static overall-time
+/// reduction percentage, and the trials.
+fn controller_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, f64, Vec<TrialOutcome>)> {
+    let (stripped, cadence) = split_cadence(&opts.exp)?;
+    let adaptive_cadence = cadence.unwrap_or(1).max(1);
+    let mut base = opts.clone();
+    base.exp = stripped;
+
     let mut table = Table::new(&[
         "mode", "b first→last", "V first→last", "rounds", "total 𝒯 (s)", "final loss",
         "best acc", "est T_cm last (s)",
     ]);
     let mut rows: Vec<Json> = Vec::new();
+    let mut trials: Vec<TrialOutcome> = Vec::new();
     let mut totals = [0f64; 2];
-    let adaptive_cadence = opts.controller.unwrap_or(1).max(1);
     for (slot, (mode, replan_every)) in
         [("static", 0usize), ("adaptive", adaptive_cadence)].into_iter().enumerate()
     {
-        let mut sys = FlSystem::build(controller_cfg(opts, replan_every))?;
-        sys.run()?;
-        let log = &sys.log;
+        let sweep =
+            run_only(spec, &base, mode, Some(format!("controller.replan_every={replan_every}")))?;
+        let log = sweep.log(mode)?;
         let first = log.rounds.first();
         let last = log.rounds.last();
         let b_first = first.map_or(0, |r| r.plan_b);
@@ -378,119 +348,120 @@ fn controller_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
             ("est_t_cm_last", Json::Num(est_last)),
             (
                 "replans",
-                Json::Num(sys.controller.as_ref().map_or(0.0, |c| c.replans() as f64)),
+                Json::Num(
+                    log.meta.get("controller_replans").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                ),
             ),
         ]));
+        trials.extend(sweep.trials);
     }
-    Ok((table, rows, reduction_pct(totals[1], totals[0])))
+    Ok((table, rows, reduction_pct(totals[1], totals[0]), trials))
 }
 
-/// The shared open-world knobs every churned arm of the sweep uses, so
-/// the schedules differ only in `kind`.
-fn churn_knobs(cfg: &mut ExperimentConfig) {
-    cfg.churn.initial_active = 0.7;
-    cfg.churn.min_clients = 2;
-    cfg.churn.join_rate = 0.4;
-    cfg.churn.drop_rate = 0.2;
-    cfg.churn.flash_step = 2;
-    cfg.churn.period = 6.0;
-    cfg.churn.amplitude = 0.3;
+/// One churn-sweep table/JSON row (shared by parts 5a and 5b). The
+/// `waited 𝒯` column is the open-world gate's `clock.wait` total — the
+/// bookkeeping a closed world never pays. Returns the arm's overall time.
+fn churn_row(
+    table: &mut Table,
+    rows: &mut Vec<Json>,
+    arm: String,
+    extra: Vec<(&'static str, Json)>,
+    log: &RunLog,
+) -> f64 {
+    let n = log.rounds.len().max(1) as f64;
+    let waited = log.meta.get("clock_waited").and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let mean_fleet = log.rounds.iter().map(|r| r.fleet_size as f64).sum::<f64>() / n;
+    let joins: usize = log.rounds.iter().map(|r| r.joins).sum();
+    let deaths: usize = log.rounds.iter().map(|r| r.drops).sum();
+    let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
+    table.row(&[
+        arm.clone(),
+        log.rounds.len().to_string(),
+        format!("{:.2}", log.overall_time()),
+        format!("{waited:.2}"),
+        format!("{mean_fleet:.2}"),
+        joins.to_string(),
+        deaths.to_string(),
+        format!("{final_loss:.4}"),
+    ]);
+    let mut row = vec![
+        ("arm", Json::str(&arm)),
+        ("rounds", Json::Num(log.rounds.len() as f64)),
+        ("overall_time", Json::Num(log.overall_time())),
+        ("waited_time", Json::Num(waited)),
+        ("mean_fleet_size", Json::Num(mean_fleet)),
+        ("joins", Json::Num(joins as f64)),
+        ("mid_round_deaths", Json::Num(deaths as f64)),
+        ("final_train_loss", Json::Num(final_loss)),
+        ("best_accuracy", Json::Num(log.best_accuracy())),
+    ];
+    row.extend(extra);
+    rows.push(Json::obj(row));
+    log.overall_time()
 }
 
-/// Closed world vs each `[churn]` schedule on the same seed and the same
-/// straggling fleet, then static vs adaptive controller on a churning
-/// drift scenario (DESIGN.md §11, EXPERIMENTS.md §churn). The sync
-/// engine is the schedule arm: its barrier makes mid-round deaths
-/// visible as lost uplinks (`participants = fleet_size − drops`), and
-/// the gate's `clock.wait` calls show up as "waited 𝒯" — open-world
-/// bookkeeping the closed world never pays. The controller pair reruns
-/// the §10 drift scenario under Poisson churn, so the EWMA estimators
-/// observe a fleet that is genuinely non-stationary in *membership*,
-/// not just in channel. Returns the table, the JSON rows, and the
-/// closed-world-vs-Poisson overall-time reduction percentage.
-fn churn_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
-    use crate::coordinator::ChurnKind;
-    let mut table = Table::new(&[
+fn churn_table() -> Table {
+    Table::new(&[
         "arm", "rounds", "total 𝒯 (s)", "waited 𝒯 (s)", "mean fleet", "joins",
         "mid-round deaths", "final loss",
-    ]);
+    ])
+}
+
+/// Part 5a: one closed-world baseline, three open-world schedules on the
+/// same seed and the same straggling fleet
+/// (`specs/ablation_churn.toml`). The sync engine is the schedule arm:
+/// its barrier makes mid-round deaths visible as lost uplinks
+/// (`participants = fleet_size − drops`). Returns the table, the JSON
+/// rows, the closed-world-vs-Poisson overall-time reduction percentage,
+/// and the trials.
+fn churn_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, f64, Vec<TrialOutcome>)> {
+    let mut table = churn_table();
     let mut rows: Vec<Json> = Vec::new();
     let mut totals = [0f64; 2];
-
-    let record = |table: &mut Table,
-                  rows: &mut Vec<Json>,
-                  arm: String,
-                  extra: Vec<(&'static str, Json)>,
-                  sys: &FlSystem|
-     -> f64 {
-        let log = &sys.log;
-        let n = log.rounds.len().max(1) as f64;
-        let mean_fleet = log.rounds.iter().map(|r| r.fleet_size as f64).sum::<f64>() / n;
-        let joins: usize = log.rounds.iter().map(|r| r.joins).sum();
-        let deaths: usize = log.rounds.iter().map(|r| r.drops).sum();
-        let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
-        table.row(&[
-            arm.clone(),
-            log.rounds.len().to_string(),
-            format!("{:.2}", log.overall_time()),
-            format!("{:.2}", sys.clock.waited()),
-            format!("{mean_fleet:.2}"),
-            joins.to_string(),
-            deaths.to_string(),
-            format!("{final_loss:.4}"),
-        ]);
-        let mut row = vec![
-            ("arm", Json::str(&arm)),
-            ("rounds", Json::Num(log.rounds.len() as f64)),
-            ("overall_time", Json::Num(log.overall_time())),
-            ("waited_time", Json::Num(sys.clock.waited())),
-            ("mean_fleet_size", Json::Num(mean_fleet)),
-            ("joins", Json::Num(joins as f64)),
-            ("mid_round_deaths", Json::Num(deaths as f64)),
-            ("final_train_loss", Json::Num(final_loss)),
-            ("best_accuracy", Json::Num(log.best_accuracy())),
-        ];
-        row.extend(extra);
-        rows.push(Json::obj(row));
-        log.overall_time()
-    };
-
-    // part 5a: one closed-world baseline, three open-world schedules.
-    for kind in [ChurnKind::None, ChurnKind::Poisson, ChurnKind::FlashCrowd, ChurnKind::Diurnal] {
-        let mut cfg = engine_cfg(opts, EngineKind::Sync);
-        cfg.name = format!("ablation-churn-{}", kind.label());
-        cfg.churn.kind = kind;
-        if kind != ChurnKind::None {
-            churn_knobs(&mut cfg);
-        }
-        let mut sys = FlSystem::build(cfg)?;
-        sys.run()?;
-        let total = record(
+    let sweep = run_spec(spec, opts)?;
+    for variant in spec.expand_variants()? {
+        let log = sweep.log(&variant.name)?;
+        let total = churn_row(
             &mut table,
             &mut rows,
-            kind.label().into(),
-            vec![("churn", Json::str(kind.label()))],
-            &sys,
+            variant.name.clone(),
+            vec![("churn", Json::str(&variant.name))],
+            log,
         );
-        match kind {
-            ChurnKind::None => totals[0] = total,
-            ChurnKind::Poisson => totals[1] = total,
+        match variant.name.as_str() {
+            "none" => totals[0] = total,
+            "poisson" => totals[1] = total,
             _ => {}
         }
     }
+    Ok((table, rows, reduction_pct(totals[0], totals[1]), sweep.trials))
+}
 
-    // part 5b: the §10 static-vs-adaptive drift pair, rerun on a fleet
-    // that churns while the channel drifts (the "controller under
-    // churn" arm). Same per-arm cadence rules as controller_sweep.
-    let adaptive_cadence = opts.controller.unwrap_or(1).max(1);
+/// Part 5b: the §10 static-vs-adaptive drift pair, rerun on a fleet that
+/// churns while the channel drifts (`specs/ablation_churn_ctl.toml`), so
+/// the EWMA estimators observe a fleet that is genuinely non-stationary
+/// in *membership*, not just in channel. Same per-arm cadence rules as
+/// [`controller_part`].
+fn churn_ctl_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, Vec<TrialOutcome>)> {
+    let (stripped, cadence) = split_cadence(&opts.exp)?;
+    let adaptive_cadence = cadence.unwrap_or(1).max(1);
+    let mut base = opts.clone();
+    base.exp = stripped;
+
+    let mut table = churn_table();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut trials: Vec<TrialOutcome> = Vec::new();
     for (mode, replan_every) in [("static", 0usize), ("adaptive", adaptive_cadence)] {
-        let mut cfg = controller_cfg(opts, replan_every);
-        cfg.name = format!("ablation-churn-ctl-{mode}");
-        cfg.churn.kind = ChurnKind::Poisson;
-        churn_knobs(&mut cfg);
-        let mut sys = FlSystem::build(cfg)?;
-        sys.run()?;
-        record(
+        let sweep =
+            run_only(spec, &base, mode, Some(format!("controller.replan_every={replan_every}")))?;
+        let log = sweep.log(mode)?;
+        churn_row(
             &mut table,
             &mut rows,
             format!("poisson ctl/{mode}"),
@@ -499,9 +470,242 @@ fn churn_sweep(opts: &ExpOpts) -> anyhow::Result<(Table, Vec<Json>, f64)> {
                 ("controller", Json::str(mode)),
                 ("replan_every", Json::Num(replan_every as f64)),
             ],
-            &sys,
+            log,
         );
+        trials.extend(sweep.trials);
+    }
+    Ok((table, rows, trials))
+}
+
+fn part_doc(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+    trials: &[TrialOutcome],
+    pairs: Vec<(&str, Json)>,
+) -> anyhow::Result<Json> {
+    let base_seed = opts.base_seed.unwrap_or(spec.base_seed);
+    let mut pairs = pairs;
+    pairs.push(("aggregate", aggregate(spec, base_seed, trials)));
+    let doc = stamp(Json::obj(pairs), spec, opts)?;
+    let path = write_result(&opts.exp, &spec.output, &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+/// Render the round-engine comparison from its spec.
+pub fn render_engines(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, deadline_s, trials) = engines_part(spec, opts)?;
+    println!("Ablation — round engines under a straggling fleet (deadline = {deadline_s:.3}s)");
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![
+            ("figure", Json::str("ablation_engines")),
+            ("engine_deadline_s", Json::Num(deadline_s)),
+            ("engines", Json::Arr(rows)),
+        ],
+    )
+}
+
+/// Render the compression sweep from its spec.
+pub fn render_codecs(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, trials) = codecs_part(spec, opts)?;
+    println!("Ablation — compression sweep (delay vs rounds at equal seed)");
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![("figure", Json::str("ablation_codecs")), ("codecs", Json::Arr(rows))],
+    )
+}
+
+/// Render the static-vs-adaptive controller sweep from its spec.
+pub fn render_controller(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, delta_pct, trials) = controller_part(spec, opts)?;
+    println!(
+        "Ablation — static vs adaptive planning under channel drift \
+         (adaptive saves {delta_pct:.1}% overall time)"
+    );
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![
+            ("figure", Json::str("ablation_controller")),
+            ("controller", Json::Arr(rows)),
+            ("controller_delta_pct", Json::Num(delta_pct)),
+        ],
+    )
+}
+
+/// Render the closed-world-vs-churn sweep (part 5a) from its spec.
+pub fn render_churn(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, delta_pct, trials) = churn_part(spec, opts)?;
+    println!(
+        "Ablation — closed world vs open-world churn schedules \
+         (the closed world saves {delta_pct:.1}% overall time vs Poisson churn)"
+    );
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![
+            ("figure", Json::str("ablation_churn")),
+            ("churn", Json::Arr(rows)),
+            ("churn_delta_pct", Json::Num(delta_pct)),
+        ],
+    )
+}
+
+/// Render the controller-under-churn pair (part 5b) from its spec.
+pub fn render_churn_ctl(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, trials) = churn_ctl_part(spec, opts)?;
+    println!("Ablation — static vs adaptive controller under Poisson churn");
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![("figure", Json::str("ablation_churn_ctl")), ("churn", Json::Arr(rows))],
+    )
+}
+
+/// Run all five ablation parts plus the solver table and write the
+/// historical combined `results/ablation.json` (the `defl exp ablation`
+/// deprecation alias).
+pub fn run_all(opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (solver_table, solver_rows, t_cm, t_cps) = solver_part(&opts.exp)?;
+    println!("Ablation — eq. (29) closed form vs exact discrete search");
+    println!("{}", solver_table.render());
+
+    let engines_spec = crate::harness::specs::load("ablation_engines")?;
+    let (engine_table, engine_rows, deadline_s, _) = engines_part(&engines_spec, opts)?;
+    println!("Ablation — round engines under a straggling fleet (deadline = {deadline_s:.3}s)");
+    println!("{}", engine_table.render());
+
+    let codecs_spec = crate::harness::specs::load("ablation_codecs")?;
+    let (codec_table, codec_rows, _) = codecs_part(&codecs_spec, opts)?;
+    println!("Ablation — compression sweep (delay vs rounds at equal seed)");
+    println!("{}", codec_table.render());
+
+    let ctl_spec = crate::harness::specs::load("ablation_controller")?;
+    let (ctl_table, ctl_rows, ctl_delta_pct, _) = controller_part(&ctl_spec, opts)?;
+    println!(
+        "Ablation — static vs adaptive planning under channel drift \
+         (adaptive saves {ctl_delta_pct:.1}% overall time)"
+    );
+    println!("{}", ctl_table.render());
+
+    let churn_spec = crate::harness::specs::load("ablation_churn")?;
+    let (churn_tbl, mut churn_rows, churn_delta_pct, _) = churn_part(&churn_spec, opts)?;
+    let churn_ctl_spec = crate::harness::specs::load("ablation_churn_ctl")?;
+    let (churn_ctl_tbl, ctl_churn_rows, _) = churn_ctl_part(&churn_ctl_spec, opts)?;
+    churn_rows.extend(ctl_churn_rows);
+    println!(
+        "Ablation — closed world vs open-world churn schedules \
+         (the closed world saves {churn_delta_pct:.1}% overall time vs Poisson churn)"
+    );
+    println!("{}", churn_tbl.render());
+    println!("{}", churn_ctl_tbl.render());
+
+    let doc = Json::obj(vec![
+        ("figure", Json::str("ablation")),
+        ("schema_version", Json::Num(crate::harness::SCHEMA_VERSION as f64)),
+        ("spec", Json::str("ablation")),
+        (
+            "provenance",
+            Json::obj(vec![
+                ("spec", Json::str("ablation")),
+                (
+                    "base_seed",
+                    Json::Num(opts.base_seed.unwrap_or(engines_spec.base_seed) as f64),
+                ),
+                ("specs", Json::Arr(PART_SPECS.iter().map(|s| Json::str(*s)).collect())),
+            ]),
+        ),
+        ("t_cm", Json::Num(t_cm)),
+        ("t_cp_per_sample", Json::Num(t_cps)),
+        ("series", Json::Arr(solver_rows)),
+        ("engine_deadline_s", Json::Num(deadline_s)),
+        ("engines", Json::Arr(engine_rows)),
+        ("codecs", Json::Arr(codec_rows)),
+        ("controller", Json::Arr(ctl_rows)),
+        ("controller_delta_pct", Json::Num(ctl_delta_pct)),
+        ("churn", Json::Arr(churn_rows)),
+        ("churn_delta_pct", Json::Num(churn_delta_pct)),
+    ]);
+    let path = write_result(&opts.exp, "ablation", &doc)?;
+    println!("wrote {path}");
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_cadence_routes_the_controller_knob() {
+        let exp = ExpOpts {
+            overrides: vec![
+                "backend.kind=native".into(),
+                "controller.replan_every=3".into(),
+            ],
+            ..Default::default()
+        };
+        let (stripped, cadence) = split_cadence(&exp).unwrap();
+        assert_eq!(cadence, Some(3));
+        assert_eq!(stripped.overrides, vec!["backend.kind=native".to_string()]);
+        let (_, none) = split_cadence(&ExpOpts::default()).unwrap();
+        assert_eq!(none, None);
+        let bad = ExpOpts {
+            overrides: vec!["controller.replan_every=soon".into()],
+            ..Default::default()
+        };
+        assert!(split_cadence(&bad).is_err());
     }
 
-    Ok((table, rows, reduction_pct(totals[0], totals[1])))
+    #[test]
+    fn bundled_controller_spec_pins_the_drift_scenario() {
+        let spec = crate::harness::specs::load("ablation_controller").unwrap();
+        let names: Vec<&str> = spec.variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, ["static", "adaptive"]);
+        let cfg = spec.build_config(&spec.variants[0]).unwrap();
+        assert_eq!(cfg.controller.replan_every, 0);
+        assert_eq!(cfg.wireless.drift.trend_db_per_round, -1.5);
+        assert!(!cfg.wireless.fast_fading);
+        assert_eq!(cfg.fleet.parallel_width, 1);
+        let cfg = spec.build_config(&spec.variants[1]).unwrap();
+        assert_eq!(cfg.controller.replan_every, 1);
+    }
+
+    #[test]
+    fn bundled_codec_spec_matches_experiments_grid() {
+        use crate::codec::CodecKind;
+        // the EXPERIMENTS.md grid (qbits ∈ {4, 8}, k_ratio ∈ {0.01, 0.1,
+        // 1.0}) plus the composition, in the historical row order
+        let expect: [(&str, CodecKind, u32, f64); 8] = [
+            ("dense", CodecKind::Dense, 8, 0.1),
+            ("quant q=4", CodecKind::Quant, 4, 0.1),
+            ("quant q=8", CodecKind::Quant, 8, 0.1),
+            ("topk k=0.01", CodecKind::TopK, 8, 0.01),
+            ("topk k=0.1", CodecKind::TopK, 8, 0.1),
+            ("topk k=1.0", CodecKind::TopK, 8, 1.0),
+            ("topkq k=0.1 q=4", CodecKind::TopKQuant, 4, 0.1),
+            ("topkq k=0.1 q=8", CodecKind::TopKQuant, 8, 0.1),
+        ];
+        let spec = crate::harness::specs::load("ablation_codecs").unwrap();
+        assert_eq!(spec.variants.len(), expect.len());
+        for (v, (label, kind, qbits, k_ratio)) in spec.variants.iter().zip(expect) {
+            assert_eq!(v.tag.as_ref().and_then(|t| t.as_str()), Some(label));
+            let cfg = spec.build_config(v).unwrap();
+            assert_eq!(cfg.codec.kind, kind, "{label}");
+            assert_eq!(cfg.codec.qbits, qbits, "{label}");
+            assert_eq!(cfg.codec.k_ratio, k_ratio, "{label}");
+        }
+    }
 }

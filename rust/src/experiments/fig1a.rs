@@ -1,25 +1,27 @@
 //! Fig. 1(a): impact of the preset global error ε on the optimized
 //! operating point — the sweep the paper uses to pick ε = 0.01.
 //!
-//! For each ε we report the closed-form plan (b*, θ*, V, H, predicted 𝒯)
-//! and, unless `--analytic-only`, also run a short training job at that
-//! operating point to get measured accuracy vs overall time.
+//! The trained arms come from `specs/fig1a.toml` (one variant per ε,
+//! tagged with its ε); this module adds the closed-form plan analytics
+//! (b*, θ*, V, H, predicted 𝒯) from a probe system and formats the
+//! paper-style table. `--analytic-only` skips the trained trials.
 
-use super::{run_system, write_result, ExpOpts};
-use crate::config::{ExperimentConfig, Policy};
+use super::{stamp, write_result};
+use crate::config::ExperimentConfig;
 use crate::coordinator::FlSystem;
 use crate::defl_opt::{self, PlanInputs};
+use crate::harness::{run_spec, ExperimentSpec, RunnerOpts};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
-/// The ε grid the sweep plans at.
+/// The ε grid the sweep plans at (pinned against the spec's tags).
 pub const EPSILONS: [f64; 4] = [0.005, 0.01, 0.05, 0.1];
 
-/// Regenerate Fig. 1(a) (`analytic_only` skips the training runs).
-pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
+/// Format Fig. 1(a) from its spec (`opts.analytic_only` skips training).
+pub fn render(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
     // Build one system just to extract the calibrated delay inputs.
     let mut probe_cfg = ExperimentConfig::default();
-    opts.apply(&mut probe_cfg);
+    opts.exp.apply(&mut probe_cfg)?;
     probe_cfg.name = "fig1a-probe".into();
     let probe = FlSystem::build(probe_cfg.clone())?;
     let t_cm = probe
@@ -36,11 +38,18 @@ pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
         .expect("meta");
     drop(probe);
 
+    let sweep = if opts.analytic_only { None } else { Some(run_spec(spec, opts)?) };
+
     let mut table = Table::new(&[
         "epsilon", "b*", "theta*", "V", "H (eq.12)", "pred 𝒯 (s)", "meas acc", "meas 𝒯 (s)",
     ]);
     let mut rows = Vec::new();
-    for &eps in &EPSILONS {
+    for variant in spec.expand_variants()? {
+        let eps = variant
+            .tag
+            .as_ref()
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("fig1a variant {:?} needs a numeric ε tag", variant.name))?;
         let inputs = PlanInputs {
             t_cm,
             t_cp_per_sample: t_cps,
@@ -50,19 +59,12 @@ pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
             c: probe_cfg.c,
         };
         let plan = defl_opt::closed_form(&inputs);
-        let (meas_acc, meas_t) = if analytic_only {
-            (f64::NAN, f64::NAN)
-        } else {
-            let mut cfg = ExperimentConfig::default();
-            cfg.max_rounds = 24;
-            cfg.eval_every = 2;
-            cfg.target_accuracy = 0.97;
-            opts.apply(&mut cfg);
-            cfg.name = format!("fig1a-eps{eps}");
-            cfg.epsilon = eps;
-            cfg.policy = Policy::Defl;
-            let log = run_system(cfg)?;
-            (log.best_accuracy(), log.overall_time())
+        let (meas_acc, meas_t) = match &sweep {
+            None => (f64::NAN, f64::NAN),
+            Some(s) => {
+                let log = s.log(&variant.name)?;
+                (log.best_accuracy(), log.overall_time())
+            }
         };
         table.row(&[
             format!("{eps}"),
@@ -87,13 +89,17 @@ pub fn run(opts: &ExpOpts, analytic_only: bool) -> anyhow::Result<Json> {
     }
     println!("Fig 1(a) — ε sweep (T_cm={t_cm:.4}s, t_cp/sample={t_cps:.3e}s)");
     println!("{}", table.render());
-    let doc = Json::obj(vec![
+    let mut pairs = vec![
         ("figure", Json::str("fig1a")),
         ("t_cm", Json::Num(t_cm)),
         ("t_cp_per_sample", Json::Num(t_cps)),
         ("series", Json::Arr(rows)),
-    ]);
-    let path = write_result(opts, "fig1a", &doc)?;
+    ];
+    if let Some(s) = &sweep {
+        pairs.push(("aggregate", s.aggregate.clone()));
+    }
+    let doc = stamp(Json::obj(pairs), spec, opts)?;
+    let path = write_result(&opts.exp, &spec.output, &doc)?;
     println!("wrote {path}");
     Ok(doc)
 }
@@ -103,5 +109,16 @@ mod tests {
     #[test]
     fn epsilon_grid_includes_paper_choice() {
         assert!(super::EPSILONS.contains(&0.01));
+    }
+
+    #[test]
+    fn bundled_spec_tags_match_epsilon_grid() {
+        let spec = crate::harness::specs::load("fig1a").unwrap();
+        let tags: Vec<f64> = spec
+            .variants
+            .iter()
+            .map(|v| v.tag.as_ref().and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert_eq!(tags, super::EPSILONS.to_vec());
     }
 }

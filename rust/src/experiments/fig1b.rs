@@ -2,31 +2,34 @@
 //! b ∈ {16, 32, 64} at fixed V, reproducing the paper's finding that the
 //! computed b = 32 balances prediction performance and overall time
 //! (b=64 fastest but less accurate; b=16 most accurate but slowest).
+//!
+//! The arms come from `specs/fig1b.toml` (one variant per batch size,
+//! tagged with b); this module formats the table and accuracy curves.
 
-use super::{run_system, write_result, ExpOpts};
-use crate::config::{ExperimentConfig, Policy};
+use super::{stamp, write_result};
+use crate::harness::{run_spec, ExperimentSpec, RunnerOpts};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
-/// The batch sizes Fig. 1(b) compares.
+/// The batch sizes Fig. 1(b) compares (pinned against the spec's tags).
 pub const BATCHES: [usize; 3] = [16, 32, 64];
 /// V matching DEFL's computed θ* ≈ 0.15 at the paper point (V = ν·α ≈ 16).
 pub const LOCAL_ROUNDS: usize = 16;
 
-/// Regenerate Fig. 1(b).
-pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+/// Format Fig. 1(b) from its spec.
+pub fn render(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let sweep = run_spec(spec, opts)?;
     let mut table = Table::new(&[
         "batch", "final acc", "best acc", "𝒯→97% (s)", "overall 𝒯 (s)", "rounds",
     ]);
     let mut rows = Vec::new();
-    for &b in &BATCHES {
-        let mut cfg = ExperimentConfig::default();
-        cfg.max_rounds = 30;
-        cfg.eval_every = 3;
-        opts.apply(&mut cfg);
-        cfg.name = format!("fig1b-b{b}");
-        cfg.policy = Policy::Fixed { batch: b, local_rounds: LOCAL_ROUNDS };
-        let log = run_system(cfg)?;
+    for variant in spec.expand_variants()? {
+        let b = variant
+            .tag
+            .as_ref()
+            .and_then(|t| t.as_u64())
+            .ok_or_else(|| anyhow::anyhow!("fig1b variant {:?} needs a batch tag", variant.name))?;
+        let log = sweep.log(&variant.name)?;
         let final_acc = log
             .rounds
             .iter()
@@ -65,12 +68,41 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     }
     println!("Fig 1(b) — batch-size sweep (V={LOCAL_ROUNDS}, MNIST-like)");
     println!("{}", table.render());
-    let doc = Json::obj(vec![
-        ("figure", Json::str("fig1b")),
-        ("local_rounds", Json::Num(LOCAL_ROUNDS as f64)),
-        ("series", Json::Arr(rows)),
-    ]);
-    let path = write_result(opts, "fig1b", &doc)?;
+    let doc = stamp(
+        Json::obj(vec![
+            ("figure", Json::str("fig1b")),
+            ("local_rounds", Json::Num(LOCAL_ROUNDS as f64)),
+            ("series", Json::Arr(rows)),
+            ("aggregate", sweep.aggregate.clone()),
+        ]),
+        spec,
+        opts,
+    )?;
+    let path = write_result(&opts.exp, &spec.output, &doc)?;
     println!("wrote {path}");
     Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bundled_spec_matches_batch_grid() {
+        let spec = crate::harness::specs::load("fig1b").unwrap();
+        let tags: Vec<u64> = spec
+            .variants
+            .iter()
+            .map(|v| v.tag.as_ref().and_then(|t| t.as_u64()).unwrap())
+            .collect();
+        assert_eq!(tags, super::BATCHES.map(|b| b as u64).to_vec());
+        for v in &spec.variants {
+            let cfg = spec.build_config(v).unwrap();
+            assert_eq!(
+                cfg.policy,
+                crate::config::Policy::Fixed {
+                    batch: v.tag.as_ref().unwrap().as_u64().unwrap() as usize,
+                    local_rounds: super::LOCAL_ROUNDS,
+                }
+            );
+        }
+    }
 }

@@ -5,32 +5,37 @@
 //! lower training loss at the same overall time than both "talk more"
 //! (θ = 0.9, V small) and "work much more" (θ = 0.05) settings, while
 //! avoiding local overfitting.
+//!
+//! The arms come from `specs/fig1c.toml`: each variant is tagged with
+//! its θ and pins V = ⌈ν·ln(1/θ)⌉ (a test checks the pinned values
+//! against [`convergence::local_rounds`]).
 
-use super::{run_system, write_result, ExpOpts};
-use crate::config::{ExperimentConfig, Policy};
+use super::{stamp, write_result};
+use crate::config::ExperimentConfig;
 use crate::convergence;
+use crate::harness::{run_spec, ExperimentSpec, RunnerOpts};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
-/// The θ grid Fig. 1(c) compares.
+/// The θ grid Fig. 1(c) compares (pinned against the spec's tags).
 pub const THETAS: [f64; 4] = [0.05, 0.15, 0.5, 0.9];
 /// Fixed batch size of the sweep (the paper's b*).
 pub const BATCH: usize = 32;
 
-/// Regenerate Fig. 1(c).
-pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+/// Format Fig. 1(c) from its spec.
+pub fn render(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
     let nu = ExperimentConfig::default().nu;
+    let sweep = run_spec(spec, opts)?;
     let mut table = Table::new(&["theta", "V", "final train loss", "best acc", "overall 𝒯 (s)"]);
     let mut rows = Vec::new();
-    for &theta in &THETAS {
+    for variant in spec.expand_variants()? {
+        let theta = variant
+            .tag
+            .as_ref()
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("fig1c variant {:?} needs a θ tag", variant.name))?;
         let v = convergence::local_rounds(nu, theta);
-        let mut cfg = ExperimentConfig::default();
-        cfg.max_rounds = 30;
-        cfg.eval_every = 3;
-        opts.apply(&mut cfg);
-        cfg.name = format!("fig1c-theta{theta}");
-        cfg.policy = Policy::Fixed { batch: BATCH, local_rounds: v };
-        let log = run_system(cfg)?;
+        let log = sweep.log(&variant.name)?;
         let final_loss = log.rounds.last().map_or(f64::NAN, |r| r.train_loss);
         table.row(&[
             format!("{theta}"),
@@ -60,21 +65,56 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     }
     println!("Fig 1(c) — θ sweep (b={BATCH}, V = ν·log(1/θ), ν={nu})");
     println!("{}", table.render());
-    let doc = Json::obj(vec![
-        ("figure", Json::str("fig1c")),
-        ("batch", Json::Num(BATCH as f64)),
-        ("nu", Json::Num(nu)),
-        ("series", Json::Arr(rows)),
-    ]);
-    let path = write_result(opts, "fig1c", &doc)?;
+    let doc = stamp(
+        Json::obj(vec![
+            ("figure", Json::str("fig1c")),
+            ("batch", Json::Num(BATCH as f64)),
+            ("nu", Json::Num(nu)),
+            ("series", Json::Arr(rows)),
+            ("aggregate", sweep.aggregate.clone()),
+        ]),
+        spec,
+        opts,
+    )?;
+    let path = write_result(&opts.exp, &spec.output, &doc)?;
     println!("wrote {path}");
     Ok(doc)
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn theta_grid_includes_paper_optimum() {
-        assert!(super::THETAS.contains(&0.15));
+        assert!(THETAS.contains(&0.15));
+    }
+
+    #[test]
+    fn bundled_spec_pins_v_of_theta() {
+        // the spec's literal policy.local_rounds must equal V(ν, θ) for
+        // its tag — the declarative file can't compute, so a test keeps
+        // it honest.
+        let nu = ExperimentConfig::default().nu;
+        let spec = crate::harness::specs::load("fig1c").unwrap();
+        let tags: Vec<f64> = spec
+            .variants
+            .iter()
+            .map(|v| v.tag.as_ref().and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert_eq!(tags, THETAS.to_vec());
+        for v in &spec.variants {
+            let theta = v.tag.as_ref().unwrap().as_f64().unwrap();
+            let cfg = spec.build_config(v).unwrap();
+            assert_eq!(
+                cfg.policy,
+                crate::config::Policy::Fixed {
+                    batch: BATCH,
+                    local_rounds: convergence::local_rounds(nu, theta),
+                },
+                "variant {:?}",
+                v.name
+            );
+        }
     }
 }

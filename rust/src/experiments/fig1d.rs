@@ -1,28 +1,31 @@
 //! Fig. 1(d): communication rounds H and the computation/communication
 //! split as functions of θ — "working more talks less".
 //!
-//! Analytic H from eq. (12) plus the measured virtual-time split from a
-//! short run at each θ. Reproduces the paper's observation that lower θ
-//! (more local work) yields fewer rounds H and a computation-dominated
-//! time budget, while high θ inflates H and communication time.
+//! Analytic only: H from eq. (12) plus the modeled round-time split at
+//! each θ from one probe system — no trained trials, so the spec's
+//! variants are bare θ tags. Reproduces the paper's observation that
+//! lower θ (more local work) yields fewer rounds H and a
+//! computation-dominated time budget, while high θ inflates H and
+//! communication time.
 
-use super::{write_result, ExpOpts};
+use super::{stamp, write_result};
 use crate::config::ExperimentConfig;
 use crate::convergence;
 use crate::coordinator::FlSystem;
+use crate::harness::{ExperimentSpec, RunnerOpts};
 use crate::metrics::Table;
 use crate::util::json::Json;
 
-/// The θ grid Fig. 1(d) evaluates.
+/// The θ grid Fig. 1(d) evaluates (pinned against the spec's tags).
 pub const THETAS: [f64; 5] = [0.05, 0.15, 0.3, 0.5, 0.9];
 /// Fixed batch size of the sweep (the paper's b*).
 pub const BATCH: usize = 32;
 
-/// Regenerate Fig. 1(d).
-pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
+/// Format Fig. 1(d) from its spec (never runs trained trials).
+pub fn render(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
     // Delay inputs from a probe system (same calibration as fig1a).
     let mut probe_cfg = ExperimentConfig::default();
-    opts.apply(&mut probe_cfg);
+    opts.exp.apply(&mut probe_cfg)?;
     probe_cfg.name = "fig1d-probe".into();
     let probe = FlSystem::build(probe_cfg.clone())?;
     let t_cm = probe.log.meta.get("t_cm_expected").and_then(|v| v.as_f64()).unwrap();
@@ -34,7 +37,12 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
         "theta", "V", "H (eq.12)", "T_round (s)", "comp share", "pred 𝒯 (s)",
     ]);
     let mut rows = Vec::new();
-    for &theta in &THETAS {
+    for variant in spec.expand_variants()? {
+        let theta = variant
+            .tag
+            .as_ref()
+            .and_then(|t| t.as_f64())
+            .ok_or_else(|| anyhow::anyhow!("fig1d variant {:?} needs a θ tag", variant.name))?;
         let alpha = (1.0 / theta).ln();
         let v = convergence::local_rounds(cfg.nu, theta);
         let h = convergence::rounds_to_epsilon(
@@ -63,14 +71,18 @@ pub fn run(opts: &ExpOpts) -> anyhow::Result<Json> {
     }
     println!("Fig 1(d) — rounds H and compute/talk split vs θ (b={BATCH})");
     println!("{}", table.render());
-    let doc = Json::obj(vec![
-        ("figure", Json::str("fig1d")),
-        ("batch", Json::Num(BATCH as f64)),
-        ("t_cm", Json::Num(t_cm)),
-        ("t_cp_per_sample", Json::Num(t_cps)),
-        ("series", Json::Arr(rows)),
-    ]);
-    let path = write_result(opts, "fig1d", &doc)?;
+    let doc = stamp(
+        Json::obj(vec![
+            ("figure", Json::str("fig1d")),
+            ("batch", Json::Num(BATCH as f64)),
+            ("t_cm", Json::Num(t_cm)),
+            ("t_cp_per_sample", Json::Num(t_cps)),
+            ("series", Json::Arr(rows)),
+        ]),
+        spec,
+        opts,
+    )?;
+    let path = write_result(&opts.exp, &spec.output, &doc)?;
     println!("wrote {path}");
     Ok(doc)
 }
@@ -94,5 +106,18 @@ mod tests {
         for w in h.windows(2) {
             assert!(w[0] <= w[1], "H should grow with θ: {h:?}");
         }
+    }
+
+    #[test]
+    fn bundled_spec_tags_match_theta_grid() {
+        let spec = crate::harness::specs::load("fig1d").unwrap();
+        let tags: Vec<f64> = spec
+            .variants
+            .iter()
+            .map(|v| v.tag.as_ref().and_then(|t| t.as_f64()).unwrap())
+            .collect();
+        assert_eq!(tags, THETAS.to_vec());
+        // analytic figure: no variant carries overrides
+        assert!(spec.variants.iter().all(|v| v.overrides.is_empty()));
     }
 }

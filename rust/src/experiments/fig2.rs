@@ -4,76 +4,34 @@
 //! Paper claims to reproduce in *shape* (Section VI): DEFL reaches ~the
 //! same accuracy while cutting overall time ≈70% vs FedAvg and ≈38% vs
 //! Rand. on MNIST; ≈18% vs FedAvg and ≈75% vs Rand. on CIFAR.
+//!
+//! The method grid lives in `specs/fig2_mnist.toml` /
+//! `specs/fig2_cifar.toml` (DEFL first — its time anchors the
+//! reduction column); this module formats the table and curves.
 
-use super::{reduction_pct, run_system, write_result, ExpOpts};
-use crate::config::{presets, DatasetKind, ExperimentConfig, Policy};
-use crate::metrics::{RunLog, Table};
+use super::{reduction_pct, stamp, write_result};
+use crate::harness::{run_spec, ExperimentSpec, RunnerOpts};
+use crate::metrics::Table;
 use crate::util::json::Json;
 
-/// Which dataset of the figure to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Which {
-    /// The MNIST-shaped comparison.
-    Mnist,
-    /// The CIFAR-shaped comparison.
-    Cifar,
-}
+/// Format one Fig. 2 dataset (`fig2_mnist` or `fig2_cifar`) from its spec.
+pub fn render(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let variants = spec.expand_variants()?;
+    anyhow::ensure!(
+        variants.first().map(|v| v.name.as_str()) == Some("DEFL"),
+        "fig2 spec {:?} must list the DEFL variant first (it anchors the reduction column)",
+        spec.name
+    );
+    let sweep = run_spec(spec, opts)?;
 
-impl Which {
-    /// Parse a `--dataset` string (`mnist|cifar`).
-    pub fn parse(s: &str) -> anyhow::Result<Which> {
-        match s {
-            "mnist" => Ok(Which::Mnist),
-            "cifar" => Ok(Which::Cifar),
-            other => anyhow::bail!("fig2 dataset must be mnist|cifar, got {other:?}"),
-        }
-    }
-}
-
-fn policies(which: Which) -> Vec<(String, Policy)> {
-    vec![
-        ("DEFL".into(), Policy::Defl),
-        ("FedAvg".into(), presets::fedavg()),
-        (
-            "Rand.".into(),
-            match which {
-                Which::Mnist => presets::rand_mnist(),
-                Which::Cifar => presets::rand_cifar(),
-            },
-        ),
-    ]
-}
-
-fn base_config(which: Which, opts: &ExpOpts) -> ExperimentConfig {
-    let mut cfg = match which {
-        Which::Mnist => presets::fig2_mnist(Policy::Defl),
-        Which::Cifar => presets::fig2_cifar(Policy::Defl),
-    };
-    opts.apply(&mut cfg);
-    cfg
-}
-
-/// Regenerate the Fig. 2 policy comparison on one dataset.
-pub fn run(opts: &ExpOpts, which: Which) -> anyhow::Result<Json> {
-    let mut logs: Vec<(String, RunLog)> = Vec::new();
-    for (label, policy) in policies(which) {
-        let mut cfg = base_config(which, opts);
-        cfg.policy = policy;
-        cfg.name = format!(
-            "fig2-{}-{label}",
-            if which == Which::Mnist { "mnist" } else { "cifar" }
-        );
-        crate::log_info!("--- {} ---", cfg.name);
-        let log = run_system(cfg)?;
-        logs.push((label, log));
-    }
-
-    let defl_time = logs[0].1.overall_time();
+    let defl_time = sweep.log("DEFL")?.overall_time();
     let mut table = Table::new(&[
         "method", "b", "V", "final acc", "best acc", "overall 𝒯 (s)", "DEFL reduction",
     ]);
     let mut rows = Vec::new();
-    for (label, log) in &logs {
+    for variant in &variants {
+        let label = &variant.name;
+        let log = sweep.log(label)?;
         let b = log.meta.get("batch").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
         let v = log.meta.get("local_rounds").and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
         let final_acc = log
@@ -114,43 +72,54 @@ pub fn run(opts: &ExpOpts, which: Which) -> anyhow::Result<Json> {
             ("curve", Json::Arr(curve)),
         ]));
     }
-    let id = if which == Which::Mnist { "fig2_mnist" } else { "fig2_cifar" };
+    let id = &spec.output;
     println!("Fig 2 — {id}: DEFL vs baselines");
     println!("{}", table.render());
-    let doc = Json::obj(vec![
-        ("figure", Json::str(id)),
-        ("series", Json::Arr(rows)),
-    ]);
-    let path = write_result(opts, id, &doc)?;
+    let doc = stamp(
+        Json::obj(vec![
+            ("figure", Json::str(id.clone())),
+            ("series", Json::Arr(rows)),
+            ("aggregate", sweep.aggregate.clone()),
+        ]),
+        spec,
+        opts,
+    )?;
+    let path = write_result(&opts.exp, id, &doc)?;
     println!("wrote {path}");
     Ok(doc)
 }
 
-/// Dataset kind actually used (for tests).
-pub fn dataset_of(which: Which) -> DatasetKind {
-    match which {
-        Which::Mnist => DatasetKind::MnistLike,
-        Which::Cifar => DatasetKind::CifarLike,
-    }
-}
-
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use crate::config::Policy;
 
     #[test]
-    fn policy_grid_matches_paper() {
-        let p = policies(Which::Mnist);
-        assert_eq!(p.len(), 3);
-        assert_eq!(p[1].1, Policy::Fixed { batch: 10, local_rounds: 20 });
-        assert_eq!(p[2].1, Policy::Fixed { batch: 16, local_rounds: 15 });
-        let p = policies(Which::Cifar);
-        assert_eq!(p[2].1, Policy::Fixed { batch: 64, local_rounds: 30 });
+    fn bundled_policy_grids_match_paper() {
+        // the paper's (b, V) baseline grid, now pinned in the specs
+        let mnist = crate::harness::specs::load("fig2_mnist").unwrap();
+        let names: Vec<&str> = mnist.variants.iter().map(|v| v.name.as_str()).collect();
+        assert_eq!(names, ["DEFL", "FedAvg", "Rand."]);
+        let policy = |spec: &crate::harness::ExperimentSpec, i: usize| {
+            spec.build_config(&spec.variants[i]).unwrap().policy
+        };
+        assert_eq!(policy(&mnist, 0), Policy::Defl);
+        assert_eq!(policy(&mnist, 1), Policy::Fixed { batch: 10, local_rounds: 20 });
+        assert_eq!(policy(&mnist, 2), Policy::Fixed { batch: 16, local_rounds: 15 });
+        let cifar = crate::harness::specs::load("fig2_cifar").unwrap();
+        assert_eq!(policy(&cifar, 2), Policy::Fixed { batch: 64, local_rounds: 30 });
     }
 
     #[test]
-    fn parse_which() {
-        assert_eq!(Which::parse("mnist").unwrap(), Which::Mnist);
-        assert!(Which::parse("imagenet").is_err());
+    fn bundled_specs_pin_dataset_and_target() {
+        use crate::config::DatasetKind;
+        let mnist = crate::harness::specs::load("fig2_mnist").unwrap();
+        let cfg = mnist.build_config(&mnist.variants[0]).unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::MnistLike);
+        assert_eq!(cfg.target_accuracy, 0.97);
+        let cifar = crate::harness::specs::load("fig2_cifar").unwrap();
+        let cfg = cifar.build_config(&cifar.variants[0]).unwrap();
+        assert_eq!(cfg.dataset, DatasetKind::CifarLike);
+        assert_eq!(cfg.target_accuracy, 0.85);
+        assert_eq!(cfg.train_per_device, 500);
     }
 }

@@ -1,13 +1,16 @@
-//! Experiment harnesses — one per paper figure (DESIGN.md §6).
+//! Figure formatters over the declarative trial runner (DESIGN.md §6, §12).
 //!
-//! Each harness regenerates the corresponding figure's series: it prints a
-//! paper-style table and writes `results/<id>.json` for plotting. Absolute
-//! numbers differ from the paper (synthetic data, CPU-PJRT substrate —
-//! DESIGN.md §4); the *shape* — who wins, by what factor, where the knees
-//! are — is the reproduction target, recorded in EXPERIMENTS.md.
+//! Since PR 7 the per-figure modules no longer wire configs by hand:
+//! each paper figure has a committed spec (`specs/<name>.toml`, embedded
+//! in [`crate::harness::specs`]) that the generic runner expands and
+//! executes, and the modules here shrink to *formatting* — the
+//! paper-style table, the figure-shaped `results/<id>.json` payload,
+//! and any closed-form analytics (fig1a/fig1d plan rows, the engine
+//! sweep's derived deadline). Entry point: [`render_figure`], dispatched
+//! from `defl run --spec <file>` on the spec's `figure` key.
 //!
-//! `fast` mode (used by `cargo bench` wrappers and CI) shrinks rounds and
-//! dataset sizes by ~an order of magnitude.
+//! `fast` mode (used by `cargo bench` wrappers and CI) shrinks rounds
+//! and dataset sizes by ~an order of magnitude.
 
 /// Fig. 1(a): the ε sweep.
 pub mod fig1a;
@@ -19,15 +22,20 @@ pub mod fig1c;
 pub mod fig1d;
 /// Fig. 2: the headline DEFL-vs-baselines comparison.
 pub mod fig2;
-/// Solver exactness, engines, codecs and the controller sweep.
+/// Solver exactness, engines, codecs, controller and churn sweeps.
 pub mod ablation;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::FlSystem;
+use crate::harness::{ExperimentSpec, RunnerOpts};
 use crate::metrics::RunLog;
 use crate::util::json::Json;
 
-/// Shared knobs for every experiment harness.
+/// Shared knobs for every experiment run. Feature-specific fields
+/// (backend, codec, controller cadence) are gone since PR 7: everything
+/// flows through `overrides` — generic `section.key=value` strings
+/// applied via [`ExperimentConfig::set_override`], the same path
+/// `--set` and spec files use.
 #[derive(Clone, Debug)]
 pub struct ExpOpts {
     /// Scale down for smoke/bench runs.
@@ -40,20 +48,12 @@ pub struct ExpOpts {
     pub seed: u64,
     /// Artifacts directory.
     pub artifacts_dir: String,
-    /// Training backend every harness run uses (`defl exp --backend`,
-    /// `DEFL_BACKEND=native` in CI). Default: the build's default.
-    pub backend: crate::runtime::BackendKind,
-    /// Update-codec override for every harness run (`defl exp --codec`,
-    /// `DEFL_CODEC=topk`). None = the config's codec (dense unless the
-    /// preset says otherwise); qbits/k_ratio stay at their config values
-    /// (`--set codec.qbits=…` to change them).
-    pub codec: Option<crate::codec::CodecKind>,
-    /// Online-controller cadence override for every harness run
-    /// (`defl exp --controller N`, `DEFL_CONTROLLER=N`): sets
-    /// `controller.replan_every`. None = the config's value (0 = static
-    /// plan); the remaining knobs stay at their config values
-    /// (`--set controller.ewma=…` to change them).
-    pub controller: Option<usize>,
+    /// Generic `section.key=value` config overrides, applied in order
+    /// after the spec's base + variant overrides (so the CLI wins).
+    /// `defl exp --backend/--codec/--controller` and the
+    /// `DEFL_BACKEND`/`DEFL_CODEC`/`DEFL_CONTROLLER` env knobs lower to
+    /// entries here.
+    pub overrides: Vec<String>,
 }
 
 impl Default for ExpOpts {
@@ -64,9 +64,7 @@ impl Default for ExpOpts {
             rounds: None,
             seed: 42,
             artifacts_dir: "artifacts".into(),
-            backend: crate::runtime::BackendKind::default(),
-            codec: None,
-            controller: None,
+            overrides: Vec::new(),
         }
     }
 }
@@ -74,10 +72,9 @@ impl Default for ExpOpts {
 impl ExpOpts {
     /// Environment knobs: `DEFL_FAST=1`, `DEFL_BACKEND=pjrt|native`,
     /// `DEFL_CODEC=dense|quant|topk|topk_quant`, `DEFL_CONTROLLER=N`
-    /// (online re-plan cadence in rounds; 0 = static plan). An
-    /// unparseable value is a hard error (same contract as the
-    /// `defl exp --backend`/`--codec`/`--controller` flags), so a typo
-    /// can't silently run the wrong substrate, codec or cadence.
+    /// (online re-plan cadence in rounds; 0 = static plan). Each lowers
+    /// to a generic override; the value is still parsed eagerly so a
+    /// typo can't silently run the wrong substrate, codec or cadence.
     pub fn from_env() -> anyhow::Result<Self> {
         let mut o = ExpOpts::default();
         if std::env::var("DEFL_FAST").as_deref() == Ok("1") {
@@ -85,38 +82,37 @@ impl ExpOpts {
         }
         if let Ok(b) = std::env::var("DEFL_BACKEND") {
             if !b.is_empty() {
-                o.backend = crate::runtime::BackendKind::parse(&b)
+                crate::runtime::BackendKind::parse(&b)
                     .map_err(|e| anyhow::anyhow!("DEFL_BACKEND: {e}"))?;
+                o.overrides.push(format!("backend.kind={b}"));
             }
         }
         if let Ok(c) = std::env::var("DEFL_CODEC") {
             if !c.is_empty() {
-                o.codec = Some(
-                    crate::codec::CodecKind::parse(&c)
-                        .map_err(|e| anyhow::anyhow!("DEFL_CODEC: {e}"))?,
-                );
+                crate::codec::CodecKind::parse(&c)
+                    .map_err(|e| anyhow::anyhow!("DEFL_CODEC: {e}"))?;
+                o.overrides.push(format!("codec.kind={c}"));
             }
         }
         if let Ok(c) = std::env::var("DEFL_CONTROLLER") {
             if !c.is_empty() {
-                o.controller = Some(c.parse::<usize>().map_err(|e| {
+                let n = c.parse::<usize>().map_err(|e| {
                     anyhow::anyhow!("DEFL_CONTROLLER: {e} (want a re-plan cadence in rounds)")
-                })?);
+                })?;
+                o.overrides.push(format!("controller.replan_every={n}"));
             }
         }
         Ok(o)
     }
 
-    /// Apply the common knobs to a config.
-    pub fn apply(&self, cfg: &mut ExperimentConfig) {
+    /// Apply the common knobs to a config: seed, artifacts dir, the
+    /// generic overrides (in order), `--rounds`, then the fast-mode
+    /// shrink.
+    pub fn apply(&self, cfg: &mut ExperimentConfig) -> anyhow::Result<()> {
         cfg.seed = self.seed;
         cfg.artifacts_dir = self.artifacts_dir.clone();
-        cfg.backend = self.backend;
-        if let Some(kind) = self.codec {
-            cfg.codec.kind = kind;
-        }
-        if let Some(cadence) = self.controller {
-            cfg.controller.replan_every = cadence;
+        for spec in &self.overrides {
+            cfg.set_override(spec)?;
         }
         if let Some(r) = self.rounds {
             cfg.max_rounds = r;
@@ -127,7 +123,71 @@ impl ExpOpts {
             cfg.test_size = 256;
             cfg.eval_every = 2;
         }
+        Ok(())
     }
+}
+
+/// Figure-formatter ids a spec's `figure` key may name.
+pub const FIGURES: &[&str] = &[
+    "fig1a",
+    "fig1b",
+    "fig1c",
+    "fig1d",
+    "fig2_mnist",
+    "fig2_cifar",
+    "ablation_engines",
+    "ablation_codecs",
+    "ablation_controller",
+    "ablation_churn",
+    "ablation_churn_ctl",
+];
+
+/// Run a spec through its figure formatter: trials via the runner, then
+/// the paper-style table + `results/<output>.json`. Returns the written
+/// document.
+pub fn render_figure(
+    figure: &str,
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<Json> {
+    match figure {
+        "fig1a" => fig1a::render(spec, opts),
+        "fig1b" => fig1b::render(spec, opts),
+        "fig1c" => fig1c::render(spec, opts),
+        "fig1d" => fig1d::render(spec, opts),
+        "fig2_mnist" | "fig2_cifar" => fig2::render(spec, opts),
+        "ablation_engines" => ablation::render_engines(spec, opts),
+        "ablation_codecs" => ablation::render_codecs(spec, opts),
+        "ablation_controller" => ablation::render_controller(spec, opts),
+        "ablation_churn" => ablation::render_churn(spec, opts),
+        "ablation_churn_ctl" => ablation::render_churn_ctl(spec, opts),
+        other => anyhow::bail!(
+            "unknown figure formatter {other:?} (have: {})",
+            FIGURES.join(", ")
+        ),
+    }
+}
+
+/// Stamp `schema_version` + spec/seed/variant provenance onto a figure
+/// document (every file the harness writes must pass
+/// [`crate::harness::validate_result_doc`]).
+pub(crate) fn stamp(
+    doc: Json,
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<Json> {
+    let mut obj = match doc {
+        Json::Obj(o) => o,
+        _ => anyhow::bail!("figure doc must be an object"),
+    };
+    let base_seed = opts.base_seed.unwrap_or(spec.base_seed);
+    obj.insert(
+        "schema_version".into(),
+        Json::Num(crate::harness::SCHEMA_VERSION as f64),
+    );
+    obj.insert("spec".into(), Json::str(&spec.name));
+    obj.insert("provenance".into(), crate::harness::provenance(spec, base_seed)?);
+    Ok(Json::Obj(obj))
 }
 
 /// Run one configured system to completion, returning its log.
@@ -168,46 +228,76 @@ mod tests {
     fn fast_mode_shrinks() {
         let opts = ExpOpts { fast: true, ..Default::default() };
         let mut cfg = ExperimentConfig::default();
-        opts.apply(&mut cfg);
+        opts.apply(&mut cfg).unwrap();
         assert!(cfg.max_rounds <= 4);
         assert!(cfg.train_per_device <= 64);
     }
 
+    // Satellite-1 pins: the old per-feature ExpOpts fields are gone;
+    // each former flag must lower to a generic override that lands on
+    // the config byte-identically to the direct field write it replaced.
+
     #[test]
-    fn apply_threads_backend_through() {
+    fn backend_override_matches_direct_field_write() {
         use crate::runtime::BackendKind;
-        let opts = ExpOpts { backend: BackendKind::Native, ..Default::default() };
-        let mut cfg = ExperimentConfig::default();
-        opts.apply(&mut cfg);
-        assert_eq!(cfg.backend, BackendKind::Native);
+        let opts = ExpOpts {
+            overrides: vec!["backend.kind=native".into()],
+            ..Default::default()
+        };
+        let mut via_override = ExperimentConfig::default();
+        opts.apply(&mut via_override).unwrap();
+
+        let mut direct = ExperimentConfig::default();
+        ExpOpts::default().apply(&mut direct).unwrap();
+        direct.backend = BackendKind::Native;
+
+        assert_eq!(format!("{via_override:?}"), format!("{direct:?}"));
     }
 
     #[test]
-    fn apply_threads_controller_through() {
-        let opts = ExpOpts { controller: Some(2), ..Default::default() };
+    fn codec_override_matches_direct_field_write() {
+        use crate::codec::CodecKind;
+        let opts = ExpOpts { overrides: vec!["codec.kind=topk".into()], ..Default::default() };
+        let mut via_override = ExperimentConfig::default();
+        opts.apply(&mut via_override).unwrap();
+
+        let mut direct = ExperimentConfig::default();
+        ExpOpts::default().apply(&mut direct).unwrap();
+        direct.codec.kind = CodecKind::TopK;
+
+        assert_eq!(format!("{via_override:?}"), format!("{direct:?}"));
+        // no override leaves the config's codec alone
         let mut cfg = ExperimentConfig::default();
-        opts.apply(&mut cfg);
-        assert_eq!(cfg.controller.replan_every, 2);
-        // None leaves the config's cadence alone
-        let opts = ExpOpts::default();
+        cfg.codec.kind = CodecKind::Quant;
+        ExpOpts::default().apply(&mut cfg).unwrap();
+        assert_eq!(cfg.codec.kind, CodecKind::Quant);
+    }
+
+    #[test]
+    fn controller_override_matches_direct_field_write() {
+        let opts = ExpOpts {
+            overrides: vec!["controller.replan_every=2".into()],
+            ..Default::default()
+        };
+        let mut via_override = ExperimentConfig::default();
+        opts.apply(&mut via_override).unwrap();
+
+        let mut direct = ExperimentConfig::default();
+        ExpOpts::default().apply(&mut direct).unwrap();
+        direct.controller.replan_every = 2;
+
+        assert_eq!(format!("{via_override:?}"), format!("{direct:?}"));
+        // no override leaves the config's cadence alone
         let mut cfg = ExperimentConfig::default();
         cfg.controller.replan_every = 5;
-        opts.apply(&mut cfg);
+        ExpOpts::default().apply(&mut cfg).unwrap();
         assert_eq!(cfg.controller.replan_every, 5);
     }
 
     #[test]
-    fn apply_threads_codec_through() {
-        use crate::codec::CodecKind;
-        let opts = ExpOpts { codec: Some(CodecKind::TopK), ..Default::default() };
+    fn bad_override_is_a_hard_error() {
+        let opts = ExpOpts { overrides: vec!["backend.kind=psychic".into()], ..Default::default() };
         let mut cfg = ExperimentConfig::default();
-        opts.apply(&mut cfg);
-        assert_eq!(cfg.codec.kind, CodecKind::TopK);
-        // None leaves the config's codec alone
-        let opts = ExpOpts::default();
-        let mut cfg = ExperimentConfig::default();
-        cfg.codec.kind = CodecKind::Quant;
-        opts.apply(&mut cfg);
-        assert_eq!(cfg.codec.kind, CodecKind::Quant);
+        assert!(opts.apply(&mut cfg).is_err());
     }
 }

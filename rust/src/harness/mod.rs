@@ -1,0 +1,97 @@
+//! Declarative experiment harness (DESIGN.md §12): spec files in,
+//! schema-versioned results out.
+//!
+//! [`spec`] parses `specs/*.toml` (or `.json`) into an
+//! [`spec::ExperimentSpec`] — base config, `[[variants]]` grid with
+//! array-valued axis keys, seed plan. [`runner`] expands the grid into
+//! `variants × seeds` trials, fans them out over the thread pool, and
+//! writes one `result.json` per trial plus a mean ± 95% CI aggregate.
+//! [`specs`] embeds the committed spec files so `defl run --spec fig2_mnist`
+//! (and the deprecated `defl exp` alias) work without a checkout.
+//!
+//! Every document this module writes carries `schema_version` +
+//! spec/variant/seed provenance; `tools/check_results.py` (and
+//! [`validate_result_doc`] on the Rust side) reject anything without it.
+
+pub mod runner;
+pub mod spec;
+pub mod specs;
+
+pub use runner::{run_spec, RunnerOpts, SweepResult, TrialOutcome};
+pub use spec::{ExperimentSpec, TrialSpec, VariantSpec};
+
+use crate::util::json::Json;
+
+/// Version stamp on every trial, aggregate and figure document. Bump on
+/// any key rename/removal; additive keys don't bump it.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Provenance block figure formatters attach to their documents:
+/// which spec produced it, from which seed plan, over which variants.
+pub fn provenance(spec: &ExperimentSpec, base_seed: u64) -> anyhow::Result<Json> {
+    let variants: Vec<Json> =
+        spec.expand_variants()?.iter().map(|v| Json::str(&v.name)).collect();
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("spec".to_string(), Json::str(&spec.name));
+    obj.insert("base_seed".to_string(), Json::Num(base_seed as f64));
+    obj.insert("seeds".to_string(), Json::Num(spec.seeds as f64));
+    obj.insert("variants".to_string(), Json::Arr(variants));
+    Ok(Json::Obj(obj))
+}
+
+/// Strict check every harness output must pass: a numeric
+/// `schema_version` equal to [`SCHEMA_VERSION`] and a non-empty string
+/// `spec`. Mirrors `tools/check_results.py`.
+pub fn validate_result_doc(doc: &Json) -> anyhow::Result<()> {
+    let version = doc
+        .get("schema_version")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| anyhow::anyhow!("result doc has no numeric schema_version"))?;
+    anyhow::ensure!(
+        version == SCHEMA_VERSION,
+        "result doc schema_version {version} != supported {SCHEMA_VERSION}"
+    );
+    let spec = doc
+        .get("spec")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("result doc has no string `spec` provenance"))?;
+    anyhow::ensure!(!spec.is_empty(), "result doc `spec` provenance is empty");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn validate_result_doc_accepts_and_rejects() {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION as f64));
+        doc.insert("spec".to_string(), Json::str("fig2-mnist"));
+        validate_result_doc(&Json::Obj(doc.clone())).unwrap();
+        // wrong version
+        doc.insert("schema_version".to_string(), Json::Num(99.0));
+        assert!(validate_result_doc(&Json::Obj(doc.clone())).is_err());
+        // missing version entirely (a pre-PR-7 unversioned file)
+        doc.remove("schema_version");
+        assert!(validate_result_doc(&Json::Obj(doc.clone())).is_err());
+        // missing spec provenance
+        doc.insert("schema_version".to_string(), Json::Num(SCHEMA_VERSION as f64));
+        doc.remove("spec");
+        assert!(validate_result_doc(&Json::Obj(doc)).is_err());
+    }
+
+    #[test]
+    fn provenance_names_expanded_variants() {
+        let spec = ExperimentSpec::from_toml_text(
+            "name = \"p\"\n[[variants]]\nname = \"g\"\nx.y = [1, 2]\n",
+        )
+        .unwrap();
+        let p = provenance(&spec, 9).unwrap();
+        assert_eq!(p.get("base_seed").unwrap().as_u64(), Some(9));
+        let vs = p.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].as_str(), Some("g-1"));
+    }
+}

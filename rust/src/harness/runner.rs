@@ -1,0 +1,494 @@
+//! Parallel trial runner: expand a spec's grid, fan seeded trials out
+//! over [`crate::util::threadpool::parallel_map`], run each through
+//! [`FlSystem`], and aggregate per-variant statistics.
+//!
+//! Determinism: each trial's result depends only on its own config and
+//! seed, `parallel_map` returns results in input order, and the
+//! aggregate carries no thread or wall-clock information — so the same
+//! spec + seed produces bit-identical trial and aggregate JSON at 1 or
+//! N runner threads (pinned in `tests/harness.rs`).
+
+use super::spec::{ExperimentSpec, TrialSpec, VariantSpec};
+use crate::config::ExperimentConfig;
+use crate::coordinator::FlSystem;
+use crate::experiments::ExpOpts;
+use crate::metrics::RunLog;
+use crate::util::json::Json;
+use crate::util::stats::mean_ci95;
+use crate::util::threadpool::parallel_map;
+use std::collections::BTreeMap;
+
+/// Knobs for one runner invocation (CLI flags / env, not the spec).
+#[derive(Clone, Debug)]
+pub struct RunnerOpts {
+    /// Shared experiment knobs (out dir, fast mode, `--set` overrides).
+    pub exp: ExpOpts,
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Override the spec's `trials.base_seed` (the CLI `--seed` flag).
+    pub base_seed: Option<u64>,
+    /// Run only variants whose expanded name starts with this prefix.
+    pub only: Option<String>,
+    /// Write one `result.json` per trial next to the aggregate.
+    pub write_trials: bool,
+    /// Figure formatters: closed-form analytics only, skip trained runs.
+    pub analytic_only: bool,
+}
+
+impl Default for RunnerOpts {
+    fn default() -> Self {
+        RunnerOpts {
+            exp: ExpOpts::default(),
+            threads: 0,
+            base_seed: None,
+            only: None,
+            write_trials: true,
+            analytic_only: false,
+        }
+    }
+}
+
+impl RunnerOpts {
+    /// Environment knobs: everything [`ExpOpts::from_env`] reads, plus
+    /// `DEFL_THREADS=N` (0 = auto) and `DEFL_SEED=N` for the seed base.
+    pub fn from_env() -> anyhow::Result<Self> {
+        let mut o = RunnerOpts { exp: ExpOpts::from_env()?, ..Default::default() };
+        if let Ok(t) = std::env::var("DEFL_THREADS") {
+            if !t.is_empty() {
+                o.threads = t
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("DEFL_THREADS: {e}"))?;
+            }
+        }
+        if let Ok(s) = std::env::var("DEFL_SEED") {
+            if !s.is_empty() {
+                o.base_seed =
+                    Some(s.parse::<u64>().map_err(|e| anyhow::anyhow!("DEFL_SEED: {e}"))?);
+            }
+        }
+        Ok(o)
+    }
+
+    /// Worker-thread count after resolving 0 = auto.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// One finished trial: its spec slice, the run name, the schema-stable
+/// result document, and (on success) the full round log for formatters.
+#[derive(Clone, Debug)]
+pub struct TrialOutcome {
+    /// Which (variant, seed) this was.
+    pub trial: TrialSpec,
+    /// The config name the trial ran under (`{spec}-{variant}[-s{seed}]`).
+    pub name: String,
+    /// The per-trial `result.json` document.
+    pub doc: Json,
+    /// The round log (None when the trial errored).
+    pub log: Option<RunLog>,
+}
+
+impl TrialOutcome {
+    /// Did the trial complete?
+    pub fn ok(&self) -> bool {
+        self.doc.get("outcome").and_then(|o| o.as_str()) == Some("success")
+    }
+}
+
+/// Everything one `run_spec` call produced.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// The spec's `name`.
+    pub spec_name: String,
+    /// The spec's `output` stem (aggregate filename).
+    pub output: String,
+    /// The runner's output directory (from [`ExpOpts::out_dir`]).
+    pub out_dir: String,
+    /// All trials, in expansion order (variant-major, seeds inner).
+    pub trials: Vec<TrialOutcome>,
+    /// The mean ± 95% CI aggregate document.
+    pub aggregate: Json,
+}
+
+impl SweepResult {
+    /// First trial of the named variant (the base-seed run formatters
+    /// draw curves from).
+    pub fn first_by_variant(&self, variant: &str) -> Option<&TrialOutcome> {
+        self.trials.iter().find(|t| t.trial.variant == variant)
+    }
+
+    /// The named variant's base-seed round log, or an error naming it.
+    pub fn log(&self, variant: &str) -> anyhow::Result<&RunLog> {
+        self.first_by_variant(variant)
+            .and_then(|t| t.log.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("variant {variant:?} has no successful trial"))
+    }
+
+    /// Write the aggregate to `{out_dir}/{output}.json`; returns the path.
+    pub fn write_aggregate(&self) -> anyhow::Result<String> {
+        let path = format!("{}/{}.json", self.out_dir, self.output);
+        self.aggregate.write_file(&path)?;
+        Ok(path)
+    }
+}
+
+/// Expand, run and aggregate one spec. Configs are built (and range
+/// checked) up front so a bad grid fails before any training starts;
+/// trial *runtime* errors, by contrast, become `outcome = "error"`
+/// documents so one diverging arm doesn't sink a 200-trial sweep.
+pub fn run_spec(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<SweepResult> {
+    let base_seed = opts.base_seed.unwrap_or(spec.base_seed);
+    let mut trials = spec.expand(base_seed)?;
+    if let Some(prefix) = &opts.only {
+        trials.retain(|t| t.variant.starts_with(prefix.as_str()));
+        anyhow::ensure!(!trials.is_empty(), "--only {prefix:?} matched no variants");
+    }
+    let mut jobs = Vec::with_capacity(trials.len());
+    for trial in trials {
+        let cfg = trial_config(spec, &trial, opts)?;
+        jobs.push((trial, cfg));
+    }
+    let spec_name = spec.name.clone();
+    let outcomes = parallel_map(jobs, opts.resolved_threads(), move |(trial, cfg)| {
+        run_trial(&spec_name, trial, cfg)
+    });
+    let aggregate = aggregate(spec, base_seed, &outcomes);
+    let result = SweepResult {
+        spec_name: spec.name.clone(),
+        output: spec.output.clone(),
+        out_dir: opts.exp.out_dir.clone(),
+        trials: outcomes,
+        aggregate,
+    };
+    if opts.write_trials {
+        write_trial_files(&result)?;
+    }
+    Ok(result)
+}
+
+/// The config one trial runs under: spec defaults → base → variant →
+/// CLI/env knobs (`--set` wins over the spec) → the trial's seed and
+/// name. `out` is cleared — the runner owns all file output.
+fn trial_config(
+    spec: &ExperimentSpec,
+    trial: &TrialSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<ExperimentConfig> {
+    let variant = VariantSpec {
+        name: trial.variant.clone(),
+        tag: trial.tag.clone(),
+        overrides: trial.overrides.clone(),
+    };
+    let mut cfg = spec.build_config(&variant)?;
+    opts.exp.apply(&mut cfg)?;
+    cfg.seed = trial.seed;
+    cfg.name = trial_name(spec, trial);
+    cfg.out = None;
+    cfg.validate()
+        .map_err(|e| anyhow::anyhow!("variant {:?}: {e}", trial.variant))?;
+    Ok(cfg)
+}
+
+/// `{spec}-{variant}`, with a `-s{seed}` suffix once a spec runs more
+/// than one seed (single-seed figure specs keep the historical names).
+fn trial_name(spec: &ExperimentSpec, trial: &TrialSpec) -> String {
+    if spec.seeds > 1 {
+        format!("{}-{}-s{}", spec.name, trial.variant, trial.seed)
+    } else {
+        format!("{}-{}", spec.name, trial.variant)
+    }
+}
+
+fn run_trial(spec_name: &str, trial: TrialSpec, cfg: ExperimentConfig) -> TrialOutcome {
+    let name = cfg.name.clone();
+    match run_one(cfg) {
+        Ok(log) => {
+            let doc = trial_doc(spec_name, &trial, "success", &log_metrics(&log), None);
+            TrialOutcome { trial, name, doc, log: Some(log) }
+        }
+        Err(e) => {
+            let doc =
+                trial_doc(spec_name, &trial, "error", &BTreeMap::new(), Some(e.to_string()));
+            TrialOutcome { trial, name, doc, log: None }
+        }
+    }
+}
+
+fn run_one(cfg: ExperimentConfig) -> anyhow::Result<RunLog> {
+    let mut sys = FlSystem::build(cfg)?;
+    sys.run()?;
+    Ok(sys.log.clone())
+}
+
+/// The schema-stable per-trial `result.json` (DESIGN.md §12): outcome,
+/// one scalar objective, a flat metrics bag, and provenance.
+fn trial_doc(
+    spec_name: &str,
+    trial: &TrialSpec,
+    outcome: &str,
+    metrics: &BTreeMap<String, Json>,
+    error: Option<String>,
+) -> Json {
+    let mut doc = BTreeMap::new();
+    doc.insert("schema_version".into(), Json::Num(super::SCHEMA_VERSION as f64));
+    doc.insert("spec".into(), Json::Str(spec_name.into()));
+    doc.insert("variant".into(), Json::Str(trial.variant.clone()));
+    if let Some(tag) = &trial.tag {
+        doc.insert("tag".into(), tag.clone());
+    }
+    doc.insert("seed".into(), Json::Num(trial.seed as f64));
+    doc.insert("seed_index".into(), Json::Num(trial.seed_index as f64));
+    doc.insert("outcome".into(), Json::Str(outcome.into()));
+    let objective_value = metrics.get("overall_time").cloned().unwrap_or(Json::Null);
+    doc.insert(
+        "objective".into(),
+        Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::str("overall_time")),
+            ("value".to_string(), objective_value),
+        ])),
+    );
+    doc.insert("metrics".into(), Json::Obj(metrics.clone()));
+    if let Some(msg) = error {
+        doc.insert("error".into(), Json::Str(msg));
+    }
+    Json::Obj(doc)
+}
+
+/// Flatten a run log into the finite-only metrics bag.
+fn log_metrics(log: &RunLog) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    let mut put = |k: &str, v: f64| {
+        if v.is_finite() {
+            m.insert(k.to_string(), Json::Num(v));
+        }
+    };
+    put("rounds", log.rounds.len() as f64);
+    put("overall_time", log.overall_time());
+    put("best_accuracy", log.best_accuracy());
+    if let Some(last) = log.last() {
+        put("final_train_loss", last.train_loss);
+    }
+    if let Some(acc) = log.rounds.iter().rev().map(|r| r.test_accuracy).find(|a| a.is_finite())
+    {
+        put("final_test_accuracy", acc);
+    }
+    if !log.rounds.is_empty() {
+        put("mean_participation", log.mean_participation());
+        put("total_dropped", log.total_dropped() as f64);
+        put("mean_staleness", log.mean_staleness());
+    }
+    for key in ["clock_waited", "controller_replans"] {
+        if let Some(v) = log.meta.get(key).and_then(|j| j.as_f64()) {
+            put(key, v);
+        }
+    }
+    m
+}
+
+/// Per-variant mean ± 95% CI over successful trials, in expansion
+/// order. Failed trials are counted, never averaged.
+pub fn aggregate(spec: &ExperimentSpec, base_seed: u64, outcomes: &[TrialOutcome]) -> Json {
+    // group consecutively (outcomes are variant-major)
+    let mut groups: Vec<(&str, Vec<&TrialOutcome>)> = Vec::new();
+    for t in outcomes {
+        match groups.last_mut() {
+            Some((name, g)) if *name == t.trial.variant => g.push(t),
+            _ => groups.push((t.trial.variant.as_str(), vec![t])),
+        }
+    }
+    let mut variants = Vec::with_capacity(groups.len());
+    let mut total_failed = 0usize;
+    for (name, group) in groups {
+        let ok: Vec<&TrialOutcome> = group.iter().copied().filter(|t| t.ok()).collect();
+        let failed = group.len() - ok.len();
+        total_failed += failed;
+        let mut v = BTreeMap::new();
+        v.insert("variant".into(), Json::str(name));
+        if let Some(tag) = &group[0].trial.tag {
+            v.insert("tag".into(), tag.clone());
+        }
+        v.insert("n".into(), Json::Num(ok.len() as f64));
+        v.insert("failed".into(), Json::Num(failed as f64));
+        let objective: Vec<f64> = ok
+            .iter()
+            .filter_map(|t| t.doc.get("objective").and_then(|o| o.get("value")))
+            .filter_map(|j| j.as_f64())
+            .collect();
+        let (mean, ci95) = mean_ci95(&objective);
+        v.insert(
+            "objective".into(),
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::str("overall_time")),
+                ("mean".to_string(), Json::Num(mean)),
+                ("ci95".to_string(), Json::Num(ci95)),
+                ("min".to_string(), Json::Num(crate::util::stats::min(&objective))),
+                ("max".to_string(), Json::Num(crate::util::stats::max(&objective))),
+            ])),
+        );
+        // union of metric keys; a key contributes the trials that have it
+        let mut by_key: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+        for t in &ok {
+            if let Some(Json::Obj(m)) = t.doc.get("metrics") {
+                for (k, val) in m {
+                    if let Some(x) = val.as_f64() {
+                        by_key.entry(k.clone()).or_default().push(x);
+                    }
+                }
+            }
+        }
+        let metrics: BTreeMap<String, Json> = by_key
+            .into_iter()
+            .map(|(k, xs)| {
+                let (mean, ci95) = mean_ci95(&xs);
+                let stat = BTreeMap::from([
+                    ("mean".to_string(), Json::Num(mean)),
+                    ("ci95".to_string(), Json::Num(ci95)),
+                ]);
+                (k, Json::Obj(stat))
+            })
+            .collect();
+        v.insert("metrics".into(), Json::Obj(metrics));
+        variants.push(Json::Obj(v));
+    }
+    Json::Obj(BTreeMap::from([
+        ("schema_version".to_string(), Json::Num(super::SCHEMA_VERSION as f64)),
+        ("spec".to_string(), Json::str(&spec.name)),
+        ("base_seed".to_string(), Json::Num(base_seed as f64)),
+        ("seeds".to_string(), Json::Num(spec.seeds as f64)),
+        ("trials".to_string(), Json::Num(outcomes.len() as f64)),
+        ("failed".to_string(), Json::Num(total_failed as f64)),
+        ("variants".to_string(), Json::Arr(variants)),
+    ]))
+}
+
+/// One `result.json` per trial under `{out_dir}/{output}_trials/`.
+fn write_trial_files(result: &SweepResult) -> anyhow::Result<()> {
+    let dir = format!("{}/{}_trials", result.out_dir, result.output);
+    for t in &result.trials {
+        let path = format!("{dir}/{}-s{}.json", t.trial.variant, t.trial.seed);
+        t.doc.write_file(&path)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec(seeds: usize) -> ExperimentSpec {
+        ExperimentSpec::from_toml_text(&format!(
+            r#"
+            name = "tiny"
+            [trials]
+            seeds = {seeds}
+            base_seed = 5
+            [base]
+            backend.kind = "native"
+            system.devices = 3
+            dataset.kind = "tiny"
+            dataset.train_per_device = 32
+            dataset.test_size = 64
+            run.max_rounds = 2
+            run.eval_every = 2
+            policy.kind = "fixed"
+            policy.batch = 8
+            policy.local_rounds = 2
+            [[variants]]
+            name = "a"
+            [[variants]]
+            name = "b"
+            tag = 2.0
+            policy.local_rounds = 3
+            "#
+        ))
+        .unwrap()
+    }
+
+    fn quiet_opts() -> RunnerOpts {
+        RunnerOpts {
+            exp: ExpOpts { out_dir: std::env::temp_dir().display().to_string(), ..Default::default() },
+            threads: 1,
+            write_trials: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn run_spec_produces_schema_stable_docs() {
+        let spec = tiny_spec(2);
+        let res = run_spec(&spec, &quiet_opts()).unwrap();
+        assert_eq!(res.trials.len(), 4);
+        for t in &res.trials {
+            assert!(t.ok(), "{:?}", t.doc.get("error"));
+            crate::harness::validate_result_doc(&t.doc).unwrap();
+            assert!(t.doc.get("metrics").unwrap().get("overall_time").is_some());
+        }
+        // seeds 5 and 6, variant-major
+        assert_eq!(res.trials[0].trial.seed, 5);
+        assert_eq!(res.trials[1].trial.seed, 6);
+        assert_eq!(res.trials[2].trial.variant, "b");
+        // names carry the seed suffix in multi-seed mode
+        assert_eq!(res.trials[0].name, "tiny-a-s5");
+        crate::harness::validate_result_doc(&res.aggregate).unwrap();
+        let vs = res.aggregate.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].get("n").unwrap().as_u64(), Some(2));
+        assert_eq!(vs[1].get("tag").unwrap().as_f64(), Some(2.0));
+        assert!(vs[0].get("objective").unwrap().get("mean").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn single_seed_names_match_legacy() {
+        let spec = tiny_spec(1);
+        let res = run_spec(&spec, &quiet_opts()).unwrap();
+        assert_eq!(res.trials[0].name, "tiny-a");
+        assert!(res.log("b").is_ok());
+        assert!(res.log("zzz").is_err());
+    }
+
+    #[test]
+    fn only_filter_and_bad_filter() {
+        let spec = tiny_spec(1);
+        let mut opts = quiet_opts();
+        opts.only = Some("b".into());
+        let res = run_spec(&spec, &opts).unwrap();
+        assert_eq!(res.trials.len(), 1);
+        assert_eq!(res.trials[0].trial.variant, "b");
+        opts.only = Some("nope".into());
+        assert!(run_spec(&spec, &opts).is_err());
+    }
+
+    #[test]
+    fn aggregate_counts_failures() {
+        let spec = tiny_spec(1);
+        let trial = TrialSpec {
+            variant: "a".into(),
+            tag: None,
+            overrides: Vec::new(),
+            seed_index: 0,
+            seed: 5,
+        };
+        let ok = run_trial("tiny", trial.clone(), {
+            let v = VariantSpec { name: "a".into(), tag: None, overrides: Vec::new() };
+            let mut cfg = spec.build_config(&v).unwrap();
+            cfg.name = "tiny-a".into();
+            cfg.out = None;
+            cfg
+        });
+        let err = TrialOutcome {
+            trial,
+            name: "tiny-a".into(),
+            doc: trial_doc("tiny", &ok.trial, "error", &BTreeMap::new(), Some("boom".into())),
+            log: None,
+        };
+        let agg = aggregate(&spec, 5, &[ok, err]);
+        assert_eq!(agg.get("failed").unwrap().as_u64(), Some(1));
+        let vs = agg.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(vs[0].get("n").unwrap().as_u64(), Some(1));
+        assert_eq!(vs[0].get("failed").unwrap().as_u64(), Some(1));
+    }
+}

@@ -1,0 +1,568 @@
+//! Declarative experiment specs (DESIGN.md §12).
+//!
+//! A spec is a TOML-lite or JSON file describing one experiment: a base
+//! config (dotted `section.key = value` override paths applied through
+//! [`ExperimentConfig::apply_json`]), a `[[variants]]` grid, and a seed
+//! plan. Array-valued variant keys are *grid axes*: one `[[variants]]`
+//! table with `engine.kind = ["sync", "deadline"]` and
+//! `codec.kind = ["dense", "topk"]` expands to the 2×2 cross-product,
+//! each expanded variant named after its axis values. The runner
+//! ([`super::runner`]) turns the expansion into `variants × seeds`
+//! trials.
+
+use crate::config::ExperimentConfig;
+use crate::util::json::Json;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One variant of the experiment grid, after parsing but before axis
+/// expansion: a name, an optional scalar `tag` (carried into results for
+/// formatters — e.g. the ε or θ value a figure plots against), and a
+/// list of `(override path, value)` pairs in file order.
+#[derive(Clone, Debug)]
+pub struct VariantSpec {
+    /// Variant name (unique within the spec after expansion).
+    pub name: String,
+    /// Optional scalar metadata carried into trial and aggregate docs.
+    pub tag: Option<Json>,
+    /// Override paths applied on top of the spec's base config.
+    pub overrides: Vec<(String, Json)>,
+}
+
+/// A fully parsed experiment spec.
+#[derive(Clone, Debug)]
+pub struct ExperimentSpec {
+    /// Experiment name (also the default output stem).
+    pub name: String,
+    /// Optional figure-formatter id (`fig1a`, `fig2_mnist`, …). None =
+    /// generic sweep: the CLI writes the aggregate and stops.
+    pub figure: Option<String>,
+    /// Output stem for `results/<output>.json` (defaults to `name`).
+    pub output: String,
+    /// Seeded repetitions per variant (≥ 1).
+    pub seeds: usize,
+    /// First seed; trial `i` of a variant runs at `base_seed + i`.
+    pub base_seed: u64,
+    /// Base-config override paths applied to every variant, file order.
+    pub base: Vec<(String, Json)>,
+    /// The variant grid (axes not yet expanded).
+    pub variants: Vec<VariantSpec>,
+}
+
+/// One runnable trial: an expanded variant at one seed.
+#[derive(Clone, Debug)]
+pub struct TrialSpec {
+    /// Expanded variant name.
+    pub variant: String,
+    /// The variant's `tag`, if any.
+    pub tag: Option<Json>,
+    /// Variant override paths (axis keys resolved to scalars).
+    pub overrides: Vec<(String, Json)>,
+    /// 0-based repetition index within the variant.
+    pub seed_index: usize,
+    /// The RNG seed this trial runs at.
+    pub seed: u64,
+}
+
+impl ExperimentSpec {
+    /// Load a spec from a `.toml` or `.json` file (by extension).
+    pub fn from_file(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let doc = match path.extension().and_then(|e| e.to_str()) {
+            Some("json") => Json::parse_file(path)?,
+            _ => crate::config::toml_lite::parse_file(path)?,
+        };
+        Self::from_json(&doc).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Parse a spec from TOML-lite text.
+    pub fn from_toml_text(text: &str) -> anyhow::Result<Self> {
+        let doc = crate::config::toml_lite::parse(text)?;
+        Self::from_json(&doc)
+    }
+
+    /// Parse a spec from its JSON document form. Unknown top-level keys
+    /// are rejected so a typo can't silently drop half the grid.
+    pub fn from_json(doc: &Json) -> anyhow::Result<Self> {
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("spec root must be a table"))?;
+        for key in obj.keys() {
+            match key.as_str() {
+                "name" | "figure" | "output" | "trials" | "base" | "variants" => {}
+                other => anyhow::bail!(
+                    "unknown top-level spec key {other:?} \
+                     (expected name/figure/output/trials/base/variants)"
+                ),
+            }
+        }
+        let name = obj
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("spec needs a top-level string `name`"))?
+            .to_string();
+        let figure = match obj.get("figure") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("`figure` must be a string"))?
+                    .to_string(),
+            ),
+        };
+        let output = match obj.get("output") {
+            None => name.clone(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("`output` must be a string"))?
+                .to_string(),
+        };
+        let (seeds, base_seed) = parse_trials(obj.get("trials"))?;
+        let base = match obj.get("base") {
+            None => Vec::new(),
+            Some(v) => flatten_overrides("base", v)?,
+        };
+        let variants = match obj.get("variants") {
+            None => vec![VariantSpec {
+                name: "default".into(),
+                tag: None,
+                overrides: Vec::new(),
+            }],
+            Some(Json::Arr(items)) => {
+                let mut vs = Vec::with_capacity(items.len());
+                for (i, item) in items.iter().enumerate() {
+                    vs.push(parse_variant(i, item)?);
+                }
+                vs
+            }
+            Some(_) => anyhow::bail!("`variants` must be an array of tables ([[variants]])"),
+        };
+        let spec = ExperimentSpec { name, figure, output, seeds, base_seed, base, variants };
+        spec.check_shape()?;
+        Ok(spec)
+    }
+
+    /// Structural checks that don't need a config build: seed plan,
+    /// name charset, unique expanded names, scalar axis elements.
+    fn check_shape(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.seeds >= 1, "trials.seeds must be ≥ 1");
+        anyhow::ensure!(!self.name.is_empty(), "spec name must be non-empty");
+        check_name("output", &self.output)?;
+        anyhow::ensure!(!self.variants.is_empty(), "spec needs at least one variant");
+        for (path, v) in &self.base {
+            anyhow::ensure!(
+                !matches!(v, Json::Arr(_)),
+                "base key {path:?} is an array — grid axes belong in [[variants]]"
+            );
+        }
+        let mut seen = BTreeSet::new();
+        for v in &self.expand_variants()? {
+            check_name("variant", &v.name)?;
+            anyhow::ensure!(
+                seen.insert(v.name.clone()),
+                "duplicate variant name {:?} after grid expansion",
+                v.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Expand grid axes: each array-valued override key becomes an axis,
+    /// and one [`VariantSpec`] turns into the cross-product over its
+    /// axes (sorted by key), each expanded variant named
+    /// `{name}-{value}…` in axis order.
+    pub fn expand_variants(&self) -> anyhow::Result<Vec<VariantSpec>> {
+        let mut out = Vec::new();
+        for v in &self.variants {
+            let mut scalars = Vec::new();
+            let mut axes: Vec<(String, Vec<Json>)> = Vec::new();
+            for (path, val) in &v.overrides {
+                match val {
+                    Json::Arr(items) => {
+                        anyhow::ensure!(
+                            !items.is_empty(),
+                            "variant {:?}: axis {path:?} is empty",
+                            v.name
+                        );
+                        for item in items {
+                            anyhow::ensure!(
+                                !matches!(item, Json::Arr(_) | Json::Obj(_)),
+                                "variant {:?}: axis {path:?} elements must be scalars",
+                                v.name
+                            );
+                        }
+                        axes.push((path.clone(), items.clone()));
+                    }
+                    _ => scalars.push((path.clone(), val.clone())),
+                }
+            }
+            if axes.is_empty() {
+                out.push(VariantSpec {
+                    name: v.name.clone(),
+                    tag: v.tag.clone(),
+                    overrides: scalars,
+                });
+                continue;
+            }
+            // axes in sorted-key order so expansion order (and therefore
+            // names and the aggregate) is independent of file order
+            axes.sort_by(|a, b| a.0.cmp(&b.0));
+            let mut idx = vec![0usize; axes.len()];
+            'grid: loop {
+                let mut name = v.name.clone();
+                let mut overrides = scalars.clone();
+                for (k, (path, items)) in axes.iter().enumerate() {
+                    let val = &items[idx[k]];
+                    name.push('-');
+                    name.push_str(&render_scalar(val));
+                    overrides.push((path.clone(), val.clone()));
+                }
+                out.push(VariantSpec { name, tag: v.tag.clone(), overrides });
+                // odometer increment over the axis index vector
+                let mut k = axes.len();
+                loop {
+                    if k == 0 {
+                        break 'grid;
+                    }
+                    k -= 1;
+                    idx[k] += 1;
+                    if idx[k] < axes[k].1.len() {
+                        break;
+                    }
+                    idx[k] = 0;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Expand the full trial list: `expand_variants() × seeds`,
+    /// variant-major, trial seed = `base_seed + seed_index`.
+    pub fn expand(&self, base_seed: u64) -> anyhow::Result<Vec<TrialSpec>> {
+        let mut trials = Vec::new();
+        for v in self.expand_variants()? {
+            for seed_index in 0..self.seeds {
+                trials.push(TrialSpec {
+                    variant: v.name.clone(),
+                    tag: v.tag.clone(),
+                    overrides: v.overrides.clone(),
+                    seed_index,
+                    seed: base_seed.wrapping_add(seed_index as u64),
+                });
+            }
+        }
+        Ok(trials)
+    }
+
+    /// Build the [`ExperimentConfig`] a variant runs under: defaults →
+    /// base overrides → variant overrides. Seed/name/runner knobs are
+    /// applied afterwards by the runner.
+    pub fn build_config(&self, variant: &VariantSpec) -> anyhow::Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_json(&overrides_doc(&self.base)?)
+            .map_err(|e| anyhow::anyhow!("spec {:?} base: {e}", self.name))?;
+        cfg.apply_json(&overrides_doc(&variant.overrides)?)
+            .map_err(|e| anyhow::anyhow!("variant {:?}: {e}", variant.name))?;
+        Ok(cfg)
+    }
+
+    /// Full validation: shape checks plus a config build + range check
+    /// for every expanded variant, with the variant named in errors.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.check_shape()?;
+        for v in &self.expand_variants()? {
+            let cfg = self.build_config(v)?;
+            cfg.validate()
+                .map_err(|e| anyhow::anyhow!("variant {:?}: {e}", v.name))?;
+        }
+        Ok(())
+    }
+}
+
+/// Merge `(path, value)` override pairs into one nested JSON document
+/// for [`ExperimentConfig::apply_json`]. Paths split on `.`; a path
+/// that descends through an existing scalar is an error.
+pub fn overrides_doc(pairs: &[(String, Json)]) -> anyhow::Result<Json> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    for (path, value) in pairs {
+        let segs: Vec<&str> = path.split('.').collect();
+        anyhow::ensure!(
+            !segs.iter().any(|s| s.is_empty()),
+            "override path {path:?} has an empty component"
+        );
+        let mut cur = &mut root;
+        for seg in &segs[..segs.len() - 1] {
+            let entry = cur
+                .entry(seg.to_string())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+            cur = match entry {
+                Json::Obj(o) => o,
+                _ => anyhow::bail!("override path {path:?} collides with a scalar"),
+            };
+        }
+        let last = segs[segs.len() - 1];
+        match cur.get(last) {
+            None => {
+                cur.insert(last.to_string(), value.clone());
+            }
+            // later pairs win, matching repeated `--set` semantics —
+            // unless a subtree already grew there
+            Some(Json::Obj(_)) => {
+                anyhow::bail!("override path {path:?} collides with a table")
+            }
+            Some(_) => {
+                cur.insert(last.to_string(), value.clone());
+            }
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn parse_trials(trials: Option<&Json>) -> anyhow::Result<(usize, u64)> {
+    let (mut seeds, mut base_seed) = (1usize, 42u64);
+    if let Some(t) = trials {
+        let obj = t
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("`trials` must be a table"))?;
+        for key in obj.keys() {
+            anyhow::ensure!(
+                key == "seeds" || key == "base_seed",
+                "unknown [trials] key {key:?} (expected seeds/base_seed)"
+            );
+        }
+        if let Some(v) = obj.get("seeds") {
+            seeds = v
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("trials.seeds must be a non-negative integer"))?
+                as usize;
+        }
+        if let Some(v) = obj.get("base_seed") {
+            base_seed = v
+                .as_u64()
+                .ok_or_else(|| anyhow::anyhow!("trials.base_seed must be a non-negative integer"))?;
+        }
+    }
+    Ok((seeds, base_seed))
+}
+
+fn parse_variant(i: usize, item: &Json) -> anyhow::Result<VariantSpec> {
+    let obj = item
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("variants[{i}] must be a table"))?;
+    let name = match obj.get("name") {
+        None => format!("v{i}"),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("variants[{i}].name must be a string"))?
+            .to_string(),
+    };
+    let tag = match obj.get("tag") {
+        None => None,
+        Some(v) => {
+            anyhow::ensure!(
+                !matches!(v, Json::Arr(_) | Json::Obj(_)),
+                "variant {name:?}: tag must be a scalar"
+            );
+            Some(v.clone())
+        }
+    };
+    let mut overrides = Vec::new();
+    for (key, val) in obj {
+        if key == "name" || key == "tag" {
+            continue;
+        }
+        anyhow::ensure!(
+            !matches!(val, Json::Obj(_)),
+            "variant {name:?}: key {key:?} must be a value or axis array, not a table"
+        );
+        overrides.push((key.clone(), val.clone()));
+    }
+    Ok(VariantSpec { name, tag, overrides })
+}
+
+/// Flatten a (possibly nested) table into dotted override paths. Lets
+/// `[base]` hold literal `run.max_rounds = 30` keys *and* nested
+/// `[base.run]` sub-tables interchangeably.
+fn flatten_overrides(what: &str, doc: &Json) -> anyhow::Result<Vec<(String, Json)>> {
+    fn walk(
+        prefix: &str,
+        obj: &BTreeMap<String, Json>,
+        out: &mut Vec<(String, Json)>,
+    ) -> anyhow::Result<()> {
+        for (k, v) in obj {
+            let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+            match v {
+                Json::Obj(inner) => walk(&path, inner, out)?,
+                other => out.push((path, other.clone())),
+            }
+        }
+        Ok(())
+    }
+    let obj = doc
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("`{what}` must be a table"))?;
+    let mut out = Vec::new();
+    walk("", obj, &mut out)?;
+    Ok(out)
+}
+
+/// Render an axis value into a variant-name fragment (`64`, `0.05`,
+/// `sync`, `true`).
+fn render_scalar(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        Json::Bool(b) => b.to_string(),
+        Json::Num(n) if n.fract() == 0.0 && n.abs() < 9e15 => format!("{}", *n as i64),
+        Json::Num(n) => format!("{n}"),
+        _ => "?".into(),
+    }
+}
+
+/// Names appear in file paths and result keys: letters, digits and
+/// `. _ = -` only.
+fn check_name(what: &str, name: &str) -> anyhow::Result<()> {
+    anyhow::ensure!(!name.is_empty(), "{what} name must be non-empty");
+    anyhow::ensure!(
+        name.chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '=' | '-')),
+        "{what} name {name:?} has characters outside [A-Za-z0-9._=-]"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SWEEP: &str = r#"
+        name = "demo"
+        [trials]
+        seeds = 3
+        base_seed = 7
+        [base]
+        backend.kind = "native"
+        run.max_rounds = 2
+        [[variants]]
+        name = "grid"
+        engine.kind = ["sync", "deadline"]
+        codec.kind = ["dense", "topk"]
+        [[variants]]
+        name = "solo"
+        tag = 0.05
+        opt.epsilon = 0.05
+    "#;
+
+    #[test]
+    fn parse_and_expand_grid() {
+        let spec = ExperimentSpec::from_toml_text(SWEEP).unwrap();
+        assert_eq!(spec.name, "demo");
+        assert_eq!(spec.output, "demo");
+        assert_eq!(spec.seeds, 3);
+        assert_eq!(spec.base_seed, 7);
+        let vs = spec.expand_variants().unwrap();
+        // 2×2 grid + the explicit solo variant
+        assert_eq!(vs.len(), 5);
+        // axes in sorted-key order: codec.kind before engine.kind
+        assert_eq!(vs[0].name, "grid-dense-sync");
+        assert_eq!(vs[1].name, "grid-dense-deadline");
+        assert_eq!(vs[3].name, "grid-topk-deadline");
+        assert_eq!(vs[4].name, "solo");
+        assert_eq!(vs[4].tag.as_ref().unwrap().as_f64(), Some(0.05));
+        let trials = spec.expand(spec.base_seed).unwrap();
+        assert_eq!(trials.len(), 5 * 3);
+        assert_eq!(trials[0].seed, 7);
+        assert_eq!(trials[2].seed, 9);
+        assert_eq!(trials[3].variant, "grid-dense-deadline");
+    }
+
+    #[test]
+    fn build_config_applies_base_then_variant() {
+        let spec = ExperimentSpec::from_toml_text(SWEEP).unwrap();
+        let vs = spec.expand_variants().unwrap();
+        let cfg = spec.build_config(&vs[4]).unwrap();
+        assert_eq!(cfg.max_rounds, 2);
+        assert_eq!(cfg.backend, crate::runtime::BackendKind::Native);
+        assert!((cfg.epsilon - 0.05).abs() < 1e-12);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn nested_base_tables_flatten() {
+        let spec = ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[base.run]\nmax_rounds = 5\n[[variants]]\nname = \"a\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.base, vec![("run.max_rounds".to_string(), Json::Num(5.0))]);
+    }
+
+    #[test]
+    fn missing_variants_yields_default() {
+        let spec = ExperimentSpec::from_toml_text("name = \"n\"\n").unwrap();
+        let vs = spec.expand_variants().unwrap();
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].name, "default");
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        // unknown top-level key
+        assert!(ExperimentSpec::from_toml_text("name = \"n\"\nfigur = \"x\"\n").is_err());
+        // no name
+        assert!(ExperimentSpec::from_toml_text("output = \"x\"\n").is_err());
+        // zero seeds
+        let e = ExperimentSpec::from_toml_text("name = \"n\"\n[trials]\nseeds = 0\n")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("seeds"), "{e}");
+        // array in base
+        assert!(ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[base]\nx = [1, 2]\n[[variants]]\nname = \"a\"\n"
+        )
+        .is_err());
+        // duplicate expanded names
+        assert!(ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[[variants]]\nname = \"a\"\n[[variants]]\nname = \"a\"\n"
+        )
+        .is_err());
+        // bad charset in a variant name
+        assert!(ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[[variants]]\nname = \"a b\"\n"
+        )
+        .is_err());
+        // unknown trials key
+        assert!(
+            ExperimentSpec::from_toml_text("name = \"n\"\n[trials]\nseed = 1\n").is_err()
+        );
+        // empty axis
+        assert!(ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[[variants]]\nname = \"a\"\nx.y = []\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_names_bad_variant() {
+        let spec = ExperimentSpec::from_toml_text(
+            "name = \"n\"\n[[variants]]\nname = \"oops\"\nopt.epsilon = -1.0\n",
+        )
+        .unwrap();
+        let e = spec.validate().unwrap_err().to_string();
+        assert!(e.contains("oops"), "{e}");
+    }
+
+    #[test]
+    fn overrides_doc_merges_and_rejects_collisions() {
+        let doc = overrides_doc(&[
+            ("a.b".into(), Json::Num(1.0)),
+            ("a.c".into(), Json::Num(2.0)),
+            ("a.b".into(), Json::Num(3.0)), // later wins
+        ])
+        .unwrap();
+        assert_eq!(doc.get("a").unwrap().get("b").unwrap().as_u64(), Some(3));
+        assert_eq!(doc.get("a").unwrap().get("c").unwrap().as_u64(), Some(2));
+        assert!(overrides_doc(&[
+            ("a".into(), Json::Num(1.0)),
+            ("a.b".into(), Json::Num(2.0)),
+        ])
+        .is_err());
+        assert!(overrides_doc(&[("a..b".into(), Json::Num(1.0))]).is_err());
+    }
+}

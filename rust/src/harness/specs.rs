@@ -1,0 +1,86 @@
+//! Bundled experiment specs — the committed `specs/*.toml` files,
+//! embedded so `defl run --spec fig2_mnist` (and the deprecated
+//! `defl exp <figure>` alias) resolve without a repo checkout. A `--spec`
+//! argument that names an existing file wins; otherwise it is looked up
+//! here.
+
+use super::spec::ExperimentSpec;
+
+/// `(name, TOML text)` for every committed spec, in `defl exp all` order.
+pub const BUNDLED: &[(&str, &str)] = &[
+    ("fig1a", include_str!("../../../specs/fig1a.toml")),
+    ("fig1b", include_str!("../../../specs/fig1b.toml")),
+    ("fig1c", include_str!("../../../specs/fig1c.toml")),
+    ("fig1d", include_str!("../../../specs/fig1d.toml")),
+    ("fig2_mnist", include_str!("../../../specs/fig2_mnist.toml")),
+    ("fig2_cifar", include_str!("../../../specs/fig2_cifar.toml")),
+    ("ablation_engines", include_str!("../../../specs/ablation_engines.toml")),
+    ("ablation_codecs", include_str!("../../../specs/ablation_codecs.toml")),
+    ("ablation_controller", include_str!("../../../specs/ablation_controller.toml")),
+    ("ablation_churn", include_str!("../../../specs/ablation_churn.toml")),
+    ("ablation_churn_ctl", include_str!("../../../specs/ablation_churn_ctl.toml")),
+    ("ci_matrix", include_str!("../../../specs/ci_matrix.toml")),
+];
+
+/// Names of all bundled specs.
+pub fn names() -> Vec<&'static str> {
+    BUNDLED.iter().map(|(n, _)| *n).collect()
+}
+
+/// The raw TOML of a bundled spec, if it exists.
+pub fn get(name: &str) -> Option<&'static str> {
+    BUNDLED.iter().find(|(n, _)| *n == name).map(|(_, t)| *t)
+}
+
+/// Parse a bundled spec by name.
+pub fn load(name: &str) -> anyhow::Result<ExperimentSpec> {
+    let text = get(name).ok_or_else(|| {
+        anyhow::anyhow!("no bundled spec {name:?} (have: {})", names().join(", "))
+    })?;
+    ExperimentSpec::from_toml_text(text)
+        .map_err(|e| anyhow::anyhow!("bundled spec {name:?}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_bundled_spec_parses_and_validates() {
+        for (name, _) in BUNDLED {
+            let spec = load(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            spec.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn ci_matrix_expands_at_least_200_trials() {
+        let spec = load("ci_matrix").unwrap();
+        let trials = spec.expand(spec.base_seed).unwrap();
+        assert!(trials.len() >= 200, "only {} trials", trials.len());
+        // no duplicate (variant, seed) pairs
+        let mut seen = std::collections::BTreeSet::new();
+        for t in &trials {
+            assert!(seen.insert((t.variant.clone(), t.seed)), "dup {:?}", t.variant);
+        }
+    }
+
+    #[test]
+    fn figure_specs_reference_known_formatters() {
+        for (name, _) in BUNDLED {
+            let spec = load(name).unwrap();
+            if let Some(fig) = &spec.figure {
+                assert!(
+                    crate::experiments::FIGURES.contains(&fig.as_str()),
+                    "{name}: unknown figure formatter {fig:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_a_hard_error() {
+        assert!(load("fig9z").is_err());
+        assert!(get("fig9z").is_none());
+    }
+}

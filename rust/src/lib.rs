@@ -61,7 +61,10 @@ pub mod codec;
 pub mod coordinator;
 /// Policy resolution: DEFL and the paper's baselines → concrete (b, V).
 pub mod baselines;
-/// One experiment harness per paper figure.
+/// Declarative experiment specs + the parallel trial runner
+/// (`defl run --spec`, DESIGN.md §12).
+pub mod harness;
+/// Figure formatters over the trial runner, one per paper figure.
 pub mod experiments;
 /// Self-driving benchmark harness (no criterion offline).
 pub mod bench;

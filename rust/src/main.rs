@@ -3,9 +3,17 @@
 //! ```text
 //! defl train   [--config cfg.toml] [--set k=v ...]   run one FL job
 //! defl plan    [--set k=v ...]                       print eq.(29) plan
-//! defl exp <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset d]
+//! defl run     --spec <file|name> [--threads N] ...  run an experiment spec
+//! defl exp <figure>                                  deprecated alias for bundled specs
 //! defl doctor                                        check artifacts + PJRT
 //! ```
+//!
+//! Every figure, sweep and ablation is a declarative spec (`specs/*.toml`,
+//! DESIGN.md §12): a base config, a `[[variants]]` grid of
+//! `section.key=value` overrides, and a seed count. `defl run` expands the
+//! grid, fans the seeded trials out over a thread pool, writes one
+//! schema-stable `result.json` per trial plus a mean ± 95% CI aggregate,
+//! and — when the spec names a `figure` — formats the paper-style table.
 //!
 //! The round schedule is pluggable: `--set engine.kind=sync` (paper
 //! default), `deadline` (straggler dropping, `engine.deadline_s`), or
@@ -23,8 +31,9 @@
 
 use defl::config::{ExperimentConfig, Policy};
 use defl::coordinator::FlSystem;
-use defl::experiments::{self, ExpOpts};
-use defl::util::cli::Cli;
+use defl::experiments;
+use defl::harness::{self, run_spec, ExperimentSpec, RunnerOpts};
+use defl::util::cli::{Args, Cli};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -36,6 +45,7 @@ fn main() {
     let result = match cmd.as_str() {
         "train" => cmd_train(rest),
         "plan" => cmd_plan(rest),
+        "run" => cmd_run(rest),
         "exp" => cmd_exp(rest),
         "doctor" => cmd_doctor(rest),
         "--help" | "-h" | "help" => {
@@ -62,31 +72,41 @@ fn usage() -> String {
      \x20                   --set codec.kind=dense|quant|topk|topk_quant,\n\
      \x20                   --set controller.replan_every=1 --set drift.walk_db=2)\n\
      \x20 defl plan   [--set section.key=value ...]\n\
+     \x20 defl run    --spec <file-or-bundled-name> [--threads N] [--only prefix]\n\
+     \x20             [--fast] [--rounds N] [--seed N] [--out-dir results]\n\
+     \x20             [--set section.key=value ...] [--no-trial-files] [--analytic-only]\n\
+     \x20             (--list prints the bundled spec names)\n\
      \x20 defl exp    <fig1a|fig1b|fig1c|fig1d|fig2|ablation|all> [--dataset mnist|cifar]\n\
-     \x20             [--fast] [--rounds N] [--out-dir results] [--analytic-only]\n\
-     \x20             [--backend pjrt|native] [--codec dense|quant|topk|topk_quant]\n\
-     \x20             [--controller N]  (online re-plan cadence; 0 = static plan)\n\
+     \x20             (deprecated alias: runs the bundled spec of the same name;\n\
+     \x20              --backend/--codec/--controller lower to --set overrides)\n\
      \x20 defl doctor [--artifacts <dir>]   (needs the `pjrt` build feature)\n"
         .into()
 }
 
 /// Shared `--config` / `--set` handling (bare `k=v` positionals are also
 /// treated as overrides so `--set` can be repeated naturally).
-fn load_config(args: &defl::util::cli::Args) -> anyhow::Result<ExperimentConfig> {
+fn load_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
     let mut cfg = match args.get("config") {
         Some(path) if !path.is_empty() => ExperimentConfig::from_file(path)?,
         _ => ExperimentConfig::default(),
     };
-    for ov in args.positional.iter().filter(|p| p.contains('=')) {
-        cfg.set_override(ov)?;
-    }
-    if let Some(sets) = args.get("set") {
-        if !sets.is_empty() {
-            cfg.set_override(sets)?;
-        }
+    for ov in collect_overrides(args) {
+        cfg.set_override(&ov)?;
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// `--set k=v` plus every bare `k=v` positional, in argv order.
+fn collect_overrides(args: &Args) -> Vec<String> {
+    let mut out: Vec<String> =
+        args.positional.iter().filter(|p| p.contains('=')).cloned().collect();
+    if let Some(sets) = args.get("set") {
+        if !sets.is_empty() {
+            out.push(sets.to_string());
+        }
+    }
+    out
 }
 
 fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
@@ -138,72 +158,188 @@ fn cmd_plan(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve a `--spec` argument: an existing file wins; otherwise it must
+/// name a bundled spec.
+fn resolve_spec(arg: &str) -> anyhow::Result<ExperimentSpec> {
+    anyhow::ensure!(!arg.is_empty(), "which spec? (--spec <file-or-bundled-name>, --list)");
+    if std::path::Path::new(arg).is_file() {
+        return ExperimentSpec::from_file(arg);
+    }
+    harness::specs::load(arg)
+}
+
+/// Shared runner-knob parsing for `defl run` and the `defl exp` alias.
+fn runner_opts(args: &Args) -> anyhow::Result<RunnerOpts> {
+    let mut opts = RunnerOpts::from_env()?;
+    opts.exp.fast = opts.exp.fast || args.flag("fast");
+    opts.exp.out_dir = args.str("out-dir");
+    opts.exp.artifacts_dir = args.str("artifacts");
+    opts.exp.overrides.extend(collect_overrides(args));
+    let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
+    if rounds > 0 {
+        opts.exp.rounds = Some(rounds);
+    }
+    let seed = args.str("seed");
+    if !seed.is_empty() {
+        let seed = seed.parse::<u64>().map_err(|e| anyhow::anyhow!("--seed: {e}"))?;
+        opts.base_seed = Some(seed);
+        opts.exp.seed = seed; // figure probes calibrate at the same seed
+    }
+    let threads = args.str("threads");
+    if !threads.is_empty() {
+        opts.threads =
+            threads.parse::<usize>().map_err(|e| anyhow::anyhow!("--threads: {e}"))?;
+    }
+    let only = args.str("only");
+    if !only.is_empty() {
+        opts.only = Some(only);
+    }
+    if args.flag("no-trial-files") {
+        opts.write_trials = false;
+    }
+    opts.analytic_only = args.flag("analytic-only");
+    Ok(opts)
+}
+
+/// Run one resolved spec: figure specs go through their formatter,
+/// generic specs through the plain runner + aggregate.
+fn run_resolved(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<()> {
+    match &spec.figure {
+        Some(fig) => {
+            experiments::render_figure(fig, spec, opts)?;
+        }
+        None => {
+            let sweep = run_spec(spec, opts)?;
+            let failed =
+                sweep.aggregate.get("failed").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+            let path = sweep.write_aggregate()?;
+            println!(
+                "{}: {} trials ({} failed) across {} variants on {} threads",
+                spec.name,
+                sweep.trials.len(),
+                failed,
+                spec.variants.len(),
+                opts.resolved_threads(),
+            );
+            println!("wrote {path}");
+            anyhow::ensure!(failed == 0, "{failed} trial(s) failed — see {path}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
+    let cli = Cli::new("defl run", "run a declarative experiment spec")
+        .pos("spec", "spec file or bundled name (alternative to --spec)")
+        .opt("spec", "", "spec file (.toml/.json) or bundled spec name")
+        .opt("rounds", "0", "override max rounds (0 = spec default)")
+        .opt("out-dir", "results", "output directory for JSON results")
+        .opt("seed", "", "base seed override (default: the spec's trials.base_seed)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("threads", "", "runner worker threads (0 = one per core)")
+        .opt("only", "", "run only variants whose expanded name starts with this prefix")
+        .opt("set", "", "config override applied after the spec (repeatable as bare k=v)")
+        .flag("fast", "smoke-scale run (few rounds, tiny data)")
+        .flag("no-trial-files", "skip the per-trial result.json files")
+        .flag("analytic-only", "figure formatters: analytics only, skip trained trials")
+        .flag("list", "list the bundled spec names and exit");
+    let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.flag("list") {
+        for name in harness::specs::names() {
+            println!("{name}");
+        }
+        return Ok(());
+    }
+    let mut spec_arg = args.str("spec");
+    if spec_arg.is_empty() {
+        // first bare positional that isn't a k=v override
+        spec_arg = args
+            .positional
+            .iter()
+            .find(|p| !p.contains('='))
+            .cloned()
+            .unwrap_or_default();
+    }
+    let spec = resolve_spec(&spec_arg)?;
+    let opts = runner_opts(&args)?;
+    run_resolved(&spec, &opts)
+}
+
+/// Deprecated alias: `defl exp <figure>` runs the bundled spec of the
+/// same name through `defl run`'s machinery. The old per-feature flags
+/// survive as sugar, lowered to generic `--set` overrides through the
+/// one config path.
 fn cmd_exp(rest: &[String]) -> anyhow::Result<()> {
-    let cli = Cli::new("defl exp", "regenerate a paper figure")
-        .pos("figure", "fig1a|fig1b|fig1c|fig1d|fig2|ablation|all")
+    let cli = Cli::new("defl exp", "regenerate a paper figure (deprecated: use `defl run --spec`)")
+        .pos("figure", "fig1a|fig1b|fig1c|fig1d|fig2|ablation|all, or any bundled spec name")
         .opt("dataset", "mnist", "fig2 dataset: mnist|cifar")
         .opt("rounds", "0", "override max rounds (0 = figure default)")
         .opt("out-dir", "results", "output directory for JSON series")
-        .opt("seed", "42", "base seed")
+        .opt("seed", "", "base seed (default: the spec's)")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("backend", "", "training backend: pjrt|native (default: build default)")
-        .opt("codec", "", "update codec: dense|quant|topk|topk_quant (default: config)")
-        .opt("controller", "", "online re-plan cadence in rounds, 0 = static (default: config)")
+        .opt("threads", "", "runner worker threads (0 = one per core)")
+        .opt("set", "", "config override (repeatable as bare k=v args)")
+        .opt("backend", "", "sugar for --set backend.kind=pjrt|native")
+        .opt("codec", "", "sugar for --set codec.kind=dense|quant|topk|topk_quant")
+        .opt("controller", "", "sugar for --set controller.replan_every=N (0 = static)")
         .flag("fast", "smoke-scale run (few rounds, tiny data)")
+        .flag("no-trial-files", "skip the per-trial result.json files")
         .flag("analytic-only", "fig1a: skip training runs");
     let args = cli.parse(rest).map_err(|e| anyhow::anyhow!("{e}"))?;
     let figure = args
         .positional
-        .first()
+        .iter()
+        .find(|p| !p.contains('='))
         .ok_or_else(|| {
             anyhow::anyhow!("which figure? (fig1a|fig1b|fig1c|fig1d|fig2|ablation|all)")
         })?
         .clone();
-    let mut opts = ExpOpts::from_env()?;
-    opts.fast = opts.fast || args.flag("fast");
-    opts.out_dir = args.str("out-dir");
-    opts.seed = args.u64("seed").map_err(|e| anyhow::anyhow!("{e}"))?;
-    opts.artifacts_dir = args.str("artifacts");
+    eprintln!(
+        "note: `defl exp` is deprecated; use `defl run --spec specs/<name>.toml` \
+         (bundled: `defl run --list`)"
+    );
+    let mut opts = runner_opts(&args)?;
+    // sugar flags lower to the same generic override path as --set;
+    // parse eagerly so a typo fails before any training starts.
     let backend = args.str("backend");
     if !backend.is_empty() {
-        opts.backend = defl::runtime::BackendKind::parse(&backend)?;
+        defl::runtime::BackendKind::parse(&backend)?;
+        opts.exp.overrides.push(format!("backend.kind={backend}"));
     }
     let codec = args.str("codec");
     if !codec.is_empty() {
-        opts.codec = Some(defl::codec::CodecKind::parse(&codec)?);
+        defl::codec::CodecKind::parse(&codec)?;
+        opts.exp.overrides.push(format!("codec.kind={codec}"));
     }
     let controller = args.str("controller");
     if !controller.is_empty() {
-        opts.controller = Some(controller.parse::<usize>().map_err(|e| {
+        let n = controller.parse::<usize>().map_err(|e| {
             anyhow::anyhow!("--controller: {e} (want a re-plan cadence in rounds)")
-        })?);
+        })?;
+        opts.exp.overrides.push(format!("controller.replan_every={n}"));
     }
-    let rounds = args.u64("rounds").map_err(|e| anyhow::anyhow!("{e}"))? as usize;
-    if rounds > 0 {
-        opts.rounds = Some(rounds);
-    }
-    let analytic = args.flag("analytic-only");
+    let run_bundled = |name: &str, opts: &RunnerOpts| -> anyhow::Result<()> {
+        run_resolved(&harness::specs::load(name)?, opts)
+    };
     match figure.as_str() {
-        "fig1a" => experiments::fig1a::run(&opts, analytic).map(|_| ()),
-        "fig1b" => experiments::fig1b::run(&opts).map(|_| ()),
-        "fig1c" => experiments::fig1c::run(&opts).map(|_| ()),
-        "fig1d" => experiments::fig1d::run(&opts).map(|_| ()),
-        "ablation" => experiments::ablation::run(&opts).map(|_| ()),
         "fig2" => {
-            let which = experiments::fig2::Which::parse(&args.str("dataset"))?;
-            experiments::fig2::run(&opts, which).map(|_| ())
+            let name = match args.str("dataset").as_str() {
+                "mnist" => "fig2_mnist",
+                "cifar" => "fig2_cifar",
+                other => anyhow::bail!("fig2 dataset must be mnist|cifar, got {other:?}"),
+            };
+            run_bundled(name, &opts)
         }
+        "ablation" => experiments::ablation::run_all(&opts).map(|_| ()),
         "all" => {
-            experiments::fig1a::run(&opts, analytic)?;
-            experiments::fig1b::run(&opts)?;
-            experiments::fig1c::run(&opts)?;
-            experiments::fig1d::run(&opts)?;
-            experiments::ablation::run(&opts)?;
-            experiments::fig2::run(&opts, experiments::fig2::Which::Mnist)?;
-            experiments::fig2::run(&opts, experiments::fig2::Which::Cifar)?;
-            Ok(())
+            for name in ["fig1a", "fig1b", "fig1c", "fig1d"] {
+                run_bundled(name, &opts)?;
+            }
+            experiments::ablation::run_all(&opts)?;
+            run_bundled("fig2_mnist", &opts)?;
+            run_bundled("fig2_cifar", &opts)
         }
-        other => anyhow::bail!("unknown figure {other:?}"),
+        name => run_bundled(name, &opts),
     }
 }
 

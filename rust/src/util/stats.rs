@@ -60,6 +60,23 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
+/// Mean and normal-approximation 95% confidence half-width
+/// (`1.96·s/√n` with the n−1 sample standard deviation). `(0, 0)` for
+/// the empty slice, `(x, 0)` for a single sample — the trial runner's
+/// per-variant aggregate statistic.
+pub fn mean_ci95(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = mean(xs);
+    if xs.len() < 2 {
+        return (m, 0.0);
+    }
+    let n = xs.len() as f64;
+    let sample_var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (n - 1.0);
+    (m, 1.96 * (sample_var / n).sqrt())
+}
+
 /// Online mean/variance accumulator (Welford). Numerically stable for the
 /// long-running metric streams the coordinator produces.
 #[derive(Clone, Debug, Default)]
@@ -216,6 +233,20 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(variance(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(mean_ci95(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn mean_ci95_matches_hand_computation() {
+        // single sample: the mean, zero width
+        assert_eq!(mean_ci95(&[3.5]), (3.5, 0.0));
+        // [1,2,3,4]: mean 2.5, sample var 5/3, ci = 1.96·√(5/12)
+        let (m, ci) = mean_ci95(&[1.0, 2.0, 3.0, 4.0]);
+        assert!((m - 2.5).abs() < 1e-12);
+        assert!((ci - 1.96 * (5.0f64 / 12.0).sqrt()).abs() < 1e-12);
+        // identical samples: zero width
+        let (_, ci) = mean_ci95(&[7.0; 10]);
+        assert_eq!(ci, 0.0);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! End-to-end tests of the declarative experiment harness (DESIGN.md
+//! §12): spec parse/validate round-trips, grid-expansion properties,
+//! runner determinism across thread counts, and parity between the
+//! bundled figure specs and the old hand-wired configs.
+
+use defl::harness::{ExperimentSpec, SCHEMA_VERSION};
+use defl::util::prop;
+
+const SPEC_TOML: &str = r#"
+name = "roundtrip"
+output = "roundtrip_out"
+
+[trials]
+seeds = 3
+base_seed = 11
+
+[base]
+backend.kind = "native"
+dataset.kind = "tiny"
+system.devices = 2
+dataset.train_per_device = 16
+dataset.test_size = 32
+run.max_rounds = 2
+run.eval_every = 2
+policy.kind = "fixed"
+policy.batch = 8
+policy.local_rounds = 2
+
+[[variants]]
+name = "sync"
+tag = "s"
+engine.kind = "sync"
+
+[[variants]]
+name = "async"
+engine.kind = "async_buffered"
+codec.kind = "topk"
+"#;
+
+#[test]
+fn spec_file_and_text_parse_identically() {
+    // the .toml file path and the bundled include_str! path must agree
+    let from_text = ExperimentSpec::from_toml_text(SPEC_TOML).unwrap();
+    from_text.validate().unwrap();
+    let path = std::env::temp_dir().join("defl_harness_roundtrip.toml");
+    std::fs::write(&path, SPEC_TOML).unwrap();
+    let from_file = ExperimentSpec::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(format!("{from_text:?}"), format!("{from_file:?}"));
+    assert_eq!(from_text.name, "roundtrip");
+    assert_eq!(from_text.output, "roundtrip_out");
+    assert_eq!(from_text.seeds, 3);
+    assert_eq!(from_text.base_seed, 11);
+    assert_eq!(from_text.variants.len(), 2);
+}
+
+#[test]
+fn expansion_is_variants_times_seeds_with_no_duplicates() {
+    // property: |expand| == |variants| × seeds, every (variant, seed)
+    // pair distinct, and expansion is a pure function of the spec +
+    // base seed.
+    prop::check(0xE57, 40, |g| {
+        let n_variants = g.usize_in(1, 6);
+        let seeds = g.usize_in(1, 8);
+        let base_seed = g.usize_in(0, 1 << 20) as u64;
+        let mut toml = format!(
+            "name = \"prop\"\n[trials]\nseeds = {seeds}\nbase_seed = {base_seed}\n"
+        );
+        for i in 0..n_variants {
+            toml.push_str(&format!("[[variants]]\nname = \"v{i}\"\n"));
+        }
+        let spec = ExperimentSpec::from_toml_text(&toml).map_err(|e| e.to_string())?;
+        let trials = spec.expand(base_seed).map_err(|e| e.to_string())?;
+        if trials.len() != n_variants * seeds {
+            return Err(format!(
+                "{} trials from {n_variants} variants × {seeds} seeds",
+                trials.len()
+            ));
+        }
+        let mut pairs: Vec<(String, u64)> =
+            trials.iter().map(|t| (t.variant.clone(), t.seed)).collect();
+        pairs.sort();
+        let before = pairs.len();
+        pairs.dedup();
+        if pairs.len() != before {
+            return Err("duplicate (variant, seed) pair in expansion".into());
+        }
+        let again = spec.expand(base_seed).map_err(|e| e.to_string())?;
+        if format!("{trials:?}") != format!("{again:?}") {
+            return Err("expansion is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_spec_keys_and_bad_overrides_fail_validation() {
+    let err = ExperimentSpec::from_toml_text("name = \"x\"\nrepeats = 5\n").unwrap_err();
+    assert!(err.to_string().contains("unknown top-level spec key"), "{err}");
+    // a typo'd config key must fail at validate/build time, not run time
+    let spec = ExperimentSpec::from_toml_text(
+        "name = \"x\"\n[base]\nbackend.kind = \"psychic\"\n",
+    )
+    .unwrap();
+    assert!(spec.validate().is_err());
+}
+
+#[cfg(feature = "native")]
+mod native {
+    use super::*;
+    use defl::harness::{run_spec, validate_result_doc, RunnerOpts};
+
+    fn tiny_matrix() -> ExperimentSpec {
+        ExperimentSpec::from_toml_text(SPEC_TOML).unwrap()
+    }
+
+    fn quiet_opts(threads: usize) -> RunnerOpts {
+        let mut opts = RunnerOpts::default();
+        opts.threads = threads;
+        opts.write_trials = false; // no disk traffic from the test
+        opts
+    }
+
+    #[test]
+    fn same_spec_same_seed_is_bit_identical_at_any_thread_count() {
+        let spec = tiny_matrix();
+        let one = run_spec(&spec, &quiet_opts(1)).unwrap();
+        let four = run_spec(&spec, &quiet_opts(4)).unwrap();
+        assert_eq!(
+            one.aggregate.to_string(),
+            four.aggregate.to_string(),
+            "aggregate JSON differs between 1 and 4 runner threads"
+        );
+        assert_eq!(one.trials.len(), four.trials.len());
+        for (a, b) in one.trials.iter().zip(&four.trials) {
+            assert_eq!(a.doc.to_string(), b.doc.to_string(), "trial {}", a.name);
+        }
+    }
+
+    #[test]
+    fn every_runner_output_is_versioned_and_attributed() {
+        let spec = tiny_matrix();
+        let sweep = run_spec(&spec, &quiet_opts(2)).unwrap();
+        assert_eq!(sweep.trials.len(), 6); // 2 variants × 3 seeds
+        validate_result_doc(&sweep.aggregate).unwrap();
+        assert_eq!(
+            sweep.aggregate.get("schema_version").and_then(|v| v.as_u64()),
+            Some(SCHEMA_VERSION)
+        );
+        for t in &sweep.trials {
+            assert!(t.ok(), "trial {} failed: {}", t.name, t.doc.to_string());
+            validate_result_doc(&t.doc).unwrap();
+            assert_eq!(t.doc.get("spec").and_then(|v| v.as_str()), Some("roundtrip"));
+            assert_eq!(
+                t.doc.get("seed").and_then(|v| v.as_u64()),
+                Some(t.trial.seed)
+            );
+        }
+    }
+
+    #[test]
+    fn only_filter_narrows_and_errors_on_no_match() {
+        let spec = tiny_matrix();
+        let mut opts = quiet_opts(1);
+        opts.only = Some("async".into());
+        let sweep = run_spec(&spec, &opts).unwrap();
+        assert_eq!(sweep.trials.len(), 3);
+        assert!(sweep.trials.iter().all(|t| t.trial.variant == "async"));
+        opts.only = Some("nosuch".into());
+        assert!(run_spec(&spec, &opts).is_err());
+    }
+}
+
+/// The bundled figure specs must rebuild the exact configs the old
+/// hand-wired `defl exp` path constructed (names equalized — the runner
+/// derives `{spec}-{variant}` names).
+#[test]
+fn fig2_specs_reproduce_the_hand_wired_configs() {
+    use defl::config::{presets, ExperimentConfig, Policy};
+    let pins = [
+        ("fig2_mnist", presets::fig2_mnist as fn(Policy) -> ExperimentConfig),
+        ("fig2_cifar", presets::fig2_cifar as fn(Policy) -> ExperimentConfig),
+    ];
+    let policies = [
+        ("DEFL", Policy::Defl),
+        ("FedAvg", Policy::Fixed { batch: 10, local_rounds: 20 }),
+    ];
+    for (spec_name, preset) in pins {
+        let spec = defl::harness::specs::load(spec_name).unwrap();
+        for (variant_name, policy) in &policies {
+            let variant =
+                spec.variants.iter().find(|v| v.name == *variant_name).unwrap();
+            let mut built = spec.build_config(variant).unwrap();
+            let mut legacy = preset(policy.clone());
+            built.name = "x".into();
+            legacy.name = "x".into();
+            assert_eq!(
+                format!("{built:?}"),
+                format!("{legacy:?}"),
+                "{spec_name}/{variant_name} drifted from the legacy preset"
+            );
+        }
+    }
+}

@@ -21,9 +21,13 @@ a warning wall: an empty fresh report means "nothing measured" (no
 per-benchmark "disappeared" annotations).
 
 Refresh the baseline by copying a trusted run's ``BENCH_hotpath.json``
-artifact over the committed file at the repo root.
+artifact over the committed file at the repo root, or run with
+``--promote``: in the NO BASELINE state it copies the fresh report over
+the baseline path and exits 0, so the *next* run diffs for real. When a
+baseline already exists ``--promote`` changes nothing — committed
+baselines stay authoritative; overwrite them deliberately.
 
-Usage: bench_diff.py BASELINE FRESH [--warn-pct 25]
+Usage: bench_diff.py BASELINE FRESH [--warn-pct 25] [--promote]
        bench_diff.py --self-test
 """
 
@@ -116,6 +120,12 @@ def exit_code(base, fresh):
     return EXIT_NO_BASELINE if fresh and not base else 0
 
 
+def should_promote(base, fresh, promote):
+    """Whether --promote fires: only in the NO BASELINE state, and only
+    when the fresh report actually measured something worth seeding."""
+    return bool(promote and fresh and not base)
+
+
 def self_test():
     """Pytest-free smoke of the load/compare pipeline (CI lint job)."""
     import os
@@ -160,6 +170,12 @@ def self_test():
         assert exit_code({"a": 1.0}, {"a": 1.0}) == 0, "a real comparison exits 0"
         assert exit_code({}, {}) == 0, "nothing measured is not the no-baseline state"
 
+        # -- --promote fires only in the NO BASELINE state -------------
+        assert should_promote({}, {"a": 1.0}, True), "no baseline + fresh → promote"
+        assert not should_promote({"a": 1.0}, {"a": 2.0}, True), "baseline is authoritative"
+        assert not should_promote({}, {}, True), "nothing measured seeds nothing"
+        assert not should_promote({}, {"a": 1.0}, False), "promotion is opt-in"
+
         # -- compare: the actual diff ---------------------------------
         base = {"a": 1.0, "b": 1.0, "gone": 1.0}
         fresh = {"a": 2.0, "b": 1.05, "new": 3.0}
@@ -183,6 +199,11 @@ def main():
     ap.add_argument("baseline", nargs="?")
     ap.add_argument("fresh", nargs="?")
     ap.add_argument("--warn-pct", type=float, default=25.0)
+    ap.add_argument(
+        "--promote",
+        action="store_true",
+        help="seed BASELINE from FRESH when no baseline exists (exit 0 instead of 3)",
+    )
     ap.add_argument(
         "--self-test", action="store_true", help="run the built-in assertions and exit"
     )
@@ -209,6 +230,15 @@ def main():
         print(f"::warning::{w}")
     for ln in lines:
         print(ln)
+    if should_promote(base, fresh, args.promote):
+        import shutil
+
+        shutil.copyfile(args.fresh, args.baseline)
+        print(
+            f"bench_diff: promoted {args.fresh} -> {args.baseline} "
+            f"({len(fresh)} benchmarks seed the trajectory; commit it to keep it)"
+        )
+        return 0
     return exit_code(base, fresh)
 
 

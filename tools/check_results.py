@@ -1,0 +1,226 @@
+#!/usr/bin/env python3
+"""Strict schema gate for every harness output (DESIGN.md §12).
+
+Every document the trial runner or a figure formatter writes — per-trial
+``result.json`` files, per-spec aggregates, figure documents — must
+carry a numeric ``schema_version`` equal to the supported version and a
+non-empty string ``spec`` naming the experiment spec that produced it.
+Unversioned or mis-attributed files are rejected loudly: downstream
+plotting must never guess at a file's shape, and a result that can't
+say which spec produced it is not reproducible. Mirrors
+``defl::harness::validate_result_doc``.
+
+Beyond the version/provenance gate, the checker knows the three document
+shapes and applies the matching structural checks:
+
+* trial documents (``outcome`` present): outcome must be ``success`` or
+  ``error``, ``objective`` must be ``{name, value}``, ``metrics`` a dict;
+* aggregates (``variants`` present): every variant entry needs ``n``,
+  ``failed`` and an ``objective`` with ``mean``/``ci95``;
+* figure documents (``figure`` present): ``provenance`` must name the
+  spec and seed plan.
+
+Exit codes: 0 all files pass; 1 any file fails (each failure printed as
+a GitHub ``::error::`` annotation); 2 usage errors.
+
+Usage: check_results.py FILE_OR_DIR [FILE_OR_DIR ...]
+       check_results.py --self-test
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SCHEMA_VERSION = 1
+
+
+def fail(path, msg):
+    return f"{path}: {msg}"
+
+
+def check_common(path, doc):
+    """The gate itself: version + provenance, on every document."""
+    errors = []
+    if not isinstance(doc, dict):
+        return [fail(path, "result document must be a JSON object")]
+    version = doc.get("schema_version")
+    if not isinstance(version, (int, float)) or isinstance(version, bool):
+        errors.append(fail(path, "missing or non-numeric schema_version"))
+    elif version != SCHEMA_VERSION:
+        errors.append(
+            fail(path, f"schema_version {version} != supported {SCHEMA_VERSION}")
+        )
+    spec = doc.get("spec")
+    if not isinstance(spec, str) or not spec:
+        errors.append(fail(path, "missing or empty `spec` provenance"))
+    return errors
+
+
+def check_trial(path, doc):
+    errors = []
+    if doc.get("outcome") not in ("success", "error"):
+        errors.append(fail(path, f"outcome must be success|error, got {doc.get('outcome')!r}"))
+    objective = doc.get("objective")
+    if not isinstance(objective, dict) or "name" not in objective or "value" not in objective:
+        errors.append(fail(path, "objective must be an object with name and value"))
+    if not isinstance(doc.get("metrics"), dict):
+        errors.append(fail(path, "metrics must be an object"))
+    if doc.get("outcome") == "error" and not doc.get("error"):
+        errors.append(fail(path, "error outcome without an error message"))
+    return errors
+
+
+def check_aggregate(path, doc):
+    errors = []
+    variants = doc.get("variants")
+    if not isinstance(variants, list) or not variants:
+        return [fail(path, "aggregate needs a non-empty `variants` array")]
+    for i, v in enumerate(variants):
+        where = f"variants[{i}]"
+        if not isinstance(v, dict):
+            errors.append(fail(path, f"{where} must be an object"))
+            continue
+        for key in ("variant", "n", "failed"):
+            if key not in v:
+                errors.append(fail(path, f"{where} missing {key!r}"))
+        objective = v.get("objective")
+        if not isinstance(objective, dict) or not {"mean", "ci95"} <= objective.keys():
+            errors.append(fail(path, f"{where} objective needs mean and ci95"))
+    return errors
+
+
+def check_figure(path, doc):
+    errors = []
+    prov = doc.get("provenance")
+    if not isinstance(prov, dict) or not prov.get("spec"):
+        errors.append(fail(path, "figure document needs `provenance` naming its spec"))
+    elif "base_seed" not in prov:
+        errors.append(fail(path, "figure provenance missing base_seed"))
+    return errors
+
+
+def check_doc(path, doc):
+    """All errors for one parsed document (empty list = pass)."""
+    errors = check_common(path, doc)
+    if errors or not isinstance(doc, dict):
+        return errors  # version gate failed; shape checks would be noise
+    if "outcome" in doc:
+        errors += check_trial(path, doc)
+    elif "variants" in doc:
+        errors += check_aggregate(path, doc)
+    elif "figure" in doc:
+        errors += check_figure(path, doc)
+    return errors
+
+
+def iter_files(targets):
+    for target in targets:
+        if os.path.isdir(target):
+            for root, _dirs, files in sorted(os.walk(target)):
+                for name in sorted(files):
+                    if name.endswith(".json"):
+                        yield os.path.join(root, name)
+        else:
+            yield target
+
+
+def run(targets):
+    n_checked, errors = 0, []
+    for path in iter_files(targets):
+        n_checked += 1
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError) as e:
+            errors.append(fail(path, f"unreadable: {e}"))
+            continue
+        errors += check_doc(path, doc)
+    return n_checked, errors
+
+
+def self_test():
+    """Pytest-free assertions over the pure checkers (CI lint job)."""
+    ok_trial = {
+        "schema_version": 1,
+        "spec": "ci_matrix",
+        "variant": "grid-sync",
+        "seed": 42,
+        "outcome": "success",
+        "objective": {"name": "overall_time", "value": 12.5},
+        "metrics": {"overall_time": 12.5},
+    }
+    assert check_doc("t", ok_trial) == []
+    # the gate: unversioned and mis-versioned files are rejected
+    assert check_doc("t", {"spec": "x", "outcome": "success"}), "unversioned must fail"
+    assert check_doc("t", dict(ok_trial, schema_version="1")), "string version must fail"
+    assert check_doc("t", dict(ok_trial, schema_version=2)), "future version must fail"
+    assert check_doc("t", dict(ok_trial, schema_version=True)), "bool is not a version"
+    assert check_doc("t", dict(ok_trial, spec="")), "empty spec provenance must fail"
+    no_spec = dict(ok_trial)
+    del no_spec["spec"]
+    assert check_doc("t", no_spec), "missing spec provenance must fail"
+    assert check_doc("t", [1, 2]), "non-object roots must fail"
+    # trial shape
+    assert check_doc("t", dict(ok_trial, outcome="flaky")), "unknown outcome must fail"
+    assert check_doc("t", dict(ok_trial, objective={"name": "x"})), "objective.value"
+    assert check_doc("t", dict(ok_trial, outcome="error")), "error without message"
+    err_trial = dict(ok_trial, outcome="error", error="diverged")
+    assert check_doc("t", err_trial) == [], "error trials with a message pass"
+    # aggregate shape
+    ok_agg = {
+        "schema_version": 1,
+        "spec": "ci_matrix",
+        "variants": [
+            {
+                "variant": "grid-sync",
+                "n": 6,
+                "failed": 0,
+                "objective": {"name": "overall_time", "mean": 1.0, "ci95": 0.1},
+            }
+        ],
+    }
+    assert check_doc("a", ok_agg) == []
+    assert check_doc("a", dict(ok_agg, variants=[])), "empty variants must fail"
+    bad_agg = dict(ok_agg, variants=[{"variant": "v", "n": 1}])
+    assert check_doc("a", bad_agg), "variant without failed/objective must fail"
+    # figure shape
+    ok_fig = {
+        "schema_version": 1,
+        "spec": "fig2-mnist",
+        "figure": "fig2_mnist",
+        "provenance": {"spec": "fig2-mnist", "base_seed": 42},
+        "series": [],
+    }
+    assert check_doc("f", ok_fig) == []
+    assert check_doc("f", dict(ok_fig, provenance={})), "anonymous figure must fail"
+    assert check_doc(
+        "f", dict(ok_fig, provenance={"spec": "fig2-mnist"})
+    ), "figure provenance without base_seed must fail"
+    print("check_results: self-test OK")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("targets", nargs="*", help="result .json files or directories")
+    ap.add_argument(
+        "--self-test", action="store_true", help="run the built-in assertions and exit"
+    )
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.targets:
+        ap.error("give result files/directories to check, or --self-test")
+    n_checked, errors = run(args.targets)
+    for e in errors:
+        print(f"::error::{e}")
+    print(f"check_results: {n_checked} file(s), {len(errors)} error(s)")
+    if n_checked == 0:
+        print("::error::check_results: no .json files found to check")
+        return 1
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
