@@ -25,7 +25,10 @@
 //! `coordinator_tick_{100,1000}dev` runs one full churned tick (gate,
 //! membership step, engine round, commit — DESIGN.md §11); its delta
 //! against `native_round_loop_*dev_b8` is the open-world bookkeeping
-//! cost per round.
+//! cost per round. `robust_fold_100dev_{mean,clip,trimmed_mean,median}`
+//! prices each robust aggregator (DESIGN.md §13) over the same dense
+//! fold: `mean` is the trait-seam control, the buffered estimators show
+//! the O(K·P) materialize + sort premium.
 //!
 //! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
 //! count behind the 1000-device fold (64 sets cycled instead of 1000
@@ -157,6 +160,39 @@ fn main() -> anyhow::Result<()> {
                     codec.decode_fold_into(&mut acc, 600.0, &encs[i % distinct]);
                 }
                 acc.apply_delta_to(&mut fold_global);
+                acc.count()
+            });
+        }
+    }
+
+    // --- robust aggregation (DESIGN.md §13) ---------------------------
+    // The per-round cost of each RobustAggregator over 100 dense 103k
+    // updates. `mean` prices the trait seam itself (same work as
+    // fedavg_stream_100dev_103k); `clip` adds the norms pass; the
+    // buffered estimators pay the O(K·P) materialize + per-coordinate
+    // sort that bounds their use to modest cohort sizes.
+    {
+        use defl::model::robust::{AggKind, AggregateConfig, RoundUpdate};
+        let devices = 100usize;
+        let distinct = if fast_mode() { 64 } else { devices };
+        let pool = random_sets(distinct, &LEAVES_103K, 77);
+        let codec = Dense32;
+        for kind in [AggKind::Mean, AggKind::Clip, AggKind::TrimmedMean, AggKind::Median] {
+            let cfg = AggregateConfig { kind, ..Default::default() };
+            let mut robust = cfg.build()?;
+            let mut acc = FedAccumulator::zeros_like(&pool[0]);
+            let mut g = ParamSet::zeros_matching(&pool[0]);
+            let updates: Vec<RoundUpdate<'_>> = (0..devices)
+                .map(|i| RoundUpdate {
+                    weight: 600.0,
+                    dense: Some(&pool[i % distinct]),
+                    encoded: None,
+                    attacked: false,
+                })
+                .collect();
+            let label = format!("robust_fold_{devices}dev_{}", kind.label());
+            suite.bench_units(&label, (devices * total_params) as f64, || {
+                robust.combine(&codec, &mut acc, &updates, 600.0 * devices as f64, &mut g);
                 acc.count()
             });
         }

@@ -196,6 +196,18 @@ pub struct ExperimentConfig {
     /// Open-world membership schedule (`churn.kind = none` keeps the
     /// closed-world fleet — byte-identical to the pre-churn coordinator).
     pub churn: crate::coordinator::ChurnConfig,
+    // [attack]
+    /// Seeded fault injection (`attack.fraction = 0` keeps the honest
+    /// fleet — byte-identical to the pre-attack coordinator).
+    pub attack: crate::coordinator::AttackConfig,
+    // [aggregate]
+    /// Robust aggregation over delivered updates (`aggregate.kind =
+    /// mean` is the plain fused fold — byte-identical).
+    pub aggregate: crate::model::robust::AggregateConfig,
+    // [baseline]
+    /// FedProx proximal coefficient μ on the native backend's local step
+    /// (0 = plain local SGD; the heterogeneity comparison baseline).
+    pub prox_mu: f64,
     // [run]
     /// Hard round cap.
     pub max_rounds: usize,
@@ -251,6 +263,9 @@ impl Default for ExperimentConfig {
             engine: crate::coordinator::EngineConfig::default(),
             selection: crate::coordinator::Selection::All,
             churn: crate::coordinator::ChurnConfig::default(),
+            attack: crate::coordinator::AttackConfig::default(),
+            aggregate: crate::model::robust::AggregateConfig::default(),
+            prox_mu: 0.0,
             max_rounds: 60,
             eval_every: 5,
             target_accuracy: 0.0,
@@ -419,6 +434,25 @@ impl ExperimentConfig {
             get_f64(ch, "period", &mut self.churn.period)?;
             get_f64(ch, "amplitude", &mut self.churn.amplitude)?;
         }
+        if let Some(a) = j.get("attack") {
+            if let Some(kind) = a.get("kind").and_then(|x| x.as_str()) {
+                self.attack.kind = crate::coordinator::AttackKind::parse(kind)?;
+            }
+            get_f64(a, "fraction", &mut self.attack.fraction)?;
+            get_f64(a, "scale", &mut self.attack.scale)?;
+            get_f64(a, "noise_std", &mut self.attack.noise_std)?;
+            get_usize(a, "stale_rounds", &mut self.attack.stale_rounds)?;
+        }
+        if let Some(ag) = j.get("aggregate") {
+            if let Some(kind) = ag.get("kind").and_then(|x| x.as_str()) {
+                self.aggregate.kind = crate::model::robust::AggKind::parse(kind)?;
+            }
+            get_f64(ag, "clip_tau", &mut self.aggregate.clip_tau)?;
+            get_f64(ag, "trim_ratio", &mut self.aggregate.trim_ratio)?;
+        }
+        if let Some(b) = j.get("baseline") {
+            get_f64(b, "prox_mu", &mut self.prox_mu)?;
+        }
         if let Some(r) = j.get("run") {
             get_usize(r, "max_rounds", &mut self.max_rounds)?;
             get_usize(r, "eval_every", &mut self.eval_every)?;
@@ -492,6 +526,13 @@ impl ExperimentConfig {
             "churn.min_clients ({}) exceeds the fleet size ({})",
             self.churn.min_clients,
             self.devices
+        );
+        self.attack.validate()?;
+        self.aggregate.validate()?;
+        anyhow::ensure!(
+            self.prox_mu.is_finite() && self.prox_mu >= 0.0,
+            "baseline.prox_mu must be finite and ≥ 0 (got {})",
+            self.prox_mu
         );
         Ok(())
     }
@@ -812,6 +853,62 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = ExperimentConfig::default();
         c.set_override("churn.initial_active=1.5").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn attack_section_parses_and_validates() {
+        use crate::coordinator::AttackKind;
+        let mut c = ExperimentConfig::default();
+        assert!(!c.attack.enabled(), "honest fleet is the default");
+        c.set_override("attack.kind=sign_flip").unwrap();
+        c.set_override("attack.fraction=0.2").unwrap();
+        c.set_override("attack.scale=25").unwrap();
+        c.set_override("attack.noise_std=0.5").unwrap();
+        c.set_override("attack.stale_rounds=3").unwrap();
+        assert!(c.attack.enabled());
+        assert_eq!(c.attack.kind, AttackKind::SignFlip);
+        assert_eq!(c.attack.fraction, 0.2);
+        assert_eq!(c.attack.scale, 25.0);
+        assert_eq!(c.attack.noise_std, 0.5);
+        assert_eq!(c.attack.stale_rounds, 3);
+        assert!(c.validate().is_ok());
+        assert!(c.set_override("attack.kind=mind_control").is_err());
+        c.set_override("attack.fraction=1.5").unwrap();
+        assert!(c.validate().is_err(), "fraction > 1 must not validate");
+        let mut c = ExperimentConfig::default();
+        c.set_override("attack.stale_rounds=0").unwrap();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn aggregate_section_parses_and_validates() {
+        use crate::model::robust::AggKind;
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.aggregate.kind, AggKind::Mean, "plain fold is the default");
+        c.set_override("aggregate.kind=trimmed_mean").unwrap();
+        c.set_override("aggregate.trim_ratio=0.3").unwrap();
+        assert_eq!(c.aggregate.kind, AggKind::TrimmedMean);
+        assert_eq!(c.aggregate.trim_ratio, 0.3);
+        assert!(c.validate().is_ok());
+        c.set_override("aggregate.kind=clip").unwrap();
+        c.set_override("aggregate.clip_tau=2.5").unwrap();
+        assert_eq!(c.aggregate.kind, AggKind::Clip);
+        assert_eq!(c.aggregate.clip_tau, 2.5);
+        assert!(c.validate().is_ok());
+        assert!(c.set_override("aggregate.kind=krum").is_err());
+        c.set_override("aggregate.trim_ratio=0.5").unwrap();
+        assert!(c.validate().is_err(), "trim_ratio ≥ 0.5 must not validate");
+    }
+
+    #[test]
+    fn baseline_section_parses_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.prox_mu, 0.0, "plain local SGD is the default");
+        c.set_override("baseline.prox_mu=0.1").unwrap();
+        assert_eq!(c.prox_mu, 0.1);
+        assert!(c.validate().is_ok());
+        c.set_override("baseline.prox_mu=-1").unwrap();
         assert!(c.validate().is_err());
     }
 

@@ -1,0 +1,402 @@
+//! Adversarial fault injection — the hostile slice of the fleet
+//! (DESIGN.md §13).
+//!
+//! The paper's delay model assumes every device is honest; real mobile
+//! edge fleets are not (the Lim et al. survey names unreliable and
+//! adversarial participants as a first-class deployment reality). This
+//! module marks a seed-derived `attack.fraction` of the fleet as
+//! byzantine and corrupts their behaviour at three well-defined choke
+//! points in [`crate::coordinator::Device`]:
+//!
+//! * **Data poisoning** — [`AttackKind::LabelFlip`] deterministically
+//!   relabels every planned batch (`y → classes − 1 − y`) right after
+//!   the gather in `plan_batches_into`, so the device trains diligently
+//!   on wrong answers.
+//! * **Model poisoning** — [`AttackKind::Scale`], [`AttackKind::SignFlip`]
+//!   and [`AttackKind::Noise`] mutate the update delta after
+//!   `train_planned_*` computes it and *before* the codec encodes it, so
+//!   the corruption rides every wire format (dense and lossy alike).
+//! * **Protocol deviation** — [`AttackKind::StaleReplay`] swaps the
+//!   freshly encoded update for the one the device produced
+//!   `stale_rounds` local updates ago, through the same wire buffers the
+//!   engines fold.
+//!
+//! **Churn-stable marking.** Which devices are hostile is drawn once at
+//! build from `seed ^ ATTACK_SALT` over all `M` device ids
+//! ([`mark_attackers`]) — independent of membership, selection, and
+//! thread count, so the same seed attacks the same devices whether or
+//! not they churn in and out.
+//!
+//! **Off is identical.** `attack.fraction = 0` (the default) constructs
+//! nothing: no [`DeviceAttack`], no RNG draws, no metadata keys — the
+//! run is byte-identical to the attack-free system, matching the
+//! `[drift]`/`[churn]` off-is-identical contract (pinned by
+//! `rust/tests/robust_agg.rs`).
+
+use crate::codec::EncodedDelta;
+use crate::model::ParamSet;
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+
+/// Seed salt for the attack subsystem's private PCG streams (marking on
+/// stream 0, per-device corruption RNG on stream `id + 1`), disjoint
+/// from every other subsystem salt so enabling an attack never perturbs
+/// channel, fleet, data, or codec draws.
+pub const ATTACK_SALT: u64 = 0xA77AC;
+
+/// Which fault an attacked device injects (`[attack] kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttackKind {
+    /// Deterministic label flipping: every planned batch's labels become
+    /// `classes − 1 − y` (data poisoning; the update is honest SGD on
+    /// dishonest data).
+    LabelFlip,
+    /// Scaled byzantine update: the delta is multiplied by
+    /// `attack.scale` before encoding (the classic model-boost attack).
+    Scale,
+    /// Sign-flipped update: the delta is negated before encoding
+    /// (gradient-ascent sabotage).
+    SignFlip,
+    /// Additive Gaussian noise: `Δ += 𝒩(0, attack.noise_std²)` per
+    /// element, drawn from the device's private attack RNG stream.
+    Noise,
+    /// Stale replay: the device resends the (encoded) update it produced
+    /// `attack.stale_rounds` local updates ago instead of this round's.
+    StaleReplay,
+}
+
+impl AttackKind {
+    /// Parse an `attack.kind` string
+    /// (`label_flip|scale|sign_flip|noise|stale_replay`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "label_flip" | "labelflip" => Ok(AttackKind::LabelFlip),
+            "scale" | "scaled" => Ok(AttackKind::Scale),
+            "sign_flip" | "signflip" => Ok(AttackKind::SignFlip),
+            "noise" | "gaussian" => Ok(AttackKind::Noise),
+            "stale_replay" | "stale" => Ok(AttackKind::StaleReplay),
+            other => anyhow::bail!(
+                "unknown attack {other:?} (label_flip|scale|sign_flip|noise|stale_replay)"
+            ),
+        }
+    }
+
+    /// Canonical config-string name (run metadata, tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AttackKind::LabelFlip => "label_flip",
+            AttackKind::Scale => "scale",
+            AttackKind::SignFlip => "sign_flip",
+            AttackKind::Noise => "noise",
+            AttackKind::StaleReplay => "stale_replay",
+        }
+    }
+}
+
+/// `[attack]` configuration section. With `fraction = 0` (default) the
+/// injector is fully inert: nothing is constructed, no stream is drawn,
+/// and the run is byte-identical to the attack-free system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackConfig {
+    /// Which fault the marked devices inject.
+    pub kind: AttackKind,
+    /// Fraction of the fleet marked hostile (`⌈fraction·M⌉` devices;
+    /// 0 disables the subsystem entirely).
+    pub fraction: f64,
+    /// Delta multiplier for [`AttackKind::Scale`].
+    pub scale: f64,
+    /// Per-element noise std for [`AttackKind::Noise`].
+    pub noise_std: f64,
+    /// Replay lag `k` for [`AttackKind::StaleReplay`]: resend the update
+    /// from `k` local updates ago (the first `k` updates pass unmodified
+    /// while the replay queue warms).
+    pub stale_rounds: usize,
+}
+
+impl Default for AttackConfig {
+    fn default() -> Self {
+        AttackConfig {
+            kind: AttackKind::Scale,
+            fraction: 0.0,
+            scale: 10.0,
+            noise_std: 1.0,
+            stale_rounds: 1,
+        }
+    }
+}
+
+impl AttackConfig {
+    /// Is any device hostile? (`fraction > 0`.)
+    pub fn enabled(&self) -> bool {
+        self.fraction > 0.0
+    }
+
+    /// Range-check the `[attack]` knobs.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.fraction),
+            "attack.fraction must be in [0, 1] (got {})",
+            self.fraction
+        );
+        anyhow::ensure!(
+            self.scale.is_finite() && self.scale != 0.0,
+            "attack.scale must be finite and non-zero (got {}): a zero scale silently \
+             erases the update instead of attacking it",
+            self.scale
+        );
+        anyhow::ensure!(
+            self.noise_std.is_finite() && self.noise_std >= 0.0,
+            "attack.noise_std must be finite and ≥ 0 (got {})",
+            self.noise_std
+        );
+        anyhow::ensure!(self.stale_rounds >= 1, "attack.stale_rounds must be ≥ 1");
+        Ok(())
+    }
+}
+
+/// Which devices are hostile: `⌈fraction·M⌉` ids sampled once from the
+/// dedicated `seed ^ ATTACK_SALT` stream (stream 0), returned sorted.
+/// Independent of churn/membership/selection, so the marked set is
+/// stable for a given `(seed, fraction, M)` whatever else the run does.
+pub fn mark_attackers(cfg: &AttackConfig, devices: usize, seed: u64) -> Vec<usize> {
+    let n = ((cfg.fraction * devices as f64).ceil() as usize).min(devices);
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut rng = Pcg32::new(seed ^ ATTACK_SALT, 0);
+    let mut ids = rng.sample_indices(devices, n);
+    ids.sort_unstable();
+    ids
+}
+
+/// One stored wire payload for the stale-replay queue: the encoded form
+/// under a lossy codec (what the engines fold), the raw delta otherwise.
+#[derive(Clone, Debug)]
+enum ReplayPayload {
+    /// Codec wire buffers (lossy codecs).
+    Encoded(EncodedDelta),
+    /// Raw update delta (lossless codecs fold the delta directly).
+    Delta(ParamSet),
+}
+
+/// Per-device attack state, attached to a marked
+/// [`crate::coordinator::Device`] at build. All state is private to the
+/// device (`&mut` through the device itself), so parallel local rounds
+/// stay deterministic at any thread count.
+#[derive(Debug)]
+pub struct DeviceAttack {
+    /// The fault this device injects.
+    pub kind: AttackKind,
+    scale: f32,
+    noise_std: f64,
+    stale_rounds: usize,
+    /// Private corruption RNG (`seed ^ ATTACK_SALT`, stream `id + 1`) —
+    /// only [`AttackKind::Noise`] draws from it.
+    rng: Pcg32,
+    /// Replay queue (bounded at `stale_rounds + 1` payloads — the
+    /// documented per-device memory cost of [`AttackKind::StaleReplay`]).
+    history: VecDeque<ReplayPayload>,
+}
+
+impl DeviceAttack {
+    /// Attack state for device `id` under `cfg`, with its private RNG
+    /// stream derived from the run seed.
+    pub fn new(cfg: &AttackConfig, seed: u64, id: usize) -> Self {
+        DeviceAttack {
+            kind: cfg.kind,
+            scale: cfg.scale as f32,
+            noise_std: cfg.noise_std,
+            stale_rounds: cfg.stale_rounds,
+            rng: Pcg32::new(seed ^ ATTACK_SALT, id as u64 + 1),
+            history: VecDeque::new(),
+        }
+    }
+
+    /// Data-poisoning choke point: deterministically flip a gathered
+    /// batch's labels in place (`y → classes − 1 − y`). No-op for every
+    /// other kind.
+    pub fn flip_labels(&self, y: &mut [i32], classes: usize) {
+        if self.kind != AttackKind::LabelFlip {
+            return;
+        }
+        let top = classes as i32 - 1;
+        for l in y.iter_mut() {
+            *l = top - *l;
+        }
+    }
+
+    /// Model-poisoning choke point: mutate the freshly computed delta
+    /// in place, post-training and pre-encode. No-op for the data- and
+    /// protocol-level kinds.
+    pub fn corrupt_delta(&mut self, delta: &mut ParamSet) {
+        match self.kind {
+            AttackKind::Scale => delta.scale(self.scale),
+            AttackKind::SignFlip => delta.scale(-1.0),
+            AttackKind::Noise => {
+                for leaf in &mut delta.leaves {
+                    for v in leaf.iter_mut() {
+                        *v += self.rng.normal_ms(0.0, self.noise_std) as f32;
+                    }
+                }
+            }
+            AttackKind::LabelFlip | AttackKind::StaleReplay => {}
+        }
+    }
+
+    /// Protocol-deviation choke point: enqueue this round's payload and,
+    /// once the queue holds more than `stale_rounds` entries, install
+    /// the oldest one over the device's wire state — the engines then
+    /// fold an update that is `stale_rounds` local updates old. No-op
+    /// for every other kind.
+    pub fn replay(
+        &mut self,
+        lossy: bool,
+        delta: &mut Option<ParamSet>,
+        encoded: &mut EncodedDelta,
+    ) {
+        if self.kind != AttackKind::StaleReplay {
+            return;
+        }
+        let current = if lossy {
+            ReplayPayload::Encoded(encoded.clone())
+        } else {
+            ReplayPayload::Delta(delta.as_ref().expect("replay after training").clone())
+        };
+        self.history.push_back(current);
+        if self.history.len() > self.stale_rounds {
+            match self.history.pop_front().expect("just pushed") {
+                ReplayPayload::Encoded(e) => *encoded = e,
+                ReplayPayload::Delta(d) => *delta = Some(d),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_inert_and_validate() {
+        let c = AttackConfig::default();
+        assert!(!c.enabled());
+        assert!(c.validate().is_ok());
+        assert!(mark_attackers(&c, 10, 42).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut c = AttackConfig::default();
+        c.fraction = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = AttackConfig::default();
+        c.scale = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = AttackConfig::default();
+        c.noise_std = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = AttackConfig::default();
+        c.stale_rounds = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["label_flip", "scale", "sign_flip", "noise", "stale_replay"] {
+            assert_eq!(AttackKind::parse(s).unwrap().label(), s);
+        }
+        assert!(AttackKind::parse("dos").is_err());
+    }
+
+    #[test]
+    fn marking_is_deterministic_and_sized_by_ceil() {
+        let mut c = AttackConfig::default();
+        c.fraction = 0.2;
+        let a = mark_attackers(&c, 10, 7);
+        let b = mark_attackers(&c, 10, 7);
+        assert_eq!(a, b, "same seed ⇒ same marked set");
+        assert_eq!(a.len(), 2);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "sorted");
+        assert!(a.iter().all(|&i| i < 10));
+        // ⌈0.2·8⌉ = 2, ⌈1.0·5⌉ = 5
+        assert_eq!(mark_attackers(&c, 8, 7).len(), 2);
+        c.fraction = 1.0;
+        assert_eq!(mark_attackers(&c, 5, 7).len(), 5);
+        // a different seed marks a (generally) different set
+        c.fraction = 0.3;
+        let x = mark_attackers(&c, 100, 1);
+        let y = mark_attackers(&c, 100, 2);
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn label_flip_is_an_involution_and_gated_by_kind() {
+        let mut cfg = AttackConfig::default();
+        cfg.kind = AttackKind::LabelFlip;
+        let att = DeviceAttack::new(&cfg, 42, 0);
+        let mut y = vec![0, 3, 9, 5];
+        att.flip_labels(&mut y, 10);
+        assert_eq!(y, vec![9, 6, 0, 4]);
+        att.flip_labels(&mut y, 10);
+        assert_eq!(y, vec![0, 3, 9, 5], "flip twice = identity");
+        let scale = DeviceAttack::new(&AttackConfig::default(), 42, 0);
+        let mut y2 = vec![1, 2];
+        scale.flip_labels(&mut y2, 10);
+        assert_eq!(y2, vec![1, 2], "non-flip kinds leave labels alone");
+    }
+
+    #[test]
+    fn corrupt_delta_per_kind() {
+        let mk = || ParamSet { leaves: vec![vec![1.0, -2.0], vec![0.5]] };
+        let mut cfg = AttackConfig::default();
+        cfg.scale = 4.0;
+        let mut att = DeviceAttack::new(&cfg, 1, 0);
+        let mut d = mk();
+        att.corrupt_delta(&mut d);
+        assert_eq!(d.leaves, vec![vec![4.0, -8.0], vec![2.0]]);
+        cfg.kind = AttackKind::SignFlip;
+        let mut att = DeviceAttack::new(&cfg, 1, 0);
+        let mut d = mk();
+        att.corrupt_delta(&mut d);
+        assert_eq!(d.leaves, vec![vec![-1.0, 2.0], vec![-0.5]]);
+        cfg.kind = AttackKind::Noise;
+        cfg.noise_std = 1.0;
+        let mut att = DeviceAttack::new(&cfg, 1, 0);
+        let mut d = mk();
+        att.corrupt_delta(&mut d);
+        assert_ne!(d.leaves, mk().leaves, "noise perturbs");
+        // the noise stream is deterministic per (seed, id)
+        let mut att2 = DeviceAttack::new(&cfg, 1, 0);
+        let mut d2 = mk();
+        att2.corrupt_delta(&mut d2);
+        assert_eq!(d.leaves, d2.leaves);
+        cfg.kind = AttackKind::LabelFlip;
+        let mut att = DeviceAttack::new(&cfg, 1, 0);
+        let mut d = mk();
+        att.corrupt_delta(&mut d);
+        assert_eq!(d.leaves, mk().leaves, "label flip leaves the delta alone");
+    }
+
+    #[test]
+    fn stale_replay_warms_then_lags_by_k() {
+        let mut cfg = AttackConfig::default();
+        cfg.kind = AttackKind::StaleReplay;
+        cfg.stale_rounds = 2;
+        let mut att = DeviceAttack::new(&cfg, 1, 0);
+        let mk = |v: f32| ParamSet { leaves: vec![vec![v]] };
+        let mut enc = EncodedDelta::new();
+        // lossless path: the queue operates on the raw delta
+        for round in 1..=5 {
+            let mut delta = Some(mk(round as f32));
+            att.replay(false, &mut delta, &mut enc);
+            let sent = delta.unwrap().leaves[0][0];
+            if round <= 2 {
+                assert_eq!(sent, round as f32, "queue still warming");
+            } else {
+                assert_eq!(sent, (round - 2) as f32, "round r sends r−k's update");
+            }
+        }
+        // queue stays bounded at stale_rounds entries after the swap
+        assert!(att.history.len() <= 2);
+    }
+}

@@ -16,6 +16,7 @@
 //! directly from the delta buffer for lossless ones (no wire copy).
 
 use crate::codec::{EncodedDelta, UpdateCodec};
+use crate::coordinator::attack::{AttackKind, DeviceAttack};
 use crate::data::Dataset;
 use crate::model::ParamSet;
 use crate::runtime::{ParallelStep, StepScratch, TrainBackend};
@@ -64,6 +65,13 @@ pub struct Device {
     /// Private RNG stream for stochastic quantization — separate from the
     /// batch stream, so enabling a codec never perturbs batch draws.
     codec_rng: Pcg32,
+    /// Fault-injection state when this device is marked hostile
+    /// (`[attack]`; None for the honest fleet — the off-is-identical
+    /// contract).
+    attack: Option<DeviceAttack>,
+    /// FedProx proximal coefficient μ (`[baseline] prox_mu`); 0 keeps
+    /// plain local SGD with zero extra work.
+    prox_mu: f32,
 }
 
 impl Device {
@@ -87,7 +95,27 @@ impl Device {
             residual: None,
             encoded: EncodedDelta::new(),
             codec_rng: Pcg32::new(seed ^ 0xC0DEC, id as u64 + 1),
+            attack: None,
+            prox_mu: 0.0,
         }
+    }
+
+    /// Mark this device hostile with the given injection state (set once
+    /// at build by the coordinator for seed-marked devices).
+    pub fn set_attack(&mut self, attack: DeviceAttack) {
+        self.attack = Some(attack);
+    }
+
+    /// Whether this device is marked hostile (feeds the `attacked`
+    /// metrics column; aggregators never see ids, only this flag).
+    pub fn is_attacked(&self) -> bool {
+        self.attack.is_some()
+    }
+
+    /// Set the FedProx proximal coefficient μ for this device's local
+    /// steps (0 = plain SGD).
+    pub fn set_prox_mu(&mut self, mu: f32) {
+        self.prox_mu = mu;
     }
 
     /// Local data size D_m (the FedAvg aggregation weight, eq. 2).
@@ -128,6 +156,9 @@ impl Device {
         for (x, y) in plan[..v].iter_mut() {
             self.next_batch_into(batch, &mut idx);
             self.data.gather_into(&idx, x, y);
+            if let Some(att) = &self.attack {
+                att.flip_labels(y, self.data.classes);
+            }
         }
         self.plan = plan;
         self.idx_buf = idx;
@@ -180,6 +211,24 @@ impl Device {
         codec.encode(delta, self.residual.as_mut(), &mut self.codec_rng, &mut self.encoded);
     }
 
+    /// Shared tail of both training paths: run the model-poisoning choke
+    /// point on the fresh delta (post-training, pre-encode), store and
+    /// encode it, then let a stale-replay attacker swap the wire state
+    /// the engines will fold. All three calls are no-ops for honest
+    /// devices and non-matching attack kinds.
+    fn finish_update(&mut self, mut local: ParamSet, codec: &dyn UpdateCodec) {
+        if let Some(att) = self.attack.as_mut() {
+            att.corrupt_delta(&mut local);
+        }
+        self.delta = Some(local);
+        self.encode_update(codec);
+        if let Some(att) = self.attack.as_mut() {
+            if att.kind == AttackKind::StaleReplay {
+                att.replay(codec.lossy(), &mut self.delta, &mut self.encoded);
+            }
+        }
+    }
+
     /// Reuse (or first-allocate) the local-model buffer, loaded with the
     /// global model.
     fn pull_global(&mut self, global: &ParamSet) -> ParamSet {
@@ -217,11 +266,13 @@ impl Device {
         let mut loss_acc = 0f64;
         for (x, y) in &self.plan[..self.planned] {
             let loss = be.train_step_in_place_shared(model, batch, &mut local, x, y, lr, scratch)?;
+            if self.prox_mu != 0.0 {
+                local.prox_step(global, lr * self.prox_mu);
+            }
             loss_acc += loss as f64;
         }
         local.sub_assign(global);
-        self.delta = Some(local);
-        self.encode_update(codec);
+        self.finish_update(local, codec);
         Ok(loss_acc / self.planned as f64)
     }
 
@@ -246,11 +297,13 @@ impl Device {
         let mut loss_acc = 0f64;
         for (x, y) in &self.plan[..self.planned] {
             let loss = be.train_step_in_place(model, batch, &mut local, x, y, lr, scratch)?;
+            if self.prox_mu != 0.0 {
+                local.prox_step(global, lr * self.prox_mu);
+            }
             loss_acc += loss as f64;
         }
         local.sub_assign(global);
-        self.delta = Some(local);
-        self.encode_update(codec);
+        self.finish_update(local, codec);
         Ok(loss_acc / self.planned as f64)
     }
 
@@ -365,6 +418,53 @@ mod tests {
         let mut b = Device::new(0, (0..50).collect(), ds, 9);
         assert_eq!(next_batch(&mut a, 10), next_batch(&mut b, 10));
         assert_eq!(next_batch(&mut a, 10), next_batch(&mut b, 10));
+    }
+
+    #[test]
+    fn label_flip_attack_flips_planned_labels() {
+        use crate::coordinator::attack::AttackConfig;
+        let ds = Arc::new(generate(&SynthSpec::tiny(50), 3));
+        let mut honest = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let mut hostile = Device::new(0, (0..50).collect(), Arc::clone(&ds), 9);
+        let mut cfg = AttackConfig::default();
+        cfg.kind = AttackKind::LabelFlip;
+        hostile.set_attack(DeviceAttack::new(&cfg, 9, 0));
+        assert!(hostile.is_attacked());
+        assert!(!honest.is_attacked());
+        honest.plan_batches_into(10, 2);
+        hostile.plan_batches_into(10, 2);
+        let top = ds.classes as i32 - 1;
+        for ((_, hy), (_, ay)) in honest.planned_batches().iter().zip(hostile.planned_batches())
+        {
+            for (h, a) in hy.iter().zip(ay) {
+                assert_eq!(*a, top - *h, "same batch plan, flipped labels");
+            }
+        }
+    }
+
+    /// FedProx: the proximal pull toward the round's global anchor must
+    /// shrink the update delta relative to plain local SGD on the exact
+    /// same batch sequence.
+    #[cfg(feature = "native")]
+    #[test]
+    fn prox_term_shrinks_the_update_delta() {
+        use crate::codec::Dense32;
+        use crate::runtime::NativeBackend;
+        let ds = Arc::new(generate(&SynthSpec::tiny(64), 5));
+        let be = NativeBackend::new(3);
+        let global = {
+            use crate::runtime::TrainBackend as _;
+            be.initial_params("mlp").unwrap()
+        };
+        let mut plain = Device::new(0, (0..64).collect(), Arc::clone(&ds), 11);
+        let mut prox = Device::new(0, (0..64).collect(), ds, 11);
+        prox.set_prox_mu(5.0);
+        plain.local_round_shared(&be, "mlp", &global, 8, 4, 0.1, &Dense32).unwrap();
+        prox.local_round_shared(&be, "mlp", &global, 8, 4, 0.1, &Dense32).unwrap();
+        let n_plain = plain.delta().l2_norm();
+        let n_prox = prox.delta().l2_norm();
+        assert!(n_prox > 0.0, "prox still makes progress");
+        assert!(n_prox < n_plain, "μ > 0 must pull toward the anchor: {n_prox} vs {n_plain}");
     }
 
     /// The delta contract: after a local round the device holds

@@ -28,8 +28,8 @@
 //! devices still in flight keep their (now stale) update in the buffer.
 
 use super::{
-    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
-    weighted_loss, wire_metrics, EngineKind, RoundEngine,
+    churn_columns, clean_loss_of, local_computation, pick_cohort, push_energy, robust_combine,
+    uplink_phase, weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -162,6 +162,9 @@ impl RoundEngine for AsyncBuffered {
                 fleet_size,
                 joins,
                 drops,
+                attacked: 0,
+                clipped: 0,
+                trimmed: 0,
             });
         }
 
@@ -189,14 +192,18 @@ impl RoundEngine for AsyncBuffered {
             .zip(&staleness)
             .map(|(f, &s)| f.weight * self.discount(s))
             .sum();
-        {
-            let FlSystem { devices, global, agg, codec, .. } = &mut *sys;
-            agg.begin(total_w);
-            for (f, &s) in taken.iter().zip(&staleness) {
-                fold_update(&**codec, agg, f.weight * self.discount(s), &devices[f.device]);
-            }
-            agg.apply_delta_to(global);
+        let folds: Vec<(usize, f64, f64)> = taken
+            .iter()
+            .zip(&staleness)
+            .map(|(f, &s)| (f.device, f.weight * self.discount(s), f.loss))
+            .collect();
+        if sys.cfg.attack.enabled() {
+            sys.obs_clean_loss = Some(clean_loss_of(&sys.devices, &folds));
         }
+        let stats = {
+            let FlSystem { devices, global, agg, robust, codec, .. } = &mut *sys;
+            robust_combine(&**codec, &mut **robust, agg, devices, &folds, total_w, global)
+        };
         self.aggregations += 1;
 
         // 5. price the step on the simclock: t_cm + V·t_cp == delta with
@@ -245,6 +252,9 @@ impl RoundEngine for AsyncBuffered {
             fleet_size,
             joins,
             drops,
+            attacked: stats.attacked,
+            clipped: stats.clipped,
+            trimmed: stats.trimmed,
         })
     }
 }

@@ -15,8 +15,8 @@
 //! by `rust/tests/integration.rs::engine_parity_deadline_generous`).
 
 use super::{
-    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
-    weighted_loss, wire_metrics, EngineKind, RoundEngine,
+    churn_columns, clean_loss_of, local_computation, pick_cohort, push_energy, robust_combine,
+    uplink_phase, weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -106,21 +106,27 @@ impl RoundEngine for DeadlineSync {
                 bits_sum += u.bits;
             }
         }
+        let mut stats = crate::model::robust::FoldStats::default();
         if participants == 0 {
             crate::log_warn!(
                 "round {round_no}: no update beat the deadline ({:.3}s) — global model kept",
                 self.deadline_s
             );
         } else {
-            let FlSystem { devices, global, agg, fleet, codec, .. } = sys;
-            agg.begin(total_w);
-            for u in &updates {
-                let t_cp_m = fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
-                if self.survives(v, t_cp_m, up.times[u.device]) && up.delivered[u.device] {
-                    fold_update(&**codec, agg, u.weight, &devices[u.device]);
-                }
+            let folds: Vec<(usize, f64, f64)> = updates
+                .iter()
+                .filter(|u| {
+                    let t_cp_m =
+                        sys.fleet.specs[u.device].minibatch_time(bits_per_sample, batch);
+                    self.survives(v, t_cp_m, up.times[u.device]) && up.delivered[u.device]
+                })
+                .map(|u| (u.device, u.weight, u.loss))
+                .collect();
+            if sys.cfg.attack.enabled() {
+                sys.obs_clean_loss = Some(clean_loss_of(&sys.devices, &folds));
             }
-            agg.apply_delta_to(global);
+            let FlSystem { devices, global, agg, robust, codec, .. } = sys;
+            stats = robust_combine(&**codec, &mut **robust, agg, devices, &folds, total_w, global);
         }
         let (encoded_bits, compression_ratio) =
             wire_metrics(sys.spec.update_bits(), bits_sum, participants);
@@ -159,6 +165,9 @@ impl RoundEngine for DeadlineSync {
             fleet_size,
             joins,
             drops,
+            attacked: stats.attacked,
+            clipped: stats.clipped,
+            trimmed: stats.trimmed,
         })
     }
 }

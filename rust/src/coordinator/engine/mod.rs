@@ -278,22 +278,57 @@ pub(crate) fn local_computation(
     Ok(out)
 }
 
-/// Fold one finished update into the round accumulator. Lossy codecs
-/// stream their encoded payload through the fused decode path (k values
-/// per sparse update instead of P); the lossless dense codec folds the
-/// device's delta buffer directly — no wire copy was ever made
-/// ([`Device`] skips `encode_update` for lossless codecs), so the
-/// default path is exactly the copy-free PR 3 fold.
-pub(crate) fn fold_update(
+/// Aggregate one round's delivered updates through the configured
+/// [`crate::model::robust::RobustAggregator`] (DESIGN.md §13). `folds`
+/// is the engine's `(device, fold weight, loss)` triple per delivered
+/// update, in the engine's fold order; lossy codecs hand the aggregator
+/// their encoded payload (the fused decode path — k values per sparse
+/// update instead of P), the lossless dense codec hands the device's
+/// delta buffer directly (no wire copy was ever made, so the default
+/// `mean` path is exactly the copy-free PR 3–4 fold, bit for bit).
+pub(crate) fn robust_combine(
     codec: &dyn crate::codec::UpdateCodec,
+    robust: &mut dyn crate::model::robust::RobustAggregator,
     agg: &mut crate::model::FedAccumulator,
-    weight: f64,
-    dev: &Device,
-) {
-    if codec.lossy() {
-        codec.decode_fold_into(agg, weight, dev.encoded());
+    devices: &[Device],
+    folds: &[(usize, f64, f64)],
+    total_w: f64,
+    global: &mut crate::model::ParamSet,
+) -> crate::model::robust::FoldStats {
+    let lossy = codec.lossy();
+    let updates: Vec<crate::model::robust::RoundUpdate<'_>> = folds
+        .iter()
+        .map(|&(id, w, _)| {
+            let dev = &devices[id];
+            crate::model::robust::RoundUpdate {
+                weight: w,
+                dense: if lossy { None } else { Some(dev.delta()) },
+                encoded: if lossy { Some(dev.encoded()) } else { None },
+                attacked: dev.is_attacked(),
+            }
+        })
+        .collect();
+    robust.combine(codec, agg, &updates, total_w, global)
+}
+
+/// Weighted mean training loss over the *non-attacked* devices of a
+/// round's fold set — what the engines hand the controller in place of
+/// the poisoned round loss when `[attack]` is enabled (NaN when every
+/// folded update was hostile; `Controller::observe` skips non-finite
+/// losses, so a fully-hostile round simply contributes no loss sample).
+pub(crate) fn clean_loss_of(devices: &[Device], folds: &[(usize, f64, f64)]) -> f64 {
+    let mut acc = 0f64;
+    let mut total = 0f64;
+    for &(id, w, loss) in folds {
+        if !devices[id].is_attacked() {
+            acc += loss * w;
+            total += w;
+        }
+    }
+    if total > 0.0 {
+        acc / total
     } else {
-        agg.fold(weight, dev.delta());
+        f64::NAN
     }
 }
 

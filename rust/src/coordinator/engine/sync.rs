@@ -9,8 +9,8 @@
 //! `rust/tests/native_backend.rs::parallel_fanout_is_bit_identical_to_sequential`).
 
 use super::{
-    churn_columns, fold_update, local_computation, pick_cohort, push_energy, uplink_phase,
-    weighted_loss, wire_metrics, EngineKind, RoundEngine,
+    churn_columns, clean_loss_of, local_computation, pick_cohort, push_energy, robust_combine,
+    uplink_phase, weighted_loss, wire_metrics, EngineKind, RoundEngine,
 };
 use crate::coordinator::FlSystem;
 use crate::metrics::RoundRecord;
@@ -59,17 +59,20 @@ impl RoundEngine for SyncFedAvg {
                 bits_sum += u.bits;
             }
         }
+        let mut stats = crate::model::robust::FoldStats::default();
         if participants == 0 {
             crate::log_warn!("round {round_no}: every update lost to outage — global model kept");
         } else {
-            let FlSystem { devices, global, agg, codec, .. } = sys;
-            agg.begin(total_w);
-            for u in &updates {
-                if up.delivered[u.device] {
-                    fold_update(&**codec, agg, u.weight, &devices[u.device]);
-                }
+            let folds: Vec<(usize, f64, f64)> = updates
+                .iter()
+                .filter(|u| up.delivered[u.device])
+                .map(|u| (u.device, u.weight, u.loss))
+                .collect();
+            if sys.cfg.attack.enabled() {
+                sys.obs_clean_loss = Some(clean_loss_of(&sys.devices, &folds));
             }
-            agg.apply_delta_to(global);
+            let FlSystem { devices, global, agg, robust, codec, .. } = sys;
+            stats = robust_combine(&**codec, &mut **robust, agg, devices, &folds, total_w, global);
         }
         let (encoded_bits, compression_ratio) =
             wire_metrics(sys.spec.update_bits(), bits_sum, participants);
@@ -108,6 +111,9 @@ impl RoundEngine for SyncFedAvg {
             fleet_size,
             joins,
             drops,
+            attacked: stats.attacked,
+            clipped: stats.clipped,
+            trimmed: stats.trimmed,
         })
     }
 }

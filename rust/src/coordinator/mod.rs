@@ -37,6 +37,8 @@
 //! engine consumes the live view; `churn.kind = none` (default) keeps
 //! the closed world, byte-identical to the pre-churn system.
 
+/// Seeded fault injection: the hostile slice of the fleet.
+pub mod attack;
 /// Open-world membership: the phase machine's churn schedule.
 pub mod churn;
 /// One simulated edge device (shard, batching RNG, local SGD).
@@ -46,6 +48,7 @@ pub mod engine;
 /// Partial-participation client-selection policies.
 pub mod selection;
 
+pub use attack::{AttackConfig, AttackKind};
 pub use churn::{ChurnConfig, ChurnEvent, ChurnEventKind, ChurnKind, Membership, Phase};
 pub use device::Device;
 pub use engine::{EngineConfig, EngineKind, RoundEngine};
@@ -92,6 +95,10 @@ pub struct FlSystem {
     /// apply_delta_to`) instead of materialising K model copies
     /// (DESIGN.md §8).
     pub agg: FedAccumulator,
+    /// The robust aggregation strategy the engines combine through
+    /// (`[aggregate] kind`; `mean` is the plain fused fold,
+    /// byte-identical to the pre-robust engines — DESIGN.md §13).
+    pub robust: Box<dyn crate::model::robust::RobustAggregator>,
     /// The update codec (`[codec] kind = dense|quant|topk|topk_quant`):
     /// devices encode their deltas through it, the channel prices its
     /// wire size, and the engines fold through its fused decode path
@@ -122,6 +129,14 @@ pub struct FlSystem {
     /// by the controller hook after the round; NaN when no uplink was
     /// drawn (e.g. an async round with nothing to start).
     pub(crate) obs_t_cm: f64,
+    /// The round's mean training loss over *non-attacked* folded devices
+    /// — written by the engines only when `[attack]` is enabled, fed to
+    /// the controller instead of the poisoned round loss so hostile
+    /// losses can't skew the EWMA/loss-guard re-planning (DESIGN.md §13).
+    /// `None` ⇒ the controller sees `rec.train_loss` unchanged (the
+    /// attack-off byte-identical path); `Some(NaN)` ⇒ every folded
+    /// update was hostile and the loss observation is skipped entirely.
+    pub(crate) obs_clean_loss: Option<f64>,
     /// The *training* set's bits/sample, cached at build — the quantity
     /// the round-0 plan priced compute with. The controller's per-round
     /// observations and the re-derived auto deadline read this, so a
@@ -228,7 +243,7 @@ impl FlSystem {
                 data::partition_shards(&train, cfg.devices, cfg.shards_per_device, cfg.seed)
             }
         };
-        let devices: Vec<Device> = partition
+        let mut devices: Vec<Device> = partition
             .device_indices
             .iter()
             .enumerate()
@@ -236,6 +251,18 @@ impl FlSystem {
                 Device::new(i, shard.clone(), Arc::clone(&train), cfg.seed ^ (0xD0 + i as u64))
             })
             .collect();
+        // Fault injection: mark the seed-derived hostile slice. With
+        // fraction = 0 nothing runs — no RNG, no meta — so an attack-free
+        // config is byte-identical to the pre-attack coordinator.
+        let attackers = attack::mark_attackers(&cfg.attack, cfg.devices, cfg.seed);
+        for &id in &attackers {
+            devices[id].set_attack(attack::DeviceAttack::new(&cfg.attack, cfg.seed, id));
+        }
+        if cfg.prox_mu != 0.0 {
+            for d in devices.iter_mut() {
+                d.set_prox_mu(cfg.prox_mu as f32);
+            }
+        }
 
         // --- delay models --------------------------------------------
         let channel = Channel::new(cfg.wireless.clone(), cfg.devices, cfg.seed ^ 0xC4A);
@@ -330,6 +357,22 @@ impl FlSystem {
             log.set_meta("churn_kind", Json::str(cfg.churn.kind.label()));
             log.set_meta("churn_min_clients", Json::Num(cfg.churn.min_clients as f64));
         }
+        // Attack-free and mean-aggregated runs carry no keys at all —
+        // same absence-pins-the-no-op convention as churn/controller.
+        if cfg.attack.enabled() {
+            log.set_meta("attack_kind", Json::str(cfg.attack.kind.label()));
+            log.set_meta("attack_fraction", Json::Num(cfg.attack.fraction));
+            log.set_meta(
+                "attack_devices",
+                Json::Arr(attackers.iter().map(|&i| Json::Num(i as f64)).collect()),
+            );
+        }
+        if cfg.aggregate.kind != crate::model::robust::AggKind::Mean {
+            log.set_meta("aggregator", Json::str(cfg.aggregate.kind.label()));
+        }
+        if cfg.prox_mu != 0.0 {
+            log.set_meta("prox_mu", Json::Num(cfg.prox_mu));
+        }
         log.set_meta("update_bits_dense", Json::Num(spec.update_bits()));
         log.set_meta("update_bits_encoded", Json::Num(update_bits));
         log.set_meta("policy", Json::str(cfg.policy.label()));
@@ -357,6 +400,7 @@ impl FlSystem {
         let phase =
             if membership.enabled() { Phase::WaitingForMembers } else { Phase::RoundTrain };
         let agg = FedAccumulator::zeros_like(&global);
+        let robust = cfg.aggregate.build()?;
         Ok(FlSystem {
             cfg,
             model,
@@ -368,6 +412,7 @@ impl FlSystem {
             test_set,
             global,
             agg,
+            robust,
             codec,
             clock: SimClock::new(),
             log,
@@ -379,6 +424,7 @@ impl FlSystem {
             resolved,
             controller,
             obs_t_cm: f64::NAN,
+            obs_clean_loss: None,
             train_bits_per_sample: bits_per_sample,
             membership,
             phase,
@@ -465,6 +511,7 @@ impl FlSystem {
                     // deaths the engines turn into lost uplinks.
                     self.membership.begin_round();
                     self.obs_t_cm = f64::NAN;
+                    self.obs_clean_loss = None;
                     let mut engine = self.engine.take().expect("engine present between rounds");
                     let result = engine.round(self);
                     self.engine = Some(engine);
@@ -534,10 +581,15 @@ impl FlSystem {
         let t_cps =
             self.fleet.bottleneck_seconds_per_sample_of(active, self.train_bits_per_sample);
         ctl.set_fleet_size(active.len());
+        // Under attack the engines report the mean loss over non-attacked
+        // folded devices; a fully-hostile round reports NaN, which
+        // Controller::observe skips — either way hostile losses never
+        // reach the EWMA or the loss guard. Attack-off rounds leave
+        // obs_clean_loss as None and the observation is unchanged.
         ctl.observe(&crate::defl_opt::RoundObservation {
             t_cm: self.obs_t_cm,
             t_cp_per_sample: t_cps,
-            train_loss: rec.train_loss,
+            train_loss: self.obs_clean_loss.unwrap_or(rec.train_loss),
         });
         rec.est_t_cm = ctl.est_t_cm();
         if let Some(plan) = ctl.maybe_replan() {

@@ -3,9 +3,11 @@
 //! comparison (sync vs deadline vs async-buffered on one straggling
 //! fleet), the compression sweep (update codecs at qbits ∈ {4, 8},
 //! k_ratio ∈ {0.01, 0.1, 1.0}), the static-vs-adaptive controller
-//! sweep under channel drift, and the open-world churn sweep (closed
-//! world vs each `[churn]` schedule on the same seed) — DESIGN.md
-//! §6/§9/§10/§11, EXPERIMENTS.md §ablation/§codec/§controller/§churn.
+//! sweep under channel drift, the open-world churn sweep (closed
+//! world vs each `[churn]` schedule on the same seed), and the
+//! robust-aggregation attack sweep (aggregator × codec × attack
+//! fraction on a fault-injected fleet) — DESIGN.md §6/§9/§10/§11/§13,
+//! EXPERIMENTS.md §ablation/§codec/§controller/§churn/§attacks.
 //!
 //! Since PR 7 each trained part is a committed spec
 //! (`specs/ablation_*.toml`) run through the trial runner; this module
@@ -13,8 +15,9 @@
 //! table (closed form vs numeric, no training), the engine sweep's
 //! derived deadline (90% of the sync arm's median round total), and the
 //! per-arm controller-cadence routing (`--controller N` re-parameterizes
-//! the adaptive arm only). [`run_all`] composes all five parts plus the
-//! solver table into the historical combined `results/ablation.json`.
+//! the adaptive arm only) and the attack sweep's CI-enforced robustness
+//! claim. [`run_all`] composes all six parts plus the solver table into
+//! the historical combined `results/ablation.json`.
 //!
 //! Finding (recorded in EXPERIMENTS.md): eq. (29) is not a stationary
 //! point of the relaxed objective (18); the exact search improves the
@@ -26,9 +29,10 @@ use super::{reduction_pct, stamp, write_result, ExpOpts};
 use crate::config::ExperimentConfig;
 use crate::coordinator::FlSystem;
 use crate::defl_opt::{self, PlanInputs};
-use crate::harness::runner::aggregate;
+use crate::harness::runner::{aggregate, paired_delta_pct};
 use crate::harness::{run_spec, ExperimentSpec, RunnerOpts, SweepResult, TrialOutcome};
 use crate::metrics::{RunLog, Table};
+use crate::model::robust::AggKind;
 use crate::util::json::Json;
 
 /// Batch caps to study (the practical on-device memory/generalization
@@ -36,12 +40,13 @@ use crate::util::json::Json;
 pub const CAPS: [usize; 3] = [32, 64, 256];
 
 /// The bundled specs [`run_all`] composes, in print order.
-pub const PART_SPECS: [&str; 5] = [
+pub const PART_SPECS: [&str; 6] = [
     "ablation_engines",
     "ablation_codecs",
     "ablation_controller",
     "ablation_churn",
     "ablation_churn_ctl",
+    "ablation_attack",
 ];
 
 /// Run a spec restricted to one variant, with optional extra CLI-level
@@ -477,6 +482,145 @@ fn churn_ctl_part(
     Ok((table, rows, trials))
 }
 
+/// One arm of the attack sweep after seed-averaging.
+struct AttackArm {
+    name: String,
+    kind: AggKind,
+    codec: crate::codec::CodecKind,
+    codec_label: String,
+    fraction: f64,
+    /// Final train loss, mean over seeds; a diverged (non-finite) trial
+    /// counts as +∞ so divergence can never *win* a comparison.
+    final_loss: f64,
+}
+
+/// Part 6: robust aggregation under fault-injected fleets
+/// (`specs/ablation_attack.toml`) — aggregator × codec × attack
+/// fraction on one seed pair. Deliverables: the per-arm final losses,
+/// the paired per-seed attacked-vs-clean loss deltas, and the
+/// CI-enforced robustness claim — under the attacked fraction every
+/// robust aggregator must beat plain mean. Returns the table, JSON
+/// rows, the headline `attack_delta_pct` (the unprotected mean + dense
+/// arm's paired delta), and the trials.
+fn attacks_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, Option<f64>, Vec<TrialOutcome>)> {
+    let sweep = run_spec(spec, opts)?;
+    let mut arms: Vec<AttackArm> = Vec::new();
+    for variant in spec.expand_variants()? {
+        let cfg = spec.build_config(&variant)?;
+        let log = sweep.log(&variant.name)?;
+        let codec_label =
+            log.meta.get("codec").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        let losses: Vec<f64> = sweep
+            .trials
+            .iter()
+            .filter(|t| t.trial.variant == variant.name)
+            .map(|t| {
+                t.log
+                    .as_ref()
+                    .and_then(|l| l.last())
+                    .map(|r| r.train_loss)
+                    .filter(|l| l.is_finite())
+                    .unwrap_or(f64::INFINITY)
+            })
+            .collect();
+        anyhow::ensure!(!losses.is_empty(), "variant {:?} produced no trials", variant.name);
+        arms.push(AttackArm {
+            name: variant.name.clone(),
+            kind: cfg.aggregate.kind,
+            codec: cfg.codec.kind,
+            codec_label,
+            fraction: cfg.attack.fraction,
+            final_loss: losses.iter().sum::<f64>() / losses.len() as f64,
+        });
+    }
+
+    // every attacked arm is paired with its clean (fraction = 0)
+    // counterpart: same aggregator, same codec, same seeds
+    let clean_of = |arm: &AttackArm| -> Option<&AttackArm> {
+        arms.iter().find(|a| a.kind == arm.kind && a.codec == arm.codec && a.fraction == 0.0)
+    };
+
+    let mut table = Table::new(&[
+        "aggregator", "codec", "attack", "final loss", "Δ vs clean", "attacked", "clipped",
+        "trimmed",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut headline: Option<f64> = None;
+    for arm in &arms {
+        let log = sweep.log(&arm.name)?;
+        let attacked: usize = log.rounds.iter().map(|r| r.attacked).sum();
+        let clipped: usize = log.rounds.iter().map(|r| r.clipped).sum();
+        let trimmed: usize = log.rounds.iter().map(|r| r.trimmed).sum();
+        let delta = if arm.fraction > 0.0 {
+            clean_of(arm).and_then(|clean| {
+                paired_delta_pct(&sweep.trials, &arm.name, &clean.name, "final_train_loss")
+            })
+        } else {
+            None
+        };
+        if arm.fraction > 0.0
+            && arm.kind == AggKind::Mean
+            && arm.codec == crate::codec::CodecKind::Dense
+        {
+            headline = delta;
+        }
+        table.row(&[
+            arm.kind.label().into(),
+            arm.codec_label.clone(),
+            format!("{:.0}%", 100.0 * arm.fraction),
+            if arm.final_loss.is_finite() {
+                format!("{:.4}", arm.final_loss)
+            } else {
+                "divergent".into()
+            },
+            delta.map_or("-".into(), |d| format!("{d:+.1}%")),
+            attacked.to_string(),
+            clipped.to_string(),
+            trimmed.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("arm", Json::str(&arm.name)),
+            ("aggregator", Json::str(arm.kind.label())),
+            ("codec", Json::str(&arm.codec_label)),
+            ("attack_fraction", Json::Num(arm.fraction)),
+            ("rounds", Json::Num(log.rounds.len() as f64)),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("final_train_loss", Json::Num(arm.final_loss)),
+            ("best_accuracy", Json::Num(log.best_accuracy())),
+            ("attacked_updates", Json::Num(attacked as f64)),
+            ("clipped_updates", Json::Num(clipped as f64)),
+            ("trimmed_values", Json::Num(trimmed as f64)),
+            ("attack_delta_pct", delta.map_or(Json::Null, Json::Num)),
+        ]));
+    }
+
+    // the robustness claim this sweep exists to pin (CI runs this part):
+    // under attack, every robust aggregator reaches a lower final loss
+    // than the unprotected mean on the same codec, seeds and fleet.
+    for arm in &arms {
+        if arm.fraction == 0.0 || arm.kind == AggKind::Mean {
+            continue;
+        }
+        let mean = arms
+            .iter()
+            .find(|a| a.kind == AggKind::Mean && a.codec == arm.codec && a.fraction == arm.fraction)
+            .ok_or_else(|| anyhow::anyhow!("no mean arm to compare {:?} against", arm.name))?;
+        anyhow::ensure!(
+            arm.final_loss < mean.final_loss,
+            "robust aggregator {:?} did not beat mean under attack \
+             ({:.6} vs {:.6}, codec {})",
+            arm.kind.label(),
+            arm.final_loss,
+            mean.final_loss,
+            arm.codec_label,
+        );
+    }
+    Ok((table, rows, headline, sweep.trials))
+}
+
 fn part_doc(
     spec: &ExperimentSpec,
     opts: &RunnerOpts,
@@ -575,7 +719,27 @@ pub fn render_churn_ctl(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Res
     )
 }
 
-/// Run all five ablation parts plus the solver table and write the
+/// Render the robust-aggregation attack sweep (part 6) from its spec.
+pub fn render_attack(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, delta, trials) = attacks_part(spec, opts)?;
+    println!("Ablation — robust aggregation under fault-injected fleets");
+    if let Some(d) = delta {
+        println!("(20% scaled-byzantine fleet costs the unprotected mean {d:+.1}% final loss)");
+    }
+    println!("{}", table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![
+            ("figure", Json::str("ablation_attack")),
+            ("attacks", Json::Arr(rows)),
+            ("attack_delta_pct", delta.map_or(Json::Null, Json::Num)),
+        ],
+    )
+}
+
+/// Run all six ablation parts plus the solver table and write the
 /// historical combined `results/ablation.json` (the `defl exp ablation`
 /// deprecation alias).
 pub fn run_all(opts: &RunnerOpts) -> anyhow::Result<Json> {
@@ -613,6 +777,11 @@ pub fn run_all(opts: &RunnerOpts) -> anyhow::Result<Json> {
     println!("{}", churn_tbl.render());
     println!("{}", churn_ctl_tbl.render());
 
+    let attack_spec = crate::harness::specs::load("ablation_attack")?;
+    let (attack_tbl, attack_rows, attack_delta, _) = attacks_part(&attack_spec, opts)?;
+    println!("Ablation — robust aggregation under fault-injected fleets");
+    println!("{}", attack_tbl.render());
+
     let doc = Json::obj(vec![
         ("figure", Json::str("ablation")),
         ("schema_version", Json::Num(crate::harness::SCHEMA_VERSION as f64)),
@@ -638,6 +807,8 @@ pub fn run_all(opts: &RunnerOpts) -> anyhow::Result<Json> {
         ("controller_delta_pct", Json::Num(ctl_delta_pct)),
         ("churn", Json::Arr(churn_rows)),
         ("churn_delta_pct", Json::Num(churn_delta_pct)),
+        ("attacks", Json::Arr(attack_rows)),
+        ("attack_delta_pct", attack_delta.map_or(Json::Null, Json::Num)),
     ]);
     let path = write_result(&opts.exp, "ablation", &doc)?;
     println!("wrote {path}");
@@ -681,6 +852,34 @@ mod tests {
         assert_eq!(cfg.fleet.parallel_width, 1);
         let cfg = spec.build_config(&spec.variants[1]).unwrap();
         assert_eq!(cfg.controller.replan_every, 1);
+    }
+
+    #[test]
+    fn bundled_attack_spec_pins_the_robustness_grid() {
+        use crate::codec::CodecKind;
+        let spec = crate::harness::specs::load("ablation_attack").unwrap();
+        assert_eq!(spec.seeds, 2);
+        let vs = spec.expand_variants().unwrap();
+        // 4 aggregators × 2 fractions × 2 codecs
+        assert_eq!(vs.len(), 16);
+        // axes expand in sorted-key order: aggregate.kind, attack.fraction, codec.kind
+        assert_eq!(vs[0].name, "rob-mean-0-dense");
+        let mut kinds = std::collections::BTreeSet::new();
+        for v in &vs {
+            let cfg = spec.build_config(v).unwrap();
+            kinds.insert(cfg.aggregate.kind.label());
+            assert!(matches!(cfg.codec.kind, CodecKind::Dense | CodecKind::TopK));
+            assert!(cfg.attack.fraction == 0.0 || cfg.attack.fraction == 0.2);
+            assert_eq!(cfg.attack.kind, crate::coordinator::AttackKind::Scale);
+            assert_eq!(cfg.attack.scale, 25.0);
+            // trim 2 per tail at n = 8 — both attackers fall inside the cut
+            assert_eq!(cfg.aggregate.trim_ratio, 0.3);
+            assert_eq!(cfg.devices, 8);
+        }
+        assert_eq!(
+            kinds.into_iter().collect::<Vec<_>>(),
+            ["clip", "mean", "median", "trimmed_mean"]
+        );
     }
 
     #[test]

@@ -140,6 +140,7 @@ pub const FIGURES: &[&str] = &[
     "ablation_controller",
     "ablation_churn",
     "ablation_churn_ctl",
+    "ablation_attack",
 ];
 
 /// Run a spec through its figure formatter: trials via the runner, then
@@ -161,6 +162,7 @@ pub fn render_figure(
         "ablation_controller" => ablation::render_controller(spec, opts),
         "ablation_churn" => ablation::render_churn(spec, opts),
         "ablation_churn_ctl" => ablation::render_churn_ctl(spec, opts),
+        "ablation_attack" => ablation::render_attack(spec, opts),
         other => anyhow::bail!(
             "unknown figure formatter {other:?} (have: {})",
             FIGURES.join(", ")

@@ -286,7 +286,56 @@ fn log_metrics(log: &RunLog) -> BTreeMap<String, Json> {
             put(key, v);
         }
     }
+    // Robustness counters (DESIGN.md §13). Zero totals stay absent so an
+    // attack-off trial document is indistinguishable from a pre-attack one.
+    let attacked: usize = log.rounds.iter().map(|r| r.attacked).sum();
+    if attacked > 0 {
+        put("attacked_updates", attacked as f64);
+    }
+    let clipped: usize = log.rounds.iter().map(|r| r.clipped).sum();
+    if clipped > 0 {
+        put("clipped_updates", clipped as f64);
+    }
+    let trimmed: usize = log.rounds.iter().map(|r| r.trimmed).sum();
+    if trimmed > 0 {
+        put("trimmed_values", trimmed as f64);
+    }
     m
+}
+
+/// Mean paired per-seed percentage delta of `metric` between two
+/// variants: over every seed where both variants succeeded,
+/// `(a − b)/|b| · 100`, averaged. Pairing by seed cancels the shared
+/// draw noise a difference of cross-seed means would keep — which is
+/// what makes a 2-seed attack sweep readable. `None` when no seed has
+/// both sides with a finite, non-zero base value.
+pub fn paired_delta_pct(
+    outcomes: &[TrialOutcome],
+    variant_a: &str,
+    variant_b: &str,
+    metric: &str,
+) -> Option<f64> {
+    let value = |t: &TrialOutcome| -> Option<f64> {
+        t.doc.get("metrics").and_then(|m| m.get(metric)).and_then(|j| j.as_f64())
+    };
+    let mut deltas = Vec::new();
+    for a in outcomes.iter().filter(|t| t.trial.variant == variant_a && t.ok()) {
+        let b = outcomes
+            .iter()
+            .find(|t| t.trial.variant == variant_b && t.trial.seed == a.trial.seed && t.ok());
+        if let (Some(b), Some(va)) = (b, value(a)) {
+            if let Some(vb) = value(b) {
+                if va.is_finite() && vb.is_finite() && vb != 0.0 {
+                    deltas.push((va - vb) / vb.abs() * 100.0);
+                }
+            }
+        }
+    }
+    if deltas.is_empty() {
+        None
+    } else {
+        Some(deltas.iter().sum::<f64>() / deltas.len() as f64)
+    }
 }
 
 /// Per-variant mean ± 95% CI over successful trials, in expansion
@@ -460,6 +509,46 @@ mod tests {
         assert_eq!(res.trials[0].trial.variant, "b");
         opts.only = Some("nope".into());
         assert!(run_spec(&spec, &opts).is_err());
+    }
+
+    fn outcome_with(variant: &str, seed: u64, loss: Option<f64>) -> TrialOutcome {
+        let trial = TrialSpec {
+            variant: variant.into(),
+            tag: None,
+            overrides: Vec::new(),
+            seed_index: 0,
+            seed,
+        };
+        let mut metrics = BTreeMap::new();
+        if let Some(v) = loss {
+            metrics.insert("final_train_loss".to_string(), Json::Num(v));
+        }
+        let doc = trial_doc("t", &trial, "success", &metrics, None);
+        TrialOutcome { trial, name: format!("t-{variant}-s{seed}"), doc, log: None }
+    }
+
+    #[test]
+    fn paired_delta_pct_pairs_by_seed() {
+        let outcomes = vec![
+            outcome_with("mean", 5, Some(2.0)),
+            outcome_with("mean", 6, Some(4.0)),
+            outcome_with("median", 5, Some(1.0)),
+            outcome_with("median", 6, Some(1.0)),
+        ];
+        // per-seed deltas: (1−2)/2 = −50%, (1−4)/4 = −75% → mean −62.5%
+        let d = paired_delta_pct(&outcomes, "median", "mean", "final_train_loss").unwrap();
+        assert!((d + 62.5).abs() < 1e-12, "{d}");
+        // unknown metric / missing counterpart variant → None
+        assert!(paired_delta_pct(&outcomes, "median", "mean", "nope").is_none());
+        assert!(paired_delta_pct(&outcomes, "median", "zzz", "final_train_loss").is_none());
+        // a seed with only one side is skipped, not fatal
+        let partial = vec![
+            outcome_with("a", 1, Some(3.0)),
+            outcome_with("a", 2, Some(9.0)),
+            outcome_with("b", 2, Some(3.0)),
+        ];
+        let d = paired_delta_pct(&partial, "a", "b", "final_train_loss").unwrap();
+        assert!((d - 200.0).abs() < 1e-12, "{d}");
     }
 
     #[test]

@@ -66,6 +66,15 @@ pub struct RoundRecord {
     pub joins: usize,
     /// Devices drawn to die mid-round (they train, their uplink is lost).
     pub drops: usize,
+    /// Fault-injected (attacker) updates folded this round (DESIGN.md §13).
+    /// 0 with the attack injector off.
+    pub attacked: usize,
+    /// Updates norm-clipped by the `clip` robust aggregator this round.
+    pub clipped: usize,
+    /// Per-coordinate values discarded by the buffered robust estimators
+    /// (trimmed mean / median) this round, counted per update: `2t` for
+    /// `trimmed_mean`, `n−1`/`n−2` for `median`.
+    pub trimmed: usize,
 }
 
 /// A named experiment run: config echo + round records.
@@ -159,6 +168,9 @@ impl RunLog {
                     ("fleet_size", Json::Num(r.fleet_size as f64)),
                     ("joins", Json::Num(r.joins as f64)),
                     ("drops", Json::Num(r.drops as f64)),
+                    ("attacked", Json::Num(r.attacked as f64)),
+                    ("clipped", Json::Num(r.clipped as f64)),
+                    ("trimmed", Json::Num(r.trimmed as f64)),
                 ])
             })
             .collect();
@@ -180,11 +192,11 @@ impl RunLog {
     /// The round records as CSV (one named column per record field).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm,phase,fleet_size,joins,drops\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm,phase,fleet_size,joins,drops,attacked,clipped,trimmed\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -205,7 +217,10 @@ impl RunLog {
                 r.phase,
                 r.fleet_size,
                 r.joins,
-                r.drops
+                r.drops,
+                r.attacked,
+                r.clipped,
+                r.trimmed
             ));
         }
         s
@@ -310,6 +325,9 @@ mod tests {
             fleet_size: 5,
             joins: 0,
             drops: 0,
+            attacked: 0,
+            clipped: 0,
+            trimmed: 0,
         }
     }
 
@@ -477,6 +495,45 @@ mod tests {
         assert_eq!(cells[idx("fleet_size")], "7");
         assert_eq!(cells[idx("joins")], "3");
         assert_eq!(cells[idx("drops")], "1");
+    }
+
+    /// The per-round robustness columns (DESIGN.md §13) survive both
+    /// export paths — attacked/clipped/trimmed counts land in JSON and
+    /// CSV, and stay 0 on honest rounds.
+    #[test]
+    fn robustness_columns_roundtrip_json_and_csv() {
+        let mut log = RunLog::new("attack");
+        let mut a = rec(1, 1.0, 2.0, 0.5);
+        a.attacked = 2;
+        a.clipped = 1;
+        a.trimmed = 4;
+        log.push(a);
+        log.push(rec(2, 2.0, 1.5, 0.6)); // honest round: all-zero counts
+
+        let parsed = Json::parse(&log.to_json().to_pretty()).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        let r0 = rounds.idx(0).unwrap();
+        assert_eq!(r0.get("attacked").unwrap().as_f64(), Some(2.0));
+        assert_eq!(r0.get("clipped").unwrap().as_f64(), Some(1.0));
+        assert_eq!(r0.get("trimmed").unwrap().as_f64(), Some(4.0));
+        let r1 = rounds.idx(1).unwrap();
+        assert_eq!(r1.get("attacked").unwrap().as_f64(), Some(0.0));
+
+        let csv = log.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        for col in ["attacked", "clipped", "trimmed"] {
+            assert!(header.split(',').any(|h| h == col), "missing column {col}");
+        }
+        let width = header.split(',').count();
+        for (i, row) in lines.enumerate() {
+            assert_eq!(row.split(',').count(), width, "row {i} width");
+        }
+        let cells: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        let idx = |name: &str| header.split(',').position(|h| h == name).unwrap();
+        assert_eq!(cells[idx("attacked")], "2");
+        assert_eq!(cells[idx("clipped")], "1");
+        assert_eq!(cells[idx("trimmed")], "4");
     }
 
     #[test]

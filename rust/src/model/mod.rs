@@ -7,6 +7,8 @@
 
 use crate::util::json::Json;
 
+pub mod robust;
+
 /// Static description of one parameter leaf.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LeafSpec {
@@ -207,6 +209,29 @@ impl ParamSet {
             leaf.iter_mut().for_each(|x| *x = v);
         }
     }
+
+    /// L2 norm over all parameters (f64 accumulation) — what the norm-
+    /// clipping aggregator thresholds.
+    pub fn l2_norm(&self) -> f64 {
+        self.leaves
+            .iter()
+            .map(|l| l.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// FedProx proximal pull: `self -= step · (self − anchor)`, i.e. one
+    /// explicit gradient step of `(μ/2)·‖w − w_global‖²` with
+    /// `step = lr·μ`. A no-op when `step = 0`.
+    pub fn prox_step(&mut self, anchor: &ParamSet, step: f32) {
+        debug_assert_eq!(self.leaves.len(), anchor.leaves.len());
+        for (dst, src) in self.leaves.iter_mut().zip(&anchor.leaves) {
+            debug_assert_eq!(dst.len(), src.len());
+            for (d, &s) in dst.iter_mut().zip(src) {
+                *d -= step * (*d - s);
+            }
+        }
+    }
 }
 
 /// FedAvg: `Σ_m (D_m/D)·w_m` (eq. 2's weighting). `weights` are the
@@ -404,6 +429,21 @@ mod tests {
         a.leaves[0][2] = 7.5;
         let avg = federated_average(&[&a], &[10.0]);
         assert_eq!(avg.leaves, a.leaves);
+    }
+
+    #[test]
+    fn l2_norm_and_prox_step() {
+        let p = ParamSet { leaves: vec![vec![3.0, 0.0], vec![4.0]] };
+        assert!((p.l2_norm() - 5.0).abs() < 1e-9);
+        // prox pulls toward the anchor; step = 1 lands exactly on it
+        let anchor = ParamSet { leaves: vec![vec![1.0, 1.0], vec![1.0]] };
+        let mut q = p.clone();
+        q.prox_step(&anchor, 0.0);
+        assert_eq!(q.leaves, p.leaves, "step 0 is a no-op");
+        q.prox_step(&anchor, 0.5);
+        assert_eq!(q.leaves, vec![vec![2.0, 0.5], vec![2.5]]);
+        q.prox_step(&anchor, 1.0);
+        assert_eq!(q.leaves, anchor.leaves);
     }
 
     #[test]

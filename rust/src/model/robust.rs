@@ -1,0 +1,562 @@
+//! Pluggable byzantine-robust aggregation over the streaming fold
+//! contract (DESIGN.md §13).
+//!
+//! PR 3's [`FedAccumulator`] made aggregation a weighted mean — one
+//! scaled or sign-flipped update can move the global model arbitrarily
+//! far. [`RobustAggregator`] is the strategy seam the round engines fold
+//! through instead, selected by `[aggregate] kind`:
+//!
+//! * [`AggKind::Mean`] — the PR 4 fused fold, **bit-identical** to the
+//!   pre-robust engines (same `begin → fold/decode_fold × K →
+//!   apply_delta_to` sequence in the same order; property-pinned by
+//!   `rust/tests/robust_agg.rs`).
+//! * [`AggKind::Clip`] — **streaming** norm clipping: each update `Δᵢ`
+//!   folds with effective weight `wᵢ·min(1, τ/‖Δᵢ‖)`, which is exactly
+//!   the weighted mean of the norm-clipped updates. `clip_tau = 0`
+//!   (default) self-tunes τ to the round's lower-median update norm.
+//!   Memory: one dense scratch [`ParamSet`] (`O(P)`), reused across
+//!   rounds; unclipped lossy updates keep the fused sparse fold.
+//! * [`AggKind::TrimmedMean`] / [`AggKind::Median`] — **buffered**
+//!   coordinate-wise estimators: the round's `K` updates are decoded
+//!   into a bounded per-round buffer (`K` dense [`ParamSet`]s — the
+//!   documented `O(K·P)` memory bound, reused across rounds), then each
+//!   coordinate is combined by sorting its `K` values. Both are
+//!   **unweighted** across the included updates: byzantine-robust
+//!   statistics assume equal per-client trust — weighting by the
+//!   self-reported `D_m` would let an attacker buy influence by claiming
+//!   data.
+//!
+//! Every `combine` reports [`FoldStats`] (how many folded updates came
+//! from attacked devices, how many were clipped, how many value slots
+//! the trim dropped per coordinate) — the per-round
+//! `attacked`/`clipped`/`trimmed` metrics columns.
+
+use crate::codec::{EncodedDelta, UpdateCodec};
+use crate::model::{FedAccumulator, ParamSet};
+
+/// Which aggregator combines the round's updates (`[aggregate] kind`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKind {
+    /// Plain weighted mean — the PR 4 fused fold, bit-identical.
+    Mean,
+    /// Streaming norm clipping (`clip_tau`; 0 = adaptive median norm).
+    Clip,
+    /// Buffered coordinate-wise trimmed mean (`trim_ratio` per side).
+    TrimmedMean,
+    /// Buffered coordinate-wise median.
+    Median,
+}
+
+impl AggKind {
+    /// Parse an `aggregate.kind` string (`mean|clip|trimmed_mean|median`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "mean" | "fedavg" => Ok(AggKind::Mean),
+            "clip" | "norm_clip" => Ok(AggKind::Clip),
+            "trimmed_mean" | "trimmed" => Ok(AggKind::TrimmedMean),
+            "median" | "coordinate_median" => Ok(AggKind::Median),
+            other => anyhow::bail!("unknown aggregator {other:?} (mean|clip|trimmed_mean|median)"),
+        }
+    }
+
+    /// Canonical config-string name (run metadata, tables).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AggKind::Mean => "mean",
+            AggKind::Clip => "clip",
+            AggKind::TrimmedMean => "trimmed_mean",
+            AggKind::Median => "median",
+        }
+    }
+}
+
+/// `[aggregate]` configuration section. `kind = mean` (default) keeps
+/// the pre-robust fold byte-identical.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AggregateConfig {
+    /// Which aggregator combines updates.
+    pub kind: AggKind,
+    /// Clip threshold τ on the update L2 norm (`kind = clip`); 0 means
+    /// adaptive — τ is each round's lower-median update norm.
+    pub clip_tau: f64,
+    /// Fraction of updates trimmed from *each* tail per coordinate
+    /// (`kind = trimmed_mean`); clamped so at least one value survives.
+    pub trim_ratio: f64,
+}
+
+impl Default for AggregateConfig {
+    fn default() -> Self {
+        AggregateConfig { kind: AggKind::Mean, clip_tau: 0.0, trim_ratio: 0.2 }
+    }
+}
+
+impl AggregateConfig {
+    /// Range-check the `[aggregate]` knobs.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.clip_tau.is_finite() && self.clip_tau >= 0.0,
+            "aggregate.clip_tau must be finite and ≥ 0 (got {}; 0 = adaptive median norm)",
+            self.clip_tau
+        );
+        anyhow::ensure!(
+            (0.0..0.5).contains(&self.trim_ratio),
+            "aggregate.trim_ratio must be in [0, 0.5) (got {}): trimming half or more \
+             from each tail leaves nothing to average",
+            self.trim_ratio
+        );
+        Ok(())
+    }
+
+    /// Build the configured aggregator (validates first).
+    pub fn build(&self) -> anyhow::Result<Box<dyn RobustAggregator>> {
+        self.validate()?;
+        Ok(match self.kind {
+            AggKind::Mean => Box::new(MeanAggregator),
+            AggKind::Clip => Box::new(ClipAggregator::new(self.clip_tau)),
+            AggKind::TrimmedMean => {
+                Box::new(BufferedAggregator::new(BufferedMode::TrimmedMean(self.trim_ratio)))
+            }
+            AggKind::Median => Box::new(BufferedAggregator::new(BufferedMode::Median)),
+        })
+    }
+}
+
+/// One delivered update as the engines hand it to the aggregator:
+/// exactly one of `dense` (lossless codecs fold the delta buffer
+/// directly) or `encoded` (lossy codecs fold the wire payload) is set.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundUpdate<'a> {
+    /// Aggregation weight (the engine's `D_m`, staleness-discounted for
+    /// the async engine).
+    pub weight: f64,
+    /// The raw update delta (lossless codecs).
+    pub dense: Option<&'a ParamSet>,
+    /// The codec wire payload (lossy codecs).
+    pub encoded: Option<&'a EncodedDelta>,
+    /// Whether the producing device is marked hostile (`[attack]`) —
+    /// aggregators must NOT use this to cheat (they defend blind); it
+    /// only feeds the `attacked` metrics column.
+    pub attacked: bool,
+}
+
+/// What one [`RobustAggregator::combine`] did — the per-round
+/// `attacked`/`clipped`/`trimmed` metrics columns.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FoldStats {
+    /// Folded updates that came from attacked devices.
+    pub attacked: usize,
+    /// Updates whose norm exceeded τ and were clipped (`kind = clip`).
+    pub clipped: usize,
+    /// Value slots excluded per coordinate by the buffered estimators
+    /// (`2t` for the trimmed mean; `n−1`/`n−2` for the odd/even median).
+    pub trimmed: usize,
+}
+
+/// The aggregation strategy seam. `combine` is called once per
+/// aggregation with the round's delivered updates (never empty —
+/// engines short-circuit empty rounds before aggregating), folds them
+/// through `agg` (or its own buffers), and applies the combined delta
+/// to `global`.
+pub trait RobustAggregator: Send {
+    /// Which `[aggregate] kind` this is (metadata).
+    fn kind(&self) -> AggKind;
+
+    /// Combine the round's updates into `global`. `total_w` is the sum
+    /// of `updates[..].weight` (the engines already computed it for
+    /// eq. 2's normalisation).
+    fn combine(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        agg: &mut FedAccumulator,
+        updates: &[RoundUpdate<'_>],
+        total_w: f64,
+        global: &mut ParamSet,
+    ) -> FoldStats;
+}
+
+fn attacked_count(updates: &[RoundUpdate<'_>]) -> usize {
+    updates.iter().filter(|u| u.attacked).count()
+}
+
+/// Fold one update into the accumulator exactly as the pre-robust
+/// engines did: the fused decode for a lossy payload, the direct delta
+/// fold otherwise.
+fn fold_one(codec: &dyn UpdateCodec, agg: &mut FedAccumulator, weight: f64, u: &RoundUpdate<'_>) {
+    match (u.encoded, u.dense) {
+        (Some(enc), _) => codec.decode_fold_into(agg, weight, enc),
+        (None, Some(d)) => agg.fold(weight, d),
+        (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+    }
+}
+
+/// Exact decode of one lossy payload into a dense scratch buffer
+/// (`acc.begin(1.0)` makes the fold coefficient exactly 1).
+fn decode_exact(
+    codec: &dyn UpdateCodec,
+    enc: &EncodedDelta,
+    acc: &mut FedAccumulator,
+    out: &mut ParamSet,
+) {
+    acc.begin(1.0);
+    codec.decode_fold_into(acc, 1.0, enc);
+    acc.write_average_into(out);
+}
+
+/// `[aggregate] kind = mean`: the PR 4 fused fold, bit-identical to the
+/// pre-robust engines (same sequence, same order, same weights).
+pub struct MeanAggregator;
+
+impl RobustAggregator for MeanAggregator {
+    fn kind(&self) -> AggKind {
+        AggKind::Mean
+    }
+
+    fn combine(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        agg: &mut FedAccumulator,
+        updates: &[RoundUpdate<'_>],
+        total_w: f64,
+        global: &mut ParamSet,
+    ) -> FoldStats {
+        agg.begin(total_w);
+        for u in updates {
+            fold_one(codec, agg, u.weight, u);
+        }
+        agg.apply_delta_to(global);
+        FoldStats { attacked: attacked_count(updates), ..FoldStats::default() }
+    }
+}
+
+/// `[aggregate] kind = clip`: streaming norm clipping. Each update
+/// folds with effective weight `wᵢ·min(1, τ/‖Δᵢ‖)` against the
+/// *original* total, which equals the weighted mean of the clipped
+/// updates. With every norm ≤ τ this is bit-identical to the mean fold
+/// (the coefficient multiplier is exactly 1 and lossy payloads keep the
+/// fused sparse path).
+pub struct ClipAggregator {
+    tau: f64,
+    norms: Vec<f64>,
+    scratch: Option<(FedAccumulator, ParamSet)>,
+}
+
+impl ClipAggregator {
+    /// Clip at `tau` (0 = adaptive: each round's lower-median norm).
+    pub fn new(tau: f64) -> Self {
+        ClipAggregator { tau, norms: Vec::new(), scratch: None }
+    }
+
+    fn scratch_for(&mut self, shape: &ParamSet) -> &mut (FedAccumulator, ParamSet) {
+        if self.scratch.is_none() {
+            self.scratch =
+                Some((FedAccumulator::zeros_like(shape), ParamSet::zeros_matching(shape)));
+        }
+        self.scratch.as_mut().expect("just ensured")
+    }
+}
+
+impl RobustAggregator for ClipAggregator {
+    fn kind(&self) -> AggKind {
+        AggKind::Clip
+    }
+
+    fn combine(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        agg: &mut FedAccumulator,
+        updates: &[RoundUpdate<'_>],
+        total_w: f64,
+        global: &mut ParamSet,
+    ) -> FoldStats {
+        // Pass 1: every update's L2 norm (lossy payloads decode into the
+        // reusable scratch — the streaming mode's only dense buffer).
+        self.norms.clear();
+        for u in updates {
+            let norm = match (u.encoded, u.dense) {
+                (Some(enc), _) => {
+                    let (acc, buf) = self.scratch_for(global);
+                    decode_exact(codec, enc, acc, buf);
+                    buf.l2_norm()
+                }
+                (None, Some(d)) => d.l2_norm(),
+                (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+            };
+            self.norms.push(norm);
+        }
+        let tau = if self.tau > 0.0 {
+            self.tau
+        } else {
+            // adaptive: the round's lower-median norm — scaled/boosted
+            // updates sit above it whenever attackers are a minority
+            let mut sorted = self.norms.clone();
+            sorted.sort_unstable_by(f64::total_cmp);
+            sorted[(sorted.len() - 1) / 2]
+        };
+        // Pass 2: the weighted fold with clipped effective weights.
+        let mut clipped = 0usize;
+        agg.begin(total_w);
+        for (u, &norm) in updates.iter().zip(&self.norms) {
+            let c = if norm > tau && norm > 0.0 {
+                clipped += 1;
+                tau / norm
+            } else {
+                1.0
+            };
+            match (u.encoded, u.dense) {
+                (Some(enc), _) if c == 1.0 => codec.decode_fold_into(agg, u.weight, enc),
+                (Some(enc), _) => {
+                    {
+                        let (acc, buf) = self.scratch_for(global);
+                        decode_exact(codec, enc, acc, buf);
+                    }
+                    let (_, buf) = self.scratch.as_ref().expect("scratch initialised above");
+                    agg.fold(u.weight * c, buf);
+                }
+                (None, Some(d)) => agg.fold(u.weight * c, d),
+                (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+            }
+        }
+        agg.apply_delta_to(global);
+        FoldStats { attacked: attacked_count(updates), clipped, trimmed: 0 }
+    }
+}
+
+/// Which buffered estimator combines each coordinate.
+#[derive(Clone, Copy, Debug)]
+enum BufferedMode {
+    /// Trim `⌊ratio·n⌋` values from each tail, average the rest.
+    TrimmedMean(f64),
+    /// The coordinate-wise median (mean of the two middles for even n).
+    Median,
+}
+
+/// `[aggregate] kind = trimmed_mean | median`: decode the round's `K`
+/// updates into a bounded buffer (`K` dense [`ParamSet`]s, reused across
+/// rounds — the documented `O(K·P)` memory bound), then combine each
+/// coordinate by sorting its `K` values. Unweighted across updates (see
+/// the module docs for why).
+pub struct BufferedAggregator {
+    mode: BufferedMode,
+    buf: Vec<ParamSet>,
+    decode_acc: Option<FedAccumulator>,
+    vals: Vec<f32>,
+}
+
+impl BufferedAggregator {
+    fn new(mode: BufferedMode) -> Self {
+        BufferedAggregator { mode, buf: Vec::new(), decode_acc: None, vals: Vec::new() }
+    }
+}
+
+impl RobustAggregator for BufferedAggregator {
+    fn kind(&self) -> AggKind {
+        match self.mode {
+            BufferedMode::TrimmedMean(_) => AggKind::TrimmedMean,
+            BufferedMode::Median => AggKind::Median,
+        }
+    }
+
+    fn combine(
+        &mut self,
+        codec: &dyn UpdateCodec,
+        _agg: &mut FedAccumulator,
+        updates: &[RoundUpdate<'_>],
+        _total_w: f64,
+        global: &mut ParamSet,
+    ) -> FoldStats {
+        let n = updates.len();
+        debug_assert!(n >= 1, "engines never aggregate an empty round");
+        // Materialise every update dense (the buffered mode's memory
+        // bound: n ParamSets, grown once and reused every round).
+        while self.buf.len() < n {
+            self.buf.push(ParamSet::zeros_matching(global));
+        }
+        for (u, slot) in updates.iter().zip(self.buf.iter_mut()) {
+            match (u.encoded, u.dense) {
+                (Some(enc), _) => {
+                    let acc = self
+                        .decode_acc
+                        .get_or_insert_with(|| FedAccumulator::zeros_like(global));
+                    decode_exact(codec, enc, acc, slot);
+                }
+                (None, Some(d)) => slot.copy_from(d),
+                (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+            }
+        }
+        // t values trimmed per tail (trimmed mean); the median drops all
+        // but the middle one (odd n) or two (even n).
+        let (t, trimmed) = match self.mode {
+            BufferedMode::TrimmedMean(ratio) => {
+                let t = ((ratio * n as f64).floor() as usize).min((n - 1) / 2);
+                (t, 2 * t)
+            }
+            BufferedMode::Median => (0, if n % 2 == 1 { n - 1 } else { n.saturating_sub(2) }),
+        };
+        // Coordinate-wise combine, added straight onto the global.
+        let vals = &mut self.vals;
+        vals.resize(n, 0.0);
+        for (li, leaf) in global.leaves.iter_mut().enumerate() {
+            for (ei, g) in leaf.iter_mut().enumerate() {
+                for (vi, set) in self.buf[..n].iter().enumerate() {
+                    vals[vi] = set.leaves[li][ei];
+                }
+                vals.sort_unstable_by(f32::total_cmp);
+                let combined = match self.mode {
+                    BufferedMode::TrimmedMean(_) => {
+                        let kept = &vals[t..n - t];
+                        kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64
+                    }
+                    BufferedMode::Median => {
+                        if n % 2 == 1 {
+                            vals[n / 2] as f64
+                        } else {
+                            (vals[n / 2 - 1] as f64 + vals[n / 2] as f64) / 2.0
+                        }
+                    }
+                };
+                *g += combined as f32;
+            }
+        }
+        FoldStats { attacked: attacked_count(updates), clipped: 0, trimmed }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::Dense32;
+    use crate::model::federated_average;
+
+    fn set(vals: &[f32]) -> ParamSet {
+        ParamSet { leaves: vec![vals.to_vec()] }
+    }
+
+    fn dense_updates<'a>(sets: &'a [ParamSet], ws: &[f64]) -> Vec<RoundUpdate<'a>> {
+        sets.iter()
+            .zip(ws)
+            .map(|(s, &w)| RoundUpdate { weight: w, dense: Some(s), encoded: None, attacked: false })
+            .collect()
+    }
+
+    #[test]
+    fn config_parses_validates_and_builds() {
+        for s in ["mean", "clip", "trimmed_mean", "median"] {
+            assert_eq!(AggKind::parse(s).unwrap().label(), s);
+        }
+        assert!(AggKind::parse("krum").is_err());
+        let c = AggregateConfig::default();
+        assert_eq!(c.kind, AggKind::Mean);
+        assert!(c.validate().is_ok());
+        assert_eq!(c.build().unwrap().kind(), AggKind::Mean);
+        let mut c = AggregateConfig::default();
+        c.trim_ratio = 0.5;
+        assert!(c.validate().is_err());
+        let mut c = AggregateConfig::default();
+        c.clip_tau = f64::NAN;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn mean_combine_is_federated_average_of_deltas() {
+        let sets = vec![set(&[1.0, -2.0, 0.5]), set(&[3.0, 0.0, -1.0])];
+        let ws = [3.0, 1.0];
+        let updates = dense_updates(&sets, &ws);
+        let mut global = set(&[0.0, 0.0, 0.0]);
+        let mut agg = FedAccumulator::zeros_like(&global);
+        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 4.0, &mut global);
+        let refs: Vec<&ParamSet> = sets.iter().collect();
+        let reference = federated_average(&refs, &ws);
+        assert_eq!(global.leaves, reference.leaves, "zero global + mean delta = fedavg");
+        assert_eq!(stats, FoldStats::default());
+    }
+
+    #[test]
+    fn clip_with_huge_tau_matches_mean_bitwise() {
+        let sets = vec![set(&[1.0, -2.0]), set(&[0.25, 4.0]), set(&[-3.0, 0.5])];
+        let ws = [2.0, 5.0, 1.0];
+        let updates = dense_updates(&sets, &ws);
+        let mut g_mean = set(&[0.1, -0.2]);
+        let mut g_clip = g_mean.clone();
+        let mut agg = FedAccumulator::zeros_like(&g_mean);
+        MeanAggregator.combine(&Dense32, &mut agg, &updates, 8.0, &mut g_mean);
+        let mut clip = ClipAggregator::new(1e12);
+        let stats = clip.combine(&Dense32, &mut agg, &updates, 8.0, &mut g_clip);
+        assert_eq!(g_mean.leaves, g_clip.leaves, "no clipping ⇒ identical fold");
+        assert_eq!(stats.clipped, 0);
+    }
+
+    #[test]
+    fn clip_bounds_a_scaled_outlier() {
+        // two honest unit-norm updates + one 100× outlier, equal weights
+        let sets = vec![set(&[1.0, 0.0]), set(&[0.0, 1.0]), set(&[100.0, 0.0])];
+        let ws = [1.0, 1.0, 1.0];
+        let updates = dense_updates(&sets, &ws);
+        let mut g = set(&[0.0, 0.0]);
+        let mut agg = FedAccumulator::zeros_like(&g);
+        // adaptive τ = lower-median norm = 1.0 ⇒ the outlier folds at
+        // norm 1 instead of 100
+        let mut clip = ClipAggregator::new(0.0);
+        let stats = clip.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        assert_eq!(stats.clipped, 1);
+        assert!(g.leaves[0][0] <= 1.0, "outlier contribution bounded: {}", g.leaves[0][0]);
+        // unclipped mean would have landed near 100/3
+        assert!((g.leaves[0][0] - 2.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn median_ignores_a_minority_outlier() {
+        let sets = vec![set(&[1.0]), set(&[1.1]), set(&[1000.0])];
+        let updates = dense_updates(&sets, &[1.0, 1.0, 1.0]);
+        let mut g = set(&[0.0]);
+        let mut agg = FedAccumulator::zeros_like(&g);
+        let mut med = BufferedAggregator::new(BufferedMode::Median);
+        let stats = med.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        assert_eq!(g.leaves[0][0], 1.1, "median picks the middle value");
+        assert_eq!(stats.trimmed, 2);
+        // even n averages the two middles
+        let sets4 = vec![set(&[1.0]), set(&[3.0]), set(&[2.0]), set(&[1000.0])];
+        let updates4 = dense_updates(&sets4, &[1.0; 4]);
+        let mut g4 = set(&[0.0]);
+        let stats4 = med.combine(&Dense32, &mut agg, &updates4, 4.0, &mut g4);
+        assert_eq!(g4.leaves[0][0], 2.5);
+        assert_eq!(stats4.trimmed, 2);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_both_tails() {
+        let sets =
+            vec![set(&[-1000.0]), set(&[1.0]), set(&[2.0]), set(&[3.0]), set(&[1000.0])];
+        let updates = dense_updates(&sets, &[1.0; 5]);
+        let mut g = set(&[0.0]);
+        let mut agg = FedAccumulator::zeros_like(&g);
+        let mut tm = BufferedAggregator::new(BufferedMode::TrimmedMean(0.2));
+        let stats = tm.combine(&Dense32, &mut agg, &updates, 5.0, &mut g);
+        assert_eq!(stats.trimmed, 2, "⌊0.2·5⌋ = 1 from each tail");
+        assert!((g.leaves[0][0] - 2.0).abs() < 1e-6, "mean of {{1,2,3}}: {}", g.leaves[0][0]);
+    }
+
+    #[test]
+    fn trim_ratio_clamps_to_leave_one_value() {
+        // n = 2 with ratio 0.49 ⇒ t = 0 (⌊0.98⌋ = 0); n = 3 with the
+        // same ratio ⇒ ⌊1.47⌋ = 1 = (n−1)/2, exactly one survivor
+        let sets = vec![set(&[1.0]), set(&[5.0]), set(&[9.0])];
+        let updates = dense_updates(&sets, &[1.0; 3]);
+        let mut g = set(&[0.0]);
+        let mut agg = FedAccumulator::zeros_like(&g);
+        let mut tm = BufferedAggregator::new(BufferedMode::TrimmedMean(0.49));
+        tm.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        assert_eq!(g.leaves[0][0], 5.0, "middle survivor");
+    }
+
+    #[test]
+    fn attacked_flag_is_counted_not_used() {
+        let sets = vec![set(&[1.0]), set(&[2.0])];
+        let mut updates = dense_updates(&sets, &[1.0, 1.0]);
+        updates[1].attacked = true;
+        let mut g = set(&[0.0]);
+        let mut agg = FedAccumulator::zeros_like(&g);
+        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 2.0, &mut g);
+        assert_eq!(stats.attacked, 1);
+        assert!((g.leaves[0][0] - 1.5).abs() < 1e-6, "the flag must not bias the fold");
+    }
+}

@@ -1,0 +1,379 @@
+//! The adversarial-fleet pack end to end (DESIGN.md §13), over the
+//! native backend so it runs on every commit.
+//!
+//! Pins the robustness subsystem from the outside: the acceptance
+//! byte-identity (`attack.fraction = 0` + `aggregate.kind = mean` +
+//! `baseline.prox_mu = 0`, default and explicit, reproduce the honest
+//! coordinator bit for bit — no meta keys, no RNG perturbation, no
+//! metrics drift), bitwise property tests of every aggregator against
+//! straight-line reference implementations, and the e2e deliverable:
+//! under a 20% scaled-byzantine fleet every robust aggregator keeps all
+//! three engines learning while the unprotected mean does strictly
+//! worse.
+#![cfg(feature = "native")]
+
+use defl::codec::Dense32;
+use defl::config::{DatasetKind, ExperimentConfig, Policy};
+use defl::coordinator::{AttackKind, EngineKind, FlSystem};
+use defl::model::robust::{AggKind, AggregateConfig, FoldStats, RoundUpdate};
+use defl::model::{federated_average, FedAccumulator, ParamSet};
+use defl::runtime::BackendKind;
+use defl::util::prop;
+
+/// Small fast native config (the `churn.rs` / `native_backend.rs` shape).
+fn base_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.dataset = DatasetKind::Tiny;
+    cfg.devices = 8;
+    cfg.train_per_device = 48;
+    cfg.test_size = 128;
+    cfg.max_rounds = 8;
+    cfg.eval_every = 4;
+    cfg.lr = 0.05;
+    cfg.policy = Policy::Fixed { batch: 8, local_rounds: 2 };
+    cfg.seed = 7;
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent-on-purpose".into();
+    cfg
+}
+
+/// The acceptance pin of the whole pack: with the attack injector off,
+/// the mean aggregator and a zero proximal term — spelled by default
+/// *and* spelled explicitly — the coordinator reproduces the
+/// pre-adversarial metrics JSON byte for byte. No attack RNG is drawn,
+/// no meta key leaks, and the new robustness columns sit at zero.
+#[test]
+fn inert_knobs_reproduce_the_honest_coordinator_byte_for_byte() {
+    let run = |explicit: bool| {
+        let mut cfg = base_cfg("rob-off");
+        if explicit {
+            // Inert values for every new knob, including the ones that
+            // only matter when the attack is on — none may perturb the
+            // run while `fraction = 0` keeps the fleet honest.
+            cfg.set_override("attack.fraction=0").unwrap();
+            cfg.set_override("attack.kind=scale").unwrap();
+            cfg.set_override("attack.scale=25").unwrap();
+            cfg.set_override("attack.noise_std=0.5").unwrap();
+            cfg.set_override("attack.stale_rounds=3").unwrap();
+            cfg.set_override("aggregate.kind=mean").unwrap();
+            cfg.set_override("aggregate.clip_tau=2.5").unwrap();
+            cfg.set_override("aggregate.trim_ratio=0.3").unwrap();
+            cfg.set_override("baseline.prox_mu=0").unwrap();
+        }
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        // wall_seconds is measured wall-clock and legitimately differs
+        // between executions; everything modeled must not
+        for r in &mut sys.log.rounds {
+            r.wall_seconds = 0.0;
+        }
+        sys
+    };
+    let a = run(false);
+    let b = run(true);
+    assert_eq!(a.log.meta, b.log.meta, "metadata must be identical");
+    assert_eq!(a.log.to_json().to_pretty(), b.log.to_json().to_pretty());
+    assert_eq!(a.log.to_csv(), b.log.to_csv(), "CSV view agrees");
+    for (ra, rb) in a.log.rounds.iter().zip(&b.log.rounds) {
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits(), "round {}", ra.round);
+        assert_eq!(ra.virtual_time.to_bits(), rb.virtual_time.to_bits());
+        assert_eq!(ra.t_cm.to_bits(), rb.t_cm.to_bits());
+        assert_eq!(ra.t_cp.to_bits(), rb.t_cp.to_bits());
+    }
+    // absence of keys pins the no-op refactor (the churn/controller
+    // convention): an attack-off document is indistinguishable from a
+    // pre-attack one
+    for key in ["attack_kind", "attack_fraction", "attack_devices", "aggregator", "prox_mu"] {
+        assert!(!a.log.meta.contains_key(key), "meta key {key:?} must be absent");
+    }
+    for r in &a.log.rounds {
+        assert_eq!((r.attacked, r.clipped, r.trimmed), (0, 0, 0), "round {}", r.round);
+    }
+}
+
+fn dense_updates<'a>(sets: &'a [ParamSet], ws: &[f64]) -> Vec<RoundUpdate<'a>> {
+    sets.iter()
+        .zip(ws)
+        .map(|(s, &w)| RoundUpdate { weight: w, dense: Some(s), encoded: None, attacked: false })
+        .collect()
+}
+
+fn random_sets(g: &mut prop::Gen, n: usize, leaves: &[usize]) -> Vec<ParamSet> {
+    (0..n)
+        .map(|_| ParamSet {
+            leaves: leaves
+                .iter()
+                .map(|&l| (0..l).map(|_| g.f64_in(-2.0, 2.0) as f32).collect())
+                .collect(),
+        })
+        .collect()
+}
+
+/// `kind = mean` IS `federated_average`, bit for bit, for any shape,
+/// count and weighting — the property behind the engines keeping the
+/// PR 4 fused fold under the trait seam.
+#[test]
+fn prop_mean_aggregator_is_federated_average_bitwise() {
+    prop::check(0xA77AC1, 50, |g| {
+        let n = g.usize_in(1, 7);
+        let leaves = [g.usize_in(1, 6), g.usize_in(1, 4)];
+        let sets = random_sets(g, n, &leaves);
+        let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 600.0)).collect();
+        let total: f64 = ws.iter().sum();
+        let updates = dense_updates(&sets, &ws);
+        let mut global = ParamSet::zeros_matching(&sets[0]);
+        let mut agg = FedAccumulator::zeros_like(&sets[0]);
+        let mut mean = AggregateConfig::default().build().unwrap();
+        let stats = mean.combine(&Dense32, &mut agg, &updates, total, &mut global);
+        if stats != FoldStats::default() {
+            return Err(format!("honest mean fold reported {stats:?}"));
+        }
+        let refs: Vec<&ParamSet> = sets.iter().collect();
+        let reference = federated_average(&refs, &ws);
+        for (a, b) in
+            global.leaves.iter().flatten().zip(reference.leaves.iter().flatten())
+        {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("mean fold {a} != federated_average {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `kind = clip` IS the weighted mean with each update's fold
+/// coefficient scaled by `min(1, τ/‖Δ‖)`, bit for bit against a
+/// straight-line reference of the same arithmetic.
+#[test]
+fn prop_clip_matches_the_scaled_coefficient_reference() {
+    prop::check(0xA77AC2, 50, |g| {
+        let n = g.usize_in(1, 7);
+        let p = g.usize_in(1, 10);
+        let tau = g.f64_in(0.5, 3.0);
+        let sets = random_sets(g, n, &[p]);
+        let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 600.0)).collect();
+        let total: f64 = ws.iter().sum();
+        let updates = dense_updates(&sets, &ws);
+        let mut global = ParamSet::zeros_matching(&sets[0]);
+        let mut agg = FedAccumulator::zeros_like(&sets[0]);
+        let mut cfg = AggregateConfig::default();
+        cfg.kind = AggKind::Clip;
+        cfg.clip_tau = tau;
+        let stats = cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, &mut global);
+        // reference: `acc[e] += ((wᵢ·cᵢ)/Σw as f32)·xᵢ[e]`, input order
+        let mut exp = vec![0f32; p];
+        let mut exp_clipped = 0usize;
+        for (s, &w) in sets.iter().zip(&ws) {
+            let norm = s.l2_norm();
+            let c = if norm > tau {
+                exp_clipped += 1;
+                tau / norm
+            } else {
+                1.0
+            };
+            let coeff = ((w * c) / total) as f32;
+            for (e, &v) in s.leaves[0].iter().enumerate() {
+                exp[e] += coeff * v;
+            }
+        }
+        if stats.clipped != exp_clipped {
+            return Err(format!("clipped {} != reference {exp_clipped}", stats.clipped));
+        }
+        for (a, b) in global.leaves[0].iter().zip(&exp) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("clip fold {a} != reference {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The buffered estimators ARE their textbook definitions, bit for bit:
+/// per coordinate, sort the `n` values, trim `⌊ratio·n⌋` per tail and
+/// average (trimmed mean) or take the middle (median) — unweighted, and
+/// added onto whatever global they start from.
+#[test]
+fn prop_buffered_estimators_match_reference_impls() {
+    prop::check(0xA77AC3, 50, |g| {
+        let n = g.usize_in(1, 9);
+        let p = g.usize_in(1, 12);
+        let ratio = g.f64_in(0.0, 0.45);
+        let sets = random_sets(g, n, &[p]);
+        // weights must be ignored (self-reported weight is free for an
+        // attacker to inflate) — randomize them to prove it
+        let ws: Vec<f64> = (0..n).map(|_| g.f64_in(0.5, 600.0)).collect();
+        let total: f64 = ws.iter().sum();
+        let updates = dense_updates(&sets, &ws);
+        let g0 = random_sets(g, 1, &[p]).pop().unwrap();
+        for kind in [AggKind::TrimmedMean, AggKind::Median] {
+            let mut cfg = AggregateConfig::default();
+            cfg.kind = kind;
+            cfg.trim_ratio = ratio;
+            let mut global = g0.clone();
+            let mut agg = FedAccumulator::zeros_like(&g0);
+            let stats =
+                cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, &mut global);
+            let t = match kind {
+                AggKind::TrimmedMean => ((ratio * n as f64).floor() as usize).min((n - 1) / 2),
+                _ => 0,
+            };
+            let exp_trimmed = match kind {
+                AggKind::TrimmedMean => 2 * t,
+                _ => {
+                    if n % 2 == 1 {
+                        n - 1
+                    } else {
+                        n.saturating_sub(2)
+                    }
+                }
+            };
+            if stats.trimmed != exp_trimmed {
+                return Err(format!(
+                    "{kind:?}: trimmed {} != reference {exp_trimmed} (n={n})",
+                    stats.trimmed
+                ));
+            }
+            for e in 0..p {
+                let mut vals: Vec<f32> = sets.iter().map(|s| s.leaves[0][e]).collect();
+                vals.sort_unstable_by(f32::total_cmp);
+                let combined = match kind {
+                    AggKind::TrimmedMean => {
+                        let kept = &vals[t..n - t];
+                        kept.iter().map(|&v| v as f64).sum::<f64>() / kept.len() as f64
+                    }
+                    _ => {
+                        if n % 2 == 1 {
+                            vals[n / 2] as f64
+                        } else {
+                            (vals[n / 2 - 1] as f64 + vals[n / 2] as f64) / 2.0
+                        }
+                    }
+                };
+                let exp = g0.leaves[0][e] + combined as f32;
+                let got = global.leaves[0][e];
+                if got.to_bits() != exp.to_bits() {
+                    return Err(format!("{kind:?} coord {e}: {got} != reference {exp}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The e2e deliverable (DESIGN.md §13): under a 20% scaled-byzantine
+/// fleet (`⌈0.2·8⌉ = 2` attackers boosting their deltas ×25), every
+/// robust aggregator keeps all three engines learning — final loss
+/// finite and below round 1 — while the unprotected mean on the same
+/// seed does strictly worse. Fading is off so delivery (and hence the
+/// estimators' breakdown margins) is deterministic.
+#[test]
+fn robust_aggregators_outlearn_mean_under_scaled_byzantine_on_all_engines() {
+    let run = |engine: EngineKind, agg: AggKind| {
+        let mut cfg = base_cfg(&format!("rob-{}-{}", engine.label(), agg.label()));
+        cfg.engine.kind = engine;
+        // every aggregation sees the full fleet: attackers stay the
+        // minority the estimators are specified against
+        cfg.engine.buffer_k = 8;
+        cfg.wireless.fast_fading = false;
+        cfg.attack.kind = AttackKind::Scale;
+        cfg.attack.fraction = 0.2;
+        cfg.attack.scale = 25.0;
+        cfg.aggregate.kind = agg;
+        cfg.aggregate.trim_ratio = 0.3; // t = 2 per tail at n = 8 covers both attackers
+        let mut sys = FlSystem::build(cfg).unwrap();
+        sys.run().unwrap();
+        sys
+    };
+    for engine in [EngineKind::Sync, EngineKind::Deadline, EngineKind::AsyncBuffered] {
+        let mean = run(engine, AggKind::Mean);
+        // a diverged (non-finite) unprotected arm loses every comparison
+        let mean_last = mean
+            .log
+            .rounds
+            .last()
+            .map(|r| r.train_loss)
+            .filter(|l| l.is_finite())
+            .unwrap_or(f64::INFINITY);
+        let attacked: usize = mean.log.rounds.iter().map(|r| r.attacked).sum();
+        assert!(attacked > 0, "{engine:?}: the attacked column must count the byzantine folds");
+        assert_eq!(
+            mean.log.meta.get("attack_kind").and_then(|v| v.as_str()),
+            Some("scale"),
+            "{engine:?}"
+        );
+        for agg in [AggKind::Clip, AggKind::TrimmedMean, AggKind::Median] {
+            let sys = run(engine, agg);
+            let first = sys.log.rounds.first().unwrap().train_loss;
+            let last = sys.log.rounds.last().unwrap().train_loss;
+            assert!(
+                last.is_finite() && last < first,
+                "{engine:?}/{agg:?}: loss did not decrease under attack: {first} -> {last}"
+            );
+            assert!(
+                last < mean_last,
+                "{engine:?}/{agg:?}: not better than unprotected mean ({last} !< {mean_last})"
+            );
+            assert_eq!(
+                sys.log.meta.get("aggregator").and_then(|v| v.as_str()),
+                Some(agg.label()),
+                "{engine:?}/{agg:?}"
+            );
+            let devices = sys.log.meta.get("attack_devices").and_then(|v| v.as_arr());
+            assert_eq!(devices.map(|d| d.len()), Some(2), "{engine:?}/{agg:?}: ⌈0.2·8⌉ marked");
+            match agg {
+                AggKind::Clip => {
+                    let clipped: usize = sys.log.rounds.iter().map(|r| r.clipped).sum();
+                    assert!(clipped > 0, "{engine:?}: ×25 deltas must trip the adaptive τ");
+                }
+                _ => {
+                    let trimmed: usize = sys.log.rounds.iter().map(|r| r.trimmed).sum();
+                    assert!(trimmed > 0, "{engine:?}/{agg:?}: estimator must discard tails");
+                }
+            }
+        }
+    }
+}
+
+/// Every attack kind runs end to end under the median defense on the
+/// sync engine: the injector corrupts at its choke point (batch labels,
+/// the post-train delta, or the wire buffer), the run completes with a
+/// finite loss, and the attacked column counts the hostile folds.
+/// Loss-decrease is asserted for the delta-space attacks; label flipping
+/// pollutes the *reported* local losses themselves, so only totality and
+/// accounting are pinned there.
+#[test]
+fn every_attack_kind_completes_under_the_median_defense() {
+    for kind in [
+        AttackKind::LabelFlip,
+        AttackKind::Scale,
+        AttackKind::SignFlip,
+        AttackKind::Noise,
+        AttackKind::StaleReplay,
+    ] {
+        let mut cfg = base_cfg(&format!("rob-kind-{}", kind.label()));
+        cfg.wireless.fast_fading = false;
+        cfg.attack.kind = kind;
+        cfg.attack.fraction = 0.2;
+        cfg.attack.scale = 25.0;
+        cfg.attack.noise_std = 0.5;
+        cfg.attack.stale_rounds = 2;
+        cfg.aggregate.kind = AggKind::Median;
+        let mut sys = FlSystem::build(cfg).unwrap();
+        let outcome = sys.run().unwrap();
+        assert_eq!(outcome.rounds, 8, "{kind:?}");
+        let first = sys.log.rounds.first().unwrap().train_loss;
+        let last = sys.log.rounds.last().unwrap().train_loss;
+        assert!(last.is_finite(), "{kind:?}: diverged: {last}");
+        if kind != AttackKind::LabelFlip {
+            assert!(last < first, "{kind:?}: loss did not decrease: {first} -> {last}");
+        }
+        let attacked: usize = sys.log.rounds.iter().map(|r| r.attacked).sum();
+        assert!(attacked > 0, "{kind:?}: hostile folds must be counted");
+        assert_eq!(
+            sys.log.meta.get("attack_kind").and_then(|v| v.as_str()),
+            Some(kind.label()),
+            "{kind:?}"
+        );
+    }
+}

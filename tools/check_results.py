@@ -97,6 +97,38 @@ def check_figure(path, doc):
         errors.append(fail(path, "figure document needs `provenance` naming its spec"))
     elif "base_seed" not in prov:
         errors.append(fail(path, "figure provenance missing base_seed"))
+    if "attacks" in doc or doc.get("figure") == "ablation_attack":
+        errors += check_attacks(path, doc)
+    return errors
+
+
+AGGREGATORS = ("mean", "clip", "trimmed_mean", "median")
+
+
+def check_attacks(path, doc):
+    """The attack sweep's payload (DESIGN.md §13): every row names its
+    aggregator, codec and attack fraction and carries the robustness
+    counters; the headline paired delta must be present (null is allowed
+    — it means the unprotected arm diverged past a finite loss)."""
+    errors = []
+    rows = doc.get("attacks")
+    if not isinstance(rows, list) or not rows:
+        return [fail(path, "attack figure needs a non-empty `attacks` array")]
+    for i, r in enumerate(rows):
+        where = f"attacks[{i}]"
+        if not isinstance(r, dict):
+            errors.append(fail(path, f"{where} must be an object"))
+            continue
+        for key in ("codec", "attack_fraction", "attacked_updates"):
+            if key not in r:
+                errors.append(fail(path, f"{where} missing {key!r}"))
+        if r.get("aggregator") not in AGGREGATORS:
+            errors.append(
+                fail(path, f"{where} aggregator must be one of {AGGREGATORS}, "
+                           f"got {r.get('aggregator')!r}")
+            )
+    if "attack_delta_pct" not in doc:
+        errors.append(fail(path, "attack figure missing `attack_delta_pct`"))
     return errors
 
 
@@ -197,6 +229,33 @@ def self_test():
     assert check_doc(
         "f", dict(ok_fig, provenance={"spec": "fig2-mnist"})
     ), "figure provenance without base_seed must fail"
+    # attack-sweep shape (figure ablation_attack, or any doc carrying `attacks`)
+    ok_row = {
+        "aggregator": "median",
+        "codec": "dense",
+        "attack_fraction": 0.2,
+        "attacked_updates": 12,
+    }
+    ok_attack = {
+        "schema_version": 1,
+        "spec": "ablation-attack",
+        "figure": "ablation_attack",
+        "provenance": {"spec": "ablation-attack", "base_seed": 42},
+        "attacks": [ok_row],
+        "attack_delta_pct": 152.3,
+    }
+    assert check_doc("k", ok_attack) == []
+    assert check_doc("k", dict(ok_attack, attack_delta_pct=None)) == [], (
+        "a null headline delta (diverged unprotected arm) passes"
+    )
+    assert check_doc("k", dict(ok_attack, attacks=[])), "empty attacks must fail"
+    no_delta = dict(ok_attack)
+    del no_delta["attack_delta_pct"]
+    assert check_doc("k", no_delta), "missing attack_delta_pct must fail"
+    bad_row = dict(ok_row, aggregator="krum")
+    assert check_doc("k", dict(ok_attack, attacks=[bad_row])), "unknown aggregator must fail"
+    thin_row = {"aggregator": "mean"}
+    assert check_doc("k", dict(ok_attack, attacks=[thin_row])), "row missing keys must fail"
     print("check_results: self-test OK")
     return 0
 
