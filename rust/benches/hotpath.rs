@@ -29,6 +29,10 @@
 //! prices each robust aggregator (DESIGN.md §13) over the same dense
 //! fold: `mean` is the trait-seam control, the buffered estimators show
 //! the O(K·P) materialize + sort premium.
+//! `transport_uplink_{100,1000}dev` prices one chunked-ARQ uplink round
+//! (DESIGN.md §14) at 10% chunk loss — the per-device per-round cost of
+//! the erasure/CRC/backoff machinery the engines pay when `[transport]`
+//! is on.
 //!
 //! `DEFL_BENCH_FAST=1` shrinks iteration counts **and** the distinct-set
 //! count behind the 1000-device fold (64 sets cycled instead of 1000
@@ -43,7 +47,7 @@ use defl::data::synth::{generate, SynthSpec};
 use defl::defl_opt::{self, Controller, ControllerConfig, PlanInputs, RoundObservation};
 use defl::model::{federated_average, FedAccumulator, ParamSet};
 use defl::util::rng::Pcg32;
-use defl::wireless::{Channel, ChannelConfig};
+use defl::wireless::{Channel, ChannelConfig, TransportConfig};
 
 /// mnist_cnn-ish leaf layout (~103k params).
 const LEAVES_103K: [usize; 4] = [100_352, 128, 1_280, 10];
@@ -214,6 +218,27 @@ fn main() -> anyhow::Result<()> {
         suite.bench_units(&format!("wireless_drift_step_{devices}dev"), devices as f64, || {
             ch.step_drift();
             ch.drift_db(0)
+        });
+    }
+
+    // --- transport ARQ (the per-round unreliable-uplink machinery) ----
+    // 10% chunk loss over 5 chunks per 77k-bit update plus the CRC
+    // trickle: every device pays the full chunk/erasure/backoff path
+    // (DESIGN.md §14), so the bench prices the worst realistic case the
+    // engines run per round. Off is a branch and costs nothing.
+    for devices in [100usize, 1000] {
+        let mut ch = Channel::new(ChannelConfig::default(), devices, 9);
+        let mut t = TransportConfig::default();
+        t.chunk_bits = 16_384.0;
+        t.chunk_loss_prob = 0.1;
+        t.corrupt_prob = 0.002;
+        t.ack_timeout_s = 0.005;
+        t.backoff_base_s = 0.002;
+        t.backoff_cap_s = 0.02;
+        let mut rng = Pcg32::new(9 ^ 0x7A27, 0x7A27);
+        suite.bench_units(&format!("transport_uplink_{devices}dev"), devices as f64, || {
+            let (_, t_cm, _, stats) = ch.round_with_transport(77_120.0, &t, &mut rng);
+            (t_cm, stats.retransmits)
         });
     }
 

@@ -155,6 +155,14 @@ pub struct ExperimentConfig {
     /// paper; 0.5 = fp16, 0.25 = int8 — the [13] companion-paper
     /// extension). Affects T_cm only; quantization error is not modeled.
     pub compression: f64,
+    // [transport]
+    /// Unreliable-link transport: chunked ARQ with ack timeout,
+    /// exponential backoff, and CRC corruption detection (DESIGN.md §14).
+    /// Both failure probabilities at 0 (the default) keep the reliable
+    /// link — byte-identical to the pre-transport system. Mutually
+    /// exclusive with `wireless.outage_prob`, which it subsumes as the
+    /// degenerate one-chunk/zero-backoff case.
+    pub transport: crate::wireless::TransportConfig,
     // [compute]
     /// Per-device GPU compute model (eq. 3–5).
     pub fleet: crate::compute::gpu::FleetConfig,
@@ -248,6 +256,7 @@ impl Default for ExperimentConfig {
             outage_prob: 0.0,
             max_retries: 3,
             compression: 1.0,
+            transport: crate::wireless::TransportConfig::default(),
             fleet: {
                 let mut f = crate::compute::gpu::FleetConfig::default();
                 f.parallel_width = 64;
@@ -355,6 +364,16 @@ impl ExperimentConfig {
             get_f64(d, "ge_p_bad", &mut self.wireless.drift.ge_p_bad)?;
             get_f64(d, "ge_p_good", &mut self.wireless.drift.ge_p_good)?;
             get_f64(d, "ge_bad_db", &mut self.wireless.drift.ge_bad_db)?;
+        }
+        if let Some(t) = j.get("transport") {
+            get_f64(t, "chunk_bits", &mut self.transport.chunk_bits)?;
+            get_f64(t, "chunk_loss_prob", &mut self.transport.chunk_loss_prob)?;
+            get_f64(t, "corrupt_prob", &mut self.transport.corrupt_prob)?;
+            get_f64(t, "ack_timeout_s", &mut self.transport.ack_timeout_s)?;
+            get_f64(t, "backoff_base_s", &mut self.transport.backoff_base_s)?;
+            get_f64(t, "backoff_cap_s", &mut self.transport.backoff_cap_s)?;
+            get_usize(t, "max_attempts", &mut self.transport.max_attempts)?;
+            get_bool(t, "loss_aware", &mut self.transport.loss_aware)?;
         }
         if let Some(ct) = j.get("controller") {
             get_usize(ct, "replan_every", &mut self.controller.replan_every)?;
@@ -509,6 +528,13 @@ impl ExperimentConfig {
         );
         anyhow::ensure!((0.0..=1.0).contains(&self.outage_prob), "outage_prob in [0,1]");
         anyhow::ensure!(self.max_retries >= 1, "max_retries ≥ 1");
+        self.transport.validate()?;
+        anyhow::ensure!(
+            !(self.transport.enabled() && self.outage_prob > 0.0),
+            "[transport] and wireless.outage_prob are mutually exclusive — the \
+             legacy outage knob is the degenerate one-chunk/zero-backoff \
+             transport; configure one of them"
+        );
         anyhow::ensure!(
             self.compression > 0.0 && self.compression <= 1.0,
             "compression in (0,1]"
@@ -812,6 +838,44 @@ mod tests {
         let mut c = ExperimentConfig::default();
         c.set_override("drift.walk_db=-3").unwrap();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn transport_section_parses_and_validates() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.transport.enabled(), "reliable link is the default");
+        c.set_override("transport.chunk_bits=65536").unwrap();
+        c.set_override("transport.chunk_loss_prob=0.1").unwrap();
+        c.set_override("transport.corrupt_prob=0.001").unwrap();
+        c.set_override("transport.ack_timeout_s=0.03").unwrap();
+        c.set_override("transport.backoff_base_s=0.02").unwrap();
+        c.set_override("transport.backoff_cap_s=0.2").unwrap();
+        c.set_override("transport.max_attempts=6").unwrap();
+        c.set_override("transport.loss_aware=false").unwrap();
+        assert!(c.transport.enabled());
+        assert_eq!(c.transport.chunk_bits, 65536.0);
+        assert_eq!(c.transport.chunk_loss_prob, 0.1);
+        assert_eq!(c.transport.corrupt_prob, 0.001);
+        assert_eq!(c.transport.ack_timeout_s, 0.03);
+        assert_eq!(c.transport.backoff_base_s, 0.02);
+        assert_eq!(c.transport.backoff_cap_s, 0.2);
+        assert_eq!(c.transport.max_attempts, 6);
+        assert!(!c.transport.loss_aware);
+        assert!(c.validate().is_ok());
+        // the legacy outage knob and [transport] are mutually exclusive
+        c.set_override("wireless.outage_prob=0.1").unwrap();
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("mutually exclusive"), "{err}");
+        // out-of-range knobs are rejected
+        let mut c = ExperimentConfig::default();
+        c.set_override("transport.chunk_loss_prob=1.5").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.set_override("transport.max_attempts=0").unwrap();
+        assert!(c.validate().is_err());
+        let mut c = ExperimentConfig::default();
+        c.set_override("transport.chunk_bits=0.5").unwrap();
+        assert!(c.validate().is_err(), "sub-bit chunks must not validate");
     }
 
     #[test]

@@ -102,9 +102,11 @@ impl RoundEngine for AsyncBuffered {
         let mut started_r_max = 0f64;
         let mut started_tcp_max = 0f64;
         let mut started_loss = f64::NAN;
+        let mut transport = crate::wireless::TransportStats::default();
         if !starters.is_empty() {
             let updates = local_computation(sys, &starters)?;
             let up = uplink_phase(sys)?;
+            transport = up.stats;
             started_loss = weighted_loss(&updates);
             for u in updates {
                 let t_cp = sys.fleet.specs[u.device].minibatch_time(bits_per_sample, sys.batch);
@@ -165,6 +167,10 @@ impl RoundEngine for AsyncBuffered {
                 attacked: 0,
                 clipped: 0,
                 trimmed: 0,
+                retransmits: transport.retransmits,
+                corrupt_detected: transport.corrupt_detected,
+                gave_up: transport.gave_up,
+                backoff_s: transport.backoff_s,
             });
         }
 
@@ -255,6 +261,10 @@ impl RoundEngine for AsyncBuffered {
             attacked: stats.attacked,
             clipped: stats.clipped,
             trimmed: stats.trimmed,
+            retransmits: transport.retransmits,
+            corrupt_detected: transport.corrupt_detected,
+            gave_up: transport.gave_up,
+            backoff_s: transport.backoff_s,
         })
     }
 }

@@ -168,6 +168,10 @@ impl RoundEngine for DeadlineSync {
             attacked: stats.attacked,
             clipped: stats.clipped,
             trimmed: stats.trimmed,
+            retransmits: up.stats.retransmits,
+            corrupt_detected: up.stats.corrupt_detected,
+            gave_up: up.stats.gave_up,
+            backoff_s: up.stats.backoff_s,
         })
     }
 }

@@ -185,8 +185,11 @@ pub(crate) struct LocalUpdate {
 pub(crate) struct UplinkDraw {
     /// Per-device time spent transmitting (including failed retries).
     pub times: Vec<f64>,
-    /// Whether the update actually arrived (outage model).
+    /// Whether the update actually arrived (transport/outage model).
     pub delivered: Vec<bool>,
+    /// Fleet ARQ counters (all-zero on the reliable and legacy-outage
+    /// paths) — stamped into the round record's transport columns.
+    pub stats: crate::wireless::TransportStats,
 }
 
 /// Client selection (paper: full participation = `Selection::All`) over
@@ -376,15 +379,27 @@ pub(crate) fn weighted_loss(updates: &[LocalUpdate]) -> f64 {
 pub(crate) fn uplink_phase(sys: &mut FlSystem) -> anyhow::Result<UplinkDraw> {
     sys.channel.step_drift();
     let spec_bits = sys.codec.nominal_bits(&sys.spec) * sys.cfg.compression;
-    let mut draw = if sys.cfg.outage_prob > 0.0 {
+    let mut draw = if sys.cfg.transport.enabled() {
+        // Chunked ARQ over the unreliable link (DESIGN.md §14). Draws
+        // ride the coordinator's dedicated transport stream, so the
+        // channel's fading draws are identical with and without it; a
+        // device that exhausts its attempt budget degrades into the
+        // same undelivered path an outage or mid-round death takes.
+        let (times, _, delivered, stats) = sys.channel.round_with_transport(
+            spec_bits,
+            &sys.cfg.transport,
+            &mut sys.transport_rng,
+        );
+        UplinkDraw { times, delivered, stats }
+    } else if sys.cfg.outage_prob > 0.0 {
         let (times, _, delivered) =
             sys.channel
                 .round_with_outage(spec_bits, sys.cfg.outage_prob, sys.cfg.max_retries);
-        UplinkDraw { times, delivered }
+        UplinkDraw { times, delivered, stats: Default::default() }
     } else {
         let (times, _) = sys.channel.round(spec_bits);
         let n = times.len();
-        UplinkDraw { times, delivered: vec![true; n] }
+        UplinkDraw { times, delivered: vec![true; n], stats: Default::default() }
     };
     // Mid-round deaths (DESIGN.md §11): the dying device trained and
     // transmitted, but its update never lands — same downstream path as

@@ -114,6 +114,10 @@ impl RoundEngine for SyncFedAvg {
             attacked: stats.attacked,
             clipped: stats.clipped,
             trimmed: stats.trimmed,
+            retransmits: up.stats.retransmits,
+            corrupt_detected: up.stats.corrupt_detected,
+            gave_up: up.stats.gave_up,
+            backoff_s: up.stats.backoff_s,
         })
     }
 }

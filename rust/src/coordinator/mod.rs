@@ -64,6 +64,7 @@ use crate::model::{FedAccumulator, ModelSpec, ParamSet};
 use crate::runtime::{build_backend, TrainBackend};
 use crate::simclock::SimClock;
 use crate::util::json::Json;
+use crate::util::rng::Pcg32;
 use crate::wireless::Channel;
 use std::sync::Arc;
 use std::time::Instant;
@@ -82,6 +83,11 @@ pub struct FlSystem {
     pub backend: Box<dyn TrainBackend>,
     /// The wireless uplink model (eq. 6/7 + drift).
     pub channel: Channel,
+    /// Dedicated RNG stream for the unreliable-link transport layer's
+    /// per-chunk loss/corruption draws (`[transport]` — DESIGN.md §14).
+    /// Separate from the channel's fading stream so a transport-off run
+    /// consumes exactly the same draws as the pre-transport system.
+    pub(crate) transport_rng: Pcg32,
     /// The per-device compute model (eq. 3–5).
     pub fleet: GpuFleet,
     /// The device fleet (index = device id).
@@ -278,7 +284,20 @@ impl FlSystem {
         // b*, larger θ* ⇒ fewer local rounds per communication).
         let codec = cfg.codec.build()?;
         let update_bits = codec.nominal_bits(&spec);
-        let t_cm = channel.expected_round_time(update_bits * cfg.compression);
+        let wire_bits = update_bits * cfg.compression;
+        let t_cm_base = channel.expected_round_time(wire_bits);
+        // Loss-aware delay pricing (DESIGN.md §14): with `[transport]`
+        // enabled and `loss_aware = true` the planner prices the uplink
+        // at its ARQ-inflated expectation — E[attempts] ≈ 1/(1−p_chunk)
+        // plus ack/backoff dead time — so eq. (29) shifts toward fewer,
+        // larger rounds on a lossy link. `loss_aware = false` keeps the
+        // loss-blind plan while the simulation still pays per-round for
+        // retransmissions (the ablation's control arm).
+        let t_cm = if cfg.transport.enabled() && cfg.transport.loss_aware {
+            cfg.transport.expected_uplink_seconds(t_cm_base, wire_bits)
+        } else {
+            t_cm_base
+        };
         let t_cps = fleet.bottleneck_seconds_per_sample(train.bits_per_sample());
         let resolved = resolve(&cfg, t_cm, t_cps);
         let batch = backend.nearest_train_batch(&model, resolved.batch)?;
@@ -351,6 +370,16 @@ impl FlSystem {
         if cfg.wireless.drift.enabled() {
             log.set_meta("drift_enabled", Json::Bool(true));
         }
+        // Transport-off runs carry no transport keys at all — the same
+        // absence-pins-the-no-op convention as churn/attack/controller.
+        if cfg.transport.enabled() {
+            log.set_meta("transport_chunk_bits", Json::Num(cfg.transport.chunk_bits));
+            log.set_meta("transport_chunk_loss_prob", Json::Num(cfg.transport.chunk_loss_prob));
+            log.set_meta("transport_corrupt_prob", Json::Num(cfg.transport.corrupt_prob));
+            log.set_meta("transport_max_attempts", Json::Num(cfg.transport.max_attempts as f64));
+            log.set_meta("transport_loss_aware", Json::Bool(cfg.transport.loss_aware));
+            log.set_meta("t_cm_inflation", Json::Num(t_cm / t_cm_base));
+        }
         // Churn-off runs carry no churn metadata at all, mirroring the
         // controller convention: absence of keys pins the no-op refactor.
         if cfg.churn.enabled() {
@@ -402,6 +431,7 @@ impl FlSystem {
         let agg = FedAccumulator::zeros_like(&global);
         let robust = cfg.aggregate.build()?;
         Ok(FlSystem {
+            transport_rng: Pcg32::new(cfg.seed ^ 0x7A27, 0x7A27),
             cfg,
             model,
             spec,

@@ -220,6 +220,35 @@ mod tests {
     }
 
     #[test]
+    fn lossy_transport_pushes_more_work() {
+        // DESIGN.md §14: a lossy link's ARQ-inflated expected uplink is
+        // just a bigger T_cm to the planner — eq. (29) answers with
+        // fewer, larger rounds (higher α, lower θ) than the loss-blind
+        // plan priced at the base uplink.
+        let t = crate::wireless::TransportConfig {
+            chunk_bits: 16_384.0,
+            chunk_loss_prob: 0.3,
+            max_attempts: 6,
+            ack_timeout_s: 0.05,
+            backoff_base_s: 0.05,
+            backoff_cap_s: 0.25,
+            ..Default::default()
+        };
+        let base = 0.05;
+        let inflated = t.expected_uplink_seconds(base, 77_120.0);
+        assert!(inflated > base * 1.3, "inflated {inflated}");
+        let blind = numeric(&PlanInputs { t_cm: base, ..Default::default() }, 64);
+        let aware = numeric(&PlanInputs { t_cm: inflated, ..Default::default() }, 64);
+        assert!(aware.alpha >= blind.alpha);
+        assert!(aware.theta <= blind.theta);
+        // and the aware plan evaluated under the *true* (inflated) link
+        // is never worse than the blind plan under the same truth
+        let truth = PlanInputs { t_cm: inflated, ..Default::default() };
+        let blind_under_truth = evaluate(&truth, blind.batch, blind.alpha);
+        assert!(aware.overall_time <= blind_under_truth.overall_time + 1e-9);
+    }
+
+    #[test]
     fn fast_gpu_pushes_more_work() {
         // Faster compute (smaller per-sample time) ⇒ work is cheap ⇒
         // higher α.

@@ -621,6 +621,208 @@ fn attacks_part(
     Ok((table, rows, headline, sweep.trials))
 }
 
+/// One arm of the transport loss grid after reading its log.
+struct TransportArm {
+    name: String,
+    engine: &'static str,
+    codec: crate::codec::CodecKind,
+    loss: f64,
+    overall_time: f64,
+    retransmits: usize,
+    final_loss: f64,
+}
+
+/// Part 7: the unreliable-link transport layer
+/// (`specs/ablation_transport.toml`, DESIGN.md §14) — the codec ×
+/// engine × chunk-loss grid plus the loss-aware-pricing pair. Two
+/// CI-enforced claims: every lossy arm costs at least its clean control
+/// (same codec, engine, seeds) and actually retransmits; and the
+/// `defl_numeric` plan priced on the ARQ-inflated uplink strictly beats
+/// the loss-blind plan when both are evaluated under the *true* lossy
+/// link. Returns the grid table, grid rows, the plan-pair table, the
+/// plan-pair JSON object, the headline margin (%), and the trials.
+fn transport_part(
+    spec: &ExperimentSpec,
+    opts: &RunnerOpts,
+) -> anyhow::Result<(Table, Vec<Json>, Table, Json, f64, Vec<TrialOutcome>)> {
+    let sweep = run_spec(spec, opts)?;
+    let meta_num = |log: &RunLog, key: &str| -> f64 {
+        log.meta.get(key).and_then(|v| v.as_f64()).unwrap_or(f64::NAN)
+    };
+
+    // --- the loss grid ---------------------------------------------
+    let mut table = Table::new(&[
+        "engine", "codec", "chunk loss", "rounds", "total 𝒯 (s)", "T_cm infl.", "retx",
+        "crc", "gave up", "backoff (s)", "final loss",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut arms: Vec<TransportArm> = Vec::new();
+    for variant in spec.expand_variants()? {
+        if !variant.name.starts_with("loss-") {
+            continue;
+        }
+        let cfg = spec.build_config(&variant)?;
+        let log = sweep.log(&variant.name)?;
+        let retransmits: usize = log.rounds.iter().map(|r| r.retransmits).sum();
+        let corrupt: usize = log.rounds.iter().map(|r| r.corrupt_detected).sum();
+        let gave_up: usize = log.rounds.iter().map(|r| r.gave_up).sum();
+        let backoff: f64 = log.rounds.iter().map(|r| r.backoff_s).sum();
+        let inflation = meta_num(log, "t_cm_inflation");
+        let final_loss = log.last().map_or(f64::NAN, |r| r.train_loss);
+        let codec_label =
+            log.meta.get("codec").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+        table.row(&[
+            cfg.engine.kind.label().into(),
+            codec_label.clone(),
+            format!("{:.0}%", 100.0 * cfg.transport.chunk_loss_prob),
+            log.rounds.len().to_string(),
+            format!("{:.3}", log.overall_time()),
+            format!("{inflation:.3}×"),
+            retransmits.to_string(),
+            corrupt.to_string(),
+            gave_up.to_string(),
+            format!("{backoff:.4}"),
+            format!("{final_loss:.4}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("arm", Json::str(&variant.name)),
+            ("engine", Json::str(cfg.engine.kind.label())),
+            ("codec", Json::str(&codec_label)),
+            ("chunk_loss_prob", Json::Num(cfg.transport.chunk_loss_prob)),
+            ("rounds", Json::Num(log.rounds.len() as f64)),
+            ("overall_time", Json::Num(log.overall_time())),
+            ("t_cm_inflation", Json::Num(inflation)),
+            ("retransmits", Json::Num(retransmits as f64)),
+            ("corrupt_detected", Json::Num(corrupt as f64)),
+            ("gave_up", Json::Num(gave_up as f64)),
+            ("backoff_s", Json::Num(backoff)),
+            ("final_train_loss", Json::Num(final_loss)),
+        ]));
+        arms.push(TransportArm {
+            name: variant.name.clone(),
+            engine: cfg.engine.kind.label(),
+            codec: cfg.codec.kind,
+            loss: cfg.transport.chunk_loss_prob,
+            overall_time: log.overall_time(),
+            retransmits,
+            final_loss,
+        });
+    }
+
+    // grid claims: losing chunks can only slow a run down, never speed
+    // it up — and a 10%-loss arm that never retransmitted means the ARQ
+    // isn't actually wired into the engine under test.
+    for arm in arms.iter().filter(|a| a.loss > 0.0) {
+        let clean = arms
+            .iter()
+            .find(|a| a.engine == arm.engine && a.codec == arm.codec && a.loss == 0.0)
+            .ok_or_else(|| anyhow::anyhow!("no clean control for {:?}", arm.name))?;
+        anyhow::ensure!(
+            arm.overall_time >= clean.overall_time,
+            "lossy arm {:?} finished faster than its clean control ({:.4} vs {:.4})",
+            arm.name,
+            arm.overall_time,
+            clean.overall_time,
+        );
+        anyhow::ensure!(
+            arm.retransmits > 0,
+            "lossy arm {:?} never retransmitted — the ARQ is not reaching the engine",
+            arm.name,
+        );
+        anyhow::ensure!(
+            arm.final_loss.is_finite(),
+            "lossy arm {:?} diverged (final loss {})",
+            arm.name,
+            arm.final_loss,
+        );
+    }
+
+    // --- the loss-aware-pricing pair -------------------------------
+    // `plan_aware` prices T_cm with the expected ARQ inflation;
+    // `plan_blind` prices the clean link. Both then *pay* the true
+    // lossy link: the aware plan is the numeric argmin under it, so it
+    // must strictly beat the blind plan's predicted time re-evaluated
+    // at the truth. The operating point was chosen so the gap is
+    // strict across the whole base-uplink band guarded below.
+    let aware = sweep.log("plan_aware")?;
+    let blind = sweep.log("plan_blind")?;
+    let truth = meta_num(aware, "t_cm_expected");
+    let base = meta_num(blind, "t_cm_expected");
+    anyhow::ensure!(
+        (0.015..=0.25).contains(&base),
+        "base uplink {base:.4}s left the band the strict plan gap was verified over",
+    );
+    anyhow::ensure!(
+        truth > 1.5 * base,
+        "ARQ inflation {:.2}× too small for the pricing claim",
+        truth / base,
+    );
+    let first = |log: &RunLog| {
+        let r = log.rounds.first();
+        (r.map_or(0, |r| r.plan_b), r.map_or(0, |r| r.local_rounds))
+    };
+    let (aware_b, aware_v) = first(aware);
+    let (blind_b, blind_v) = first(blind);
+    anyhow::ensure!(
+        aware_v > blind_v,
+        "loss-aware plan must talk less often: V {aware_v} !> {blind_v}",
+    );
+    let aware_variant = spec
+        .expand_variants()?
+        .into_iter()
+        .find(|v| v.name == "plan_aware")
+        .ok_or_else(|| anyhow::anyhow!("spec lost its plan_aware variant"))?;
+    let cfg = spec.build_config(&aware_variant)?;
+    let inputs = PlanInputs {
+        t_cm: truth,
+        t_cp_per_sample: meta_num(aware, "t_cp_per_sample"),
+        m: cfg.devices,
+        epsilon: cfg.epsilon,
+        nu: cfg.nu,
+        c: cfg.c,
+    };
+    let t_aware = meta_num(aware, "plan_overall_time");
+    let blind_under_truth =
+        defl_opt::evaluate(&inputs, blind_b, meta_num(blind, "plan_alpha")).overall_time;
+    anyhow::ensure!(
+        t_aware < blind_under_truth,
+        "loss-aware plan ({t_aware:.2}s) did not strictly beat the loss-blind plan \
+         under the true lossy link ({blind_under_truth:.2}s)",
+    );
+    let margin_pct = 100.0 * (blind_under_truth - t_aware) / blind_under_truth;
+
+    let mut plan_table = Table::new(&[
+        "plan", "T_cm priced (s)", "b", "V", "pred 𝒯 under truth (s)",
+    ]);
+    plan_table.row(&[
+        "loss-aware".into(),
+        format!("{truth:.4}"),
+        aware_b.to_string(),
+        aware_v.to_string(),
+        format!("{t_aware:.2}"),
+    ]);
+    plan_table.row(&[
+        "loss-blind".into(),
+        format!("{base:.4}"),
+        blind_b.to_string(),
+        blind_v.to_string(),
+        format!("{blind_under_truth:.2}"),
+    ]);
+    let plan = Json::obj(vec![
+        ("t_cm_base", Json::Num(base)),
+        ("t_cm_true", Json::Num(truth)),
+        ("inflation", Json::Num(truth / base)),
+        ("aware_batch", Json::Num(aware_b as f64)),
+        ("aware_local_rounds", Json::Num(aware_v as f64)),
+        ("aware_overall_time", Json::Num(t_aware)),
+        ("blind_batch", Json::Num(blind_b as f64)),
+        ("blind_local_rounds", Json::Num(blind_v as f64)),
+        ("blind_overall_time_under_truth", Json::Num(blind_under_truth)),
+        ("margin_pct", Json::Num(margin_pct)),
+    ]);
+    Ok((table, rows, plan_table, plan, margin_pct, sweep.trials))
+}
+
 fn part_doc(
     spec: &ExperimentSpec,
     opts: &RunnerOpts,
@@ -735,6 +937,29 @@ pub fn render_attack(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result
             ("figure", Json::str("ablation_attack")),
             ("attacks", Json::Arr(rows)),
             ("attack_delta_pct", delta.map_or(Json::Null, Json::Num)),
+        ],
+    )
+}
+
+/// Render the unreliable-link transport sweep (part 7) from its spec.
+pub fn render_transport(spec: &ExperimentSpec, opts: &RunnerOpts) -> anyhow::Result<Json> {
+    let (table, rows, plan_table, plan, margin_pct, trials) = transport_part(spec, opts)?;
+    println!("Ablation — chunked-ARQ transport under per-chunk loss");
+    println!("{}", table.render());
+    println!(
+        "Loss-aware vs loss-blind planning on the true lossy link \
+         (aware saves {margin_pct:.1}% predicted overall time)"
+    );
+    println!("{}", plan_table.render());
+    part_doc(
+        spec,
+        opts,
+        &trials,
+        vec![
+            ("figure", Json::str("ablation_transport")),
+            ("transport", Json::Arr(rows)),
+            ("plan", plan),
+            ("plan_margin_pct", Json::Num(margin_pct)),
         ],
     )
 }
@@ -880,6 +1105,51 @@ mod tests {
             kinds.into_iter().collect::<Vec<_>>(),
             ["clip", "mean", "median", "trimmed_mean"]
         );
+    }
+
+    #[test]
+    fn bundled_transport_spec_pins_the_loss_ablation() {
+        use crate::codec::CodecKind;
+        let spec = crate::harness::specs::load("ablation_transport").unwrap();
+        assert_eq!(spec.seeds, 2);
+        let vs = spec.expand_variants().unwrap();
+        // 2 codecs × 3 engines × 2 loss levels, plus the pricing pair
+        assert_eq!(vs.len(), 14);
+        // axes expand in sorted-key order: codec.kind, engine.kind,
+        // transport.chunk_loss_prob
+        assert_eq!(vs[0].name, "loss-dense-sync-0");
+        let grid: Vec<&crate::harness::VariantSpec> =
+            vs.iter().filter(|v| v.name.starts_with("loss-")).collect();
+        assert_eq!(grid.len(), 12);
+        for v in &grid {
+            let cfg = spec.build_config(v).unwrap();
+            assert!(matches!(cfg.codec.kind, CodecKind::Dense | CodecKind::TopK));
+            assert!(
+                cfg.transport.chunk_loss_prob == 0.0 || cfg.transport.chunk_loss_prob == 0.1
+            );
+            // the CRC trickle stays on in the p=0 control, so every grid
+            // arm exercises the transport path
+            assert_eq!(cfg.transport.corrupt_prob, 0.002);
+            // 77 120-bit tiny/dense update ⇒ 5 chunks
+            assert_eq!(cfg.transport.chunk_bits, 16_384.0);
+            assert_eq!(cfg.devices, 8);
+        }
+        for name in ["plan_aware", "plan_blind"] {
+            let v = vs.iter().find(|v| v.name == name).unwrap();
+            let cfg = spec.build_config(v).unwrap();
+            // the verified strict-gap operating point: one chunk, 30%
+            // loss, 4 devices on a 200 kHz band, exact numeric planner
+            assert_eq!(cfg.policy, crate::config::Policy::DeflNumeric, "{name}");
+            assert_eq!(cfg.devices, 4, "{name}");
+            assert_eq!(cfg.epsilon, 0.002, "{name}");
+            assert_eq!(cfg.nu, 8.0, "{name}");
+            assert_eq!(cfg.wireless.bandwidth_hz, 2e5, "{name}");
+            assert_eq!(cfg.transport.chunk_loss_prob, 0.3, "{name}");
+            assert_eq!(cfg.transport.corrupt_prob, 0.0, "{name}");
+            assert_eq!(cfg.transport.max_attempts, 6, "{name}");
+            assert!(cfg.transport.chunk_bits > 77_120.0, "{name}: one chunk");
+            assert_eq!(cfg.transport.loss_aware, name == "plan_aware", "{name}");
+        }
     }
 
     #[test]

@@ -141,6 +141,7 @@ pub const FIGURES: &[&str] = &[
     "ablation_churn",
     "ablation_churn_ctl",
     "ablation_attack",
+    "ablation_transport",
 ];
 
 /// Run a spec through its figure formatter: trials via the runner, then
@@ -163,6 +164,7 @@ pub fn render_figure(
         "ablation_churn" => ablation::render_churn(spec, opts),
         "ablation_churn_ctl" => ablation::render_churn_ctl(spec, opts),
         "ablation_attack" => ablation::render_attack(spec, opts),
+        "ablation_transport" => ablation::render_transport(spec, opts),
         other => anyhow::bail!(
             "unknown figure formatter {other:?} (have: {})",
             FIGURES.join(", ")

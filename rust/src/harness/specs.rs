@@ -20,6 +20,7 @@ pub const BUNDLED: &[(&str, &str)] = &[
     ("ablation_churn", include_str!("../../../specs/ablation_churn.toml")),
     ("ablation_churn_ctl", include_str!("../../../specs/ablation_churn_ctl.toml")),
     ("ablation_attack", include_str!("../../../specs/ablation_attack.toml")),
+    ("ablation_transport", include_str!("../../../specs/ablation_transport.toml")),
     ("ci_matrix", include_str!("../../../specs/ci_matrix.toml")),
 ];
 

@@ -75,6 +75,16 @@ pub struct RoundRecord {
     /// (trimmed mean / median) this round, counted per update: `2t` for
     /// `trimmed_mean`, `n−1`/`n−2` for `median`.
     pub trimmed: usize,
+    /// Chunk retransmissions across the fleet this round (DESIGN.md §14).
+    /// 0 with the `[transport]` layer off.
+    pub retransmits: usize,
+    /// Corrupted chunks the CRC caught (and NAKed) this round.
+    pub corrupt_detected: usize,
+    /// Devices that exhausted a chunk's attempt budget this round — their
+    /// updates degraded into the undelivered path.
+    pub gave_up: usize,
+    /// Seconds the fleet spent in ARQ backoff waits this round.
+    pub backoff_s: f64,
 }
 
 /// A named experiment run: config echo + round records.
@@ -171,6 +181,10 @@ impl RunLog {
                     ("attacked", Json::Num(r.attacked as f64)),
                     ("clipped", Json::Num(r.clipped as f64)),
                     ("trimmed", Json::Num(r.trimmed as f64)),
+                    ("retransmits", Json::Num(r.retransmits as f64)),
+                    ("corrupt_detected", Json::Num(r.corrupt_detected as f64)),
+                    ("gave_up", Json::Num(r.gave_up as f64)),
+                    ("backoff_s", Json::Num(r.backoff_s)),
                 ])
             })
             .collect();
@@ -192,11 +206,11 @@ impl RunLog {
     /// The round records as CSV (one named column per record field).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm,phase,fleet_size,joins,drops,attacked,clipped,trimmed\n",
+            "round,virtual_time,t_cm,t_cp,local_rounds,train_loss,test_loss,test_accuracy,wall_seconds,participants,dropped,mean_staleness,encoded_bits,compression_ratio,plan_b,plan_theta,est_t_cm,phase,fleet_size,joins,drops,attacked,clipped,trimmed,retransmits,corrupt_detected,gave_up,backoff_s\n",
         );
         for r in &self.rounds {
             s.push_str(&format!(
-                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{},{}\n",
                 r.round,
                 r.virtual_time,
                 r.t_cm,
@@ -220,7 +234,11 @@ impl RunLog {
                 r.drops,
                 r.attacked,
                 r.clipped,
-                r.trimmed
+                r.trimmed,
+                r.retransmits,
+                r.corrupt_detected,
+                r.gave_up,
+                r.backoff_s
             ));
         }
         s
@@ -328,6 +346,10 @@ mod tests {
             attacked: 0,
             clipped: 0,
             trimmed: 0,
+            retransmits: 0,
+            corrupt_detected: 0,
+            gave_up: 0,
+            backoff_s: 0.0,
         }
     }
 
@@ -534,6 +556,49 @@ mod tests {
         assert_eq!(cells[idx("attacked")], "2");
         assert_eq!(cells[idx("clipped")], "1");
         assert_eq!(cells[idx("trimmed")], "4");
+    }
+
+    /// The per-round transport columns (DESIGN.md §14) survive both
+    /// export paths — retransmits/corrupt_detected/gave_up/backoff_s
+    /// land in JSON and CSV, and stay 0 on reliable rounds.
+    #[test]
+    fn transport_columns_roundtrip_json_and_csv() {
+        let mut log = RunLog::new("transport");
+        let mut a = rec(1, 1.0, 2.0, 0.5);
+        a.retransmits = 9;
+        a.corrupt_detected = 2;
+        a.gave_up = 1;
+        a.backoff_s = 0.375;
+        log.push(a);
+        log.push(rec(2, 2.0, 1.5, 0.6)); // reliable round: all-zero counters
+
+        let parsed = Json::parse(&log.to_json().to_pretty()).unwrap();
+        let rounds = parsed.get("rounds").unwrap();
+        let r0 = rounds.idx(0).unwrap();
+        assert_eq!(r0.get("retransmits").unwrap().as_f64(), Some(9.0));
+        assert_eq!(r0.get("corrupt_detected").unwrap().as_f64(), Some(2.0));
+        assert_eq!(r0.get("gave_up").unwrap().as_f64(), Some(1.0));
+        assert_eq!(r0.get("backoff_s").unwrap().as_f64(), Some(0.375));
+        let r1 = rounds.idx(1).unwrap();
+        assert_eq!(r1.get("retransmits").unwrap().as_f64(), Some(0.0));
+        assert_eq!(r1.get("backoff_s").unwrap().as_f64(), Some(0.0));
+
+        let csv = log.to_csv();
+        let mut lines = csv.lines();
+        let header = lines.next().unwrap();
+        for col in ["retransmits", "corrupt_detected", "gave_up", "backoff_s"] {
+            assert!(header.split(',').any(|h| h == col), "missing column {col}");
+        }
+        let width = header.split(',').count();
+        for (i, row) in lines.enumerate() {
+            assert_eq!(row.split(',').count(), width, "row {i} width");
+        }
+        let cells: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+        let idx = |name: &str| header.split(',').position(|h| h == name).unwrap();
+        assert_eq!(cells[idx("retransmits")], "9");
+        assert_eq!(cells[idx("corrupt_detected")], "2");
+        assert_eq!(cells[idx("gave_up")], "1");
+        assert_eq!(cells[idx("backoff_s")], "0.375");
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //! pre-drift channel.
 
 use crate::util::rng::Pcg32;
+use super::transport::{self, TransportConfig, TransportStats};
 use super::{dbm_to_watt, db_to_linear, shannon_rate, uplink_time};
 
 /// How the uplink band B is shared across the fleet.
@@ -332,6 +333,17 @@ impl Channel {
     /// One synchronous round over an *unreliable* uplink (the abstract's
     /// "unreliable network connections may obstruct ... communication").
     ///
+    /// **Deprecated path** — the legacy whole-update outage knobs
+    /// (`wireless.outage_prob`/`max_retries`), kept for existing specs.
+    /// Since the transport layer landed this is a thin wrapper over
+    /// [`transport::simulate_fleet`] with the degenerate config
+    /// ([`TransportConfig::degenerate_outage`]: one chunk, zero
+    /// timeout/backoff), run over the channel's own RNG stream so it
+    /// consumes *exactly* the draws the old hand-rolled retry loop did —
+    /// existing runs keep their numbers bit for bit (pinned by
+    /// `outage_matches_legacy_retry_loop_bit_for_bit`). New configs
+    /// should use the `[transport]` section instead.
+    ///
     /// Each transmission independently fails with probability
     /// `outage_prob`; a failed device retries (each retry costs another
     /// full uplink) up to `max_retries` total attempts, after which its
@@ -350,23 +362,39 @@ impl Channel {
         assert!(max_retries >= 1);
         let gains = self.draw_gains();
         let base = self.uplink_times(&gains, update_bits);
-        let mut spent = Vec::with_capacity(base.len());
-        let mut delivered = Vec::with_capacity(base.len());
-        for &t in &base {
-            let mut attempts = 0usize;
-            let mut ok = false;
-            while attempts < max_retries {
-                attempts += 1;
-                if self.rng.uniform() >= outage_prob {
-                    ok = true;
-                    break;
-                }
-            }
-            spent.push(attempts as f64 * t);
-            delivered.push(ok);
-        }
+        let legacy = TransportConfig::degenerate_outage(outage_prob, max_retries);
+        let bursts = vec![false; base.len()];
+        let (spent, delivered, _) =
+            transport::simulate_fleet(&legacy, &mut self.rng, &base, update_bits, &bursts);
         let t_cm = super::round_time(&spent);
         (spent, t_cm, delivered)
+    }
+
+    /// One synchronous round over the chunked-ARQ transport (DESIGN.md
+    /// §14): draw this round's gains, split each device's update into
+    /// chunks, and push them through [`transport::simulate_device`]'s
+    /// loss/corruption/backoff machinery. Devices currently in the
+    /// `[drift]` Gilbert–Elliott bad state see the boosted burst loss.
+    ///
+    /// The transport draws from `rng` — the coordinator-owned dedicated
+    /// stream — never from the channel's fading stream, so a
+    /// transport-off run stays byte-identical (`rust/tests/transport.rs`).
+    ///
+    /// Returns (per-device billed seconds, round T_cm over time *spent*,
+    /// delivered flags, fleet [`TransportStats`]).
+    pub fn round_with_transport(
+        &mut self,
+        update_bits: f64,
+        t: &TransportConfig,
+        rng: &mut Pcg32,
+    ) -> (Vec<f64>, f64, Vec<bool>, TransportStats) {
+        let gains = self.draw_gains();
+        let base = self.uplink_times(&gains, update_bits);
+        let bursts: Vec<bool> = (0..base.len()).map(|i| self.in_burst(i)).collect();
+        let (spent, delivered, stats) =
+            transport::simulate_fleet(t, rng, &base, update_bits, &bursts);
+        let t_cm = super::round_time(&spent);
+        (spent, t_cm, delivered, stats)
     }
 
     /// Expected (fading-free) synchronous communication time — used by the
@@ -377,6 +405,18 @@ impl Channel {
     pub fn expected_round_time(&self, update_bits: f64) -> f64 {
         let slowest = self.mean_rates.iter().fold(f64::INFINITY, |m, &r| m.min(r));
         uplink_time(update_bits, slowest)
+    }
+
+    /// [`Channel::expected_round_time`] inflated by the transport's
+    /// expected ARQ cost ([`TransportConfig::expected_uplink_seconds`]):
+    /// what a *loss-aware* planner should price as `T_cm` on an
+    /// unreliable link. Identity when the transport is disabled.
+    pub fn expected_round_time_with_transport(
+        &self,
+        update_bits: f64,
+        t: &TransportConfig,
+    ) -> f64 {
+        t.expected_uplink_seconds(self.expected_round_time(update_bits), update_bits)
     }
 
     /// Fading-free synchronous communication time at the *current* drift
@@ -521,6 +561,125 @@ mod tests {
         let (_, t_clean) = ch2.round(1e6);
         // retransmissions can only slow the synchronous round
         assert!(t_out >= t_clean * 0.99, "{t_out} vs {t_clean}");
+    }
+
+    #[test]
+    fn outage_matches_legacy_retry_loop_bit_for_bit() {
+        // The satellite-1 pin: round_with_outage is now the degenerate
+        // transport, but it must consume exactly the draws the seed
+        // repo's hand-rolled retry loop consumed — one uniform per
+        // attempt, success iff u ≥ outage_prob — so existing specs keep
+        // their numbers. The legacy loop is re-rolled here verbatim.
+        for (p, retries, seed) in [(0.3, 4, 11u64), (0.7, 2, 12), (0.0, 3, 13), (1.0, 3, 14)] {
+            let mut ch = Channel::new(ChannelConfig::default(), 12, seed);
+            let (spent, t_cm, delivered) = ch.round_with_outage(2e6, p, retries);
+            let mut legacy = Channel::new(ChannelConfig::default(), 12, seed);
+            let gains = legacy.draw_gains();
+            let base = legacy.uplink_times(&gains, 2e6);
+            let mut spent_l = Vec::new();
+            let mut delivered_l = Vec::new();
+            for &t in &base {
+                let mut attempts = 0usize;
+                let mut ok = false;
+                while attempts < retries {
+                    attempts += 1;
+                    if legacy.rng.uniform() >= p {
+                        ok = true;
+                        break;
+                    }
+                }
+                spent_l.push(attempts as f64 * t);
+                delivered_l.push(ok);
+            }
+            assert_eq!(spent, spent_l, "p={p}");
+            assert_eq!(delivered, delivered_l, "p={p}");
+            assert_eq!(t_cm, spent_l.iter().copied().fold(0.0, f64::max));
+            // and both channels' RNG streams stay in lockstep afterwards
+            assert_eq!(ch.rng.uniform(), legacy.rng.uniform(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn transport_total_loss_drops_everyone_but_costs_time() {
+        // the satellite-2 hazard pin for the new path, alongside
+        // outage_one_drops_everyone_but_costs_time: an all-undelivered
+        // transport round still reports every second actually spent.
+        let mut t = TransportConfig::default();
+        t.chunk_loss_prob = 1.0;
+        t.chunk_bits = 1e6;
+        t.ack_timeout_s = 0.05;
+        t.backoff_base_s = 0.02;
+        t.backoff_cap_s = 0.08;
+        t.max_attempts = 3;
+        let mut ch = Channel::new(ChannelConfig::default(), 8, 1);
+        let mut rng = Pcg32::new(1 ^ 0x7A27, 0x7A27);
+        let (spent, t_cm, delivered, stats) = ch.round_with_transport(2e6, &t, &mut rng);
+        assert!(delivered.iter().all(|&d| !d));
+        assert_eq!(stats.gave_up, 8);
+        assert!(t_cm > 0.0, "all-undelivered round must still bill its time");
+        // p = 1 is deterministic: each device pays exactly the analytic cost
+        let mut ch2 = Channel::new(ChannelConfig::default(), 8, 1);
+        let gains = ch2.draw_gains();
+        let base = ch2.uplink_times(&gains, 2e6);
+        for (s, b) in spent.iter().zip(&base) {
+            let expect = t.expected_uplink_seconds(*b, 2e6);
+            assert!((s - expect).abs() < 1e-9, "{s} vs {expect}");
+            assert!(*s > *b, "retries cost strictly more than one clean uplink");
+        }
+    }
+
+    #[test]
+    fn transport_round_leaves_channel_stream_untouched() {
+        // the transport draws only from its dedicated stream: a lossy
+        // round and a clean round consume identical fading draws, so the
+        // next round's gains agree bit for bit.
+        let mut t = TransportConfig::default();
+        t.chunk_loss_prob = 0.4;
+        let mut with_t = Channel::new(ChannelConfig::default(), 6, 42);
+        let mut rng = Pcg32::new(42 ^ 0x7A27, 0x7A27);
+        let _ = with_t.round_with_transport(1e6, &t, &mut rng);
+        let mut clean = Channel::new(ChannelConfig::default(), 6, 42);
+        let _ = clean.round(1e6);
+        assert_eq!(with_t.draw_gains(), clean.draw_gains());
+    }
+
+    #[test]
+    fn transport_burst_devices_pay_more_in_expectation() {
+        // GE bad state boosts per-chunk loss to sqrt(p): same device,
+        // same base time, strictly costlier mean while in a burst.
+        let mut t = TransportConfig::default();
+        t.chunk_loss_prob = 0.09;
+        t.chunk_bits = 5e5;
+        t.max_attempts = 5;
+        let mut rng = Pcg32::seeded(3);
+        let trials = 4000;
+        let (mut calm, mut burst) = (0.0, 0.0);
+        for _ in 0..trials {
+            calm += transport::simulate_device(&t, &mut rng, 1.0, 2e6, false).seconds;
+            burst += transport::simulate_device(&t, &mut rng, 1.0, 2e6, true).seconds;
+        }
+        assert!(
+            burst / trials as f64 > calm / trials as f64 * 1.05,
+            "burst {} vs calm {}",
+            burst / trials as f64,
+            calm / trials as f64
+        );
+    }
+
+    #[test]
+    fn expected_round_time_with_transport_prices_the_loss() {
+        let ch = Channel::new(ChannelConfig::default(), 8, 5);
+        let off = TransportConfig::default();
+        assert_eq!(
+            ch.expected_round_time_with_transport(1e6, &off),
+            ch.expected_round_time(1e6),
+            "disabled transport must not move the planner's T_cm"
+        );
+        let mut on = TransportConfig::default();
+        on.chunk_loss_prob = 0.2;
+        assert!(
+            ch.expected_round_time_with_transport(1e6, &on) > ch.expected_round_time(1e6)
+        );
     }
 
     #[test]

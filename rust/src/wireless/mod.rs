@@ -17,8 +17,11 @@
 
 /// The cellular channel substrate (placement, fading, drift).
 pub mod channel;
+/// Unreliable-link transport: chunked ARQ, backoff, CRC (DESIGN.md §14).
+pub mod transport;
 
 pub use channel::{Channel, ChannelConfig, DeviceLink, DriftConfig};
+pub use transport::{TransportConfig, TransportStats};
 
 /// Convert dBm to watts.
 pub fn dbm_to_watt(dbm: f64) -> f64 {

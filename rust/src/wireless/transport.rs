@@ -1,0 +1,722 @@
+//! Unreliable-link transport: chunked ARQ with timeout/backoff and CRC.
+//!
+//! The abstract warns that "unreliable network connections may obstruct
+//! an efficient communication of these updates"; the seed repo's only
+//! failure model was a whole-update Bernoulli outage with flat retries
+//! ([`crate::wireless::Channel::round_with_outage`]), invisible to the
+//! eq. (29) planner. This module replaces it with a real transport
+//! contract:
+//!
+//! * **Chunking.** Each encoded update of `s` bits is split into
+//!   `⌈s / chunk_bits⌉` equal chunks, each billed `s/n` seconds of the
+//!   device's uplink time per transmission attempt.
+//! * **Erasures.** Every chunk attempt is independently lost with
+//!   probability `chunk_loss_prob` — or, when the device currently sits
+//!   in the `[drift]` Gilbert–Elliott bad state
+//!   ([`crate::wireless::Channel::in_burst`]), with the boosted
+//!   `sqrt(chunk_loss_prob)`, so burst rounds erase in bursts.
+//! * **Corruption.** A chunk that arrives is still corrupted with
+//!   probability `corrupt_prob`; the receiver detects it via a CRC-32
+//!   over the [`EncodedDelta`] wire buffer ([`delta_crc`]) and NAKs —
+//!   detection is billed like a loss (timeout + retransmission).
+//! * **ARQ.** A failed attempt costs `ack_timeout_s` of dead air; the
+//!   k-th retransmission of a chunk first waits
+//!   `min(backoff_base_s · 2^(k−1), backoff_cap_s)`. Each chunk gets at
+//!   most `max_attempts` sends; a device with any undelivered chunk
+//!   **degrades** into the engines' undelivered/straggler path (its
+//!   update is dropped from aggregation) but every second it spent —
+//!   retransmissions, timeouts, backoff — still counts against the
+//!   synchronous round (eq. (7) over time *spent*, not time *useful*).
+//! * **Pricing.** [`TransportConfig::expected_uplink_seconds`] is the
+//!   closed-form expectation of the simulated cost; with
+//!   `loss_aware = true` (default) the coordinator feeds it into the
+//!   DEFL plan's `T_cm`, so eq. (29) shifts toward fewer, larger rounds
+//!   on lossy links. `loss_aware = false` keeps the planner blind — the
+//!   ablation axis `specs/ablation_transport.toml` sweeps.
+//!
+//! **Determinism.** The transport draws from a dedicated RNG stream
+//! owned by the coordinator (`seed ^ 0x7A27`), so enabling it never
+//! perturbs fading/placement/data draws — and a disabled transport
+//! (`chunk_loss_prob = corrupt_prob = 0`, the default) draws nothing
+//! and is byte-identical to the pre-transport pipeline (pinned by
+//! `rust/tests/transport.rs`).
+//!
+//! **Legacy knobs.** `wireless.outage_prob`/`max_retries` are now a
+//! degenerate transport config ([`TransportConfig::degenerate_outage`]:
+//! one chunk, zero timeout/backoff) run over the channel's own RNG
+//! stream, consuming *exactly* the draws the old hand-rolled retry loop
+//! consumed — existing specs keep their numbers bit for bit (pinned in
+//! `channel.rs::outage_matches_legacy_retry_loop_bit_for_bit`).
+
+use crate::codec::{EncodedDelta, Payload};
+use crate::util::rng::Pcg32;
+
+/// `[transport]` configuration: chunked ARQ over an unreliable uplink.
+/// Defaults are **off** (`chunk_loss_prob = corrupt_prob = 0`): no RNG
+/// draws, no time added, byte-identical to the reliable channel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransportConfig {
+    /// Chunk size in bits; an `s`-bit update is sent as `⌈s/chunk_bits⌉`
+    /// chunks. `inf` (or anything ≥ the update) sends one chunk.
+    pub chunk_bits: f64,
+    /// Per-chunk-attempt erasure probability (Gilbert–Elliott bad state
+    /// boosts it to `sqrt(chunk_loss_prob)`). 0 disables loss.
+    pub chunk_loss_prob: f64,
+    /// Probability a delivered chunk is corrupted in flight; detected by
+    /// the CRC ([`delta_crc`]) and retransmitted. 0 disables corruption.
+    pub corrupt_prob: f64,
+    /// Dead-air seconds a device waits before declaring a chunk lost.
+    pub ack_timeout_s: f64,
+    /// First-retransmission backoff wait (doubles per failure). 0
+    /// disables backoff entirely.
+    pub backoff_base_s: f64,
+    /// Cap on the exponential backoff wait.
+    pub backoff_cap_s: f64,
+    /// Per-chunk send budget (first try + retransmissions); a chunk that
+    /// exhausts it makes the whole update undelivered this round.
+    pub max_attempts: usize,
+    /// Price the expected ARQ inflation into the DEFL plan's `T_cm`
+    /// (true, default) or keep the planner loss-blind (the ablation).
+    pub loss_aware: bool,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            chunk_bits: 262_144.0, // 256 kbit — a handful of chunks per update
+            chunk_loss_prob: 0.0,
+            corrupt_prob: 0.0,
+            ack_timeout_s: 0.02,
+            backoff_base_s: 0.01,
+            backoff_cap_s: 0.1,
+            max_attempts: 4,
+            loss_aware: true,
+        }
+    }
+}
+
+impl TransportConfig {
+    /// Whether the unreliable-link model is active at all.
+    pub fn enabled(&self) -> bool {
+        self.chunk_loss_prob > 0.0 || self.corrupt_prob > 0.0
+    }
+
+    /// Range checks for the `[transport]` section.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.chunk_bits.is_nan() && self.chunk_bits >= 1.0,
+            "transport.chunk_bits must be ≥ 1 bit (inf = one chunk; got {})",
+            self.chunk_bits
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.chunk_loss_prob),
+            "transport.chunk_loss_prob must be a probability (got {})",
+            self.chunk_loss_prob
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.corrupt_prob),
+            "transport.corrupt_prob must be a probability (got {})",
+            self.corrupt_prob
+        );
+        anyhow::ensure!(
+            self.ack_timeout_s.is_finite() && self.ack_timeout_s >= 0.0,
+            "transport.ack_timeout_s must be finite and ≥ 0 (got {})",
+            self.ack_timeout_s
+        );
+        anyhow::ensure!(
+            self.backoff_base_s.is_finite() && self.backoff_base_s >= 0.0,
+            "transport.backoff_base_s must be finite and ≥ 0 (got {})",
+            self.backoff_base_s
+        );
+        anyhow::ensure!(
+            self.backoff_cap_s.is_finite() && self.backoff_cap_s >= self.backoff_base_s,
+            "transport.backoff_cap_s ({}) must be finite and ≥ backoff_base_s ({})",
+            self.backoff_cap_s,
+            self.backoff_base_s
+        );
+        anyhow::ensure!(self.max_attempts >= 1, "transport.max_attempts must be ≥ 1");
+        Ok(())
+    }
+
+    /// The legacy `wireless.outage_prob`/`max_retries` knobs as a
+    /// degenerate transport: one whole-update chunk, zero timeout, zero
+    /// backoff, no corruption, loss-blind planner — consuming exactly
+    /// one uniform draw per attempt, like the old retry loop.
+    pub fn degenerate_outage(outage_prob: f64, max_retries: usize) -> Self {
+        TransportConfig {
+            chunk_bits: f64::INFINITY,
+            chunk_loss_prob: outage_prob,
+            corrupt_prob: 0.0,
+            ack_timeout_s: 0.0,
+            backoff_base_s: 0.0,
+            backoff_cap_s: 0.0,
+            max_attempts: max_retries,
+            loss_aware: false,
+        }
+    }
+
+    /// Chunks an `update_bits` update is split into (≥ 1).
+    pub fn n_chunks(&self, update_bits: f64) -> usize {
+        if !self.chunk_bits.is_finite() || self.chunk_bits <= 0.0 {
+            return 1;
+        }
+        (update_bits / self.chunk_bits).ceil().max(1.0) as usize
+    }
+
+    /// Per-attempt erasure probability: the configured loss, boosted to
+    /// its square root (closer to 1) while the device sits in the
+    /// Gilbert–Elliott bad state. 0 stays 0 — a corruption-only config
+    /// is burst-immune.
+    pub fn loss_prob(&self, in_burst: bool) -> f64 {
+        if in_burst {
+            self.chunk_loss_prob.sqrt()
+        } else {
+            self.chunk_loss_prob
+        }
+    }
+
+    /// Probability one chunk attempt fails for *any* reason (erased, or
+    /// delivered-but-corrupt): `l + (1−l)·corrupt_prob`.
+    pub fn attempt_failure_prob(&self, in_burst: bool) -> f64 {
+        let l = self.loss_prob(in_burst);
+        l + (1.0 - l) * self.corrupt_prob
+    }
+
+    /// Backoff wait before the retransmission that follows `failures`
+    /// consecutive failures of a chunk: `min(base·2^(f−1), cap)`.
+    pub fn backoff_s(&self, failures: usize) -> f64 {
+        debug_assert!(failures >= 1);
+        if self.backoff_base_s <= 0.0 {
+            return 0.0;
+        }
+        (self.backoff_base_s * 2f64.powi(failures as i32 - 1)).min(self.backoff_cap_s)
+    }
+
+    /// E\[sends per chunk\] under per-attempt failure probability `p`
+    /// with the `max_attempts` budget: `(1 − p^A)/(1 − p)` (= `A` at
+    /// `p = 1`).
+    fn expected_sends(&self, p: f64) -> f64 {
+        let a = self.max_attempts as f64;
+        if p >= 1.0 {
+            a
+        } else {
+            (1.0 - p.powi(self.max_attempts as i32)) / (1.0 - p)
+        }
+    }
+
+    /// The expected ARQ inflation factor on transmission time alone —
+    /// the `E[attempts] ≈ 1/(1−p)` of the issue, truncated at the
+    /// attempt budget. Steady-state (non-burst) channel.
+    pub fn expected_attempts(&self) -> f64 {
+        self.expected_sends(self.attempt_failure_prob(false))
+    }
+
+    /// Closed-form expectation of [`simulate_device`]'s billed seconds
+    /// for a device whose clean one-shot uplink takes `base_seconds`:
+    ///
+    /// ```text
+    /// E[T] = E[sends]·base  +  n·( p·E[sends]·ack  +  Σ_{k=1}^{A−1} p^k·backoff(k) )
+    /// ```
+    ///
+    /// (per chunk: every send bills `base/n`, every *failed* send bills
+    /// the ack timeout — E\[fails\] = p·E\[sends\] — and the wait before
+    /// retransmission k+1 happens iff the first k attempts all failed.)
+    /// Returns `base_seconds` untouched when the transport is disabled.
+    /// This is what the loss-aware planner prices into `T_cm`; the
+    /// property test `prop_expected_uplink_matches_simulated_mean` pins
+    /// it against the seeded simulation.
+    pub fn expected_uplink_seconds(&self, base_seconds: f64, update_bits: f64) -> f64 {
+        if !self.enabled() {
+            return base_seconds;
+        }
+        let p = self.attempt_failure_prob(false);
+        let sends = self.expected_sends(p);
+        let n = self.n_chunks(update_bits) as f64;
+        let mut per_chunk_overhead = p * sends * self.ack_timeout_s;
+        let mut pk = 1.0;
+        for k in 1..self.max_attempts {
+            pk *= p;
+            per_chunk_overhead += pk * self.backoff_s(k);
+        }
+        sends * base_seconds + n * per_chunk_overhead
+    }
+}
+
+/// What one device's uplink attempt cost this round.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceOutcome {
+    /// Wall seconds billed: transmissions + ack timeouts + backoff.
+    pub seconds: f64,
+    /// Whether every chunk made it within the attempt budget.
+    pub delivered: bool,
+    /// Retransmissions (sends beyond each chunk's first).
+    pub retransmits: usize,
+    /// Chunks that arrived corrupted and were caught by the CRC.
+    pub corrupt_detected: usize,
+    /// Seconds of the total spent in backoff waits.
+    pub backoff_s: f64,
+}
+
+/// Per-round fleet totals of the transport counters — stamped into the
+/// metrics columns (`retransmits`/`corrupt_detected`/`gave_up`/`backoff_s`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportStats {
+    /// Total retransmissions across the fleet.
+    pub retransmits: usize,
+    /// Total CRC-caught corruptions across the fleet.
+    pub corrupt_detected: usize,
+    /// Devices that exhausted a chunk's attempt budget (undelivered).
+    pub gave_up: usize,
+    /// Total seconds the fleet spent in backoff waits.
+    pub backoff_s: f64,
+}
+
+/// Push one device's update through the ARQ: per chunk, send (billing
+/// `base_seconds/n`), draw an erasure, then — only when `corrupt_prob`
+/// is live — a corruption; a failure bills the ack timeout, and
+/// retransmission k first waits `backoff_s(k)`. All chunks are always
+/// attempted, even after one exhausts its budget: the sender cannot know
+/// the round outcome early, and unconditional attempts keep the
+/// simulated mean equal to [`TransportConfig::expected_uplink_seconds`].
+pub fn simulate_device(
+    cfg: &TransportConfig,
+    rng: &mut Pcg32,
+    base_seconds: f64,
+    update_bits: f64,
+    in_burst: bool,
+) -> DeviceOutcome {
+    let n = cfg.n_chunks(update_bits);
+    let t_chunk = base_seconds / n as f64;
+    let p_loss = cfg.loss_prob(in_burst);
+    let mut out = DeviceOutcome {
+        seconds: 0.0,
+        delivered: true,
+        retransmits: 0,
+        corrupt_detected: 0,
+        backoff_s: 0.0,
+    };
+    for _ in 0..n {
+        let mut failures = 0usize;
+        let mut ok = false;
+        while failures < cfg.max_attempts {
+            if failures > 0 {
+                let wait = cfg.backoff_s(failures);
+                out.seconds += wait;
+                out.backoff_s += wait;
+                out.retransmits += 1;
+            }
+            out.seconds += t_chunk;
+            if rng.uniform() < p_loss {
+                out.seconds += cfg.ack_timeout_s;
+                failures += 1;
+                continue;
+            }
+            if cfg.corrupt_prob > 0.0 && rng.uniform() < cfg.corrupt_prob {
+                out.corrupt_detected += 1;
+                out.seconds += cfg.ack_timeout_s;
+                failures += 1;
+                continue;
+            }
+            ok = true;
+            break;
+        }
+        if !ok {
+            out.delivered = false;
+        }
+    }
+    out
+}
+
+/// [`simulate_device`] over a fleet: `base` holds each device's clean
+/// one-shot uplink seconds, `in_burst` its current Gilbert–Elliott
+/// state. Returns (per-device billed seconds, delivered flags, summed
+/// [`TransportStats`]).
+pub fn simulate_fleet(
+    cfg: &TransportConfig,
+    rng: &mut Pcg32,
+    base: &[f64],
+    update_bits: f64,
+    in_burst: &[bool],
+) -> (Vec<f64>, Vec<bool>, TransportStats) {
+    let mut times = Vec::with_capacity(base.len());
+    let mut delivered = Vec::with_capacity(base.len());
+    let mut stats = TransportStats::default();
+    for (i, &b) in base.iter().enumerate() {
+        let burst = in_burst.get(i).copied().unwrap_or(false);
+        let o = simulate_device(cfg, rng, b, update_bits, burst);
+        times.push(o.seconds);
+        delivered.push(o.delivered);
+        stats.retransmits += o.retransmits;
+        stats.corrupt_detected += o.corrupt_detected;
+        stats.backoff_s += o.backoff_s;
+        if !o.delivered {
+            stats.gave_up += 1;
+        }
+    }
+    (times, delivered, stats)
+}
+
+/// Streaming CRC-32 (IEEE 802.3, poly `0xEDB88320`, bitwise).
+#[derive(Clone, Copy)]
+struct Crc32(u32);
+
+impl Crc32 {
+    fn new() -> Self {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.0;
+        for &b in bytes {
+            crc ^= u32::from(b);
+            for _ in 0..8 {
+                let mask = (crc & 1).wrapping_neg();
+                crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+            }
+        }
+        self.0 = crc;
+    }
+
+    fn finish(self) -> u32 {
+        !self.0
+    }
+}
+
+/// CRC-32 (IEEE) of a byte buffer.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// CRC-32 over an [`EncodedDelta`]'s full wire content — every leaf's
+/// payload tag, length, value width, scale and buffers, little-endian.
+/// Any single flipped bit in any field changes the digest (pinned by
+/// `crc_detects_any_single_field_flip`); this is the corruption check
+/// the transport's `corrupt_prob` NAK path models.
+pub fn delta_crc(delta: &EncodedDelta) -> u32 {
+    let mut c = Crc32::new();
+    for leaf in &delta.leaves {
+        let tag: u8 = match leaf.payload {
+            Payload::Dense => 0,
+            Payload::Quant => 1,
+            Payload::TopK => 2,
+            Payload::TopKQuant => 3,
+        };
+        c.update(&[tag]);
+        c.update(&(leaf.len as u64).to_le_bytes());
+        c.update(&leaf.value_bits.to_le_bytes());
+        c.update(&leaf.scale.to_bits().to_le_bytes());
+        for v in &leaf.dense {
+            c.update(&v.to_bits().to_le_bytes());
+        }
+        for i in &leaf.idx {
+            c.update(&i.to_le_bytes());
+        }
+        for v in &leaf.vals {
+            c.update(&v.to_bits().to_le_bytes());
+        }
+        for q in &leaf.q {
+            c.update(&q.to_le_bytes());
+        }
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::EncodedLeaf;
+    use crate::util::prop;
+
+    fn lossy(p: f64) -> TransportConfig {
+        let mut t = TransportConfig::default();
+        t.chunk_loss_prob = p;
+        t
+    }
+
+    #[test]
+    fn defaults_are_off_and_validate() {
+        let t = TransportConfig::default();
+        assert!(!t.enabled());
+        assert!(t.validate().is_ok());
+        assert!(t.loss_aware);
+        assert!(lossy(0.1).enabled());
+        let mut c = TransportConfig::default();
+        c.corrupt_prob = 1e-3;
+        assert!(c.enabled());
+    }
+
+    #[test]
+    fn validation_rejects_out_of_range_knobs() {
+        let mut t = TransportConfig::default();
+        t.chunk_bits = 0.5;
+        assert!(t.validate().is_err(), "sub-bit chunks");
+        let mut t = TransportConfig::default();
+        t.chunk_bits = f64::NAN;
+        assert!(t.validate().is_err());
+        let mut t = TransportConfig::default();
+        t.chunk_bits = f64::INFINITY;
+        assert!(t.validate().is_ok(), "inf = one chunk is legal");
+        let mut t = TransportConfig::default();
+        t.chunk_loss_prob = 1.5;
+        assert!(t.validate().is_err());
+        let mut t = TransportConfig::default();
+        t.corrupt_prob = -0.1;
+        assert!(t.validate().is_err());
+        let mut t = TransportConfig::default();
+        t.ack_timeout_s = -1.0;
+        assert!(t.validate().is_err());
+        let mut t = TransportConfig::default();
+        t.backoff_cap_s = t.backoff_base_s / 2.0;
+        assert!(t.validate().is_err(), "cap below base");
+        let mut t = TransportConfig::default();
+        t.max_attempts = 0;
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn chunk_count_ceils_and_inf_means_one() {
+        let mut t = TransportConfig::default();
+        t.chunk_bits = 1000.0;
+        assert_eq!(t.n_chunks(1.0), 1);
+        assert_eq!(t.n_chunks(1000.0), 1);
+        assert_eq!(t.n_chunks(1001.0), 2);
+        assert_eq!(t.n_chunks(5500.0), 6);
+        t.chunk_bits = f64::INFINITY;
+        assert_eq!(t.n_chunks(1e12), 1);
+    }
+
+    #[test]
+    fn degenerate_outage_matches_legacy_shape() {
+        let t = TransportConfig::degenerate_outage(0.3, 5);
+        assert!(t.validate().is_ok());
+        assert!(t.enabled());
+        assert!(!t.loss_aware, "legacy knobs never priced the planner");
+        assert_eq!(t.n_chunks(3.3e6), 1);
+        assert_eq!(t.ack_timeout_s, 0.0);
+        assert_eq!(t.backoff_s(1), 0.0);
+        assert_eq!(t.max_attempts, 5);
+        assert!(!TransportConfig::degenerate_outage(0.0, 3).enabled());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let mut t = TransportConfig::default();
+        t.backoff_base_s = 0.01;
+        t.backoff_cap_s = 0.05;
+        assert_eq!(t.backoff_s(1), 0.01);
+        assert_eq!(t.backoff_s(2), 0.02);
+        assert_eq!(t.backoff_s(3), 0.04);
+        assert_eq!(t.backoff_s(4), 0.05, "capped");
+        assert_eq!(t.backoff_s(10), 0.05);
+        t.backoff_base_s = 0.0;
+        assert_eq!(t.backoff_s(3), 0.0, "no-backoff config");
+    }
+
+    #[test]
+    fn burst_state_boosts_loss_but_not_from_zero() {
+        let t = lossy(0.09);
+        assert_eq!(t.loss_prob(false), 0.09);
+        assert!((t.loss_prob(true) - 0.3).abs() < 1e-12, "sqrt boost");
+        let mut c = TransportConfig::default();
+        c.corrupt_prob = 0.01;
+        assert_eq!(c.loss_prob(true), 0.0, "corruption-only is burst-immune");
+        // combined failure probability composes loss then corruption
+        let mut b = lossy(0.2);
+        b.corrupt_prob = 0.1;
+        assert!((b.attempt_failure_prob(false) - (0.2 + 0.8 * 0.1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_loss_transport_bills_exactly_the_base_time() {
+        let mut t = TransportConfig::default();
+        t.chunk_bits = 1e5;
+        let mut rng = Pcg32::seeded(1);
+        let o = simulate_device(&t, &mut rng, 0.7, 3.3e5, false);
+        assert!(o.delivered);
+        assert!((o.seconds - 0.7).abs() < 1e-12);
+        assert_eq!(o.retransmits + o.corrupt_detected, 0);
+        assert_eq!(o.backoff_s, 0.0);
+    }
+
+    #[test]
+    fn simulation_is_deterministic_per_seed() {
+        let mut t = lossy(0.3);
+        t.corrupt_prob = 0.05;
+        t.chunk_bits = 1e5;
+        let base = [0.4, 0.9, 0.2];
+        let bursts = [false, true, false];
+        let mut r1 = Pcg32::new(9, 0x7A27);
+        let mut r2 = Pcg32::new(9, 0x7A27);
+        let a = simulate_fleet(&t, &mut r1, &base, 5e5, &bursts);
+        let b = simulate_fleet(&t, &mut r2, &base, 5e5, &bursts);
+        assert_eq!(a, b);
+        let mut r3 = Pcg32::new(10, 0x7A27);
+        let c = simulate_fleet(&t, &mut r3, &base, 5e5, &bursts);
+        assert_ne!(a.0, c.0, "different seed, different draws");
+    }
+
+    #[test]
+    fn total_loss_is_deterministic_and_matches_the_analytic_cost() {
+        // p = 1 exhausts every chunk's budget: no randomness left, so
+        // the simulated bill must equal the closed form exactly.
+        let mut t = lossy(1.0);
+        t.chunk_bits = 1e5;
+        t.ack_timeout_s = 0.02;
+        t.backoff_base_s = 0.01;
+        t.backoff_cap_s = 0.03;
+        t.max_attempts = 4;
+        let base = 0.8;
+        let bits = 3e5; // 3 chunks
+        let mut rng = Pcg32::seeded(5);
+        let o = simulate_device(&t, &mut rng, base, bits, false);
+        assert!(!o.delivered);
+        assert_eq!(o.retransmits, 3 * 3, "3 retransmissions per chunk");
+        assert_eq!(o.corrupt_detected, 0);
+        let expect = t.expected_uplink_seconds(base, bits);
+        assert!((o.seconds - expect).abs() < 1e-12, "{} vs {expect}", o.seconds);
+        // and the bill decomposes: 4 sends × base + 3 chunks × (4 acks + waits)
+        let waits = 0.01 + 0.02 + 0.03;
+        let hand = 4.0 * base + 3.0 * (4.0 * 0.02 + waits);
+        assert!((o.seconds - hand).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_attempts_truncates_the_geometric_series() {
+        let mut t = lossy(0.5);
+        t.max_attempts = 3;
+        // 1 + 0.5 + 0.25
+        assert!((t.expected_attempts() - 1.75).abs() < 1e-12);
+        t.max_attempts = 1;
+        assert!((t.expected_attempts() - 1.0).abs() < 1e-12);
+        let mut sure = lossy(1.0);
+        sure.max_attempts = 6;
+        assert_eq!(sure.expected_attempts(), 6.0);
+    }
+
+    #[test]
+    fn expected_uplink_disabled_is_identity_and_loss_inflates() {
+        let off = TransportConfig::default();
+        assert_eq!(off.expected_uplink_seconds(1.23, 1e6), 1.23);
+        let mut on = lossy(0.2);
+        on.chunk_bits = 1e5;
+        assert!(on.expected_uplink_seconds(1.23, 1e6) > 1.23);
+        // more loss, more expected time
+        let mut worse = on.clone();
+        worse.chunk_loss_prob = 0.4;
+        assert!(
+            worse.expected_uplink_seconds(1.23, 1e6) > on.expected_uplink_seconds(1.23, 1e6)
+        );
+    }
+
+    #[test]
+    fn prop_expected_uplink_matches_simulated_mean() {
+        // The pricing contract: the closed form the planner consumes is
+        // the true mean of the seeded simulation, across a
+        // (loss × attempts × backoff × chunking) grid.
+        prop::check(0x7A27_2024, 12, |g| {
+            let mut t = TransportConfig::default();
+            t.chunk_loss_prob = g.f64_in(0.05, 0.45);
+            t.corrupt_prob = if g.bool() { g.f64_in(0.0, 0.05) } else { 0.0 };
+            t.max_attempts = g.usize_in(2, 5);
+            t.ack_timeout_s = g.f64_in(0.0, 0.05);
+            t.backoff_base_s = g.f64_in(0.0, 0.03);
+            t.backoff_cap_s = t.backoff_base_s * g.f64_in(1.0, 4.0);
+            t.chunk_bits = 1e5;
+            let bits = g.f64_in(1e5, 8e5); // 1..8 chunks
+            let base = g.f64_in(0.1, 2.0);
+            let trials = 3000usize;
+            let mut rng = Pcg32::seeded(g.rng.next_u64());
+            let mut sum = 0.0;
+            for _ in 0..trials {
+                sum += simulate_device(&t, &mut rng, base, bits, false).seconds;
+            }
+            let mean = sum / trials as f64;
+            prop::close(
+                mean,
+                t.expected_uplink_seconds(base, bits),
+                0.05,
+                "simulated mean vs analytic expectation",
+            )
+        });
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // the canonical CRC-32 test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"123456788"), crc32(b"123456789"));
+    }
+
+    fn sample_delta() -> EncodedDelta {
+        let mut d = EncodedDelta::new();
+        let mut dense = EncodedLeaf::default();
+        dense.payload = Payload::Dense;
+        dense.len = 3;
+        dense.value_bits = 32;
+        dense.dense = vec![0.5, -1.25, 3.0];
+        let mut topk = EncodedLeaf::default();
+        topk.payload = Payload::TopKQuant;
+        topk.len = 8;
+        topk.value_bits = 8;
+        topk.scale = 0.125;
+        topk.idx = vec![1, 5, 7];
+        topk.q = vec![-3, 12, 7];
+        d.leaves = vec![dense, topk];
+        d
+    }
+
+    #[test]
+    fn crc_detects_any_single_field_flip() {
+        let clean = sample_delta();
+        let digest = delta_crc(&clean);
+        assert_eq!(digest, delta_crc(&clean.clone()), "pure function");
+        // flip one mantissa bit of one dense value
+        let mut m = sample_delta();
+        m.leaves[0].dense[1] = f32::from_bits(m.leaves[0].dense[1].to_bits() ^ 1);
+        assert_ne!(delta_crc(&m), digest);
+        // perturb one sparse index
+        let mut m = sample_delta();
+        m.leaves[1].idx[2] ^= 1;
+        assert_ne!(delta_crc(&m), digest);
+        // perturb one quantized level
+        let mut m = sample_delta();
+        m.leaves[1].q[0] ^= 1;
+        assert_ne!(delta_crc(&m), digest);
+        // perturb the scale
+        let mut m = sample_delta();
+        m.leaves[1].scale = f32::from_bits(m.leaves[1].scale.to_bits() ^ 1);
+        assert_ne!(delta_crc(&m), digest);
+        // payload tag matters too
+        let mut m = sample_delta();
+        m.leaves[0].payload = Payload::Quant;
+        assert_ne!(delta_crc(&m), digest);
+    }
+
+    #[test]
+    fn fleet_stats_sum_per_device_outcomes() {
+        let mut t = lossy(0.6);
+        t.corrupt_prob = 0.1;
+        t.chunk_bits = 1e5;
+        t.max_attempts = 2;
+        let base = vec![0.5; 16];
+        let bursts = vec![false; 16];
+        let mut rng = Pcg32::seeded(77);
+        let (times, delivered, stats) = simulate_fleet(&t, &mut rng, &base, 4e5, &bursts);
+        assert_eq!(times.len(), 16);
+        assert_eq!(delivered.len(), 16);
+        let n_failed = delivered.iter().filter(|&&d| !d).count();
+        assert_eq!(stats.gave_up, n_failed);
+        assert!(stats.retransmits > 0, "p=0.6 at 2 attempts must retransmit");
+        assert!(n_failed > 0, "p=0.6 at 2 attempts over 64 chunks must drop someone");
+        assert!(stats.backoff_s > 0.0);
+        // undelivered devices still billed their time
+        for (i, &d) in delivered.iter().enumerate() {
+            if !d {
+                assert!(times[i] > 0.5, "gave-up device still paid: {}", times[i]);
+            }
+        }
+    }
+}

@@ -99,6 +99,8 @@ def check_figure(path, doc):
         errors.append(fail(path, "figure provenance missing base_seed"))
     if "attacks" in doc or doc.get("figure") == "ablation_attack":
         errors += check_attacks(path, doc)
+    if "transport" in doc or doc.get("figure") == "ablation_transport":
+        errors += check_transport(path, doc)
     return errors
 
 
@@ -129,6 +131,53 @@ def check_attacks(path, doc):
             )
     if "attack_delta_pct" not in doc:
         errors.append(fail(path, "attack figure missing `attack_delta_pct`"))
+    return errors
+
+
+TRANSPORT_ROW_KEYS = (
+    "engine",
+    "codec",
+    "chunk_loss_prob",
+    "overall_time",
+    "retransmits",
+    "corrupt_detected",
+    "gave_up",
+    "backoff_s",
+)
+
+PLAN_KEYS = (
+    "t_cm_base",
+    "t_cm_true",
+    "aware_overall_time",
+    "blind_overall_time_under_truth",
+    "margin_pct",
+)
+
+
+def check_transport(path, doc):
+    """The transport sweep's payload (DESIGN.md §14): every grid row
+    names its engine, codec and chunk-loss level and carries the ARQ
+    counters; the loss-aware-pricing comparison must be present with
+    both plans' predicted times under the true lossy link."""
+    errors = []
+    rows = doc.get("transport")
+    if not isinstance(rows, list) or not rows:
+        return [fail(path, "transport figure needs a non-empty `transport` array")]
+    for i, r in enumerate(rows):
+        where = f"transport[{i}]"
+        if not isinstance(r, dict):
+            errors.append(fail(path, f"{where} must be an object"))
+            continue
+        for key in TRANSPORT_ROW_KEYS:
+            if key not in r:
+                errors.append(fail(path, f"{where} missing {key!r}"))
+    plan = doc.get("plan")
+    if not isinstance(plan, dict):
+        errors.append(fail(path, "transport figure needs a `plan` object"))
+    else:
+        for key in PLAN_KEYS:
+            if key not in plan:
+                errors.append(fail(path, f"plan missing {key!r}"))
     return errors
 
 
@@ -256,6 +305,44 @@ def self_test():
     assert check_doc("k", dict(ok_attack, attacks=[bad_row])), "unknown aggregator must fail"
     thin_row = {"aggregator": "mean"}
     assert check_doc("k", dict(ok_attack, attacks=[thin_row])), "row missing keys must fail"
+    # transport-sweep shape (figure ablation_transport, or any doc carrying `transport`)
+    ok_tp_row = {
+        "engine": "sync",
+        "codec": "dense",
+        "chunk_loss_prob": 0.1,
+        "overall_time": 3.2,
+        "retransmits": 41,
+        "corrupt_detected": 1,
+        "gave_up": 0,
+        "backoff_s": 0.12,
+    }
+    ok_plan = {
+        "t_cm_base": 0.042,
+        "t_cm_true": 0.114,
+        "aware_overall_time": 180.0,
+        "blind_overall_time_under_truth": 186.0,
+        "margin_pct": 3.2,
+    }
+    ok_tp = {
+        "schema_version": 1,
+        "spec": "ablation-transport",
+        "figure": "ablation_transport",
+        "provenance": {"spec": "ablation-transport", "base_seed": 42},
+        "transport": [ok_tp_row],
+        "plan": ok_plan,
+        "plan_margin_pct": 3.2,
+    }
+    assert check_doc("p", ok_tp) == []
+    assert check_doc("p", dict(ok_tp, transport=[])), "empty transport grid must fail"
+    no_plan = dict(ok_tp)
+    del no_plan["plan"]
+    assert check_doc("p", no_plan), "missing plan comparison must fail"
+    thin_plan = {"t_cm_base": 0.04}
+    assert check_doc("p", dict(ok_tp, plan=thin_plan)), "plan missing keys must fail"
+    thin_tp_row = {"engine": "sync"}
+    assert check_doc("p", dict(ok_tp, transport=[thin_tp_row])), (
+        "transport row missing ARQ counters must fail"
+    )
     print("check_results: self-test OK")
     return 0
 
