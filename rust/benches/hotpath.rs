@@ -17,6 +17,14 @@
 //! `native_round_loop_100dev_b8_topk10` (a whole engine round, dense vs
 //! top-k comparable against `native_round_loop_100dev_b8`).
 //!
+//! The SIMD/sharding benches (DESIGN.md §15) pin the kernel-level
+//! factors inside one run: `simd_matmul_{scalar,simd}_b64` (lane-blocked
+//! vs scalar batch matmul), `quant_unpack_{scalar,simd}` (i16-level vs
+//! packed-bitstream dequantize-and-fold of a 100k leaf), and
+//! `sharded_fold_{1,4,8}thr_1000dev_{dense,topk10}` (the engines' batch
+//! fold sharded by parameter block — bit-identical across the whole
+//! grid, only the wall-clock moves).
+//!
 //! The online-planning benches price the per-round controller/drift
 //! additions (DESIGN.md §10): `wireless_drift_step_{10,1000}dev` (walk +
 //! Gilbert–Elliott transitions per device) and `controller_replan_*`
@@ -169,6 +177,98 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- SIMD kernels: scalar vs lane-blocked (DESIGN.md §15) ---------
+    // Same inputs, same outputs (bit-identical — pinned by
+    // rust/tests/kernels_diff.rs); the pair quantifies the lane-blocking
+    // win on a softmax-step-shaped matmul and a 100k quant decode.
+    {
+        use defl::runtime::kernels;
+        let (n, d, k) = (64usize, 256, 32);
+        let mut rng = Pcg32::seeded(21);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.uniform() as f32).collect();
+        let w: Vec<f32> = (0..d * k).map(|_| rng.uniform() as f32).collect();
+        let bias: Vec<f32> = (0..k).map(|_| rng.uniform() as f32).collect();
+        let mut out = vec![0f32; n * k];
+        suite.bench_units("simd_matmul_scalar_b64", (n * d * k) as f64, || {
+            kernels::matmul_bias(&x, &w, &bias, &mut out, n, d, k);
+            out[0]
+        });
+        suite.bench_units("simd_matmul_simd_b64", (n * d * k) as f64, || {
+            kernels::simd::matmul_bias(&x, &w, &bias, &mut out, n, d, k);
+            out[0]
+        });
+
+        // fused dequantize-and-fold of one 100k leaf at qbits=8: i16
+        // levels (scalar) vs the packed wire bitstream (word-at-a-time)
+        let len = 100_352usize;
+        let src: Vec<f32> = (0..len).map(|_| rng.uniform() as f32 - 0.5).collect();
+        let mut q = Vec::new();
+        let scale = kernels::quantize_stochastic(&src, 8, &mut rng, &mut q);
+        let mut packed = Vec::new();
+        kernels::pack_levels(&q, 8, &mut packed);
+        let mut dst = vec![0f32; len];
+        suite.bench_units("quant_unpack_scalar", len as f64, || {
+            kernels::axpy_quant(0.25, &q, scale, &mut dst);
+            dst[0]
+        });
+        suite.bench_units("quant_unpack_simd", len as f64, || {
+            kernels::simd::axpy_quant_packed(0.25, &packed, 8, scale, &mut dst);
+            dst[0]
+        });
+    }
+
+    // --- sharded parallel fold (DESIGN.md §15) ------------------------
+    // The engines' batch fold at 1000 devices across 1/4/8 threads,
+    // dense and top-k encoded. The shard contract makes every cell of
+    // the grid bit-identical; the thread axis should only move time.
+    {
+        use defl::model::FoldPayload;
+        let devices = 1000usize;
+        let distinct = if fast_mode() { 64 } else { devices };
+        let pool = random_sets(distinct, &LEAVES_103K, 91);
+        let topk = TopK { k_ratio: 0.1 };
+        let mut enc_pool: Vec<EncodedDelta> = Vec::with_capacity(distinct);
+        let mut rng = Pcg32::seeded(92);
+        for set in random_sets(distinct, &LEAVES_103K, 93) {
+            let mut delta = set;
+            let mut residual = ParamSet::zeros_matching(&delta);
+            let mut enc = EncodedDelta::new();
+            topk.encode(&mut delta, Some(&mut residual), &mut rng, &mut enc);
+            enc_pool.push(enc);
+        }
+        let folded = enc_pool[0].folded_values();
+        let mut acc = FedAccumulator::zeros_like(&pool[0]);
+        let mut g = ParamSet::zeros_matching(&pool[0]);
+        for threads in [1usize, 4, 8] {
+            let dense_batch: Vec<(f64, FoldPayload<'_>)> = (0..devices)
+                .map(|i| (600.0, FoldPayload::Dense(&pool[i % distinct])))
+                .collect();
+            suite.bench_units(
+                &format!("sharded_fold_{threads}thr_1000dev_dense"),
+                (devices * total_params) as f64,
+                || {
+                    acc.begin(600.0 * devices as f64);
+                    acc.fold_batch(&dense_batch, threads);
+                    acc.apply_delta_to(&mut g);
+                    acc.count()
+                },
+            );
+            let topk_batch: Vec<(f64, FoldPayload<'_>)> = (0..devices)
+                .map(|i| (600.0, FoldPayload::Encoded(&enc_pool[i % distinct])))
+                .collect();
+            suite.bench_units(
+                &format!("sharded_fold_{threads}thr_1000dev_topk10"),
+                (devices * folded) as f64,
+                || {
+                    acc.begin(600.0 * devices as f64);
+                    acc.fold_batch(&topk_batch, threads);
+                    acc.apply_delta_to(&mut g);
+                    acc.count()
+                },
+            );
+        }
+    }
+
     // --- robust aggregation (DESIGN.md §13) ---------------------------
     // The per-round cost of each RobustAggregator over 100 dense 103k
     // updates. `mean` prices the trait seam itself (same work as
@@ -196,7 +296,7 @@ fn main() -> anyhow::Result<()> {
                 .collect();
             let label = format!("robust_fold_{devices}dev_{}", kind.label());
             suite.bench_units(&label, (devices * total_params) as f64, || {
-                robust.combine(&codec, &mut acc, &updates, 600.0 * devices as f64, &mut g);
+                robust.combine(&codec, &mut acc, &updates, 600.0 * devices as f64, 1, &mut g);
                 acc.count()
             });
         }

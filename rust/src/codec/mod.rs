@@ -183,6 +183,63 @@ pub struct EncodedLeaf {
     /// Quantized levels ([`Payload::Quant`]: per element;
     /// [`Payload::TopKQuant`]: per `idx` entry).
     pub q: Vec<i16>,
+    /// Bit-packed levels ([`Payload::Quant`] only): the `q` alphabet in
+    /// its actual `value_bits`-wide wire form
+    /// ([`crate::runtime::kernels::pack_levels`]) — the physical
+    /// realization of the `vb·P` bits [`EncodedDelta::wire_bits`] already
+    /// bills, so the accounting is unchanged. The fused fold decodes
+    /// straight from this bitstream
+    /// ([`crate::runtime::kernels::simd::axpy_quant_packed`]); packing is
+    /// lossless on the integer levels, so the packed fold is bit-identical
+    /// to [`crate::runtime::kernels::axpy_quant`] over `q`.
+    pub packed: Vec<u32>,
+}
+
+impl EncodedLeaf {
+    /// Fold elements `lo .. lo + dst.len()` of this leaf into `dst` as
+    /// `dst += coeff·decode(self)` — the shard-range entry point of
+    /// [`crate::model::FedAccumulator::fold_batch`]. Per element this is
+    /// exactly the whole-leaf fused fold's arithmetic (same kernels,
+    /// range-restricted), so shard-partitioned folds are bit-identical to
+    /// serial `decode_fold_into` at any shard geometry.
+    pub fn fold_range(&self, coeff: f32, lo: usize, dst: &mut [f32]) {
+        match self.payload {
+            Payload::Dense => kernels::axpy_dense(coeff, &self.dense[lo..lo + dst.len()], dst),
+            Payload::Quant => {
+                if self.packed.is_empty() {
+                    kernels::axpy_quant(coeff, &self.q[lo..lo + dst.len()], self.scale, dst);
+                } else {
+                    kernels::axpy_quant_packed_range(
+                        coeff,
+                        &self.packed,
+                        self.value_bits,
+                        self.scale,
+                        lo,
+                        dst,
+                    );
+                }
+            }
+            Payload::TopK => {
+                let hi = lo + dst.len();
+                let j0 = self.idx.partition_point(|&i| (i as usize) < lo);
+                let j1 = self.idx.partition_point(|&i| (i as usize) < hi);
+                kernels::axpy_sparse_range(coeff, &self.idx[j0..j1], &self.vals[j0..j1], lo, dst);
+            }
+            Payload::TopKQuant => {
+                let hi = lo + dst.len();
+                let j0 = self.idx.partition_point(|&i| (i as usize) < lo);
+                let j1 = self.idx.partition_point(|&i| (i as usize) < hi);
+                kernels::axpy_sparse_quant_range(
+                    coeff,
+                    &self.idx[j0..j1],
+                    &self.q[j0..j1],
+                    self.scale,
+                    lo,
+                    dst,
+                );
+            }
+        }
+    }
 }
 
 /// One encoded update: per-leaf payloads in the model's leaf order.
@@ -351,6 +408,7 @@ impl UpdateCodec for Dense32 {
             el.idx.clear();
             el.vals.clear();
             el.q.clear();
+            el.packed.clear();
         }
     }
 
@@ -405,6 +463,7 @@ impl UpdateCodec for QuantStochastic {
             el.vals.clear();
             el.scale = kernels::quantize_stochastic(src, self.qbits, rng, &mut el.q);
             kernels::residual_quant(src, &el.q, el.scale, res); // error feedback out
+            kernels::pack_levels(&el.q, el.value_bits, &mut el.packed);
         }
     }
 
@@ -416,7 +475,13 @@ impl UpdateCodec for QuantStochastic {
     fn decode_fold_into(&self, acc: &mut FedAccumulator, weight: f64, enc: &EncodedDelta) {
         acc.fold_encoded_with(weight, |w, dst| {
             for (d, e) in dst.leaves.iter_mut().zip(&enc.leaves) {
-                kernels::axpy_quant(w, &e.q, e.scale, d);
+                // prefer the packed wire form (word-at-a-time unpack);
+                // bit-identical to axpy_quant over the i16 levels
+                if e.packed.is_empty() {
+                    kernels::axpy_quant(w, &e.q, e.scale, d);
+                } else {
+                    kernels::simd::axpy_quant_packed(w, &e.packed, e.value_bits, e.scale, d);
+                }
             }
         });
     }
@@ -459,6 +524,7 @@ impl UpdateCodec for TopK {
             el.scale = 0.0;
             el.dense.clear();
             el.q.clear();
+            el.packed.clear();
             kernels::select_top_k(src, k_of(src.len(), self.k_ratio), &mut el.idx);
             el.vals.clear();
             el.vals.extend(el.idx.iter().map(|&i| src[i as usize]));
@@ -523,6 +589,7 @@ impl UpdateCodec for TopKQuant {
             el.len = src.len();
             el.value_bits = wire_value_bits(self.qbits);
             el.dense.clear();
+            el.packed.clear();
             kernels::select_top_k(src, k_of(src.len(), self.k_ratio), &mut el.idx);
             // gather the kept values (vals doubles as quantizer scratch)
             el.vals.clear();
@@ -835,8 +902,21 @@ mod tests {
             assert_eq!(el.payload, Payload::Dense);
             assert_eq!(&el.dense, src);
             assert!(el.idx.is_empty() && el.vals.is_empty() && el.q.is_empty());
+            assert!(el.packed.is_empty());
         }
         assert_eq!(enc.folded_values(), 69);
+
+        // quant fills packed; a later dense re-encode must clear it again
+        let mut d3 = random_set(&mut g, &shapes);
+        let mut res3 = ParamSet::zeros_matching(&d3);
+        QuantStochastic { qbits: 8 }.encode(&mut d3, Some(&mut res3), &mut rng, &mut enc);
+        for el in &enc.leaves {
+            assert_eq!(el.payload, Payload::Quant);
+            assert_eq!(el.packed.len(), (el.len * el.value_bits as usize).div_ceil(32));
+        }
+        let mut d4 = random_set(&mut g, &shapes);
+        Dense32.encode(&mut d4, None, &mut rng, &mut enc);
+        assert!(enc.leaves.iter().all(|el| el.packed.is_empty()));
     }
 
     #[test]

@@ -207,8 +207,11 @@ impl RoundEngine for AsyncBuffered {
             sys.obs_clean_loss = Some(clean_loss_of(&sys.devices, &folds));
         }
         let stats = {
+            let threads = sys.cfg.threads;
             let FlSystem { devices, global, agg, robust, codec, .. } = &mut *sys;
-            robust_combine(&**codec, &mut **robust, agg, devices, &folds, total_w, global)
+            robust_combine(
+                &**codec, &mut **robust, agg, devices, &folds, total_w, threads, global,
+            )
         };
         self.aggregations += 1;
 

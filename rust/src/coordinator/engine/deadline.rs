@@ -125,8 +125,11 @@ impl RoundEngine for DeadlineSync {
             if sys.cfg.attack.enabled() {
                 sys.obs_clean_loss = Some(clean_loss_of(&sys.devices, &folds));
             }
+            let threads = sys.cfg.threads;
             let FlSystem { devices, global, agg, robust, codec, .. } = sys;
-            stats = robust_combine(&**codec, &mut **robust, agg, devices, &folds, total_w, global);
+            stats = robust_combine(
+                &**codec, &mut **robust, agg, devices, &folds, total_w, threads, global,
+            );
         }
         let (encoded_bits, compression_ratio) =
             wire_metrics(sys.spec.update_bits(), bits_sum, participants);

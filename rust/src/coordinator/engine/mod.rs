@@ -289,6 +289,9 @@ pub(crate) fn local_computation(
 /// update instead of P), the lossless dense codec hands the device's
 /// delta buffer directly (no wire copy was ever made, so the default
 /// `mean` path is exactly the copy-free PR 3–4 fold, bit for bit).
+/// `threads` is `[system] threads`: the streaming aggregators shard the
+/// fold by parameter block across it, bit-identical at any count.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn robust_combine(
     codec: &dyn crate::codec::UpdateCodec,
     robust: &mut dyn crate::model::robust::RobustAggregator,
@@ -296,6 +299,7 @@ pub(crate) fn robust_combine(
     devices: &[Device],
     folds: &[(usize, f64, f64)],
     total_w: f64,
+    threads: usize,
     global: &mut crate::model::ParamSet,
 ) -> crate::model::robust::FoldStats {
     let lossy = codec.lossy();
@@ -311,7 +315,7 @@ pub(crate) fn robust_combine(
             }
         })
         .collect();
-    robust.combine(codec, agg, &updates, total_w, global)
+    robust.combine(codec, agg, &updates, total_w, threads, global)
 }
 
 /// Weighted mean training loss over the *non-attacked* devices of a

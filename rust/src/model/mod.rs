@@ -6,8 +6,26 @@
 //! in/out of PJRT literals (conversion lives in [`crate::runtime`]).
 
 use crate::util::json::Json;
+use crate::util::threadpool::parallel_map;
 
 pub mod robust;
+
+/// Shard granularity for [`FedAccumulator::fold_batch`]: accumulator
+/// leaves are split into disjoint blocks of this many elements and the
+/// blocks are distributed over the thread pool. Small enough that even
+/// the tiny MLP (≈2.4k params) splits into several shards, large enough
+/// that per-shard dispatch overhead is noise at 100k+ params.
+const FOLD_SHARD: usize = 4096;
+
+/// One update for the sharded batch fold — either a dense delta or a
+/// codec-encoded payload folded via [`crate::codec::EncodedLeaf::fold_range`].
+#[derive(Clone, Copy, Debug)]
+pub enum FoldPayload<'a> {
+    /// Dense update delta (full [`ParamSet`]).
+    Dense(&'a ParamSet),
+    /// Codec-encoded update (dense32 / quant / top-k / top-k+quant wire form).
+    Encoded(&'a crate::codec::EncodedDelta),
+}
 
 /// Static description of one parameter leaf.
 #[derive(Clone, Debug, PartialEq)]
@@ -337,6 +355,48 @@ impl FedAccumulator {
     /// to the global model in place.
     pub fn apply_delta_to(&self, dst: &mut ParamSet) {
         dst.axpy(1.0, &self.acc);
+    }
+
+    /// Sharded batch fold: fold every update in `updates` (in order) into
+    /// the accumulator, parallelised **by parameter block** across
+    /// [`crate::util::threadpool::parallel_map`].
+    ///
+    /// Determinism contract (DESIGN.md §15): the accumulator is split
+    /// into disjoint [`FOLD_SHARD`]-element blocks; each shard folds ALL
+    /// K updates in input order over its own element range. Every
+    /// accumulator element therefore sees exactly the serial fold's
+    /// operation sequence — `d += (w₀/Σw)·u₀[i]; d += (w₁/Σw)·u₁[i]; …` —
+    /// so the result is **bit-identical** to K successive
+    /// [`FedAccumulator::fold`] / `decode_fold_into` calls at ANY thread
+    /// count (pinned by `rust/tests/kernels_diff.rs`). Threads only
+    /// partition *which elements* a worker owns, never the per-element
+    /// order.
+    pub fn fold_batch(&mut self, updates: &[(f64, FoldPayload<'_>)], threads: usize) {
+        debug_assert!(self.total > 0.0, "begin() before fold_batch()");
+        let total = self.total;
+        let coeffs: Vec<f32> = updates.iter().map(|&(w, _)| (w / total) as f32).collect();
+        let mut shards: Vec<(usize, usize, &mut [f32])> = Vec::new();
+        for (li, leaf) in self.acc.leaves.iter_mut().enumerate() {
+            let mut lo = 0usize;
+            for block in leaf.chunks_mut(FOLD_SHARD) {
+                let len = block.len();
+                shards.push((li, lo, block));
+                lo += len;
+            }
+        }
+        parallel_map(shards, threads, |(li, lo, block)| {
+            for (&coeff, &(_, payload)) in coeffs.iter().zip(updates) {
+                match payload {
+                    FoldPayload::Dense(set) => crate::runtime::kernels::axpy_dense(
+                        coeff,
+                        &set.leaves[li][lo..lo + block.len()],
+                        block,
+                    ),
+                    FoldPayload::Encoded(enc) => enc.leaves[li].fold_range(coeff, lo, block),
+                }
+            }
+        });
+        self.count += updates.len();
     }
 }
 

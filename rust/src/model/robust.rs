@@ -30,9 +30,16 @@
 //! from attacked devices, how many were clipped, how many value slots
 //! the trim dropped per coordinate) — the per-round
 //! `attacked`/`clipped`/`trimmed` metrics columns.
+//!
+//! The streaming folds (mean always; clip whenever no lossy payload is
+//! actually clipped) run through [`FedAccumulator::fold_batch`], which
+//! shards the accumulator by parameter block across `[system] threads`.
+//! The sharded fold is bit-identical to the serial per-update fold at
+//! any thread count (DESIGN.md §15), so the mean's bit-identity pin and
+//! the clip-without-clipping ≡ mean pin both survive parallelisation.
 
 use crate::codec::{EncodedDelta, UpdateCodec};
-use crate::model::{FedAccumulator, ParamSet};
+use crate::model::{FedAccumulator, FoldPayload, ParamSet};
 
 /// Which aggregator combines the round's updates (`[aggregate] kind`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -163,13 +170,18 @@ pub trait RobustAggregator: Send {
 
     /// Combine the round's updates into `global`. `total_w` is the sum
     /// of `updates[..].weight` (the engines already computed it for
-    /// eq. 2's normalisation).
+    /// eq. 2's normalisation). `threads` is the `[system] threads` budget
+    /// the streaming folds may shard the accumulator across
+    /// ([`FedAccumulator::fold_batch`]) — the sharded fold is
+    /// bit-identical to the serial one at any thread count, so this knob
+    /// never changes results; the buffered estimators ignore it.
     fn combine(
         &mut self,
         codec: &dyn UpdateCodec,
         agg: &mut FedAccumulator,
         updates: &[RoundUpdate<'_>],
         total_w: f64,
+        threads: usize,
         global: &mut ParamSet,
     ) -> FoldStats;
 }
@@ -178,13 +190,14 @@ fn attacked_count(updates: &[RoundUpdate<'_>]) -> usize {
     updates.iter().filter(|u| u.attacked).count()
 }
 
-/// Fold one update into the accumulator exactly as the pre-robust
-/// engines did: the fused decode for a lossy payload, the direct delta
-/// fold otherwise.
-fn fold_one(codec: &dyn UpdateCodec, agg: &mut FedAccumulator, weight: f64, u: &RoundUpdate<'_>) {
+/// The update's payload as [`FedAccumulator::fold_batch`] consumes it.
+/// The batch fold runs every update in input order over each parameter
+/// shard, so folding through it is bit-identical to the pre-sharding
+/// per-update `fold`/`decode_fold_into` loop.
+fn payload_of<'a>(u: &RoundUpdate<'a>) -> FoldPayload<'a> {
     match (u.encoded, u.dense) {
-        (Some(enc), _) => codec.decode_fold_into(agg, weight, enc),
-        (None, Some(d)) => agg.fold(weight, d),
+        (Some(enc), _) => FoldPayload::Encoded(enc),
+        (None, Some(d)) => FoldPayload::Dense(d),
         (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
     }
 }
@@ -217,12 +230,14 @@ impl RobustAggregator for MeanAggregator {
         agg: &mut FedAccumulator,
         updates: &[RoundUpdate<'_>],
         total_w: f64,
+        threads: usize,
         global: &mut ParamSet,
     ) -> FoldStats {
+        let _ = codec; // fold_batch dispatches on the payload tag directly
         agg.begin(total_w);
-        for u in updates {
-            fold_one(codec, agg, u.weight, u);
-        }
+        let batch: Vec<(f64, FoldPayload<'_>)> =
+            updates.iter().map(|u| (u.weight, payload_of(u))).collect();
+        agg.fold_batch(&batch, threads);
         agg.apply_delta_to(global);
         FoldStats { attacked: attacked_count(updates), ..FoldStats::default() }
     }
@@ -266,6 +281,7 @@ impl RobustAggregator for ClipAggregator {
         agg: &mut FedAccumulator,
         updates: &[RoundUpdate<'_>],
         total_w: f64,
+        threads: usize,
         global: &mut ParamSet,
     ) -> FoldStats {
         // Pass 1: every update's L2 norm (lossy payloads decode into the
@@ -294,27 +310,49 @@ impl RobustAggregator for ClipAggregator {
         };
         // Pass 2: the weighted fold with clipped effective weights.
         let mut clipped = 0usize;
-        agg.begin(total_w);
-        for (u, &norm) in updates.iter().zip(&self.norms) {
-            let c = if norm > tau && norm > 0.0 {
-                clipped += 1;
-                tau / norm
-            } else {
-                1.0
-            };
-            match (u.encoded, u.dense) {
-                (Some(enc), _) if c == 1.0 => codec.decode_fold_into(agg, u.weight, enc),
-                (Some(enc), _) => {
-                    {
-                        let (acc, buf) = self.scratch_for(global);
-                        decode_exact(codec, enc, acc, buf);
-                    }
-                    let (_, buf) = self.scratch.as_ref().expect("scratch initialised above");
-                    agg.fold(u.weight * c, buf);
+        let cs: Vec<f64> = self
+            .norms
+            .iter()
+            .map(|&norm| {
+                if norm > tau && norm > 0.0 {
+                    clipped += 1;
+                    tau / norm
+                } else {
+                    1.0
                 }
-                (None, Some(d)) => agg.fold(u.weight * c, d),
-                (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+            })
+            .collect();
+        agg.begin(total_w);
+        // The sharded batch fold handles every case except a *clipped*
+        // lossy payload, which must decode through the single reusable
+        // scratch buffer (serialising the round). An unclipped payload
+        // folds at `w·1.0 == w` exactly, so the no-clipping round stays
+        // bit-identical to the mean fold through either path.
+        let needs_scratch =
+            updates.iter().zip(&cs).any(|(u, &c)| u.encoded.is_some() && c != 1.0);
+        if needs_scratch {
+            for (u, &c) in updates.iter().zip(&cs) {
+                match (u.encoded, u.dense) {
+                    (Some(enc), _) if c == 1.0 => codec.decode_fold_into(agg, u.weight, enc),
+                    (Some(enc), _) => {
+                        {
+                            let (acc, buf) = self.scratch_for(global);
+                            decode_exact(codec, enc, acc, buf);
+                        }
+                        let (_, buf) = self.scratch.as_ref().expect("scratch initialised above");
+                        agg.fold(u.weight * c, buf);
+                    }
+                    (None, Some(d)) => agg.fold(u.weight * c, d),
+                    (None, None) => unreachable!("RoundUpdate carries dense or encoded"),
+                }
             }
+        } else {
+            let batch: Vec<(f64, FoldPayload<'_>)> = updates
+                .iter()
+                .zip(&cs)
+                .map(|(u, &c)| (u.weight * c, payload_of(u)))
+                .collect();
+            agg.fold_batch(&batch, threads);
         }
         agg.apply_delta_to(global);
         FoldStats { attacked: attacked_count(updates), clipped, trimmed: 0 }
@@ -362,8 +400,12 @@ impl RobustAggregator for BufferedAggregator {
         _agg: &mut FedAccumulator,
         updates: &[RoundUpdate<'_>],
         _total_w: f64,
+        _threads: usize,
         global: &mut ParamSet,
     ) -> FoldStats {
+        // `_threads` ignored: the buffered estimators sort per
+        // coordinate over K materialised updates — a different shape of
+        // work than the streaming fold the shard contract covers.
         let n = updates.len();
         debug_assert!(n >= 1, "engines never aggregate an empty round");
         // Materialise every update dense (the buffered mode's memory
@@ -463,7 +505,7 @@ mod tests {
         let updates = dense_updates(&sets, &ws);
         let mut global = set(&[0.0, 0.0, 0.0]);
         let mut agg = FedAccumulator::zeros_like(&global);
-        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 4.0, &mut global);
+        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 4.0, 1, &mut global);
         let refs: Vec<&ParamSet> = sets.iter().collect();
         let reference = federated_average(&refs, &ws);
         assert_eq!(global.leaves, reference.leaves, "zero global + mean delta = fedavg");
@@ -478,9 +520,11 @@ mod tests {
         let mut g_mean = set(&[0.1, -0.2]);
         let mut g_clip = g_mean.clone();
         let mut agg = FedAccumulator::zeros_like(&g_mean);
-        MeanAggregator.combine(&Dense32, &mut agg, &updates, 8.0, &mut g_mean);
+        // deliberately different thread counts: the sharded fold is
+        // bit-deterministic, so mean@1 must equal clip@3 exactly
+        MeanAggregator.combine(&Dense32, &mut agg, &updates, 8.0, 1, &mut g_mean);
         let mut clip = ClipAggregator::new(1e12);
-        let stats = clip.combine(&Dense32, &mut agg, &updates, 8.0, &mut g_clip);
+        let stats = clip.combine(&Dense32, &mut agg, &updates, 8.0, 3, &mut g_clip);
         assert_eq!(g_mean.leaves, g_clip.leaves, "no clipping ⇒ identical fold");
         assert_eq!(stats.clipped, 0);
     }
@@ -496,7 +540,7 @@ mod tests {
         // adaptive τ = lower-median norm = 1.0 ⇒ the outlier folds at
         // norm 1 instead of 100
         let mut clip = ClipAggregator::new(0.0);
-        let stats = clip.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        let stats = clip.combine(&Dense32, &mut agg, &updates, 3.0, 1, &mut g);
         assert_eq!(stats.clipped, 1);
         assert!(g.leaves[0][0] <= 1.0, "outlier contribution bounded: {}", g.leaves[0][0]);
         // unclipped mean would have landed near 100/3
@@ -510,14 +554,14 @@ mod tests {
         let mut g = set(&[0.0]);
         let mut agg = FedAccumulator::zeros_like(&g);
         let mut med = BufferedAggregator::new(BufferedMode::Median);
-        let stats = med.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        let stats = med.combine(&Dense32, &mut agg, &updates, 3.0, 1, &mut g);
         assert_eq!(g.leaves[0][0], 1.1, "median picks the middle value");
         assert_eq!(stats.trimmed, 2);
         // even n averages the two middles
         let sets4 = vec![set(&[1.0]), set(&[3.0]), set(&[2.0]), set(&[1000.0])];
         let updates4 = dense_updates(&sets4, &[1.0; 4]);
         let mut g4 = set(&[0.0]);
-        let stats4 = med.combine(&Dense32, &mut agg, &updates4, 4.0, &mut g4);
+        let stats4 = med.combine(&Dense32, &mut agg, &updates4, 4.0, 1, &mut g4);
         assert_eq!(g4.leaves[0][0], 2.5);
         assert_eq!(stats4.trimmed, 2);
     }
@@ -530,7 +574,7 @@ mod tests {
         let mut g = set(&[0.0]);
         let mut agg = FedAccumulator::zeros_like(&g);
         let mut tm = BufferedAggregator::new(BufferedMode::TrimmedMean(0.2));
-        let stats = tm.combine(&Dense32, &mut agg, &updates, 5.0, &mut g);
+        let stats = tm.combine(&Dense32, &mut agg, &updates, 5.0, 1, &mut g);
         assert_eq!(stats.trimmed, 2, "⌊0.2·5⌋ = 1 from each tail");
         assert!((g.leaves[0][0] - 2.0).abs() < 1e-6, "mean of {{1,2,3}}: {}", g.leaves[0][0]);
     }
@@ -544,7 +588,7 @@ mod tests {
         let mut g = set(&[0.0]);
         let mut agg = FedAccumulator::zeros_like(&g);
         let mut tm = BufferedAggregator::new(BufferedMode::TrimmedMean(0.49));
-        tm.combine(&Dense32, &mut agg, &updates, 3.0, &mut g);
+        tm.combine(&Dense32, &mut agg, &updates, 3.0, 1, &mut g);
         assert_eq!(g.leaves[0][0], 5.0, "middle survivor");
     }
 
@@ -555,7 +599,7 @@ mod tests {
         updates[1].attacked = true;
         let mut g = set(&[0.0]);
         let mut agg = FedAccumulator::zeros_like(&g);
-        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 2.0, &mut g);
+        let stats = MeanAggregator.combine(&Dense32, &mut agg, &updates, 2.0, 1, &mut g);
         assert_eq!(stats.attacked, 1);
         assert!((g.leaves[0][0] - 1.5).abs() < 1e-6, "the flag must not bias the fold");
     }

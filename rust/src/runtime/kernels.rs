@@ -366,6 +366,435 @@ pub fn select_top_k(src: &[f32], k: usize, idx: &mut Vec<u32>) {
     idx.sort_unstable();
 }
 
+// ---------------------------------------------------------------------------
+// Bit-packed quantized payloads — the wire format of the Quant codec.
+//
+// Levels are stored offset-binary (`u = level + bias`, `bias = 2^(vb−1) − 1`)
+// in a little-endian bitstream of `value_bits`-wide fields packed into u32
+// words. Packing integers is lossless, so every unpack-and-fold below is
+// bit-identical to `axpy_quant` over the unpacked i16 levels (pinned by
+// `rust/tests/kernels_diff.rs`).
+// ---------------------------------------------------------------------------
+
+/// Offset-binary bias for `value_bits`-wide packed levels: the stored
+/// field is `level + bias` with `bias = 2^(vb−1) − 1`, which covers the
+/// full `−L..=L` alphabet for every legal `qbits` (including the ternary
+/// `qbits = 1` billed at vb = 2).
+fn packed_bias(value_bits: u32) -> i32 {
+    ((1u32 << (value_bits - 1)) - 1) as i32
+}
+
+/// Pack quantized levels into a little-endian `value_bits`-wide bitstream
+/// (`packed` is cleared and refilled; reused across rounds). Element `i`
+/// occupies stream bits `[i·vb, (i+1)·vb)`.
+pub fn pack_levels(q: &[i16], value_bits: u32, packed: &mut Vec<u32>) {
+    let vb = value_bits as usize;
+    debug_assert!((2..=16).contains(&vb), "value_bits in 2..=16");
+    packed.clear();
+    packed.resize((q.len() * vb).div_ceil(32), 0);
+    let bias = packed_bias(value_bits);
+    let mut bit = 0usize;
+    for &lv in q {
+        let u = (i32::from(lv) + bias) as u32;
+        debug_assert!(u < (1u32 << vb), "level out of the vb-bit alphabet");
+        let (word, off) = (bit / 32, bit % 32);
+        packed[word] |= u << off;
+        if off + vb > 32 {
+            packed[word + 1] |= u >> (32 - off);
+        }
+        bit += vb;
+    }
+}
+
+/// Decode one packed level (random access at element `i`).
+pub fn unpack_level_at(packed: &[u32], value_bits: u32, i: usize) -> i32 {
+    let vb = value_bits as usize;
+    let bit = i * vb;
+    let (word, off) = (bit / 32, bit % 32);
+    let mut u = packed[word] >> off;
+    if off + vb > 32 {
+        u |= packed[word + 1] << (32 - off);
+    }
+    (u & ((1u32 << vb) - 1)) as i32 - packed_bias(value_bits)
+}
+
+/// Fused unpack-dequantize-and-fold over the whole leaf:
+/// `dst += w·(scale·unpack(packed))`, elements ascending — the scalar
+/// reference for [`simd::axpy_quant_packed`]. Per element this is exactly
+/// [`axpy_quant`]'s `dst += (w·scale)·level` (packing is lossless on the
+/// integer levels), so packed and unpacked folds are bit-identical.
+pub fn axpy_quant_packed(w: f32, packed: &[u32], value_bits: u32, scale: f32, dst: &mut [f32]) {
+    let ws = w * scale;
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d += ws * unpack_level_at(packed, value_bits, i) as f32;
+    }
+}
+
+/// Range-restricted [`axpy_quant_packed`] for the sharded fold: folds
+/// elements `lo .. lo + dst.len()` of the packed leaf into `dst` (random
+/// access at bit offset `i·vb`). Same per-element arithmetic as the
+/// whole-leaf fold, so shard-partitioned folds stay bit-identical.
+pub fn axpy_quant_packed_range(
+    w: f32,
+    packed: &[u32],
+    value_bits: u32,
+    scale: f32,
+    lo: usize,
+    dst: &mut [f32],
+) {
+    let ws = w * scale;
+    for (i, d) in dst.iter_mut().enumerate() {
+        *d += ws * unpack_level_at(packed, value_bits, lo + i) as f32;
+    }
+}
+
+/// Range-restricted [`axpy_sparse`] for the sharded fold: the caller
+/// slices `idx`/`vals` down to the entries with `lo ≤ idx[j] < lo + len`
+/// (ascending `idx` makes that a `partition_point` pair) and this folds
+/// them at the shard-local offset. Same per-entry arithmetic as the
+/// whole-leaf fold.
+pub fn axpy_sparse_range(w: f32, idx: &[u32], vals: &[f32], lo: usize, dst: &mut [f32]) {
+    debug_assert_eq!(idx.len(), vals.len());
+    for (&i, &v) in idx.iter().zip(vals) {
+        dst[i as usize - lo] += w * v;
+    }
+}
+
+/// Range-restricted [`axpy_sparse_quant`] for the sharded fold (same
+/// slicing contract as [`axpy_sparse_range`], same hoisted `w·scale`).
+pub fn axpy_sparse_quant_range(
+    w: f32,
+    idx: &[u32],
+    q: &[i16],
+    scale: f32,
+    lo: usize,
+    dst: &mut [f32],
+) {
+    debug_assert_eq!(idx.len(), q.len());
+    let ws = w * scale;
+    for (&i, &qv) in idx.iter().zip(q) {
+        dst[i as usize - lo] += ws * f32::from(qv);
+    }
+}
+
+/// Hand-unrolled wide-lane variants of the hot kernels (stable-Rust
+/// portable chunks; `std::simd` is still nightly-only).
+///
+/// Lane/tail contract (DESIGN.md §15): every kernel processes its
+/// innermost independent dimension in fixed-trip-count blocks of
+/// [`simd::LANES`] elements — straight-line bodies of `LANES` independent
+/// multiply-adds the compiler turns into vector ops — with a scalar tail
+/// for the remainder. Because the lanes run over *independent output
+/// elements*, each element's f32 operation sequence is unchanged and the
+/// results are **bit-identical** to the scalar kernels: [`simd::matmul_bias`],
+/// [`simd::accum_xt_g`], [`simd::relu`], [`simd::axpy_quant_packed`].
+/// The one exception is [`simd::backprop_dh`], which splits its k-sum
+/// reduction into `LANES` partial sums combined left-to-right — still
+/// deterministic, but a different f32 summation order than the scalar
+/// kernel (≤1e-5 toleranced, pinned by `rust/tests/kernels_diff.rs`), so
+/// the native backend's default path keeps the scalar `backprop_dh`.
+pub mod simd {
+    use super::{packed_bias, unpack_level_at, KMAX, MR};
+
+    /// f32 lanes per unrolled block (two 4-wide SSE/NEON vectors, one
+    /// AVX2 vector — wide enough for either without spilling).
+    pub const LANES: usize = 8;
+
+    /// `acc[j] += a·src[j]` in lane blocks; `kb` is the pre-computed
+    /// lane-aligned prefix (`k / LANES * LANES`).
+    #[inline(always)]
+    fn mul_add_row(acc: &mut [f32], src: &[f32], a: f32, kb: usize) {
+        let k = src.len();
+        let mut j = 0;
+        while j < kb {
+            for l in 0..LANES {
+                acc[j + l] += a * src[j + l];
+            }
+            j += LANES;
+        }
+        while j < k {
+            acc[j] += a * src[j];
+            j += 1;
+        }
+    }
+
+    /// The 4-row micro-tile accumulate of one weight row, lane-blocked.
+    /// Per element this is the scalar kernel's `a[j] += v·w[j]` in the
+    /// same order — only the loop grouping changes.
+    #[inline(always)]
+    #[allow(clippy::too_many_arguments)]
+    fn mul_add_rows4(
+        a0: &mut [f32],
+        a1: &mut [f32],
+        a2: &mut [f32],
+        a3: &mut [f32],
+        wrow: &[f32],
+        v: (f32, f32, f32, f32),
+        kb: usize,
+    ) {
+        let k = wrow.len();
+        let (v0, v1, v2, v3) = v;
+        let mut j = 0;
+        while j < kb {
+            for l in 0..LANES {
+                let wv = wrow[j + l];
+                a0[j + l] += v0 * wv;
+                a1[j + l] += v1 * wv;
+                a2[j + l] += v2 * wv;
+                a3[j + l] += v3 * wv;
+            }
+            j += LANES;
+        }
+        while j < k {
+            let wv = wrow[j];
+            a0[j] += v0 * wv;
+            a1[j] += v1 * wv;
+            a2[j] += v2 * wv;
+            a3[j] += v3 * wv;
+            j += 1;
+        }
+    }
+
+    /// Lane-blocked [`super::matmul_bias`] — bit-identical (independent
+    /// output elements, unchanged per-element operation order).
+    pub fn matmul_bias(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) {
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(w.len(), d * k);
+        debug_assert_eq!(bias.len(), k);
+        debug_assert_eq!(out.len(), n * k);
+        if k > KMAX {
+            return matmul_bias_generic(x, w, bias, out, n, d, k);
+        }
+        let kb = k / LANES * LANES;
+        let n4 = n / MR * MR;
+        for (xq, oq) in
+            x[..n4 * d].chunks_exact(MR * d).zip(out[..n4 * k].chunks_exact_mut(MR * k))
+        {
+            let (x0, r) = xq.split_at(d);
+            let (x1, r) = r.split_at(d);
+            let (x2, x3) = r.split_at(d);
+            let mut t0 = [0f32; KMAX];
+            let mut t1 = [0f32; KMAX];
+            let mut t2 = [0f32; KMAX];
+            let mut t3 = [0f32; KMAX];
+            let (a0, a1, a2, a3) = (&mut t0[..k], &mut t1[..k], &mut t2[..k], &mut t3[..k]);
+            a0.copy_from_slice(bias);
+            a1.copy_from_slice(bias);
+            a2.copy_from_slice(bias);
+            a3.copy_from_slice(bias);
+            for (di, wrow) in w.chunks_exact(k).enumerate() {
+                mul_add_rows4(a0, a1, a2, a3, wrow, (x0[di], x1[di], x2[di], x3[di]), kb);
+            }
+            let (o0, r) = oq.split_at_mut(k);
+            let (o1, r) = r.split_at_mut(k);
+            let (o2, o3) = r.split_at_mut(k);
+            o0.copy_from_slice(a0);
+            o1.copy_from_slice(a1);
+            o2.copy_from_slice(a2);
+            o3.copy_from_slice(a3);
+        }
+        for (xr, or) in x[n4 * d..].chunks_exact(d).zip(out[n4 * k..].chunks_exact_mut(k)) {
+            let mut tail = [0f32; KMAX];
+            let acc = &mut tail[..k];
+            acc.copy_from_slice(bias);
+            for (di, wrow) in w.chunks_exact(k).enumerate() {
+                mul_add_row(acc, wrow, xr[di], kb);
+            }
+            or.copy_from_slice(acc);
+        }
+    }
+
+    /// The `k > KMAX` fallback — accumulators in `out`, same operation
+    /// order (mirrors the scalar pair's bitwise equivalence).
+    fn matmul_bias_generic(
+        x: &[f32],
+        w: &[f32],
+        bias: &[f32],
+        out: &mut [f32],
+        n: usize,
+        d: usize,
+        k: usize,
+    ) {
+        let kb = k / LANES * LANES;
+        let n4 = n / MR * MR;
+        for (xq, oq) in
+            x[..n4 * d].chunks_exact(MR * d).zip(out[..n4 * k].chunks_exact_mut(MR * k))
+        {
+            let (x0, r) = xq.split_at(d);
+            let (x1, r) = r.split_at(d);
+            let (x2, x3) = r.split_at(d);
+            let (o0, r) = oq.split_at_mut(k);
+            let (o1, r) = r.split_at_mut(k);
+            let (o2, o3) = r.split_at_mut(k);
+            o0.copy_from_slice(bias);
+            o1.copy_from_slice(bias);
+            o2.copy_from_slice(bias);
+            o3.copy_from_slice(bias);
+            for (di, wrow) in w.chunks_exact(k).enumerate() {
+                mul_add_rows4(o0, o1, o2, o3, wrow, (x0[di], x1[di], x2[di], x3[di]), kb);
+            }
+        }
+        for (xr, or) in x[n4 * d..].chunks_exact(d).zip(out[n4 * k..].chunks_exact_mut(k)) {
+            or.copy_from_slice(bias);
+            for (di, wrow) in w.chunks_exact(k).enumerate() {
+                mul_add_row(or, wrow, xr[di], kb);
+            }
+        }
+    }
+
+    /// Lane-blocked [`super::accum_xt_g`] — bit-identical (the fused
+    /// four-sample expression per element is unchanged).
+    pub fn accum_xt_g(
+        x: &[f32],
+        g: &[f32],
+        w: &mut [f32],
+        n: usize,
+        d: usize,
+        k: usize,
+        scale: f32,
+    ) {
+        debug_assert_eq!(x.len(), n * d);
+        debug_assert_eq!(g.len(), n * k);
+        debug_assert_eq!(w.len(), d * k);
+        let kb = k / LANES * LANES;
+        let n4 = n / MR * MR;
+        for (xq, gq) in x[..n4 * d].chunks_exact(MR * d).zip(g[..n4 * k].chunks_exact(MR * k)) {
+            let (x0, r) = xq.split_at(d);
+            let (x1, r) = r.split_at(d);
+            let (x2, x3) = r.split_at(d);
+            let (g0, r) = gq.split_at(k);
+            let (g1, r) = r.split_at(k);
+            let (g2, g3) = r.split_at(k);
+            for (di, wrow) in w.chunks_exact_mut(k).enumerate() {
+                let (a0, a1, a2, a3) =
+                    (scale * x0[di], scale * x1[di], scale * x2[di], scale * x3[di]);
+                let mut j = 0;
+                while j < kb {
+                    for l in 0..LANES {
+                        let jj = j + l;
+                        wrow[jj] += a0 * g0[jj] + a1 * g1[jj] + a2 * g2[jj] + a3 * g3[jj];
+                    }
+                    j += LANES;
+                }
+                while j < k {
+                    wrow[j] += a0 * g0[j] + a1 * g1[j] + a2 * g2[j] + a3 * g3[j];
+                    j += 1;
+                }
+            }
+        }
+        for (xr, gr) in x[n4 * d..].chunks_exact(d).zip(g[n4 * k..].chunks_exact(k)) {
+            for (di, wrow) in w.chunks_exact_mut(k).enumerate() {
+                mul_add_row(wrow, gr, scale * xr[di], kb);
+            }
+        }
+    }
+
+    /// Lane-blocked [`super::relu`] — bit-identical (elementwise).
+    pub fn relu(x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let nb = x.len() / LANES * LANES;
+        for (xc, yc) in x[..nb].chunks_exact(LANES).zip(y[..nb].chunks_exact_mut(LANES)) {
+            for l in 0..LANES {
+                yc[l] = xc[l].max(0.0);
+            }
+        }
+        for (yv, &xv) in y[nb..].iter_mut().zip(&x[nb..]) {
+            *yv = xv.max(0.0);
+        }
+    }
+
+    /// Lane-split [`super::backprop_dh`]: the k-sum runs in `LANES`
+    /// partial lane sums combined left-to-right, then the scalar tail.
+    /// Deterministic, but a **different f32 summation order** than the
+    /// scalar kernel — ≤1e-5 toleranced, and deliberately NOT wired into
+    /// the native backend's default path (its tiny-batch bitwise
+    /// reference pin rides on the scalar order).
+    pub fn backprop_dh(
+        g: &[f32],
+        w: &[f32],
+        pre: &[f32],
+        dh: &mut [f32],
+        n: usize,
+        h: usize,
+        k: usize,
+    ) {
+        debug_assert_eq!(g.len(), n * k);
+        debug_assert_eq!(w.len(), h * k);
+        debug_assert_eq!(pre.len(), n * h);
+        debug_assert_eq!(dh.len(), n * h);
+        let kb = k / LANES * LANES;
+        for ((grow, prow), dhrow) in
+            g.chunks_exact(k).zip(pre.chunks_exact(h)).zip(dh.chunks_exact_mut(h))
+        {
+            for ((dv, &pv), wrow) in dhrow.iter_mut().zip(prow).zip(w.chunks_exact(k)) {
+                *dv = if pv > 0.0 {
+                    let mut part = [0f32; LANES];
+                    let mut j = 0;
+                    while j < kb {
+                        for l in 0..LANES {
+                            part[l] += grow[j + l] * wrow[j + l];
+                        }
+                        j += LANES;
+                    }
+                    let mut s = 0f32;
+                    for &p in &part {
+                        s += p;
+                    }
+                    while j < k {
+                        s += grow[j] * wrow[j];
+                        j += 1;
+                    }
+                    s
+                } else {
+                    0.0
+                };
+            }
+        }
+    }
+
+    /// Word-at-a-time [`super::axpy_quant_packed`]: when `32 % vb == 0`
+    /// (vb ∈ {2, 4, 8, 16} — every power-of-two width the codec emits)
+    /// each u32 word unpacks its `32/vb` fields in one straight-line
+    /// block; other widths fall back to the scalar bitstream walk. Both
+    /// paths run the identical per-element `dst += (w·scale)·level`, so
+    /// this is bit-identical to the scalar packed fold AND to
+    /// [`super::axpy_quant`] over the unpacked levels.
+    pub fn axpy_quant_packed(
+        w: f32,
+        packed: &[u32],
+        value_bits: u32,
+        scale: f32,
+        dst: &mut [f32],
+    ) {
+        let vb = value_bits as usize;
+        if 32 % vb != 0 {
+            return super::axpy_quant_packed(w, packed, value_bits, scale, dst);
+        }
+        let per = 32 / vb;
+        let mask = (1u32 << vb) - 1;
+        let bias = packed_bias(value_bits);
+        let ws = w * scale;
+        let full = dst.len() / per;
+        for (word, chunk) in packed[..full].iter().zip(dst.chunks_exact_mut(per)) {
+            for (j, dv) in chunk.iter_mut().enumerate() {
+                let u = (word >> (j * vb)) & mask;
+                *dv += ws * (u as i32 - bias) as f32;
+            }
+        }
+        for (i, dv) in dst.iter_mut().enumerate().skip(full * per) {
+            *dv += ws * unpack_level_at(packed, value_bits, i) as f32;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

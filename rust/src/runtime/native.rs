@@ -19,15 +19,20 @@
 //! (EXPERIMENTS.md §Backends records that native absolute numbers differ
 //! from the PJRT golden path for exactly this reason).
 //!
-//! **Hot path** (DESIGN.md §8): a train step runs the whole minibatch
-//! through the cache-blocked kernels in [`super::kernels`] and updates the
-//! parameters *in place*, with every intermediate (logits, hidden
-//! activations, backprop buffer) living in a reusable [`Scratch`]
-//! workspace — after warmup a step touches no allocator. The pre-batching
-//! per-sample path is kept as [`NativeBackend::train_step_reference`], the
-//! numerical oracle the batched path is toleranced against (forward/loss
-//! are bit-identical; updates regroup the f32 sample reduction, see
-//! `kernels`).
+//! **Hot path** (DESIGN.md §8, §15): a train step runs the whole minibatch
+//! through the lane-blocked kernels in [`super::kernels::simd`]
+//! (`matmul_bias`, `relu`, `accum_xt_g` — each bit-identical to its
+//! scalar reference, since the lanes cover independent output elements)
+//! and updates the parameters *in place*, with every intermediate
+//! (logits, hidden activations, backprop buffer) living in a reusable
+//! [`Scratch`] workspace — after warmup a step touches no allocator. The
+//! one deliberately-scalar kernel is `backprop_dh`: its SIMD variant
+//! lane-splits the k-sum (different f32 summation order), which would
+//! break the tiny-batch bitwise pin against the reference path. The
+//! pre-batching per-sample path is kept as
+//! [`NativeBackend::train_step_reference`], the numerical oracle the
+//! batched path is toleranced against (forward/loss are bit-identical;
+//! updates regroup the f32 sample reduction, see `kernels`).
 //!
 //! Everything here is deterministic in `(seed, inputs)` — independent of
 //! thread count and scratch history — and the struct is plain data
@@ -356,7 +361,7 @@ impl NativeBackend {
         let [w, b] = params.leaves.as_mut_slice() else {
             unreachable!("validated: softmax has 2 leaves")
         };
-        kernels::matmul_bias(x, w, b, z, batch, d, k);
+        kernels::simd::matmul_bias(x, w, b, z, batch, d, k);
         let mut loss_sum = 0f64;
         for (zrow, &label) in z.chunks_exact_mut(k).zip(y) {
             loss_sum += xent_row(zrow, label as usize) as f64;
@@ -364,7 +369,7 @@ impl NativeBackend {
         // z now holds dz = softmax − onehot for every row.
         let scale = -(lr / batch as f32);
         kernels::accum_colsum(z, b, scale);
-        kernels::accum_xt_g(x, z, w, batch, d, k, scale);
+        kernels::simd::accum_xt_g(x, z, w, batch, d, k, scale);
         (loss_sum / batch as f64) as f32
     }
 
@@ -393,20 +398,23 @@ impl NativeBackend {
         let [w1, b1, w2, b2] = params.leaves.as_mut_slice() else {
             unreachable!("validated: mlp has 4 leaves")
         };
-        kernels::matmul_bias(x, w1, b1, hpre, batch, d, hidden);
-        kernels::relu(hpre, hact);
-        kernels::matmul_bias(hact, w2, b2, z, batch, hidden, k);
+        kernels::simd::matmul_bias(x, w1, b1, hpre, batch, d, hidden);
+        kernels::simd::relu(hpre, hact);
+        kernels::simd::matmul_bias(hact, w2, b2, z, batch, hidden, k);
         let mut loss_sum = 0f64;
         for (zrow, &label) in z.chunks_exact_mut(k).zip(y) {
             loss_sum += xent_row(zrow, label as usize) as f64;
         }
-        // dz is in z; backprop through the ORIGINAL w2 first.
+        // dz is in z; backprop through the ORIGINAL w2 first. Stays on
+        // the scalar kernel: simd::backprop_dh reorders the k-sum (lane
+        // partials), which would break the tiny-batch bitwise pin
+        // against the per-sample reference path.
         kernels::backprop_dh(z, w2, hpre, dh, batch, hidden, k);
         let scale = -(lr / batch as f32);
         kernels::accum_colsum(z, b2, scale);
-        kernels::accum_xt_g(hact, z, w2, batch, hidden, k, scale);
+        kernels::simd::accum_xt_g(hact, z, w2, batch, hidden, k, scale);
         kernels::accum_colsum(dh, b1, scale);
-        kernels::accum_xt_g(x, dh, w1, batch, d, hidden, scale);
+        kernels::simd::accum_xt_g(x, dh, w1, batch, d, hidden, scale);
         (loss_sum / batch as f64) as f32
     }
 
@@ -561,16 +569,16 @@ impl NativeBackend {
         match m.arch {
             Arch::Softmax => {
                 let (w, b) = (&params.leaves[0], &params.leaves[1]);
-                kernels::matmul_bias(x, w, b, &mut z, batch, d, k);
+                kernels::simd::matmul_bias(x, w, b, &mut z, batch, d, k);
             }
             Arch::Mlp { hidden } => {
                 let (w1, b1) = (&params.leaves[0], &params.leaves[1]);
                 let (w2, b2) = (&params.leaves[2], &params.leaves[3]);
                 let mut hpre = vec![0f32; batch * hidden];
                 let mut hact = vec![0f32; batch * hidden];
-                kernels::matmul_bias(x, w1, b1, &mut hpre, batch, d, hidden);
-                kernels::relu(&hpre, &mut hact);
-                kernels::matmul_bias(&hact, w2, b2, &mut z, batch, hidden, k);
+                kernels::simd::matmul_bias(x, w1, b1, &mut hpre, batch, d, hidden);
+                kernels::simd::relu(&hpre, &mut hact);
+                kernels::simd::matmul_bias(&hact, w2, b2, &mut z, batch, hidden, k);
             }
         }
         let mut loss_sum = 0f64;

@@ -1,0 +1,442 @@
+//! The differential kernel-test pack (DESIGN.md §15), over the native
+//! backend so it runs on every commit.
+//!
+//! Pins the SIMD + sharded-aggregation hot path from the outside, in two
+//! layers:
+//!
+//! * **kernel differentials** — every `kernels::simd::*` kernel against
+//!   its scalar twin over randomized shapes (lane tails, micro-tile
+//!   tails, the `k > KMAX` generic path), bitwise where the lane blocking
+//!   only regroups *independent output elements*
+//!   (`matmul_bias`/`accum_xt_g`/`relu`/`axpy_quant_packed`) and
+//!   ≤1e-5-toleranced-but-deterministic for the one kernel that re-orders
+//!   a reduction (`backprop_dh` — deliberately NOT wired into the native
+//!   backend); plus the bit-packed quant wire format round-tripping
+//!   losslessly at every legal `qbits`;
+//! * **sharded-fold differentials** — `FedAccumulator::fold_batch` at 1,
+//!   2 and 8 threads against the serial whole-leaf fold, bitwise, over
+//!   every payload kind and over shard-boundary leaf shapes (the 4096
+//!   block size: single-block, one-past, single-element, empty batch) —
+//!   and, end to end, round-loop metrics byte-identical across thread
+//!   counts on all three engines with a lossy codec in the loop.
+#![cfg(feature = "native")]
+
+use defl::codec::{
+    CodecKind, Dense32, EncodedDelta, Payload, QuantStochastic, TopK, TopKQuant, UpdateCodec,
+};
+use defl::config::{DatasetKind, ExperimentConfig, Policy};
+use defl::coordinator::{EngineKind, FlSystem};
+use defl::model::robust::AggKind;
+use defl::model::{FedAccumulator, FoldPayload, ParamSet};
+use defl::runtime::kernels::{self, simd};
+use defl::runtime::BackendKind;
+use defl::util::prop;
+use defl::util::rng::Pcg32;
+
+/// The accumulator's shard block size (`model::FOLD_SHARD`) — the
+/// boundary the leaf shapes below are built around.
+const SHARD: usize = 4096;
+
+fn bits_of(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Layer 1: scalar vs SIMD kernel differentials
+// ---------------------------------------------------------------------------
+
+/// `simd::matmul_bias` is bit-identical to the scalar kernel for any
+/// shape: lane tails (`k % LANES ≠ 0`), micro-tile tails (`n % 4 ≠ 0`)
+/// and the `k > KMAX = 32` generic path all covered by the ranges.
+#[test]
+fn prop_simd_matmul_bias_is_bitwise_scalar() {
+    prop::check(0x51D001, 60, |g| {
+        let (n, d, k) = (g.usize_in(1, 10), g.usize_in(1, 40), g.usize_in(1, 40));
+        let x = g.vec_f32(n * d, -2.0, 2.0);
+        let w = g.vec_f32(d * k, -1.0, 1.0);
+        let bias = g.vec_f32(k, -0.5, 0.5);
+        let mut scalar = vec![0f32; n * k];
+        let mut vector = vec![0f32; n * k];
+        kernels::matmul_bias(&x, &w, &bias, &mut scalar, n, d, k);
+        simd::matmul_bias(&x, &w, &bias, &mut vector, n, d, k);
+        if bits_of(&scalar) != bits_of(&vector) {
+            return Err(format!("matmul_bias diverged at n={n} d={d} k={k}"));
+        }
+        Ok(())
+    });
+}
+
+/// `simd::accum_xt_g` (the fused outer-product update) is bit-identical
+/// to the scalar kernel — the lane blocks keep the per-element fused
+/// four-sample expression unchanged.
+#[test]
+fn prop_simd_accum_xt_g_is_bitwise_scalar() {
+    prop::check(0x51D002, 60, |g| {
+        let (n, d, k) = (g.usize_in(1, 10), g.usize_in(1, 20), g.usize_in(1, 40));
+        let x = g.vec_f32(n * d, -2.0, 2.0);
+        let grad = g.vec_f32(n * k, -1.0, 1.0);
+        let scale = g.f64_in(-0.2, 0.2) as f32;
+        let w0 = g.vec_f32(d * k, -1.0, 1.0);
+        let mut scalar = w0.clone();
+        let mut vector = w0;
+        kernels::accum_xt_g(&x, &grad, &mut scalar, n, d, k, scale);
+        simd::accum_xt_g(&x, &grad, &mut vector, n, d, k, scale);
+        if bits_of(&scalar) != bits_of(&vector) {
+            return Err(format!("accum_xt_g diverged at n={n} d={d} k={k}"));
+        }
+        Ok(())
+    });
+}
+
+/// `simd::relu` is bit-identical to the scalar kernel (elementwise,
+/// including the lane tail and negative zero).
+#[test]
+fn prop_simd_relu_is_bitwise_scalar() {
+    prop::check(0x51D003, 40, |g| {
+        let len = g.usize_in(1, 100);
+        let mut x = g.vec_f32(len, -2.0, 2.0);
+        if len > 2 {
+            x[0] = 0.0;
+            x[1] = -0.0;
+        }
+        let mut scalar = vec![0f32; len];
+        let mut vector = vec![0f32; len];
+        kernels::relu(&x, &mut scalar);
+        simd::relu(&x, &mut vector);
+        if bits_of(&scalar) != bits_of(&vector) {
+            return Err(format!("relu diverged at len={len}"));
+        }
+        Ok(())
+    });
+}
+
+/// `simd::backprop_dh` re-orders the k-sum (lane partials), so it is
+/// *not* bitwise — the pin is the documented tolerance (≤1e-5 relative)
+/// plus determinism: two runs over the same inputs are bit-identical.
+#[test]
+fn prop_simd_backprop_dh_is_toleranced_and_deterministic() {
+    prop::check(0x51D004, 60, |g| {
+        let (n, h, k) = (g.usize_in(1, 8), g.usize_in(1, 20), g.usize_in(1, 40));
+        let grad = g.vec_f32(n * k, -1.0, 1.0);
+        let w = g.vec_f32(h * k, -1.0, 1.0);
+        let pre = g.vec_f32(n * h, -1.0, 1.0); // mixed signs: the ReLU mask bites
+        let mut scalar = vec![0f32; n * h];
+        let mut vector = vec![0f32; n * h];
+        let mut again = vec![0f32; n * h];
+        kernels::backprop_dh(&grad, &w, &pre, &mut scalar, n, h, k);
+        simd::backprop_dh(&grad, &w, &pre, &mut vector, n, h, k);
+        simd::backprop_dh(&grad, &w, &pre, &mut again, n, h, k);
+        if bits_of(&vector) != bits_of(&again) {
+            return Err("simd::backprop_dh is not deterministic".into());
+        }
+        for (i, (&a, &b)) in scalar.iter().zip(&vector).enumerate() {
+            if (a - b).abs() > 1e-5 * a.abs().max(1.0) {
+                return Err(format!("backprop_dh[{i}]: scalar {a} vs simd {b}"));
+            }
+            // the mask itself must agree exactly — zeros are zeros
+            if (a == 0.0) != (b == 0.0) {
+                return Err(format!("backprop_dh[{i}]: ReLU masks disagree"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The bit-packed quant wire format: packing is lossless on the integer
+/// levels at every legal `qbits` (random access round-trips), and the
+/// three fold paths — `axpy_quant` over the levels, the scalar bitstream
+/// walk, and the word-at-a-time SIMD unpack — are bit-identical.
+#[test]
+fn prop_packed_quant_folds_are_bitwise_equal() {
+    prop::check(0x51D005, 80, |g| {
+        let qbits = g.usize_in(1, 16) as u32;
+        let vb = if qbits == 1 { 2 } else { qbits }; // wire_value_bits
+        let len = g.usize_in(1, 300);
+        let src = g.vec_f32(len, -3.0, 3.0);
+        let mut rng = Pcg32::seeded(g.rng.next_u64());
+        let mut q = Vec::new();
+        let scale = kernels::quantize_stochastic(&src, qbits, &mut rng, &mut q);
+        let mut packed = Vec::new();
+        kernels::pack_levels(&q, vb, &mut packed);
+        if packed.len() != (len * vb as usize).div_ceil(32) {
+            return Err(format!("packed stream sized {} words", packed.len()));
+        }
+        for (i, &lv) in q.iter().enumerate() {
+            if kernels::unpack_level_at(&packed, vb, i) != i32::from(lv) {
+                return Err(format!("level {i} did not round-trip at qbits={qbits}"));
+            }
+        }
+        let w = g.f64_in(-0.5, 0.5) as f32;
+        let base = g.vec_f32(len, -1.0, 1.0);
+        let mut via_levels = base.clone();
+        let mut via_scalar = base.clone();
+        let mut via_simd = base;
+        kernels::axpy_quant(w, &q, scale, &mut via_levels);
+        kernels::axpy_quant_packed(w, &packed, vb, scale, &mut via_scalar);
+        simd::axpy_quant_packed(w, &packed, vb, scale, &mut via_simd);
+        if bits_of(&via_levels) != bits_of(&via_scalar) {
+            return Err(format!("scalar packed fold diverged at qbits={qbits} len={len}"));
+        }
+        if bits_of(&via_levels) != bits_of(&via_simd) {
+            return Err(format!("simd packed fold diverged at qbits={qbits} len={len}"));
+        }
+        // the shard-range fold splits cleanly at any boundary: folding
+        // [0, s) and [s, len) separately equals the whole-leaf fold
+        let s = g.usize_in(0, len);
+        let mut split = via_levels.clone();
+        kernels::axpy_quant_packed_range(w, &packed, vb, scale, 0, &mut split[..s]);
+        kernels::axpy_quant_packed_range(w, &packed, vb, scale, s, &mut split[s..]);
+        let mut whole = via_levels.clone();
+        kernels::axpy_quant_packed(w, &packed, vb, scale, &mut whole);
+        if bits_of(&split) != bits_of(&whole) {
+            return Err(format!("range fold split at {s} diverged (len={len})"));
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Layer 2: sharded fold vs the serial whole-leaf fold
+// ---------------------------------------------------------------------------
+
+/// Serial reference: the pre-sharding whole-leaf fold — `fold` for dense
+/// payloads, `fold_encoded_with` + the original whole-leaf codec kernels
+/// for encoded ones. Deliberately avoids every `*_range` kernel, so the
+/// differential is against genuinely independent code.
+fn fold_serial(acc: &mut FedAccumulator, w: f64, upd: &Update) {
+    match upd {
+        Update::Dense(set) => acc.fold(w, set),
+        Update::Encoded(enc) => acc.fold_encoded_with(w, |coeff, dst| {
+            for (el, leaf) in enc.leaves.iter().zip(dst.leaves.iter_mut()) {
+                match el.payload {
+                    Payload::Dense => kernels::axpy_dense(coeff, &el.dense, leaf),
+                    Payload::Quant => kernels::axpy_quant(coeff, &el.q, el.scale, leaf),
+                    Payload::TopK => kernels::axpy_sparse(coeff, &el.idx, &el.vals, leaf),
+                    Payload::TopKQuant => {
+                        kernels::axpy_sparse_quant(coeff, &el.idx, &el.q, el.scale, leaf)
+                    }
+                }
+            }
+        }),
+    }
+}
+
+enum Update {
+    Dense(ParamSet),
+    Encoded(EncodedDelta),
+}
+
+impl Update {
+    fn payload(&self) -> FoldPayload<'_> {
+        match self {
+            Update::Dense(set) => FoldPayload::Dense(set),
+            Update::Encoded(enc) => FoldPayload::Encoded(enc),
+        }
+    }
+}
+
+fn random_update(g: &mut prop::Gen, leaves: &[usize], seed: u64) -> Update {
+    let mut delta = ParamSet {
+        leaves: leaves
+            .iter()
+            .map(|&l| (0..l).map(|_| g.f64_in(-2.0, 2.0) as f32).collect())
+            .collect(),
+    };
+    let mut rng = Pcg32::seeded(seed);
+    let mut enc = EncodedDelta::new();
+    let mut residual = ParamSet::zeros_matching(&delta);
+    match g.usize_in(0, 3) {
+        0 => return Update::Dense(delta),
+        1 => Dense32.encode(&mut delta, None, &mut rng, &mut enc),
+        2 => QuantStochastic { qbits: 4 }.encode(
+            &mut delta,
+            Some(&mut residual),
+            &mut rng,
+            &mut enc,
+        ),
+        _ => {
+            if g.bool() {
+                TopK { k_ratio: 0.1 }.encode(&mut delta, Some(&mut residual), &mut rng, &mut enc)
+            } else {
+                TopKQuant { k_ratio: 0.1, qbits: 8 }.encode(
+                    &mut delta,
+                    Some(&mut residual),
+                    &mut rng,
+                    &mut enc,
+                )
+            }
+        }
+    }
+    Update::Encoded(enc)
+}
+
+fn delta_of(shape: &ParamSet, fold: impl FnOnce(&mut FedAccumulator)) -> Vec<Vec<u32>> {
+    let mut acc = FedAccumulator::zeros_like(shape);
+    fold(&mut acc);
+    let mut out = ParamSet::zeros_matching(shape);
+    acc.apply_delta_to(&mut out);
+    out.leaves.iter().map(|l| bits_of(l)).collect()
+}
+
+/// `fold_batch` at 1, 2 and 8 threads is bit-identical to the serial
+/// whole-leaf fold, over mixed payload kinds and leaf shapes straddling
+/// the 4096-element shard boundary.
+#[test]
+fn prop_sharded_fold_is_bitwise_serial_at_1_2_8_threads() {
+    prop::check(0x51D006, 12, |g| {
+        let leaves = [g.usize_in(1, 50), g.usize_in(SHARD - 10, SHARD + 10)];
+        let n = g.usize_in(1, 4);
+        let updates: Vec<(f64, Update)> = (0..n)
+            .map(|_| {
+                let w = g.f64_in(0.5, 600.0);
+                let seed = g.rng.next_u64();
+                (w, random_update(g, &leaves, seed))
+            })
+            .collect();
+        let total: f64 = updates.iter().map(|&(w, _)| w).sum();
+        let shape = ParamSet {
+            leaves: leaves.iter().map(|&l| vec![0f32; l]).collect(),
+        };
+        let serial = delta_of(&shape, |acc| {
+            acc.begin(total);
+            for (w, u) in &updates {
+                fold_serial(acc, *w, u);
+            }
+        });
+        for threads in [1usize, 2, 8] {
+            let batch: Vec<(f64, FoldPayload<'_>)> =
+                updates.iter().map(|(w, u)| (*w, u.payload())).collect();
+            let sharded = delta_of(&shape, |acc| {
+                acc.begin(total);
+                acc.fold_batch(&batch, threads);
+            });
+            if serial != sharded {
+                return Err(format!("fold_batch@{threads} diverged from serial (n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The shard-boundary corners, pinned deterministically: a single-element
+/// leaf, an exactly-one-block leaf (P = 4096), a one-past-the-block leaf
+/// (P = 4097), and the empty batch as a no-op.
+#[test]
+fn sharded_fold_boundary_shapes_and_empty_batch() {
+    let leaves = [1usize, SHARD, SHARD + 1];
+    let mut g_rng = Pcg32::seeded(0x51D007);
+    let sets: Vec<ParamSet> = (0..3)
+        .map(|_| ParamSet {
+            leaves: leaves
+                .iter()
+                .map(|&l| (0..l).map(|_| (g_rng.uniform() as f32) - 0.5).collect())
+                .collect(),
+        })
+        .collect();
+    let ws = [600.0, 48.0, 250.0];
+    let total: f64 = ws.iter().sum();
+    let shape = ParamSet { leaves: leaves.iter().map(|&l| vec![0f32; l]).collect() };
+    let serial = delta_of(&shape, |acc| {
+        acc.begin(total);
+        for (s, &w) in sets.iter().zip(&ws) {
+            acc.fold(w, s);
+        }
+    });
+    for threads in [1usize, 2, 8] {
+        let batch: Vec<(f64, FoldPayload<'_>)> =
+            sets.iter().zip(&ws).map(|(s, &w)| (w, FoldPayload::Dense(s))).collect();
+        let sharded = delta_of(&shape, |acc| {
+            acc.begin(total);
+            acc.fold_batch(&batch, threads);
+        });
+        assert_eq!(serial, sharded, "boundary shapes diverged at {threads} threads");
+    }
+    // empty batch: no-op at any thread count — zero delta, zero count
+    let mut acc = FedAccumulator::zeros_like(&shape);
+    acc.begin(10.0);
+    acc.fold_batch(&[], 8);
+    assert_eq!(acc.count(), 0);
+    let mut out = ParamSet::zeros_matching(&shape);
+    acc.apply_delta_to(&mut out);
+    assert!(out.leaves.iter().all(|l| l.iter().all(|&v| v == 0.0)));
+}
+
+// ---------------------------------------------------------------------------
+// Layer 3: end-to-end thread-count byte-identity through the engines
+// ---------------------------------------------------------------------------
+
+/// Small fast native config (the `churn.rs` / `native_backend.rs` shape).
+fn parity_cfg(name: &str) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.name = name.into();
+    cfg.dataset = DatasetKind::Tiny;
+    cfg.devices = 6;
+    cfg.train_per_device = 32;
+    cfg.test_size = 128;
+    cfg.max_rounds = 6;
+    cfg.eval_every = 3;
+    cfg.lr = 0.05;
+    cfg.policy = Policy::Fixed { batch: 8, local_rounds: 2 };
+    cfg.seed = 7;
+    cfg.backend = BackendKind::Native;
+    cfg.artifacts_dir = "/nonexistent-on-purpose".into();
+    // a lossy codec so every update takes the encoded fold path — the
+    // sharded fold has to reproduce the fused decode bit for bit
+    cfg.codec.kind = CodecKind::TopKQuant;
+    cfg.codec.k_ratio = 0.2;
+    cfg.codec.qbits = 8;
+    cfg
+}
+
+fn run_to_artifacts(cfg: ExperimentConfig) -> (String, String, f64) {
+    let mut sys = FlSystem::build(cfg).unwrap();
+    sys.run().unwrap();
+    // wall_seconds is measured wall-clock and legitimately differs
+    // between executions; everything modeled must not
+    for r in &mut sys.log.rounds {
+        r.wall_seconds = 0.0;
+    }
+    (sys.log.to_json().to_pretty(), sys.log.to_csv(), sys.clock.waited())
+}
+
+/// The acceptance pin of the sharding tentpole: on all three engines,
+/// the full round-loop metrics (JSON and CSV views) are *byte*-identical
+/// at 1 vs 4 aggregation threads, with a lossy codec keeping the encoded
+/// fold path hot.
+#[test]
+fn engine_metrics_are_byte_identical_across_thread_counts() {
+    for kind in [EngineKind::Sync, EngineKind::Deadline, EngineKind::AsyncBuffered] {
+        let run = |threads: usize| {
+            let mut cfg = parity_cfg(&format!("kd-par-{}", kind.label()));
+            cfg.engine.kind = kind;
+            cfg.threads = threads;
+            run_to_artifacts(cfg)
+        };
+        let (j1, c1, w1) = run(1);
+        let (j4, c4, w4) = run(4);
+        assert_eq!(j1, j4, "{kind:?}: JSON view diverged across thread counts");
+        assert_eq!(c1, c4, "{kind:?}: CSV view diverged across thread counts");
+        assert_eq!(w1.to_bits(), w4.to_bits(), "{kind:?}: clock waits diverged");
+    }
+}
+
+/// The clip aggregator's batch path at 1 vs 8 threads: byte-identical
+/// metrics with clipping statistics in the CSV (the `clipped` column
+/// rides along, so a thread-dependent clip decision would show).
+#[test]
+fn clip_aggregation_is_byte_identical_across_thread_counts() {
+    let run = |threads: usize| {
+        let mut cfg = parity_cfg("kd-par-clip");
+        // dense wire: the clip batch path folds dense payloads directly
+        cfg.codec.kind = CodecKind::Dense;
+        cfg.aggregate.kind = AggKind::Clip;
+        cfg.aggregate.clip_tau = 0.05;
+        cfg.threads = threads;
+        run_to_artifacts(cfg)
+    };
+    let (j1, c1, w1) = run(1);
+    let (j8, c8, w8) = run(8);
+    assert_eq!(j1, j8, "clip: JSON view diverged across thread counts");
+    assert_eq!(c1, c8, "clip: CSV view diverged across thread counts");
+    assert_eq!(w1.to_bits(), w8.to_bits());
+}

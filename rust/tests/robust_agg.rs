@@ -125,7 +125,9 @@ fn prop_mean_aggregator_is_federated_average_bitwise() {
         let mut global = ParamSet::zeros_matching(&sets[0]);
         let mut agg = FedAccumulator::zeros_like(&sets[0]);
         let mut mean = AggregateConfig::default().build().unwrap();
-        let stats = mean.combine(&Dense32, &mut agg, &updates, total, &mut global);
+        // thread count varies per case: the sharded fold must not change bits
+        let threads = g.usize_in(1, 4);
+        let stats = mean.combine(&Dense32, &mut agg, &updates, total, threads, &mut global);
         if stats != FoldStats::default() {
             return Err(format!("honest mean fold reported {stats:?}"));
         }
@@ -160,7 +162,9 @@ fn prop_clip_matches_the_scaled_coefficient_reference() {
         let mut cfg = AggregateConfig::default();
         cfg.kind = AggKind::Clip;
         cfg.clip_tau = tau;
-        let stats = cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, &mut global);
+        let threads = g.usize_in(1, 4);
+        let stats =
+            cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, threads, &mut global);
         // reference: `acc[e] += ((wᵢ·cᵢ)/Σw as f32)·xᵢ[e]`, input order
         let mut exp = vec![0f32; p];
         let mut exp_clipped = 0usize;
@@ -213,7 +217,7 @@ fn prop_buffered_estimators_match_reference_impls() {
             let mut global = g0.clone();
             let mut agg = FedAccumulator::zeros_like(&g0);
             let stats =
-                cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, &mut global);
+                cfg.build().unwrap().combine(&Dense32, &mut agg, &updates, total, 2, &mut global);
             let t = match kind {
                 AggKind::TrimmedMean => ((ratio * n as f64).floor() as usize).min((n - 1) / 2),
                 _ => 0,

@@ -1,13 +1,23 @@
 #!/usr/bin/env python3
-"""Warn-only perf-trajectory diff for the BENCH_*.json reports.
+"""Perf-trajectory diff for the BENCH_*.json reports.
 
 Compares a fresh bench run (``Suite::to_json`` output, uploaded by CI as
 the BENCH_hotpath artifact) against the committed baseline and prints
 GitHub workflow annotations for per-benchmark mean-time regressions
-beyond a threshold. It never fails the build on a *comparison*: the CI
-smoke lane runs tiny iteration counts (``DEFL_BENCH_FAST=1``) on shared
-runners, so this is a visibility tool, not a gate — the point is that
-every PR shows its perf trajectory next to its diff.
+beyond a threshold. By default it never fails the build on a
+*comparison*: the CI smoke lane runs tiny iteration counts
+(``DEFL_BENCH_FAST=1``) on shared runners, so the comparison is a
+visibility tool — the point is that every PR shows its perf trajectory
+next to its diff.
+
+``--fail-pct`` arms the gate for the benchmark families named by
+``--fail-families`` (comma-separated name prefixes): once a non-empty
+baseline exists, an enforced-family regression beyond ``--fail-pct`` or
+an enforced-family benchmark missing from the fresh report prints a
+``::error::`` annotation and exits 1. Families outside the list stay
+warn-only at ``--warn-pct``, and with no baseline the gate cannot fire
+(the NO BASELINE state below is unchanged), so committing the first
+trusted baseline is what arms enforcement.
 
 Exit codes: 0 means a comparison happened (or there was nothing to
 measure); ``EXIT_NO_BASELINE`` (3) means the fresh report was fine but
@@ -28,6 +38,7 @@ baseline already exists ``--promote`` changes nothing — committed
 baselines stay authoritative; overwrite them deliberately.
 
 Usage: bench_diff.py BASELINE FRESH [--warn-pct 25] [--promote]
+                     [--fail-pct 25 --fail-families codec_fold_,fedavg_stream_]
        bench_diff.py --self-test
 """
 
@@ -111,6 +122,38 @@ def compare(base, fresh, warn_pct):
     return lines, warnings
 
 
+def enforce(base, fresh, fail_pct, families):
+    """Failing-gate errors: ``::error::`` bodies, empty when the gate holds.
+
+    Only benchmarks whose name starts with one of ``families`` are
+    enforced, and only against a non-empty baseline — the NO BASELINE
+    state stays warn-free so the gate self-arms when the first trusted
+    baseline is committed. Two ways to trip it: an enforced benchmark
+    regressing beyond ``fail_pct``, and an enforced baseline benchmark
+    missing from the fresh report (a gate you can delete is no gate).
+    Pure function — the self-test runs on it directly.
+    """
+    errors = []
+    if fail_pct is None or not families or not base or not fresh:
+        return errors
+    def enforced(name):
+        return any(name.startswith(f) for f in families)
+
+    for name, mean in sorted(fresh.items()):
+        if name not in base or not enforced(name):
+            continue
+        pct = (mean / base[name] - 1.0) * 100.0
+        if pct > fail_pct:
+            errors.append(
+                f"perf gate: {name} mean {mean:.3e}s vs baseline "
+                f"{base[name]:.3e}s (+{pct:.1f}% > {fail_pct:.0f}%)"
+            )
+    for name in sorted(set(base) - set(fresh)):
+        if enforced(name):
+            errors.append(f"perf gate: enforced benchmark missing from fresh report: {name}")
+    return errors
+
+
 def exit_code(base, fresh):
     """0 when a comparison ran (or nothing was measured), else NO BASELINE.
 
@@ -187,6 +230,27 @@ def self_test():
         # improvements never warn
         _, warns = compare({"a": 2.0}, {"a": 1.0}, 25.0)
         assert warns == []
+
+        # -- enforce: the promoted-baseline gate ----------------------
+        fams = ["codec_fold_", "fedavg_stream_"]
+        base = {"codec_fold_q8": 1.0, "fedavg_stream_100": 1.0, "setup_misc": 1.0}
+        # regression over a non-empty baseline in an enforced family fails
+        errs = enforce(base, {**base, "codec_fold_q8": 2.0}, 25.0, fams)
+        assert len(errs) == 1 and "codec_fold_q8" in errs[0], "enforced regression trips"
+        # an improvement (or within-threshold noise) passes
+        assert enforce(base, {**base, "codec_fold_q8": 0.5}, 25.0, fams) == []
+        assert enforce(base, {**base, "fedavg_stream_100": 1.2}, 25.0, fams) == []
+        # a missing enforced bench name fails — deleting the bench is not a fix
+        errs = enforce(base, {"codec_fold_q8": 1.0, "setup_misc": 1.0}, 25.0, fams)
+        assert len(errs) == 1 and "missing" in errs[0] and "fedavg_stream_100" in errs[0]
+        # non-enforced families stay warn-only however badly they regress
+        assert enforce(base, {**base, "setup_misc": 9.0}, 25.0, fams) == []
+        assert enforce(base, dict(base), 25.0, fams) == [], "clean run passes"
+        # the gate cannot fire before a baseline exists (self-arming) or
+        # when enforcement was never requested
+        assert enforce({}, {"codec_fold_q8": 9.0}, 25.0, fams) == []
+        assert enforce(base, {**base, "codec_fold_q8": 9.0}, None, fams) == []
+        assert enforce(base, {**base, "codec_fold_q8": 9.0}, 25.0, []) == []
     finally:
         for p in paths:
             os.unlink(p)
@@ -203,6 +267,17 @@ def main():
         "--promote",
         action="store_true",
         help="seed BASELINE from FRESH when no baseline exists (exit 0 instead of 3)",
+    )
+    ap.add_argument(
+        "--fail-pct",
+        type=float,
+        default=None,
+        help="fail (exit 1) on enforced-family regressions beyond this percentage",
+    )
+    ap.add_argument(
+        "--fail-families",
+        default="",
+        help="comma-separated benchmark-name prefixes the --fail-pct gate enforces",
     )
     ap.add_argument(
         "--self-test", action="store_true", help="run the built-in assertions and exit"
@@ -226,10 +301,17 @@ def main():
         return 0
 
     lines, warnings = compare(base, fresh, args.warn_pct)
+    families = [f for f in args.fail_families.split(",") if f]
+    errors = enforce(base, fresh, args.fail_pct, families)
     for w in warnings:
         print(f"::warning::{w}")
+    for e in errors:
+        print(f"::error::{e}")
     for ln in lines:
         print(ln)
+    if errors:
+        print(f"bench_diff: perf gate FAILED — {len(errors)} enforced violation(s)")
+        return 1
     if should_promote(base, fresh, args.promote):
         import shutil
 
